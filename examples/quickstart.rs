@@ -1,0 +1,91 @@
+//! Quickstart: the SlideSparse pipeline end to end on one linear layer.
+//!
+//! 1. magnitude-prune a dense weight matrix to 6:8,
+//! 2. pack it into overlapping 2:4 windows (Phi, paper Alg. 2),
+//! 3. compress to the Sparse-Tensor-Core format (values + 2-bit meta),
+//! 4. serve a GEMM through fused quant+lift (Psi) + compressed GEMM,
+//! 5. verify the result is bit-identical to the dense INT8 baseline,
+//!    and measure the speedup from executing half the MACs.
+//!
+//! Run: cargo run --release --example quickstart
+
+use std::time::Instant;
+
+use slidesparse::model::{Backend, Linear};
+use slidesparse::sparsity::pattern::Pattern;
+use slidesparse::sparsity::prune::prune_magnitude;
+use slidesparse::util::prng::XorShift;
+
+fn main() {
+    let (o, k, m, n) = (768usize, 768usize, 128usize, 4usize);
+    let pat = Pattern::family(n); // 6:8
+    println!("SlideSparse quickstart: {o}x{k} linear, pattern {pat} (gamma {:.2}, S_eff {:.2})",
+             pat.gamma(), pat.s_eff());
+
+    // dense checkpoint -> (2N-2):2N pruned weights
+    let mut rng = XorShift::new(7);
+    let w: Vec<f32> = (0..o * k).map(|_| rng.normal() * 0.05).collect();
+    let pruned = prune_magnitude(&w, o, k, pat.z, pat.l);
+    println!("pruned to {:.0}% density", 100.0 * (1.0 - slidesparse::sparsity::prune::measured_sparsity(&pruned)));
+
+    // offline phase: quantize + pack + compress (both backends share the
+    // SAME pruned weights, so outputs must agree exactly)
+    let slide = Linear::prepare(&pruned, o, k, Backend::Slide { n });
+    let dense = Linear::prepare(&pruned, o, k, Backend::Dense);
+    println!("weight bytes: dense {} vs slide-compressed {}", dense.weight_bytes(), slide.weight_bytes());
+
+    // online phase
+    let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+    let ys = slide.forward(&x, m);
+    let yd = dense.forward(&x, m);
+    assert_eq!(ys, yd, "SlideSparse must be lossless");
+    println!("losslessness: slide output is bit-identical to dense ✓");
+
+    // speedup (half the multiply-accumulates per output on the
+    // compressed path; ~N/(N-1) net after the gamma expansion)
+    let reps = 20;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(dense.forward(&x, m));
+    }
+    let td = t0.elapsed().as_secs_f64() / reps as f64;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(slide.forward(&x, m));
+    }
+    let ts = t0.elapsed().as_secs_f64() / reps as f64;
+    println!(
+        "latency: dense {:.2} ms, slide {:.2} ms -> {:.2}x (theory {:.2}x)",
+        td * 1e3, ts * 1e3, td / ts, pat.s_eff()
+    );
+
+    // optional: run the AOT-compiled JAX artifact through PJRT
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        let rt = slidesparse::runtime::Runtime::new(dir).unwrap();
+        println!("\nPJRT platform: {}", rt.platform());
+        let (m, o, k, kp) = (64usize, 128usize, 128usize, 192usize);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let mut wq = vec![0.0f32; o * kp];
+        for r in 0..o {
+            for w in 0..kp / 4 {
+                wq[r * kp + w * 4] = 2.0;
+                wq[r * kp + w * 4 + 1] = -1.0;
+            }
+        }
+        let outs = rt
+            .execute(
+                "gemm_slide4_int8_m64_o128_k128",
+                &[
+                    slidesparse::runtime::literal_f32(&x, &[m, k]).unwrap(),
+                    slidesparse::runtime::literal_f32(&wq, &[o, kp]).unwrap(),
+                    slidesparse::runtime::literal_f32(&vec![1.0; o], &[o]).unwrap(),
+                ],
+            )
+            .unwrap();
+        let y = slidesparse::runtime::Runtime::to_f32(&outs[0]).unwrap();
+        println!("executed AOT slide-GEMM artifact: y[0] = {:.3} ({} outputs) ✓", y[0], y.len());
+    } else {
+        println!("\n(artifacts/ not built; run `make artifacts` to also demo the PJRT path)");
+    }
+}

@@ -1,0 +1,75 @@
+//! Sparsity explorer: the generalized Z:L -> M:N theory (Appendix C.1)
+//! as a tool. Prints the (2N-2):2N family table (C.1.5), checks the
+//! density-determined bound (Theorem 3) over a pattern sweep, and shows
+//! why hypothetical 1:4 hardware is universally optimal (C.1.7).
+//!
+//! Run: cargo run --release --example sparsity_explorer
+
+use slidesparse::bench::harness::Table;
+use slidesparse::sparsity::general::{hypothetical_1_4, Decomposition};
+use slidesparse::sparsity::pattern::Pattern;
+
+fn main() {
+    // ---- the paper's C.1.5 table --------------------------------------
+    let mut t = Table::new(
+        "(2N-2):2N family on 2:4 hardware (paper C.1.5)",
+        &["pattern", "N", "density", "gamma", "S_eff", "achieves L/Z?"],
+    );
+    for n in [3usize, 4, 5, 6, 8] {
+        let p = Pattern::family(n);
+        let d = Decomposition::new(p, Pattern::new(2, 4));
+        t.row(vec![
+            p.to_string(),
+            n.to_string(),
+            format!("{:.1}%", p.density() * 100.0),
+            format!("{:.2}", d.gamma()),
+            format!("{:.2}x", d.s_eff()),
+            if d.achieves_bound() { "yes".into() } else { "no".into() },
+        ]);
+    }
+    t.print();
+
+    // ---- arbitrary-pattern sweep against Theorem 3 --------------------
+    let mut t = Table::new(
+        "arbitrary Z:L patterns on 2:4 vs the density bound (Thm. 3)",
+        &["pattern", "bound L/Z", "S_eff on 2:4", "gap"],
+    );
+    for (z, l) in [(7usize, 10usize), (5, 8), (9, 12), (11, 14), (6, 10), (10, 16)] {
+        let p = Pattern::new(z, l);
+        let d = Decomposition::new(p, Pattern::new(2, 4));
+        if !d.is_valid() {
+            continue;
+        }
+        let gap = (p.s_bound() - d.s_eff()) / p.s_bound();
+        t.row(vec![
+            p.to_string(),
+            format!("{:.3}x", p.s_bound()),
+            format!("{:.3}x", d.s_eff()),
+            format!("{:.0}%", gap * 100.0),
+        ]);
+        assert!(d.s_eff() <= p.s_bound() + 1e-9, "Theorem 3 violated!");
+    }
+    t.print();
+
+    // ---- 1:4 hardware achieves the bound universally -------------------
+    let mut t = Table::new(
+        "hypothetical 1:4 hardware (alpha=4) achieves L/Z for ANY pattern (C.1.7)",
+        &["pattern", "gamma on 1:4", "S_eff on 1:4", "bound L/Z"],
+    );
+    for (z, l) in [(7usize, 10usize), (6, 8), (5, 8), (9, 12), (2, 4)] {
+        let p = Pattern::new(z, l);
+        let (gamma, s) = hypothetical_1_4(p);
+        assert!((s - p.s_bound()).abs() < 1e-9);
+        t.row(vec![
+            p.to_string(),
+            format!("{gamma:.2}"),
+            format!("{s:.3}x"),
+            format!("{:.3}x", p.s_bound()),
+        ]);
+    }
+    t.print();
+
+    println!("\npractical implication (paper C.1.6): a 70% dense pattern (7:10)");
+    println!("caps at 1.43x on ANY hardware; if 2:4 cores reach it, richer");
+    println!("sparse formats buy nothing for that pattern.");
+}

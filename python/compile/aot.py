@@ -1,0 +1,252 @@
+"""AOT compile path: lower L2/L1 computations to HLO *text* artifacts.
+
+Run once via `make artifacts`.  Emits into artifacts/:
+  * one .hlo.txt per (computation, shape-bucket, backend-variant)
+  * weights_<variant>.bin -- raw little-endian tensors for the serving model
+  * manifest.json -- feed schemas, shapes, golden test vectors
+
+HLO text (NOT HloModuleProto.serialize()) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the rust `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ref, slide_quant
+
+# serving model configuration (small-real-model substitution; DESIGN.md §2)
+BASE_CFG = M.ModelConfig(dim=256, n_layers=4, n_heads=4, ffn_dim=512,
+                         vocab=512, max_seq=256)
+SLIDE_N = 4          # 6:8, the paper's flagship pattern
+PREFILL_BUCKETS = [(1, 64), (2, 64), (4, 64)]      # (B, S)
+DECODE_BUCKETS = [1, 2, 4, 8]                      # B
+GEMM_SHAPES = [(64, 128, 128), (256, 256, 256)]    # (M, O, K) demo GEMMs
+SEED = 1
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def _lower_and_write(fn, args, out_dir, name):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    return f"{name}.hlo.txt"
+
+
+# ---------------------------------------------------------------------------
+# standalone GEMM + kernel artifacts (quickstart / integration tests)
+# ---------------------------------------------------------------------------
+
+def gemm_artifacts(out_dir):
+    arts = []
+    for (m, o, k) in GEMM_SHAPES:
+        cfg_d = dataclasses.replace(BASE_CFG, sparsity_n=None)
+        cfg_s = dataclasses.replace(BASE_CFG, sparsity_n=SLIDE_N)
+        kp = ref.expanded_k(k, SLIDE_N)
+
+        def dense_fn(x, wq, ws):
+            return (M.linear(x, wq, ws, cfg_d),)
+
+        def slide_fn(x, wq, ws):
+            return (M.linear(x, wq, ws, cfg_s),)
+
+        xs = jax.ShapeDtypeStruct((m, k), jnp.float32)
+        name = f"gemm_dense_int8_m{m}_o{o}_k{k}"
+        f1 = _lower_and_write(
+            dense_fn,
+            (xs, jax.ShapeDtypeStruct((o, k), jnp.float32),
+             jax.ShapeDtypeStruct((o,), jnp.float32)),
+            out_dir, name)
+        arts.append({
+            "name": name, "file": f1, "kind": "gemm", "variant": "dense",
+            "m": m, "o": o, "k": k,
+            "inputs": [spec((m, k)), spec((o, k)), spec((o,))],
+            "outputs": [spec((m, o))],
+        })
+        name = f"gemm_slide{SLIDE_N}_int8_m{m}_o{o}_k{k}"
+        f2 = _lower_and_write(
+            slide_fn,
+            (xs, jax.ShapeDtypeStruct((o, kp), jnp.float32),
+             jax.ShapeDtypeStruct((o,), jnp.float32)),
+            out_dir, name)
+        arts.append({
+            "name": name, "file": f2, "kind": "gemm", "variant": f"slide{SLIDE_N}",
+            "m": m, "o": o, "k": k, "k_packed": kp,
+            "inputs": [spec((m, k)), spec((o, kp)), spec((o,))],
+            "outputs": [spec((m, o))],
+        })
+
+    # the L1 Pallas fused quant+slide kernel as its own artifact
+    m, k = 64, 256
+    kp = ref.expanded_k(k, SLIDE_N)
+
+    def fused_fn(x):
+        y, s = slide_quant.fused_quant_slide(x, SLIDE_N)
+        # emit i32 so the rust side only handles f32/i32 literals
+        return (y.astype(jnp.int32), s)
+
+    name = f"fused_quant_slide_m{m}_k{k}_n{SLIDE_N}"
+    f3 = _lower_and_write(fused_fn,
+                          (jax.ShapeDtypeStruct((m, k), jnp.float32),),
+                          out_dir, name)
+    arts.append({
+        "name": name, "file": f3, "kind": "fused_quant_slide",
+        "variant": f"slide{SLIDE_N}", "m": m, "k": k, "k_packed": kp,
+        "inputs": [spec((m, k))],
+        "outputs": [spec((m, kp), "i32"), spec((m,))],
+    })
+    return arts
+
+
+# ---------------------------------------------------------------------------
+# serving-model artifacts
+# ---------------------------------------------------------------------------
+
+def model_artifacts(out_dir, cfg: M.ModelConfig, variant: str):
+    arts = []
+    pspecs = M.param_specs(cfg)
+    pshapes = [jax.ShapeDtypeStruct(tuple(s), jnp.float32) for _, s, _ in pspecs]
+    l, h, hd, smax = cfg.n_layers, cfg.n_heads, cfg.head_dim, cfg.max_seq
+
+    for (b, s) in PREFILL_BUCKETS:
+        name = f"prefill_{variant}_b{b}_s{s}"
+        fname = _lower_and_write(
+            M.prefill(cfg),
+            (jax.ShapeDtypeStruct((b, s), jnp.int32), *pshapes),
+            out_dir, name)
+        arts.append({
+            "name": name, "file": fname, "kind": "prefill", "variant": variant,
+            "b": b, "s": s,
+            "inputs": [spec((b, s), "i32")] + [spec(sh) for _, sh, _ in pspecs],
+            "outputs": [spec((b, s, cfg.vocab)),
+                        spec((l, b, h, s, hd)), spec((l, b, h, s, hd))],
+        })
+
+    for b in DECODE_BUCKETS:
+        name = f"decode_{variant}_b{b}"
+        kv = jax.ShapeDtypeStruct((l, b, h, smax, hd), jnp.float32)
+        fname = _lower_and_write(
+            M.decode_step(cfg),
+            (jax.ShapeDtypeStruct((b,), jnp.int32),
+             jax.ShapeDtypeStruct((b,), jnp.int32), kv, kv, *pshapes),
+            out_dir, name)
+        arts.append({
+            "name": name, "file": fname, "kind": "decode", "variant": variant,
+            "b": b, "smax": smax,
+            "inputs": [spec((b,), "i32"), spec((b,), "i32"),
+                       spec((l, b, h, smax, hd)), spec((l, b, h, smax, hd))]
+                      + [spec(sh) for _, sh, _ in pspecs],
+            "outputs": [spec((b, cfg.vocab)),
+                        spec((l, b, h, smax, hd)), spec((l, b, h, smax, hd))],
+        })
+    return arts
+
+
+def write_weights(out_dir, params, pspecs, variant: str):
+    """Concatenate all tensors (f32 little-endian) into one .bin."""
+    fname = f"weights_{variant}.bin"
+    tensors = []
+    offset = 0
+    with open(os.path.join(out_dir, fname), "wb") as f:
+        for (name, shape, dtype), arr in zip(pspecs, params):
+            a = np.asarray(arr, dtype=np.float32)
+            assert tuple(a.shape) == tuple(shape), (name, a.shape, shape)
+            raw = a.tobytes()  # C-order little-endian f32
+            f.write(raw)
+            tensors.append({"name": name, "shape": list(shape),
+                            "dtype": dtype, "offset": offset,
+                            "nbytes": len(raw)})
+            offset += len(raw)
+    return {"file": fname, "tensors": tensors}
+
+
+def golden_vectors(cfg_dense, cfg_slide, params_slide, params_pruned_dense):
+    """Fixed input + expected outputs for the rust integration test."""
+    b, s = PREFILL_BUCKETS[0]
+    tokens = (np.arange(b * s, dtype=np.int32).reshape(b, s) * 7 + 3) % cfg_dense.vocab
+    logits_s, _, _ = jax.jit(M.prefill(cfg_slide))(tokens, *params_slide)
+    logits_d, _, _ = jax.jit(M.prefill(cfg_dense))(tokens, *params_pruned_dense)
+    ls = np.asarray(logits_s)
+    ld = np.asarray(logits_d)
+    assert np.array_equal(ls, ld), "slide and pruned-dense logits must agree"
+    last = ls[0, -1, :]
+    return {
+        "tokens": tokens.reshape(-1).tolist(),
+        "b": b, "s": s,
+        "last_logits_head": [float(v) for v in last[:16]],
+        "last_logits_sum": float(last.sum()),
+        "last_argmax": int(last.argmax()),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+
+    cfg_dense = dataclasses.replace(BASE_CFG, sparsity_n=None)
+    cfg_slide = dataclasses.replace(BASE_CFG, sparsity_n=SLIDE_N)
+
+    arts = []
+    arts += gemm_artifacts(out_dir)
+    arts += model_artifacts(out_dir, cfg_dense, "dense")
+    arts += model_artifacts(out_dir, cfg_slide, f"slide{SLIDE_N}")
+
+    params_slide = M.make_params(cfg_slide, SEED)
+    params_dense = M.make_pruned_params(cfg_dense, SLIDE_N, SEED)
+    weights = {
+        "dense": write_weights(out_dir, params_dense,
+                               M.param_specs(cfg_dense), "dense"),
+        f"slide{SLIDE_N}": write_weights(out_dir, params_slide,
+                                         M.param_specs(cfg_slide),
+                                         f"slide{SLIDE_N}"),
+    }
+
+    golden = golden_vectors(cfg_dense, cfg_slide, params_slide, params_dense)
+
+    manifest = {
+        "model": {
+            "dim": BASE_CFG.dim, "n_layers": BASE_CFG.n_layers,
+            "n_heads": BASE_CFG.n_heads, "ffn_dim": BASE_CFG.ffn_dim,
+            "vocab": BASE_CFG.vocab, "max_seq": BASE_CFG.max_seq,
+            "slide_n": SLIDE_N, "seed": SEED,
+        },
+        "prefill_buckets": [list(t) for t in PREFILL_BUCKETS],
+        "decode_buckets": DECODE_BUCKETS,
+        "artifacts": arts,
+        "weights": weights,
+        "golden": golden,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(arts)} HLO artifacts + 2 weight files to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,222 @@
+"""Pure-jnp/numpy oracles for the SlideSparse kernels.
+
+These are the correctness ground truth for:
+  * the offline weight packer Phi (paper Algorithm 2, greedy residual
+    allocation over stride-2 windows),
+  * the activation lifting operator Psi (paper Eq. 4),
+  * the fused quantization-slide kernel (paper Algorithm 1),
+  * the slide GEMM identity  w.x == Phi(w).Psi(x)  (paper Eq. 3).
+
+Everything here is written for clarity, not speed; the Pallas kernels in
+this package and the Rust hot path are validated against these functions.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+INT8_QMAX = 127.0
+
+
+# ---------------------------------------------------------------------------
+# pattern helpers
+# ---------------------------------------------------------------------------
+
+def gamma(n: int) -> float:
+    """Expansion factor for (2N-2):2N -> 2:4 (paper Eq. 5): 2 - 2/N."""
+    if n < 2:
+        raise ValueError("N must be >= 2")
+    return 2.0 - 2.0 / n
+
+
+def expanded_k(k: int, n: int) -> int:
+    """Output row length after sliding: K/(2N) groups x (N-1) windows x 4."""
+    if k % (2 * n) != 0:
+        raise ValueError(f"K={k} must be a multiple of 2N={2 * n}")
+    return (k // (2 * n)) * (n - 1) * 4
+
+
+def lift_indices(k: int, n: int) -> np.ndarray:
+    """Source index for every element of the lifted/packed row.
+
+    Window j (global, j = g*(N-1)+l) covers source positions
+    b..b+3 with b = 2N*g + 2*l  (paper Alg. 1 line 11).
+    """
+    n_groups = k // (2 * n)
+    idx = np.empty(expanded_k(k, n), dtype=np.int32)
+    w = 0
+    for g in range(n_groups):
+        for l in range(n - 1):
+            b = 2 * n * g + 2 * l
+            idx[4 * w : 4 * w + 4] = np.arange(b, b + 4)
+            w += 1
+    return idx
+
+
+# ---------------------------------------------------------------------------
+# magnitude pruning into Z:L patterns
+# ---------------------------------------------------------------------------
+
+def prune_magnitude(w: np.ndarray, z: int, l: int) -> np.ndarray:
+    """Keep the top-|z| magnitudes in every block of l along the last axis."""
+    if w.shape[-1] % l != 0:
+        raise ValueError(f"last dim {w.shape[-1]} not a multiple of L={l}")
+    shape = w.shape
+    blocks = w.reshape(-1, l)
+    out = np.zeros_like(blocks)
+    order = np.argsort(-np.abs(blocks), axis=1)[:, :z]
+    rows = np.arange(blocks.shape[0])[:, None]
+    out[rows, order] = blocks[rows, order]
+    return out.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Phi: offline weight packer (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+def pack_slide_row(w: np.ndarray, n: int) -> np.ndarray:
+    """Greedy residual allocation of one (2N-2):2N row into 2:4 windows.
+
+    Returns the packed row of length gamma*K.  Raises if the input violates
+    the (2N-2):2N budget (more non-zeros than total window capacity).
+    """
+    k = w.shape[0]
+    kp = expanded_k(k, n)
+    out = np.zeros(kp, dtype=w.dtype)
+    used = np.zeros(k, dtype=bool)
+    n_groups = k // (2 * n)
+    wi = 0
+    for g in range(n_groups):
+        for l in range(n - 1):
+            b = 2 * n * g + 2 * l
+            cnt = 0
+            for d in range(4):
+                if w[b + d] != 0 and not used[b + d] and cnt < 2:
+                    out[4 * wi + d] = w[b + d]
+                    used[b + d] = True
+                    cnt += 1
+            wi += 1
+    leftover = np.logical_and(w != 0, ~used)
+    if leftover.any():
+        raise ValueError(
+            f"row violates (2N-2):2N for N={n}: "
+            f"{int(leftover.sum())} non-zeros could not be placed"
+        )
+    return out
+
+
+def pack_slide(w: np.ndarray, n: int) -> np.ndarray:
+    """Pack a [M, K] weight matrix row-by-row (paper Sec. 4.1)."""
+    return np.stack([pack_slide_row(row, n) for row in w])
+
+
+# ---------------------------------------------------------------------------
+# Psi: activation lifting (Eq. 4)
+# ---------------------------------------------------------------------------
+
+def lift(x: np.ndarray, n: int) -> np.ndarray:
+    """Lift activations along the last axis: pure index remapping."""
+    idx = lift_indices(x.shape[-1], n)
+    return np.take(x, idx, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# quantization
+# ---------------------------------------------------------------------------
+
+def quantize_per_token(x: np.ndarray, qmax: float = INT8_QMAX):
+    """Per-row dynamic absmax quantization (paper Alg. 1 pass 1).
+
+    Returns (q, scales) with q integer-valued (stored in int8 range) and
+    scales such that x ~= q * scales[:, None].
+    """
+    a = np.max(np.abs(x), axis=-1, keepdims=True)
+    a = np.maximum(a, 1e-12)
+    r = qmax / a
+    q = np.clip(np.rint(x * r), -qmax, qmax).astype(np.int8)
+    return q, (a / qmax).astype(x.dtype)
+
+
+def quantize_weight_per_channel(w: np.ndarray, qmax: float = INT8_QMAX):
+    """Per-output-channel symmetric weight quantization (offline)."""
+    a = np.max(np.abs(w), axis=-1, keepdims=True)
+    a = np.maximum(a, 1e-12)
+    q = np.clip(np.rint(w * (qmax / a)), -qmax, qmax).astype(np.int8)
+    return q, (a / qmax).astype(w.dtype)
+
+
+def fused_quant_slide(x: np.ndarray, n: int, qmax: float = INT8_QMAX):
+    """Reference for the fused kernel (Algorithm 1): quantize THEN lift.
+
+    Because Psi is a pure index remap, lift(quantize(x)) == the fused
+    output; the fused kernel saves the intermediate round-trip only.
+    """
+    q, s = quantize_per_token(x, qmax)
+    return lift(q, n), s
+
+
+# ---------------------------------------------------------------------------
+# GEMMs
+# ---------------------------------------------------------------------------
+
+def dense_gemm(x: np.ndarray, w: np.ndarray) -> np.ndarray:
+    """Y = X W^T with X [M, K], W [O, K]."""
+    return x @ w.T
+
+
+def slide_gemm(x: np.ndarray, w: np.ndarray, n: int) -> np.ndarray:
+    """SlideSparse GEMM: Psi(X) @ Phi(W)^T, equals X W^T exactly (Eq. 3)."""
+    return lift(x, n) @ pack_slide(w, n).T
+
+
+def slide_gemm_int8(x: np.ndarray, wq: np.ndarray, w_scale: np.ndarray,
+                    n: int, qmax: float = INT8_QMAX) -> np.ndarray:
+    """Quantized SlideSparse GEMM with wide accumulation + dequant."""
+    xl, xs = fused_quant_slide(x, n, qmax)
+    wp = pack_slide(wq.astype(np.float64), n)
+    acc = xl.astype(np.int64) @ wp.T.astype(np.int64)
+    return acc.astype(np.float64) * xs.astype(np.float64) * w_scale.reshape(1, -1)
+
+
+def dense_gemm_int8(x: np.ndarray, wq: np.ndarray, w_scale: np.ndarray,
+                    qmax: float = INT8_QMAX) -> np.ndarray:
+    """Quantized dense GEMM baseline with identical quantization choices."""
+    q, xs = quantize_per_token(x, qmax)
+    acc = q.astype(np.int64) @ wq.T.astype(np.int64)
+    return acc.astype(np.float64) * xs.astype(np.float64) * w_scale.reshape(1, -1)
+
+
+# ---------------------------------------------------------------------------
+# 2:4 compressed format (the cuSPARSELt-shaped representation)
+# ---------------------------------------------------------------------------
+
+def compress_24_row(wp: np.ndarray):
+    """Compress a 2:4-compliant row: per 4-window keep 2 values + positions.
+
+    Returns (values [K'/2], indices [K'/2]) -- the storage format the Rust
+    `stc::compressed` GEMM consumes (metadata = 2-bit position per value).
+    """
+    k = wp.shape[0]
+    assert k % 4 == 0
+    vals = np.zeros(k // 2, dtype=wp.dtype)
+    idxs = np.zeros(k // 2, dtype=np.int8)
+    for wi in range(k // 4):
+        win = wp[4 * wi : 4 * wi + 4]
+        nz = np.nonzero(win)[0]
+        if len(nz) > 2:
+            raise ValueError("row is not 2:4 compliant")
+        for slot, pos in enumerate(nz):
+            vals[2 * wi + slot] = win[pos]
+            idxs[2 * wi + slot] = pos
+        # unused slots keep value 0 / index 0 (contributes nothing)
+    return vals, idxs
+
+
+def compressed_gemv(vals: np.ndarray, idxs: np.ndarray, x: np.ndarray) -> float:
+    """Dot product in compressed form: exactly K'/2 multiply-accumulates."""
+    acc = 0.0
+    for wi in range(vals.shape[0] // 2):
+        base = 4 * wi
+        acc += vals[2 * wi] * x[base + idxs[2 * wi]]
+        acc += vals[2 * wi + 1] * x[base + idxs[2 * wi + 1]]
+    return acc

@@ -1,0 +1,137 @@
+"""L1 Pallas kernel: fused quantization-slide (paper Algorithm 1).
+
+One kernel fuses per-token dynamic absmax quantization with the activation
+lifting operator Psi, so the gamma-times expansion is hidden inside the
+quantization pass: read X once, write the lifted+quantized Y once (two
+memory operations instead of the naive four).
+
+TPU adaptation (DESIGN.md "Hardware adaptation"): the Triton version maps
+one thread-block per row; here a BlockSpec tiles BM rows of X into VMEM,
+the lift is a *static* index remap (stride-2 windows are known at trace
+time, so no gather is emitted -- XLA lowers `take` with a constant index
+vector to slices/concats), and the only added memory traffic is the
+gamma*K-wide store, exactly the paper's (gamma-1) overhead bound.
+
+Pallas runs with interpret=True on this image (CPU PJRT cannot execute
+Mosaic custom-calls); correctness is asserted against kernels.ref.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK_M = 8
+
+
+def _lift_block(x, n: int):
+    """Activation lifting Psi inside the kernel: static slices + concat
+    (stride-2 windows are compile-time constants, so no gather is
+    emitted -- also required because the xla_extension 0.5.1 CPU backend
+    the rust runtime uses miscompiles constant-index gathers)."""
+    bm, k = x.shape
+    xg = x.reshape(bm, k // (2 * n), 2 * n)
+    wins = [xg[..., 2 * l : 2 * l + 4] for l in range(n - 1)]
+    return jnp.concatenate(wins, axis=-1).reshape(bm, -1)
+
+
+def _kernel(x_ref, y_ref, s_ref, *, n: int, qmax: float):
+    """Fused kernel body for one row-block.
+
+    Pass 1 (Alg.1 lines 6-8): per-row absmax -> scale.
+    Pass 2 (lines 9-19): output-oriented vectorized lift (the window
+    structure b = 2Ng + 2l baked in at trace time) followed by
+    clamp/round -- the whole read->quantize->slide->pack->write pipeline
+    stays in registers/VMEM.
+    """
+    x = x_ref[...]
+    a = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    a = jnp.maximum(a, 1e-12)
+    r = qmax / a
+    # activation lifting Psi: pure index remap, no arithmetic (paper 3.3)
+    xl = _lift_block(x, n)
+    q = jnp.clip(jnp.round(xl * r), -qmax, qmax)
+    y_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = (a / qmax).astype(x.dtype).reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block_m", "qmax"))
+def fused_quant_slide(x, n: int = 4, block_m: int = DEFAULT_BLOCK_M,
+                      qmax: float = ref.INT8_QMAX):
+    """Quantize + lift a [M, K] activation matrix for (2N-2):2N sparsity.
+
+    Returns (y_int8 [M, gamma*K], scales [M]).
+    """
+    m, k = x.shape
+    kp = ref.expanded_k(k, n)
+    bm = min(block_m, m)
+    if m % bm != 0:
+        bm = 1  # fall back to row-per-program for ragged M
+    grid = (m // bm,)
+    return pl.pallas_call(
+        functools.partial(_kernel, n=n, qmax=qmax),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, kp), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, kp), jnp.int8),
+            jax.ShapeDtypeStruct((m,), x.dtype),
+        ],
+        interpret=True,
+    )(x)
+
+
+def _quant_only_kernel(x_ref, y_ref, s_ref, *, qmax: float):
+    """Plain per-token quantization (the baseline the paper compares the
+    fused kernel against in Appendix D.2)."""
+    x = x_ref[...]
+    a = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    a = jnp.maximum(a, 1e-12)
+    q = jnp.clip(jnp.round(x * (qmax / a)), -qmax, qmax)
+    y_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = (a / qmax).astype(x.dtype).reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "qmax"))
+def quant_only(x, block_m: int = DEFAULT_BLOCK_M, qmax: float = ref.INT8_QMAX):
+    """Baseline kernel: quantize without lifting. Returns (q [M,K], s [M])."""
+    m, k = x.shape
+    bm = min(block_m, m)
+    if m % bm != 0:
+        bm = 1
+    return pl.pallas_call(
+        functools.partial(_quant_only_kernel, qmax=qmax),
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.int8),
+            jax.ShapeDtypeStruct((m,), x.dtype),
+        ],
+        interpret=True,
+    )(x)
+
+
+def vmem_footprint_bytes(m_block: int, k: int, n: int,
+                         in_dtype_bytes: int = 4) -> int:
+    """Static VMEM estimate for one program instance (DESIGN.md Perf, L1).
+
+    input tile + lifted int8 output tile + scales. Used by the perf pass to
+    check tiles fit the ~16 MiB/core VMEM budget on real TPU targets.
+    """
+    kp = ref.expanded_k(k, n)
+    return m_block * k * in_dtype_bytes + m_block * kp + m_block * in_dtype_bytes

@@ -1,0 +1,405 @@
+"""L2: JAX transformer whose linear layers run the SlideSparse path.
+
+The model mirrors the paper's deployment target: a decoder-only
+transformer (RMSNorm / causal attention / SwiGLU MLP) served with
+per-token INT8 activation quantization.  Every linear layer goes through
+one of three backends (the vLLM "quantization interface" the paper
+intercepts, Sec. 4.3):
+
+  * dense    -- per-token quant + int8 dense GEMM (the cuBLASLt role)
+  * slide(N) -- fused quant+lift (L1 kernel) + 2:4-window GEMM over
+                offline-packed weights (the SlideSparse path)
+
+Both paths share identical quantization choices, so for (2N-2):2N weights
+their logits agree bit-for-bit -- the paper's losslessness claim, which
+the rust integration test asserts end to end.
+
+`use_pallas=True` routes quantization through the L1 Pallas kernel
+(kernels.slide_quant) so the kernel lowers into the same HLO; the default
+inline path emits the numerically identical jnp ops (validated against
+the Pallas kernel in python/tests) and keeps the serving HLO compact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels import slide_quant
+
+QMAX = ref.INT8_QMAX
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters (a scaled-down Llama shape)."""
+
+    dim: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    ffn_dim: int = 512
+    vocab: int = 512
+    max_seq: int = 256
+    # SlideSparse pattern: None = dense backend, else N for (2N-2):2N
+    sparsity_n: Optional[int] = None
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.n_heads
+
+    def tag(self) -> str:
+        return "dense" if self.sparsity_n is None else f"slide{self.sparsity_n}"
+
+
+# ---------------------------------------------------------------------------
+# parameter schema
+# ---------------------------------------------------------------------------
+# Params travel as a FLAT LIST of arrays so the rust runtime can feed them
+# positionally.  Order per layer, then trailing globals:
+#   for each layer: ln1_w, wqkv_q, wqkv_s, wo_q, wo_s,
+#                   ln2_w, w13_q, w13_s, w2_q, w2_s
+#   then: final_norm_w, embed, lm_head_q, lm_head_s
+# Weight *_q tensors are int8-valued but stored as f32 (converted to int8
+# in-graph for the dot) so the runtime only handles f32/i32 literals.
+
+PER_LAYER = 10
+TRAILING = 4
+
+
+def param_names(cfg: ModelConfig) -> List[str]:
+    names = []
+    for i in range(cfg.n_layers):
+        names += [
+            f"l{i}.ln1_w", f"l{i}.wqkv_q", f"l{i}.wqkv_s",
+            f"l{i}.wo_q", f"l{i}.wo_s",
+            f"l{i}.ln2_w", f"l{i}.w13_q", f"l{i}.w13_s",
+            f"l{i}.w2_q", f"l{i}.w2_s",
+        ]
+    names += ["final_norm_w", "embed", "lm_head_q", "lm_head_s"]
+    return names
+
+
+def _wk(cfg: ModelConfig, k: int) -> int:
+    """Stored contraction width: packed (gamma*K) for slide, K for dense."""
+    return ref.expanded_k(k, cfg.sparsity_n) if cfg.sparsity_n else k
+
+
+def param_specs(cfg: ModelConfig):
+    """[(name, shape, dtype)] in flat order -- the runtime's feed schema."""
+    d, f, v = cfg.dim, cfg.ffn_dim, cfg.vocab
+    specs = []
+    for i in range(cfg.n_layers):
+        specs += [
+            (f"l{i}.ln1_w", (d,), "f32"),
+            (f"l{i}.wqkv_q", (3 * d, _wk(cfg, d)), "f32"),
+            (f"l{i}.wqkv_s", (3 * d,), "f32"),
+            (f"l{i}.wo_q", (d, _wk(cfg, d)), "f32"),
+            (f"l{i}.wo_s", (d,), "f32"),
+            (f"l{i}.ln2_w", (d,), "f32"),
+            (f"l{i}.w13_q", (2 * f, _wk(cfg, d)), "f32"),
+            (f"l{i}.w13_s", (2 * f,), "f32"),
+            (f"l{i}.w2_q", (d, _wk(cfg, f)), "f32"),
+            (f"l{i}.w2_s", (d,), "f32"),
+        ]
+    specs += [
+        ("final_norm_w", (d,), "f32"),
+        ("embed", (v, d), "f32"),
+        ("lm_head_q", (v, _wk(cfg, d)), "f32"),
+        ("lm_head_s", (v,), "f32"),
+    ]
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# quantized linear (the intercepted backend)
+# ---------------------------------------------------------------------------
+
+def lift_jnp(x, n: int):
+    """Activation lifting Psi as static slices + concat (no gather).
+
+    Equivalent to jnp.take with ref.lift_indices, but lowers to
+    slice/concatenate HLO: the xla_extension 0.5.1 CPU backend the rust
+    runtime links against miscompiles gathers with constant index
+    vectors, while slice/concat round-trip exactly.
+    """
+    k = x.shape[-1]
+    lead = x.shape[:-1]
+    xg = x.reshape(*lead, k // (2 * n), 2 * n)
+    wins = [xg[..., 2 * l : 2 * l + 4] for l in range(n - 1)]
+    lifted = jnp.concatenate(wins, axis=-1)  # [..., G, (N-1)*4]
+    return lifted.reshape(*lead, ref.expanded_k(k, n))
+
+
+def _quant_lift(x2d, n: Optional[int], use_pallas: bool):
+    """Per-token quantize (+ lift when sliding). Returns (q_int8, scales)."""
+    if use_pallas:
+        if n is None:
+            return slide_quant.quant_only(x2d)
+        return slide_quant.fused_quant_slide(x2d, n)
+    a = jnp.maximum(jnp.max(jnp.abs(x2d), axis=-1, keepdims=True), 1e-12)
+    if n is not None:
+        # lift BEFORE quantizing: identical numerics (Psi is a remap and
+        # the absmax is unchanged by duplication)
+        x2d = lift_jnp(x2d, n)
+    q = jnp.clip(jnp.round(x2d * (QMAX / a)), -QMAX, QMAX)
+    return q.astype(jnp.int8), (a / QMAX).reshape(-1)
+
+
+def linear(x, wq, ws, cfg: ModelConfig, use_pallas: bool = False):
+    """y = dequant( int8(x) @ int8(w)^T ) with per-token/per-channel scales.
+
+    For the slide backend `wq` is the offline-packed Phi(W) (gamma*K wide)
+    and activations are lifted by Psi; Eq. 3 makes this equal to the dense
+    product for (2N-2):2N weights.
+    """
+    shape = x.shape
+    x2d = x.reshape(-1, shape[-1])
+    q, s = _quant_lift(x2d, cfg.sparsity_n, use_pallas)
+    acc = jax.lax.dot_general(
+        q, wq.astype(jnp.int8),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    y = acc.astype(jnp.float32) * s[:, None] * ws[None, :]
+    return y.reshape(*shape[:-1], wq.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# transformer blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _split_heads(x, b, s, h, hd):
+    return x.reshape(b, s, h, hd).transpose(0, 2, 1, 3)  # [B,H,S,hd]
+
+
+def attention_prefill(q, k, v, cfg: ModelConfig):
+    """Causal attention over the full prompt. q,k,v: [B,S,D]."""
+    b, s, _ = q.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    qh, kh, vh = (_split_heads(t, b, s, h, hd) for t in (q, k, v))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / np.sqrt(hd)
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vh)
+    return out.transpose(0, 2, 1, 3).reshape(b, s, h * hd), kh, vh
+
+
+def attention_decode(q, k_new, v_new, k_cache, v_cache, pos, cfg: ModelConfig):
+    """One-token attention against the KV cache.
+
+    q,k_new,v_new: [B,1,D]; caches: [B,H,Smax,hd]; pos: int32 [B] -- each
+    batch slot's current sequence length (continuous batching mixes
+    sequences of different lengths, so positions are per-slot).
+    """
+    b = q.shape[0]
+    h, hd = cfg.n_heads, cfg.head_dim
+    smax = k_cache.shape[2]
+    qh = _split_heads(q, b, 1, h, hd)          # [B,H,1,hd]
+    kh = _split_heads(k_new, b, 1, h, hd)
+    vh = _split_heads(v_new, b, 1, h, hd)
+    # scatter the new K/V row at each slot's own position via one-hot
+    onehot = (jnp.arange(smax)[None, :] == pos[:, None])       # [B,Smax]
+    oh = onehot[:, None, :, None]                              # [B,1,Smax,1]
+    k_cache = jnp.where(oh, kh, k_cache)
+    v_cache = jnp.where(oh, vh, v_cache)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qh, k_cache) / np.sqrt(hd)
+    valid = jnp.arange(smax)[None, :] <= pos[:, None]          # [B,Smax]
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v_cache)
+    return out.transpose(0, 2, 1, 3).reshape(b, 1, h * hd), k_cache, v_cache
+
+
+def _layer_params(params: List, i: int):
+    base = i * PER_LAYER
+    return params[base : base + PER_LAYER]
+
+
+def _block_prefill(x, lp, cfg, use_pallas):
+    ln1_w, wqkv_q, wqkv_s, wo_q, wo_s, ln2_w, w13_q, w13_s, w2_q, w2_s = lp
+    h = rmsnorm(x, ln1_w)
+    qkv = linear(h, wqkv_q, wqkv_s, cfg, use_pallas)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    attn, kh, vh = attention_prefill(q, k, v, cfg)
+    x = x + linear(attn, wo_q, wo_s, cfg, use_pallas)
+    h = rmsnorm(x, ln2_w)
+    w13 = linear(h, w13_q, w13_s, cfg, use_pallas)
+    w1, w3 = jnp.split(w13, 2, axis=-1)
+    x = x + linear(jax.nn.silu(w1) * w3, w2_q, w2_s, cfg, use_pallas)
+    return x, kh, vh
+
+
+def _block_decode(x, lp, k_cache, v_cache, pos, cfg, use_pallas):
+    ln1_w, wqkv_q, wqkv_s, wo_q, wo_s, ln2_w, w13_q, w13_s, w2_q, w2_s = lp
+    h = rmsnorm(x, ln1_w)
+    qkv = linear(h, wqkv_q, wqkv_s, cfg, use_pallas)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    attn, k_cache, v_cache = attention_decode(q, k, v, k_cache, v_cache, pos, cfg)
+    x = x + linear(attn, wo_q, wo_s, cfg, use_pallas)
+    h = rmsnorm(x, ln2_w)
+    w13 = linear(h, w13_q, w13_s, cfg, use_pallas)
+    w1, w3 = jnp.split(w13, 2, axis=-1)
+    x = x + linear(jax.nn.silu(w1) * w3, w2_q, w2_s, cfg, use_pallas)
+    return x, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# entry points (these get AOT-lowered)
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, use_pallas: bool = False):
+    """Returns fn(tokens [B,S] i32, *params) -> (logits [B,S,V],
+    k_caches [L,B,H,S,hd], v_caches [L,B,H,S,hd])."""
+
+    def fn(tokens, *params):
+        params = list(params)
+        nl = cfg.n_layers
+        final_norm_w, embed = params[nl * PER_LAYER], params[nl * PER_LAYER + 1]
+        lm_head_q, lm_head_s = params[nl * PER_LAYER + 2], params[nl * PER_LAYER + 3]
+        x = jnp.take(embed, tokens, axis=0)
+        ks, vs = [], []
+        for i in range(nl):
+            x, kh, vh = _block_prefill(x, _layer_params(params, i), cfg, use_pallas)
+            ks.append(kh)
+            vs.append(vh)
+        x = rmsnorm(x, final_norm_w)
+        logits = linear(x, lm_head_q, lm_head_s, cfg, use_pallas)
+        return (logits, jnp.stack(ks), jnp.stack(vs))
+
+    return fn
+
+
+def decode_step(cfg: ModelConfig, use_pallas: bool = False):
+    """Returns fn(token [B] i32, pos [B] i32, k_caches [L,B,H,Smax,hd],
+    v_caches, *params) -> (logits [B,V], k_caches, v_caches)."""
+
+    def fn(token, pos, k_caches, v_caches, *params):
+        params = list(params)
+        nl = cfg.n_layers
+        final_norm_w, embed = params[nl * PER_LAYER], params[nl * PER_LAYER + 1]
+        lm_head_q, lm_head_s = params[nl * PER_LAYER + 2], params[nl * PER_LAYER + 3]
+        x = jnp.take(embed, token[:, None], axis=0)  # [B,1,D]
+        new_k, new_v = [], []
+        for i in range(nl):
+            x, kc, vc = _block_decode(
+                x, _layer_params(params, i), k_caches[i], v_caches[i],
+                pos, cfg, use_pallas,
+            )
+            new_k.append(kc)
+            new_v.append(vc)
+        x = rmsnorm(x, final_norm_w)
+        logits = linear(x, lm_head_q, lm_head_s, cfg, use_pallas)
+        return (logits[:, 0, :], jnp.stack(new_k), jnp.stack(new_v))
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# deterministic weight generation + offline preprocessing
+# ---------------------------------------------------------------------------
+
+def _splitmix64(idx: np.ndarray) -> np.ndarray:
+    """Counter-based PRNG (SplitMix64); vectorized, reproducible anywhere."""
+    z = (idx + np.uint64(0x9E3779B97F4A7C15)).astype(np.uint64)
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return z ^ (z >> np.uint64(31))
+
+
+def gen_uniform(seed: int, count: int, lo: float = -1.0, hi: float = 1.0):
+    idx = np.arange(count, dtype=np.uint64) + np.uint64(seed) * np.uint64(0x1000_0000_0000)
+    u = (_splitmix64(idx) >> np.uint64(11)).astype(np.float64) / float(1 << 53)
+    return (lo + u * (hi - lo)).astype(np.float32)
+
+
+def make_params(cfg: ModelConfig, seed: int = 0):
+    """Generate, prune, quantize and (for slide configs) pack all weights.
+
+    Returns the flat param list matching param_specs(cfg). The SAME seed
+    with dense vs slide configs yields models whose (2N-2):2N-pruned
+    weights agree, so dense-vs-slide logits can be compared.
+    """
+    d, f, v = cfg.dim, cfg.ffn_dim, cfg.vocab
+    n = cfg.sparsity_n
+    params = []
+    sd = seed
+
+    def dense_w(o, k, scale):
+        nonlocal sd
+        w = gen_uniform(sd, o * k, -scale, scale).reshape(o, k)
+        sd += 1
+        return w
+
+    def lin(o, k):
+        """Prune to (2N-2):2N (even for dense cfg when n_ref given? no --
+        dense cfg keeps dense weights), quantize, maybe pack."""
+        w = dense_w(o, k, 1.0 / np.sqrt(k))
+        if n is not None:
+            w = ref.prune_magnitude(w, 2 * n - 2, 2 * n)
+        wq, ws = ref.quantize_weight_per_channel(w)
+        if n is not None:
+            wq = ref.pack_slide(wq.astype(np.float32), n)
+        return wq.astype(np.float32), ws.reshape(-1).astype(np.float32)
+
+    for _ in range(cfg.n_layers):
+        ln1 = np.ones(d, np.float32)
+        wqkv_q, wqkv_s = lin(3 * d, d)
+        wo_q, wo_s = lin(d, d)
+        ln2 = np.ones(d, np.float32)
+        w13_q, w13_s = lin(2 * f, d)
+        w2_q, w2_s = lin(d, f)
+        params += [ln1, wqkv_q, wqkv_s, wo_q, wo_s, ln2, w13_q, w13_s, w2_q, w2_s]
+    final_norm = np.ones(d, np.float32)
+    embed = dense_w(v, d, 1.0)
+    lm_head_q, lm_head_s = lin(v, d)
+    params += [final_norm, embed, lm_head_q, lm_head_s]
+    return params
+
+
+def make_pruned_params(cfg_dense: ModelConfig, n: int, seed: int = 0):
+    """Dense-layout params whose linears are (2N-2):2N pruned -- the dense
+    backend running a pruned model (for the lossless-equivalence check and
+    the accuracy experiment)."""
+    pruned_cfg = dataclasses.replace(cfg_dense, sparsity_n=None)
+    params = make_params(pruned_cfg, seed)
+    # re-generate with pruning applied but without packing
+    d, f, v = cfg_dense.dim, cfg_dense.ffn_dim, cfg_dense.vocab
+    out = []
+    sd = seed
+
+    def dense_w(o, k, scale):
+        nonlocal sd
+        w = gen_uniform(sd, o * k, -scale, scale).reshape(o, k)
+        sd += 1
+        return w
+
+    def lin(o, k):
+        w = dense_w(o, k, 1.0 / np.sqrt(k))
+        w = ref.prune_magnitude(w, 2 * n - 2, 2 * n)
+        wq, ws = ref.quantize_weight_per_channel(w)
+        return wq.astype(np.float32), ws.reshape(-1).astype(np.float32)
+
+    for _ in range(cfg_dense.n_layers):
+        ln1 = np.ones(d, np.float32)
+        wqkv_q, wqkv_s = lin(3 * d, d)
+        wo_q, wo_s = lin(d, d)
+        ln2 = np.ones(d, np.float32)
+        w13_q, w13_s = lin(2 * f, d)
+        w2_q, w2_s = lin(d, f)
+        out += [ln1, wqkv_q, wqkv_s, wo_q, wo_s, ln2, w13_q, w13_s, w2_q, w2_s]
+    final_norm = np.ones(d, np.float32)
+    embed = dense_w(v, d, 1.0)
+    lm_head_q, lm_head_s = lin(v, d)
+    out += [final_norm, embed, lm_head_q, lm_head_s]
+    return out

@@ -1,0 +1,102 @@
+"""AOT pipeline tests: manifest schema and golden-vector consistency.
+
+These run against the artifacts/ directory when it exists (built by
+`make artifacts`); they are skipped otherwise so the kernel/model tests
+stay independent of the build step.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_schema():
+    m = manifest()
+    for key in ["model", "prefill_buckets", "decode_buckets", "artifacts",
+                "weights", "golden"]:
+        assert key in m
+    assert m["model"]["dim"] % m["model"]["n_heads"] == 0
+    names = {a["name"] for a in m["artifacts"]}
+    assert len(names) == len(m["artifacts"]), "duplicate artifact names"
+    for a in m["artifacts"]:
+        assert os.path.exists(os.path.join(ART, a["file"])), a["file"]
+        assert a["inputs"] and a["outputs"]
+
+
+def test_every_bucket_has_both_variants():
+    m = manifest()
+    n = m["model"]["slide_n"]
+    names = {a["name"] for a in m["artifacts"]}
+    for b, s in m["prefill_buckets"]:
+        for v in ["dense", f"slide{n}"]:
+            assert f"prefill_{v}_b{b}_s{s}" in names
+    for b in m["decode_buckets"]:
+        for v in ["dense", f"slide{n}"]:
+            assert f"decode_{v}_b{b}" in names
+
+
+def test_weight_files_match_declared_sizes():
+    m = manifest()
+    for variant, wf in m["weights"].items():
+        path = os.path.join(ART, wf["file"])
+        size = os.path.getsize(path)
+        end = max(t["offset"] + t["nbytes"] for t in wf["tensors"])
+        assert size == end, f"{variant}: file {size} vs declared {end}"
+        for t in wf["tensors"]:
+            n = int(np.prod(t["shape"]))
+            assert t["nbytes"] == 4 * n, t["name"]
+
+
+def test_golden_vectors_reproduce():
+    """Re-running the model on the golden tokens must reproduce the
+    recorded logits (catches weight/manifest drift)."""
+    import dataclasses
+    from compile import aot, model as M
+
+    m = manifest()
+    g = m["golden"]
+    cfg = M.ModelConfig(
+        dim=m["model"]["dim"], n_layers=m["model"]["n_layers"],
+        n_heads=m["model"]["n_heads"], ffn_dim=m["model"]["ffn_dim"],
+        vocab=m["model"]["vocab"], max_seq=m["model"]["max_seq"],
+        sparsity_n=m["model"]["slide_n"],
+    )
+    params = M.make_params(cfg, m["model"]["seed"])
+    tokens = np.asarray(g["tokens"], np.int32).reshape(g["b"], g["s"])
+    import jax
+    logits, _, _ = jax.jit(M.prefill(cfg))(tokens, *params)
+    last = np.asarray(logits)[0, -1]
+    np.testing.assert_allclose(
+        last[:16], np.asarray(g["last_logits_head"], np.float32), rtol=1e-5
+    )
+    assert int(last.argmax()) == g["last_argmax"]
+
+
+def test_slide_weights_are_24_compliant():
+    m = manifest()
+    n = m["model"]["slide_n"]
+    wf = m["weights"][f"slide{n}"]
+    raw = open(os.path.join(ART, wf["file"]), "rb").read()
+    checked = 0
+    for t in wf["tensors"]:
+        if not t["name"].endswith("_q") or "embed" in t["name"]:
+            continue
+        arr = np.frombuffer(
+            raw[t["offset"]:t["offset"] + t["nbytes"]], np.float32
+        ).reshape(t["shape"])
+        wins = arr.reshape(arr.shape[0], -1, 4)
+        assert (np.count_nonzero(wins, axis=-1) <= 2).all(), t["name"]
+        checked += 1
+    assert checked > 0

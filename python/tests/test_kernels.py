@@ -1,0 +1,120 @@
+"""Pallas L1 kernels vs the pure-numpy oracles (hypothesis shape sweeps)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, slide_quant, sparse_gemm
+from .test_ref import random_sparse_row
+
+SHAPE_DEADLINE_MS = 20000
+
+
+# ---------------------------------------------------------------------------
+# fused quantization-slide kernel (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=SHAPE_DEADLINE_MS)
+@given(
+    n=st.sampled_from([3, 4, 5, 8]),
+    groups=st.integers(1, 4),
+    m=st.integers(1, 17),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_quant_slide_matches_ref(n, groups, m, seed):
+    k = 2 * n * groups
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    y, s = slide_quant.fused_quant_slide(jnp.asarray(x), n=n)
+    yr, sr = ref.fused_quant_slide(x, n)
+    np.testing.assert_array_equal(np.asarray(y), yr)
+    np.testing.assert_allclose(np.asarray(s), sr.reshape(-1), rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=SHAPE_DEADLINE_MS)
+@given(
+    m=st.integers(1, 16),
+    kexp=st.integers(3, 7),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_only_matches_ref(m, kexp, seed):
+    k = 2 ** kexp
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((m, k)) * 10).astype(np.float32)
+    q, s = slide_quant.quant_only(jnp.asarray(x))
+    qr, sr = ref.quantize_per_token(x)
+    np.testing.assert_array_equal(np.asarray(q), qr)
+    np.testing.assert_allclose(np.asarray(s), sr.reshape(-1), rtol=1e-6)
+
+
+def test_fused_kernel_dtype_bf16():
+    """The kernel generalizes across input precisions (paper Sec. 5)."""
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((8, 32)).astype(jnp.bfloat16)
+    y, s = slide_quant.fused_quant_slide(jnp.asarray(x), n=4)
+    yr, sr = ref.fused_quant_slide(np.asarray(x, dtype=np.float32), 4)
+    # bf16 absmax/rounding may differ by 1 ulp of the scale
+    assert np.abs(np.asarray(y, dtype=np.int32) - yr.astype(np.int32)).max() <= 1
+
+
+def test_fused_extreme_values():
+    """Zero rows and huge magnitudes must not produce NaN/Inf."""
+    x = np.zeros((4, 16), np.float32)
+    x[1] = 1e30
+    x[2] = -1e-30
+    y, s = slide_quant.fused_quant_slide(jnp.asarray(x), n=4)
+    assert np.isfinite(np.asarray(s)).all()
+    assert np.abs(np.asarray(y)).max() <= 127
+
+
+def test_vmem_footprint_estimate():
+    """Static L1 perf check: default tiles fit a 16 MiB VMEM budget even at
+    the largest serving K (paper-model hidden dims up to 8K)."""
+    b = slide_quant.vmem_footprint_bytes(slide_quant.DEFAULT_BLOCK_M, 8192, 4)
+    assert b < 16 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# 2:4 compressed sparse GEMM kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=SHAPE_DEADLINE_MS)
+@given(
+    n=st.sampled_from([3, 4, 5]),
+    groups=st.integers(1, 3),
+    m=st.integers(1, 9),
+    o=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_compressed_gemm_equals_dense(n, groups, m, o, seed):
+    k = 2 * n * groups
+    rng = np.random.default_rng(seed)
+    w = np.stack([random_sparse_row(rng, k, n) for _ in range(o)]).astype(np.float32)
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    y = sparse_gemm.slide_sparse_gemm(jnp.asarray(x), w, n)
+    np.testing.assert_allclose(np.asarray(y), x @ w.T, rtol=2e-4, atol=2e-4)
+
+
+def test_compress_24_metadata_bits():
+    """Positions must fit 2 bits (the hardware metadata width)."""
+    rng = np.random.default_rng(2)
+    w = np.stack([random_sparse_row(rng, 32, 4) for _ in range(8)])
+    wp = ref.pack_slide(w, 4)
+    vals, idxs = sparse_gemm.compress_24(wp)
+    assert idxs.min() >= 0 and idxs.max() <= 3
+    assert vals.shape[1] == wp.shape[1] // 2  # 50% storage for values
+
+
+def test_compressed_gemm_tiled_blocks():
+    """Exercise the multi-program grid path (block divisions > 1)."""
+    n, k, m, o = 4, 64, 16, 64
+    rng = np.random.default_rng(3)
+    w = np.stack([random_sparse_row(rng, k, n) for _ in range(o)]).astype(np.float32)
+    wp = ref.pack_slide(w, n)
+    vals, idxs = sparse_gemm.compress_24(wp)
+    xl = jnp.asarray(ref.lift(rng.standard_normal((m, k)).astype(np.float32), n))
+    y = sparse_gemm.compressed_gemm(xl, jnp.asarray(vals), jnp.asarray(idxs),
+                                    block_m=8, block_o=32)
+    yr = np.asarray(xl) @ wp.T
+    np.testing.assert_allclose(np.asarray(y), yr, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,158 @@
+"""Tests for the pure-numpy oracles themselves: the paper's theorems."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+PATTERNS = [3, 4, 5, 6, 8]  # N for 4:6, 6:8, 8:10, 10:12, 14:16
+
+
+def random_sparse_row(rng, k, n, z=None):
+    """Random row obeying the (2N-2):2N budget (z non-zeros per 2N block)."""
+    l = 2 * n
+    z = l - 2 if z is None else z
+    row = np.zeros(k)
+    for g in range(k // l):
+        pos = rng.choice(l, size=z, replace=False)
+        row[g * l + pos] = rng.standard_normal(z)
+    return row
+
+
+@pytest.mark.parametrize("n", PATTERNS)
+def test_gamma_matches_eq5(n):
+    # gamma = (N-1)*4 / 2N = 2 - 2/N
+    assert ref.gamma(n) == pytest.approx((n - 1) * 4 / (2 * n))
+
+
+@pytest.mark.parametrize("n", PATTERNS)
+def test_expanded_k(n):
+    k = 2 * n * 7
+    assert ref.expanded_k(k, n) == 7 * (n - 1) * 4
+
+
+@pytest.mark.parametrize("n", PATTERNS)
+def test_pack_is_24_compliant(n):
+    """Theorem 1: every 4-window of the packed row holds <= 2 non-zeros."""
+    rng = np.random.default_rng(n)
+    row = random_sparse_row(rng, 2 * n * 5, n)
+    packed = ref.pack_slide_row(row, n)
+    wins = packed.reshape(-1, 4)
+    assert (np.count_nonzero(wins, axis=1) <= 2).all()
+
+
+@pytest.mark.parametrize("n", PATTERNS)
+def test_pack_is_lossless(n):
+    """Theorem 1 losslessness: multiset of non-zeros is preserved and the
+    inner product with any lifted vector equals the dense inner product."""
+    rng = np.random.default_rng(100 + n)
+    k = 2 * n * 4
+    row = random_sparse_row(rng, k, n)
+    packed = ref.pack_slide_row(row, n)
+    assert np.isclose(packed.sum(), row.sum())
+    assert np.count_nonzero(packed) == np.count_nonzero(row)
+    x = rng.standard_normal(k)
+    xl = ref.lift(x, n)
+    assert np.isclose(packed @ xl, row @ x), "Eq. 3 violated"
+
+
+@pytest.mark.parametrize("n", PATTERNS)
+@pytest.mark.parametrize("z_off", [0, 1, 2])
+def test_pack_sparser_rows_also_work(n, z_off):
+    """Rows sparser than the budget (fewer non-zeros) must also pack."""
+    z = 2 * n - 2 - z_off
+    rng = np.random.default_rng(7 * n + z_off)
+    row = random_sparse_row(rng, 2 * n * 3, n, z=z)
+    packed = ref.pack_slide_row(row, n)
+    x = rng.standard_normal(row.shape[0])
+    assert np.isclose(packed @ ref.lift(x, n), row @ x)
+
+
+def test_pack_rejects_overfull_row():
+    """A dense block (2N non-zeros) exceeds window capacity and must fail."""
+    n = 4
+    row = np.arange(1.0, 2 * n + 1)  # fully dense 8-block
+    with pytest.raises(ValueError):
+        ref.pack_slide_row(row, n)
+
+
+def test_clustered_nonzeros_spill_to_next_window():
+    """The paper's 'incompatible gap' case: non-zeros cluster at the front
+    of a block, violating local 2:4; spillover must recover them."""
+    n = 4
+    # 6 non-zeros packed into positions 0..5 of an 8-block: window0 takes
+    # 2, spill -> window1 takes 2, spill -> window2 takes 2.
+    row = np.array([1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 0.0, 0.0])
+    packed = ref.pack_slide_row(row, n)
+    x = np.arange(1.0, 9.0)
+    assert np.isclose(packed @ ref.lift(x, n), row @ x)
+    wins = packed.reshape(-1, 4)
+    assert (np.count_nonzero(wins, axis=1) == 2).all()
+
+
+@pytest.mark.parametrize("n", [3, 4, 5])
+def test_slide_gemm_equals_dense(n):
+    rng = np.random.default_rng(42)
+    m, o, k = 5, 6, 2 * n * 3
+    w = np.stack([random_sparse_row(rng, k, n) for _ in range(o)])
+    x = rng.standard_normal((m, k))
+    np.testing.assert_allclose(
+        ref.slide_gemm(x, w, n), ref.dense_gemm(x, w), rtol=1e-10
+    )
+
+
+@pytest.mark.parametrize("n", [3, 4, 5])
+def test_int8_slide_matches_int8_dense_exactly(n):
+    """With shared quantization choices the slide path is bit-identical to
+    the dense int8 path (the system's lossless-deployment claim)."""
+    rng = np.random.default_rng(11)
+    m, o, k = 4, 8, 2 * n * 4
+    w = np.stack([random_sparse_row(rng, k, n) for _ in range(o)])
+    wq, ws = ref.quantize_weight_per_channel(w)
+    x = rng.standard_normal((m, k))
+    ys = ref.slide_gemm_int8(x, wq, ws, n)
+    yd = ref.dense_gemm_int8(x, wq, ws)
+    np.testing.assert_array_equal(ys, yd)
+
+
+def test_quantize_roundtrip_error_bound():
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((16, 64))
+    q, s = ref.quantize_per_token(x)
+    err = np.abs(q.astype(np.float64) * s - x)
+    # absmax quantization error is bounded by scale/2 per element
+    assert (err <= s / 2 + 1e-12).all()
+
+
+def test_prune_magnitude_budget():
+    rng = np.random.default_rng(5)
+    w = rng.standard_normal((8, 48))
+    for z, l in [(6, 8), (4, 6), (2, 4), (8, 12)]:
+        p = ref.prune_magnitude(w, z, l)
+        blocks = p.reshape(-1, l)
+        assert (np.count_nonzero(blocks, axis=1) <= z).all()
+        # kept values are the largest-|.| ones
+        orig = w.reshape(-1, l)
+        for b in range(blocks.shape[0]):
+            kept = np.abs(orig[b][blocks[b] != 0])
+            dropped = np.abs(orig[b][blocks[b] == 0])
+            if len(kept) and len(dropped):
+                assert kept.min() >= dropped.max() - 1e-12
+
+
+def test_compress_24_roundtrip():
+    n = 4
+    rng = np.random.default_rng(9)
+    row = random_sparse_row(rng, 2 * n * 3, n)
+    packed = ref.pack_slide_row(row, n)
+    vals, idxs = ref.compress_24_row(packed)
+    x = rng.standard_normal(packed.shape[0])
+    assert np.isclose(ref.compressed_gemv(vals, idxs, x), packed @ x)
+
+
+def test_lift_indices_structure():
+    """Window j covers (x_{2j}, x_{2j+1}, x_{2j+2}, x_{2j+3}) inside its
+    group -- the exact Eq. 4 matrix for the 6:8 example."""
+    idx = ref.lift_indices(8, 4)
+    expect = np.array([0, 1, 2, 3, 2, 3, 4, 5, 4, 5, 6, 7])
+    np.testing.assert_array_equal(idx, expect)

@@ -1,0 +1,11 @@
+//! Paper Fig. 8 bottom / Appendix D.4.2: end-to-end DECODE throughput.
+use slidesparse::bench::tables;
+use slidesparse::perfmodel::gpu;
+use slidesparse::quant::Precision;
+
+fn main() {
+    tables::e2e_measured(true).print();
+    tables::e2e_modeled(&gpu("A100").unwrap(), Precision::Int8, 512, true).print();
+    tables::e2e_modeled(&gpu("B200").unwrap(), Precision::Int8, 512, true).print();
+    tables::e2e_modeled(&gpu("RTX4090").unwrap(), Precision::Fp8E4M3, 512, true).print();
+}

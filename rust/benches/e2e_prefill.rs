@@ -1,0 +1,13 @@
+//! Paper Fig. 8 top / Appendix D.4.1: end-to-end PREFILL throughput.
+//! Measured: the real serving engine (continuous batching, paged KV)
+//! over the STC executor. Modeled: D.4.1 rows for A100/B200/RTX4090.
+use slidesparse::bench::tables;
+use slidesparse::perfmodel::gpu;
+use slidesparse::quant::Precision;
+
+fn main() {
+    tables::e2e_measured(false).print();
+    tables::e2e_modeled(&gpu("A100").unwrap(), Precision::Int8, 16384, false).print();
+    tables::e2e_modeled(&gpu("B200").unwrap(), Precision::Int8, 16384, false).print();
+    tables::e2e_modeled(&gpu("RTX4090").unwrap(), Precision::Fp8E4M3, 8192, false).print();
+}

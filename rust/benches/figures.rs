@@ -1,0 +1,14 @@
+//! Paper figures 1b, 3, 7, 9, 10 + Appendix D.5 efficiency analysis.
+use slidesparse::bench::tables;
+use slidesparse::quant::Precision;
+
+fn main() {
+    tables::fig1_limit_table().print();
+    tables::fig3_space().print();
+    tables::fig7_kernel_vs_m("A100").print();
+    tables::fig7_kernel_vs_m("B200").print();
+    tables::efficiency_measured(256, 480).print();
+    tables::efficiency_modeled(8192, Precision::Int8).print();
+    tables::efficiency_modeled(8192, Precision::Fp8E4M3).print();
+    tables::fig10_e2e_vs_m().print();
+}

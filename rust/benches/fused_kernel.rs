@@ -1,0 +1,10 @@
+//! Paper Table 1 (Appendix D.2): fused quantization-slide kernel
+//! latency vs quant-only baseline. Measured on the rust hot path,
+//! modeled for A100/H100/B200.
+use slidesparse::bench::tables;
+
+fn main() {
+    tables::fused_kernel_measured(&[512, 2048, 8192], 4096).print();
+    tables::fused_kernel_modeled(&[2048, 4096, 8192, 16384], 4096).print();
+    println!("\npaper Table 1 reference: overhead +25..53% across GPUs/M");
+}

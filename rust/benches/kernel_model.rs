@@ -1,0 +1,26 @@
+//! Appendix D.3.2: model-shape kernel speedups (Wqkv+Wo+W13+W2
+//! aggregated). Measured at 1/8-scaled shapes on the STC simulator,
+//! modeled at full shapes on the GPU perfmodel.
+use slidesparse::bench::tables;
+use slidesparse::perfmodel::gpu;
+use slidesparse::quant::Precision;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    tables::kernel_model_measured("Qwen2.5-7B", &[16, 64], 8).print();
+    if full {
+        tables::kernel_model_measured("Llama3.2-1B", &[16, 64], 8).print();
+    }
+    let models: &[&str] = if full {
+        &["Llama3.2-1B", "BitNet-2B", "Llama3.2-3B", "Qwen2.5-7B", "Qwen2.5-14B"]
+    } else {
+        &["Qwen2.5-7B", "Qwen2.5-14B"]
+    };
+    let ms = [64usize, 512, 4096, 16384];
+    for name in models {
+        for gname in ["A100", "B200"] {
+            let g = gpu(gname).unwrap();
+            tables::kernel_model_gpu(&g, name, Precision::Int8, &ms).print();
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! Paper Fig. 6 + Appendix D.3.1: square-kernel speedup tables.
+//! Measured rows: the CPU STC simulator. Modeled rows: the six-GPU
+//! perfmodel across precisions.
+use slidesparse::bench::tables;
+use slidesparse::perfmodel::gpus;
+use slidesparse::quant::Precision;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    tables::kernel_square_measured(&[16, 64, 256], 480).print();
+    let ms: &[usize] = if full {
+        &[64, 256, 1024, 4096, 8192, 16384]
+    } else {
+        &[64, 1024, 16384]
+    };
+    let precisions: &[Precision] = if full {
+        &[Precision::Fp4E2M1, Precision::Int8, Precision::Fp8E4M3,
+          Precision::Bf16, Precision::Fp16]
+    } else {
+        &[Precision::Int8, Precision::Fp8E4M3, Precision::Bf16]
+    };
+    for g in gpus() {
+        for &p in precisions {
+            // paper: A100 lacks FP8/FP4; H100 FP16 sparse rows missing
+            if g.name == "A100" && matches!(p, Precision::Fp8E4M3 | Precision::Fp4E2M1) {
+                continue;
+            }
+            tables::kernel_square_gpu(&g, p, ms).print();
+        }
+    }
+}

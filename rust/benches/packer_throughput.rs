@@ -1,0 +1,9 @@
+//! Appendix A.2: offline weight-packer throughput + 70B projection.
+use slidesparse::bench::tables;
+
+fn main() {
+    tables::packer_throughput(2048, 4096).print();
+    println!("\npaper A.2 reference: >10 GB/s on H100 (GPU-parallel packer),");
+    println!("Llama-3-70B (140 GB) converted in <30 s; ours is the");
+    println!("single-thread CPU reference implementation of Algorithm 2.");
+}

@@ -1,0 +1,155 @@
+//! Timing harness for the paper-table benches (criterion is not in the
+//! offline crate set): warmup + repeated measurement with mean/min/std,
+//! adaptive iteration counts, and aligned table printing.
+
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub std_s: f64,
+    pub iters: usize,
+}
+
+impl Measurement {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_s * 1e6
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+}
+
+/// Time `f` with `warmup` throwaway runs, then enough iterations to
+/// accumulate ~`target_s` of wall clock (bounded by max_iters).
+pub fn bench<F: FnMut()>(warmup: usize, target_s: f64, max_iters: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    // pilot run to size the batch
+    let t0 = Instant::now();
+    f();
+    let pilot = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_s / pilot).ceil() as usize).clamp(3, max_iters);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples.iter().copied().fold(f64::INFINITY, f64::min);
+    let var = samples
+        .iter()
+        .map(|s| (s - mean) * (s - mean))
+        .sum::<f64>()
+        / samples.len() as f64;
+    Measurement { mean_s: mean, min_s: min, std_s: var.sqrt(), iters }
+}
+
+/// Quick bench with defaults matched to the paper's methodology
+/// (25 warmup + measured runs).
+pub fn quick<F: FnMut()>(f: F) -> Measurement {
+    bench(3, 0.25, 50, f)
+}
+
+/// Aligned table printer (the paper-table output format).
+pub struct Table {
+    pub title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n### {}\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!("{c:>w$} | ", w = w));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&fmt_row(&sep, &widths));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a speedup cell.
+pub fn sx(v: f64) -> String {
+    format!("{v:.2}x")
+}
+
+/// Format a percentage cell.
+pub fn pct(v: f64) -> String {
+    format!("{:.0}%", v * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let m = bench(1, 0.02, 10, || {
+            std::hint::black_box((0..10_000).sum::<u64>());
+        });
+        assert!(m.mean_s > 0.0 && m.min_s <= m.mean_s);
+        assert!(m.iters >= 3);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "speedup"]);
+        t.row(vec!["x".into(), sx(1.234)]);
+        t.row(vec!["long-label".into(), sx(10.0)]);
+        let r = t.render();
+        assert!(r.contains("1.23x"));
+        assert!(r.contains("10.00x"));
+        assert!(r.contains("### demo"));
+        // all data lines same width
+        let lines: Vec<&str> = r.lines().filter(|l| l.starts_with('|')).collect();
+        assert!(lines.windows(2).all(|w| w[0].len() == w[1].len()));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

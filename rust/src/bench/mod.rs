@@ -1,0 +1,7 @@
+//! Benchmark harness + the generators that regenerate every table and
+//! figure of the paper's evaluation (see DESIGN.md §5 for the index).
+
+pub mod harness;
+pub mod tables;
+
+pub use harness::{bench, quick, Measurement, Table};

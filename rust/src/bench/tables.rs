@@ -1,0 +1,564 @@
+//! Generators for every table and figure in the paper's evaluation.
+//! Each returns a rendered `Table`; bench binaries and the CLI share
+//! these. Measured numbers come from the CPU STC simulator / the real
+//! serving engine; modeled numbers come from `perfmodel` (the six-GPU
+//! substitute). EXPERIMENTS.md records paper-vs-ours for each.
+
+use crate::bench::harness::{bench, quick, sx, Table};
+use crate::coordinator::{Engine, EngineConfig, Request, SamplingParams, StcExecutor};
+use crate::model::{by_name, Backend, BlockConfig, Linear, NativeModel};
+use crate::perfmodel::{e2e_speedup, gpus, E2eParams, Gpu};
+use crate::quant::{FusedQuantSlide, Precision};
+use crate::sparsity::pattern::Pattern;
+use crate::sparsity::{pack_matrix, prune};
+use crate::util::prng::XorShift;
+
+/// The sparsity columns of the paper's main tables.
+pub fn main_patterns() -> Vec<Pattern> {
+    vec![
+        Pattern::new(2, 4),
+        Pattern::family(3),
+        Pattern::family(4),
+        Pattern::family(5),
+    ]
+}
+
+fn pattern_backend(p: Pattern) -> Backend {
+    if p == Pattern::new(2, 4) {
+        Backend::Native24
+    } else {
+        Backend::Slide { n: p.family_n().expect("family pattern") }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fig. 6 / Appendix D.3.1: square-kernel speedups
+// ---------------------------------------------------------------------
+
+/// CPU-measured square-kernel speedups on the STC simulator.
+pub fn kernel_square_measured(ms: &[usize], ok: usize) -> Table {
+    let mut t = Table::new(
+        &format!("Square kernel, STC simulator (INT8, N=K={ok}) — speedup vs dense"),
+        &["M", "2:4", "4:6", "6:8", "8:10"],
+    );
+    let mut rng = XorShift::new(7);
+    let w: Vec<f32> = (0..ok * ok).map(|_| rng.normal()).collect();
+    let layers: Vec<Linear> = main_patterns()
+        .into_iter()
+        .map(|p| Linear::prepare(&w, ok, ok, pattern_backend(p)))
+        .collect();
+    let dense = Linear::prepare(&w, ok, ok, Backend::Dense);
+    for &m in ms {
+        let x: Vec<f32> = (0..m * ok).map(|_| rng.normal()).collect();
+        let td = quick(|| {
+            std::hint::black_box(dense.forward(&x, m));
+        });
+        let mut row = vec![m.to_string()];
+        for l in &layers {
+            let ts = quick(|| {
+                std::hint::black_box(l.forward(&x, m));
+            });
+            row.push(sx(td.min_s / ts.min_s));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Modeled square-kernel speedups for one GPU x precision (D.3.1 rows).
+pub fn kernel_square_gpu(gpu: &Gpu, p: Precision, ms: &[usize]) -> Table {
+    let pats = [
+        Pattern::new(2, 4),
+        Pattern::family(3),
+        Pattern::family(4),
+        Pattern::family(5),
+        Pattern::family(6),
+        Pattern::family(8),
+        Pattern::dense(),
+    ];
+    let mut t = Table::new(
+        &format!("Square kernel, {} {} (modeled) — speedup vs cuBLASLt", gpu.name, p.name()),
+        &["M", "2:4", "4:6", "6:8", "8:10", "10:12", "14:16", "inf:inf"],
+    );
+    for &m in ms {
+        let mut row = vec![m.to_string()];
+        for pat in pats {
+            row.push(sx(gpu.speedup(m, m, m, p, pat)));
+        }
+        t.row(row);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
+// Appendix D.3.2: model-shape kernel speedups
+// ---------------------------------------------------------------------
+
+/// CPU-measured model-kernel speedups: zoo linear shapes scaled by
+/// 1/`scale` (documented; CPU GEMMs at full LLM width are impractical),
+/// latencies summed over Wqkv/Wo/W13/W2 as in the paper.
+pub fn kernel_model_measured(model_name: &str, ms: &[usize], scale: usize) -> Table {
+    let zm = by_name(model_name).expect("zoo model");
+    let mut t = Table::new(
+        &format!(
+            "Model kernel, {model_name} shapes /{scale} (STC, INT8) — speedup vs dense"
+        ),
+        &["M", "2:4", "4:6", "6:8", "8:10"],
+    );
+    let shapes: Vec<(usize, usize)> = zm
+        .linears()
+        .iter()
+        .map(|l| ((l.o / scale).max(16), {
+            // keep K a multiple of lcm(4,6,8,10)=120 for all patterns
+            let k = (l.k / scale).max(120);
+            k - k % 120
+        }))
+        .collect();
+    let mut rng = XorShift::new(11);
+    let weights: Vec<Vec<f32>> = shapes
+        .iter()
+        .map(|(o, k)| (0..o * k).map(|_| rng.normal()).collect())
+        .collect();
+    let dense: Vec<Linear> = shapes
+        .iter()
+        .zip(&weights)
+        .map(|((o, k), w)| Linear::prepare(w, *o, *k, Backend::Dense))
+        .collect();
+    for &m in ms {
+        let xs: Vec<Vec<f32>> = shapes
+            .iter()
+            .map(|(_, k)| (0..m * k).map(|_| rng.normal()).collect())
+            .collect();
+        let td = quick(|| {
+            for (l, x) in dense.iter().zip(&xs) {
+                std::hint::black_box(l.forward(x, m));
+            }
+        });
+        let mut row = vec![m.to_string()];
+        for pat in main_patterns() {
+            let layers: Vec<Linear> = shapes
+                .iter()
+                .zip(&weights)
+                .map(|((o, k), w)| Linear::prepare(w, *o, *k, pattern_backend(pat)))
+                .collect();
+            let ts = quick(|| {
+                for (l, x) in layers.iter().zip(&xs) {
+                    std::hint::black_box(l.forward(x, m));
+                }
+            });
+            row.push(sx(td.min_s / ts.min_s));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Modeled model-kernel speedups at full zoo shapes (D.3.2 rows).
+pub fn kernel_model_gpu(gpu: &Gpu, model_name: &str, p: Precision, ms: &[usize]) -> Table {
+    let zm = by_name(model_name).expect("zoo model");
+    let mut t = Table::new(
+        &format!("Model kernel, {model_name} on {} {} (modeled)", gpu.name, p.name()),
+        &["M", "2:4", "4:6", "6:8", "8:10"],
+    );
+    for &m in ms {
+        let mut row = vec![m.to_string()];
+        for pat in main_patterns() {
+            let dense: f64 = zm
+                .linears()
+                .iter()
+                .map(|l| gpu.gemm_latency(m, l.o, l.k, p, crate::perfmodel::Mode::Dense))
+                .sum();
+            let sparse: f64 = zm
+                .linears()
+                .iter()
+                .map(|l| {
+                    gpu.gemm_latency(m, l.o, l.k, p, crate::perfmodel::Mode::for_pattern(pat))
+                })
+                .sum();
+            row.push(sx(dense / sparse));
+        }
+        t.row(row);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
+// Table 1 (Appendix D.2): fused quantization-slide kernel overhead
+// ---------------------------------------------------------------------
+
+pub fn fused_kernel_measured(ms: &[usize], k: usize) -> Table {
+    let mut t = Table::new(
+        &format!("Fused kernel latency (measured, K={k}, 6:8) — cf. paper Table 1"),
+        &["M", "quant-only (us)", "quant+slide (us)", "overhead"],
+    );
+    let fused = FusedQuantSlide::new(k, 4);
+    let mut rng = XorShift::new(13);
+    for &m in ms {
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let tq = bench(3, 0.2, 60, || {
+            std::hint::black_box(crate::quant::quantize_per_token(&x, m, k));
+        });
+        let tf = bench(3, 0.2, 60, || {
+            std::hint::black_box(fused.run(&x, m));
+        });
+        t.row(vec![
+            m.to_string(),
+            format!("{:.1}", tq.min_s * 1e6),
+            format!("{:.1}", tf.min_s * 1e6),
+            format!("+{:.0}%", (tf.min_s / tq.min_s - 1.0) * 100.0),
+        ]);
+    }
+    t
+}
+
+pub fn fused_kernel_modeled(ms: &[usize], k: usize) -> Table {
+    let mut t = Table::new(
+        &format!("Fused kernel latency (modeled, K={k}, gamma=1.5) — paper Table 1"),
+        &["GPU", "M", "quant-only (us)", "quant+slide (us)", "overhead"],
+    );
+    for g in gpus().iter().filter(|g| ["A100", "H100", "B200"].contains(&g.name)) {
+        for &m in ms {
+            let q = g.fused_kernel_latency(m, k, 1.0);
+            let qs = g.fused_kernel_latency(m, k, 1.5);
+            t.row(vec![
+                g.name.to_string(),
+                m.to_string(),
+                format!("{:.1}", q * 1e6),
+                format!("{:.1}", qs * 1e6),
+                format!("+{:.0}%", (qs / q - 1.0) * 100.0),
+            ]);
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
+// Fig. 8 / D.4: end-to-end serving throughput (measured on the engine)
+// ---------------------------------------------------------------------
+
+/// Serving-model scale for CPU E2E benches (small-real-model, DESIGN §2).
+pub fn e2e_model(backend: Backend) -> NativeModel {
+    NativeModel::generate(
+        BlockConfig { dim: 240, n_heads: 4, ffn: 480 },
+        4,
+        512,
+        320,
+        99,
+        backend,
+    )
+}
+
+/// Run the full engine over the STC executor and return tokens/s.
+pub fn engine_throughput(
+    backend: Backend,
+    n_requests: usize,
+    prompt_len: usize,
+    new_tokens: usize,
+) -> f64 {
+    let model = e2e_model(backend);
+    let mut engine = Engine::new(
+        StcExecutor::new(model),
+        EngineConfig {
+            kv_blocks: 2048,
+            kv_block_size: 16,
+            ..Default::default()
+        },
+    );
+    let mut rng = XorShift::new(5);
+    for i in 0..n_requests {
+        let prompt: Vec<i32> = (0..prompt_len).map(|_| rng.below(512) as i32).collect();
+        engine.submit(Request::new(
+            i as u64,
+            prompt,
+            SamplingParams { max_new_tokens: new_tokens, ..Default::default() },
+        ));
+    }
+    let outs = engine.run_to_completion().unwrap();
+    assert_eq!(outs.len(), n_requests);
+    engine.metrics.total_throughput()
+}
+
+/// Measured E2E speedup table (prefill-heavy or decode-heavy workload).
+pub fn e2e_measured(decode_heavy: bool) -> Table {
+    let (plen, ntok, nreq, label) = if decode_heavy {
+        (8, 24, 8, "decode-heavy")
+    } else {
+        (96, 2, 8, "prefill-heavy")
+    };
+    let mut t = Table::new(
+        &format!("E2E serving speedup (STC engine, {label}) — cf. Fig. 8"),
+        &["backend", "tokens/s", "speedup vs dense"],
+    );
+    let base = engine_throughput(Backend::Dense, nreq, plen, ntok);
+    t.row(vec!["dense".into(), format!("{base:.0}"), sx(1.0)]);
+    for pat in main_patterns() {
+        let tput = engine_throughput(pattern_backend(pat), nreq, plen, ntok);
+        t.row(vec![pat.to_string(), format!("{tput:.0}"), sx(tput / base)]);
+    }
+    t
+}
+
+/// Modeled E2E speedups across GPUs/models (D.4.1/D.4.2 rows).
+pub fn e2e_modeled(gpu: &Gpu, p: Precision, m: usize, decode: bool) -> Table {
+    let stage = if decode { "decode" } else { "prefill" };
+    let mut t = Table::new(
+        &format!("E2E {stage} speedup on {} {} M={m} (modeled) — Fig. 8", gpu.name, p.name()),
+        &["model", "2:4", "4:6", "6:8", "8:10"],
+    );
+    for zm in crate::model::zoo() {
+        let mut row = vec![zm.name.to_string()];
+        for pat in main_patterns() {
+            row.push(sx(e2e_speedup(gpu, &zm, m, p, pat, E2eParams::default(), decode)));
+        }
+        t.row(row);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
+// Fig. 9 / D.5: algorithmic efficiency (Eq. 18/19)
+// ---------------------------------------------------------------------
+
+/// R_theory vs 2:4 = 0.5 / density (Eq. 18).
+pub fn r_theory(p: Pattern) -> f64 {
+    0.5 / p.density()
+}
+
+/// Efficiency = (S_pat / S_24) / R_theory (Eq. 19).
+pub fn efficiency(s_pat: f64, s_24: f64, p: Pattern) -> f64 {
+    (s_pat / s_24) / r_theory(p)
+}
+
+pub fn efficiency_modeled(m: usize, p: Precision) -> Table {
+    let mut t = Table::new(
+        &format!("Algorithmic efficiency vs native 2:4, M={m} {} (modeled) — Fig. 9/D.5", p.name()),
+        &["GPU", "4:6", "6:8", "8:10"],
+    );
+    for g in gpus() {
+        if p == Precision::Fp8E4M3 && g.name == "A100" {
+            continue; // A100 lacks FP8 (paper Fig. 9)
+        }
+        let s24 = g.speedup(m, m, m, p, Pattern::new(2, 4));
+        let mut row = vec![g.name.to_string()];
+        for n in [3usize, 4, 5] {
+            let pat = Pattern::family(n);
+            let s = g.speedup(m, m, m, p, pat);
+            row.push(format!("{:.0}%", efficiency(s, s24, pat) * 100.0));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Measured efficiency on the STC simulator.
+pub fn efficiency_measured(m: usize, ok: usize) -> Table {
+    let mut t = Table::new(
+        &format!("Algorithmic efficiency vs native 2:4 (STC measured, M={m}, N=K={ok})"),
+        &["pattern", "speedup", "R_theory", "efficiency"],
+    );
+    let mut rng = XorShift::new(17);
+    let w: Vec<f32> = (0..ok * ok).map(|_| rng.normal()).collect();
+    let x: Vec<f32> = (0..m * ok).map(|_| rng.normal()).collect();
+    let dense = Linear::prepare(&w, ok, ok, Backend::Dense);
+    let td = quick(|| {
+        std::hint::black_box(dense.forward(&x, m));
+    });
+    let t24 = {
+        let l = Linear::prepare(&w, ok, ok, Backend::Native24);
+        quick(|| {
+            std::hint::black_box(l.forward(&x, m));
+        })
+    };
+    let s24 = td.min_s / t24.min_s;
+    for n in [3usize, 4, 5] {
+        let pat = Pattern::family(n);
+        let l = Linear::prepare(&w, ok, ok, Backend::Slide { n });
+        let ts = quick(|| {
+            std::hint::black_box(l.forward(&x, m));
+        });
+        let s = td.min_s / ts.min_s;
+        t.row(vec![
+            pat.to_string(),
+            sx(s),
+            format!("{:.3}", r_theory(pat)),
+            format!("{:.0}%", efficiency(s, s24, pat) * 100.0),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
+// Fig. 1b / Fig. 7 / Fig. 10: speedup-vs-M curves
+// ---------------------------------------------------------------------
+
+pub fn fig1_limit_table() -> Table {
+    let mut t = Table::new(
+        "E2E speedup vs theoretical limit N/(N-1) (A100 INT8, M=8192, modeled) — Fig. 1b",
+        &["model", "4:6 (lim 1.50)", "6:8 (lim 1.33)", "8:10 (lim 1.25)"],
+    );
+    let g = crate::perfmodel::gpu("A100").unwrap();
+    for zm in crate::model::zoo() {
+        let mut row = vec![zm.name.to_string()];
+        for n in [3usize, 4, 5] {
+            let s = e2e_speedup(&g, &zm, 8192, Precision::Int8,
+                                Pattern::family(n), E2eParams::default(), false);
+            row.push(sx(s));
+        }
+        t.row(row);
+    }
+    t
+}
+
+pub fn fig7_kernel_vs_m(gpu_name: &str) -> Table {
+    let g = crate::perfmodel::gpu(gpu_name).unwrap();
+    let zm = by_name("Qwen2.5-7B").unwrap();
+    let mut t = Table::new(
+        &format!("Kernel speedup vs M, Qwen-7B shapes on {gpu_name} INT8 (modeled) — Fig. 7"),
+        &["M", "2:4", "4:6", "6:8", "8:10"],
+    );
+    for m in [64usize, 256, 1024, 2048, 4096, 8192, 16384] {
+        let mut row = vec![m.to_string()];
+        for pat in main_patterns() {
+            let dense: f64 = zm
+                .linears()
+                .iter()
+                .map(|l| g.gemm_latency(m, l.o, l.k, Precision::Int8, crate::perfmodel::Mode::Dense))
+                .sum();
+            let sp: f64 = zm
+                .linears()
+                .iter()
+                .map(|l| {
+                    g.gemm_latency(m, l.o, l.k, Precision::Int8,
+                                   crate::perfmodel::Mode::for_pattern(pat))
+                })
+                .sum();
+            row.push(sx(dense / sp));
+        }
+        t.row(row);
+    }
+    t
+}
+
+pub fn fig10_e2e_vs_m() -> Table {
+    let g = crate::perfmodel::gpu("B200").unwrap();
+    let zm = by_name("Qwen2.5-7B").unwrap();
+    let mut t = Table::new(
+        "E2E speedup vs M, Qwen-7B on B200 INT8 (modeled) — Fig. 10",
+        &["M", "stage", "4:6", "6:8", "8:10"],
+    );
+    for (m, decode) in [
+        (128usize, true), (256, true), (512, true),
+        (4096, false), (8192, false), (16384, false), (32768, false),
+    ] {
+        let mut row = vec![m.to_string(), if decode { "decode" } else { "prefill" }.into()];
+        for n in [3usize, 4, 5] {
+            row.push(sx(e2e_speedup(&g, &zm, m, Precision::Int8,
+                                    Pattern::family(n), E2eParams::default(), decode)));
+        }
+        t.row(row);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
+// Fig. 3: the two-dimensional compression space
+// ---------------------------------------------------------------------
+
+pub fn fig3_space() -> Table {
+    let mut t = Table::new(
+        "Compression space: sparsity x quantization combined speedup bound — Fig. 3",
+        &["pattern", "density", "x INT8 (4x)", "x FP8 (4x)", "x FP4 (8x)", "x 1.58b (10x)"],
+    );
+    let pats = [
+        Pattern::dense(),
+        Pattern::family(6),
+        Pattern::family(5),
+        Pattern::family(4),
+        Pattern::family(3),
+        Pattern::new(2, 4),
+    ];
+    for p in pats {
+        let s = p.s_bound();
+        t.row(vec![
+            p.to_string(),
+            format!("{:.1}%", p.density() * 100.0),
+            sx(s * 4.0),
+            sx(s * 4.0),
+            sx(s * 8.0),
+            sx(s * 10.0),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
+// Appendix A.2: packer throughput
+// ---------------------------------------------------------------------
+
+pub fn packer_throughput(rows: usize, k: usize) -> Table {
+    let mut t = Table::new(
+        &format!("Offline packer throughput ({rows}x{k} matrix, 6:8) — cf. A.2"),
+        &["phase", "time (ms)", "GB/s", "Llama-70B (140GB) projection"],
+    );
+    let mut rng = XorShift::new(23);
+    let w: Vec<f32> = (0..rows * k).map(|_| rng.normal()).collect();
+    let pruned = prune::prune_magnitude(&w, rows, k, 6, 8);
+    let bytes = (rows * k * 4) as f64;
+    let m = bench(1, 0.5, 10, || {
+        std::hint::black_box(pack_matrix(&pruned, rows, k, 4).unwrap());
+    });
+    let gbps = bytes / m.min_s / 1e9;
+    let proj_s = 140e9 / (gbps * 1e9);
+    t.row(vec![
+        "pack (Phi)".into(),
+        format!("{:.1}", m.min_s * 1e3),
+        format!("{gbps:.2}"),
+        format!("{proj_s:.0} s single-thread"),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq18_theory_ratios() {
+        // the R_theory column of the paper's D.5.1 table
+        assert!((r_theory(Pattern::new(2, 4)) - 1.0).abs() < 1e-12);
+        assert!((r_theory(Pattern::family(3)) - 0.75).abs() < 1e-12);
+        assert!((r_theory(Pattern::family(4)) - 0.667).abs() < 1e-3);
+        assert!((r_theory(Pattern::family(5)) - 0.625).abs() < 1e-12);
+        assert!((r_theory(Pattern::dense()) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn efficiency_is_100pct_when_exact() {
+        let p = Pattern::family(4);
+        // if measured ratios exactly match theory, efficiency = 100%
+        let s24 = 2.0;
+        let s68 = s24 * r_theory(p);
+        assert!((efficiency(s68, s24, p) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tables_render_smoke() {
+        // tiny versions of each generator must produce non-empty tables
+        let t = kernel_square_measured(&[8], 240);
+        assert!(t.render().contains("2:4"));
+        let g = crate::perfmodel::gpu("A100").unwrap();
+        assert!(kernel_square_gpu(&g, Precision::Int8, &[64]).render().contains("6:8"));
+        assert!(fig3_space().render().contains("inf:inf"));
+        assert!(fig1_limit_table().render().contains("Qwen2.5-7B"));
+        assert!(fig7_kernel_vs_m("A100").render().contains("16384"));
+        assert!(fig10_e2e_vs_m().render().contains("prefill"));
+        assert!(efficiency_modeled(8192, Precision::Int8).render().contains("A100"));
+        assert!(fused_kernel_modeled(&[4096], 4096).render().contains("B200"));
+    }
+
+    #[test]
+    fn engine_throughput_runs() {
+        let tput = engine_throughput(Backend::Dense, 2, 8, 2);
+        assert!(tput > 0.0);
+    }
+}

@@ -1,0 +1,160 @@
+//! Serving configuration: JSON file -> typed config (users enable
+//! SlideSparse via the single `sparsity` flag, paper §4.3).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::engine::EngineConfig;
+use crate::coordinator::scheduler::SchedulerConfig;
+use crate::model::Backend;
+use crate::util::json::Json;
+
+/// Top-level serving configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// "dense", "2:4", or a family pattern like "6:8" / "4:6" / "8:10"
+    pub sparsity: String,
+    pub engine: EngineConfig,
+    pub workers: usize,
+    pub artifacts_dir: String,
+    /// "pjrt" or "stc"
+    pub executor: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            sparsity: "6:8".into(),
+            engine: EngineConfig::default(),
+            workers: 1,
+            artifacts_dir: "artifacts".into(),
+            executor: "stc".into(),
+        }
+    }
+}
+
+impl Config {
+    /// Parse the sparsity flag into a layer backend.
+    pub fn backend(&self) -> Result<Backend> {
+        parse_backend(&self.sparsity)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&text)
+    }
+
+    pub fn from_json(text: &str) -> Result<Config> {
+        let j = Json::parse(text).map_err(|e| anyhow!("config: {e}"))?;
+        let mut cfg = Config::default();
+        if let Some(v) = j.get("sparsity").and_then(|v| v.as_str()) {
+            cfg.sparsity = v.to_string();
+        }
+        if let Some(v) = j.get("workers").and_then(|v| v.as_usize()) {
+            cfg.workers = v.max(1);
+        }
+        if let Some(v) = j.get("artifacts_dir").and_then(|v| v.as_str()) {
+            cfg.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = j.get("executor").and_then(|v| v.as_str()) {
+            cfg.executor = v.to_string();
+        }
+        if let Some(e) = j.get("engine") {
+            let mut ec = EngineConfig::default();
+            if let Some(v) = e.get("kv_blocks").and_then(|v| v.as_usize()) {
+                ec.kv_blocks = v;
+            }
+            if let Some(v) = e.get("kv_block_size").and_then(|v| v.as_usize()) {
+                ec.kv_block_size = v;
+            }
+            if let Some(v) = e.get("seed").and_then(|v| v.as_i64()) {
+                ec.seed = v as u64;
+            }
+            let mut sc = SchedulerConfig::default();
+            if let Some(v) = e.get("max_batch").and_then(|v| v.as_usize()) {
+                sc.max_batch = v;
+            }
+            if let Some(v) = e.get("prefill_token_budget").and_then(|v| v.as_usize()) {
+                sc.prefill_token_budget = v;
+            }
+            if let Some(v) = e.get("watermark").and_then(|v| v.as_f64()) {
+                sc.watermark = v;
+            }
+            ec.scheduler = sc;
+            cfg.engine = ec;
+        }
+        // validate eagerly so bad configs fail at load time
+        cfg.backend()?;
+        if !matches!(cfg.executor.as_str(), "pjrt" | "stc") {
+            return Err(anyhow!("executor must be 'pjrt' or 'stc'"));
+        }
+        Ok(cfg)
+    }
+}
+
+/// Parse a sparsity string ("dense", "2:4", "6:8", ...) into a backend.
+pub fn parse_backend(s: &str) -> Result<Backend> {
+    if s == "dense" {
+        return Ok(Backend::Dense);
+    }
+    if s == "2:4" {
+        return Ok(Backend::Native24);
+    }
+    let (z, l) = s
+        .split_once(':')
+        .ok_or_else(|| anyhow!("bad sparsity '{s}' (want Z:L)"))?;
+    let z: usize = z.trim().parse().map_err(|_| anyhow!("bad Z in '{s}'"))?;
+    let l: usize = l.trim().parse().map_err(|_| anyhow!("bad L in '{s}'"))?;
+    if l == z + 2 && l % 2 == 0 && l >= 6 {
+        Ok(Backend::Slide { n: l / 2 })
+    } else {
+        Err(anyhow!(
+            "'{s}' is not a (2N-2):2N family pattern (try 4:6, 6:8, 8:10, ...)"
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_backends() {
+        assert_eq!(parse_backend("dense").unwrap(), Backend::Dense);
+        assert_eq!(parse_backend("2:4").unwrap(), Backend::Native24);
+        assert_eq!(parse_backend("6:8").unwrap(), Backend::Slide { n: 4 });
+        assert_eq!(parse_backend("4:6").unwrap(), Backend::Slide { n: 3 });
+        assert_eq!(parse_backend("14:16").unwrap(), Backend::Slide { n: 8 });
+        assert!(parse_backend("3:7").is_err());
+        assert!(parse_backend("garbage").is_err());
+    }
+
+    #[test]
+    fn config_from_json() {
+        let cfg = Config::from_json(
+            r#"{
+                "sparsity": "4:6",
+                "workers": 2,
+                "executor": "stc",
+                "engine": {
+                    "kv_blocks": 64, "kv_block_size": 8, "max_batch": 4,
+                    "prefill_token_budget": 128, "watermark": 0.9, "seed": 7
+                }
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.backend().unwrap(), Backend::Slide { n: 3 });
+        assert_eq!(cfg.workers, 2);
+        assert_eq!(cfg.engine.kv_blocks, 64);
+        assert_eq!(cfg.engine.scheduler.max_batch, 4);
+        assert!((cfg.engine.scheduler.watermark - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bad_configs_rejected() {
+        assert!(Config::from_json(r#"{"sparsity": "5:9"}"#).is_err());
+        assert!(Config::from_json(r#"{"executor": "cuda"}"#).is_err());
+        assert!(Config::from_json("not json").is_err());
+    }
+}

@@ -1,0 +1,83 @@
+//! Shape bucketing: AOT compilation fixes (B, S) shapes per artifact, so
+//! the batcher maps dynamic batch sizes onto the nearest compiled bucket
+//! and pads. (The native STC executor is shape-polymorphic and uses the
+//! identity bucket.)
+
+/// Pick the smallest bucket >= n; None if n exceeds every bucket.
+pub fn pick_bucket(buckets: &[usize], n: usize) -> Option<usize> {
+    buckets.iter().copied().filter(|b| *b >= n).min()
+}
+
+/// Split `n` items greedily into bucket-sized groups, preferring the
+/// largest buckets first; returns group sizes (each a valid bucket, with
+/// the last group padded up).
+pub fn split_into_buckets(buckets: &[usize], mut n: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    if n == 0 {
+        return out;
+    }
+    let mut sorted: Vec<usize> = buckets.to_vec();
+    sorted.sort_unstable();
+    let largest = *sorted.last().expect("no buckets");
+    while n >= largest {
+        out.push(largest);
+        n -= largest;
+    }
+    if n > 0 {
+        out.push(pick_bucket(&sorted, n).expect("bucket exists"));
+    }
+    out
+}
+
+/// Padding waste fraction of a bucket assignment.
+pub fn padding_waste(groups: &[usize], actual: usize) -> f64 {
+    let padded: usize = groups.iter().sum();
+    if padded == 0 {
+        0.0
+    } else {
+        (padded - actual) as f64 / padded as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prng::XorShift, prop};
+
+    #[test]
+    fn pick_smallest_fitting() {
+        let b = [1, 2, 4, 8];
+        assert_eq!(pick_bucket(&b, 1), Some(1));
+        assert_eq!(pick_bucket(&b, 3), Some(4));
+        assert_eq!(pick_bucket(&b, 8), Some(8));
+        assert_eq!(pick_bucket(&b, 9), None);
+    }
+
+    #[test]
+    fn split_examples() {
+        let b = [1, 2, 4, 8];
+        assert_eq!(split_into_buckets(&b, 0), Vec::<usize>::new());
+        assert_eq!(split_into_buckets(&b, 3), vec![4]);
+        assert_eq!(split_into_buckets(&b, 9), vec![8, 1]);
+        assert_eq!(split_into_buckets(&b, 21), vec![8, 8, 8]);
+    }
+
+    #[test]
+    fn prop_split_covers_exactly() {
+        prop::for_all("bucket split covers", |rng: &mut XorShift, _| {
+            let b = [1usize, 2, 4, 8];
+            let n = rng.below(40);
+            let groups = split_into_buckets(&b, n);
+            let total: usize = groups.iter().sum();
+            assert!(total >= n, "must cover all sequences");
+            assert!(total < n + 8, "padding bounded by max bucket");
+            for g in &groups {
+                assert!(b.contains(g), "every group is a compiled bucket");
+            }
+            // waste is bounded: only the last group pads
+            if n > 0 {
+                assert!(padding_waste(&groups, n) <= 0.75 + 1e-12);
+            }
+        });
+    }
+}

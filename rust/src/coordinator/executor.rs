@@ -1,0 +1,184 @@
+//! Model executors: the engine's interface to "the GPU". Two real
+//! implementations exist -- the native STC executor (shape-polymorphic,
+//! sparse speedups measurable) and the PJRT executor (compiled HLO
+//! artifacts, shape-bucketed) in `pjrt_exec` -- plus a mock for tests.
+
+use anyhow::Result;
+
+/// One sequence's view of a prefill batch.
+pub struct PrefillItem<'a> {
+    pub tokens: &'a [i32],
+    pub kv_k: &'a mut Vec<f32>,
+    pub kv_v: &'a mut Vec<f32>,
+    /// filled by the executor: logits at the last prompt position
+    pub logits: Vec<f32>,
+}
+
+/// One sequence's view of a decode batch.
+pub struct DecodeItem<'a> {
+    pub token: i32,
+    /// context length before this token (the KV write position)
+    pub pos: usize,
+    pub kv_k: &'a mut Vec<f32>,
+    pub kv_v: &'a mut Vec<f32>,
+    /// filled by the executor
+    pub logits: Vec<f32>,
+}
+
+/// The engine's model interface.
+pub trait Executor {
+    fn vocab(&self) -> usize;
+    /// longest admissible prompt
+    fn max_prompt(&self) -> usize;
+    /// KV capacity per sequence (context length limit)
+    fn smax(&self) -> usize;
+    /// flat length of each per-sequence KV tensor (k and v separately)
+    fn kv_len(&self) -> usize;
+    /// compiled decode batch buckets (native executors: any size -> [usize::MAX])
+    fn decode_buckets(&self) -> Vec<usize>;
+    /// largest prefill batch one call can take (shape-bucketed executors
+    /// are limited by their biggest compiled (B, S) bucket)
+    fn max_prefill_batch(&self) -> usize {
+        usize::MAX
+    }
+    fn prefill(&mut self, batch: &mut [PrefillItem]) -> Result<()>;
+    fn decode(&mut self, batch: &mut [DecodeItem]) -> Result<()>;
+    /// descriptive label for logs/metrics
+    fn label(&self) -> String;
+}
+
+/// Native executor over the STC transformer (the fast path for E2E
+/// benches: sparse backends genuinely run fewer MACs here).
+pub struct StcExecutor {
+    pub model: crate::model::NativeModel,
+}
+
+impl StcExecutor {
+    pub fn new(model: crate::model::NativeModel) -> StcExecutor {
+        StcExecutor { model }
+    }
+}
+
+impl Executor for StcExecutor {
+    fn vocab(&self) -> usize {
+        self.model.vocab
+    }
+
+    fn max_prompt(&self) -> usize {
+        self.model.smax - 1
+    }
+
+    fn smax(&self) -> usize {
+        self.model.smax
+    }
+
+    fn kv_len(&self) -> usize {
+        self.model.kv_len()
+    }
+
+    fn decode_buckets(&self) -> Vec<usize> {
+        vec![usize::MAX] // shape-polymorphic
+    }
+
+    fn prefill(&mut self, batch: &mut [PrefillItem]) -> Result<()> {
+        for item in batch {
+            if item.kv_k.is_empty() {
+                item.kv_k.resize(self.model.kv_len(), 0.0);
+                item.kv_v.resize(self.model.kv_len(), 0.0);
+            }
+            item.logits =
+                self.model
+                    .forward_tokens(item.tokens, 0, item.kv_k, item.kv_v);
+        }
+        Ok(())
+    }
+
+    fn decode(&mut self, batch: &mut [DecodeItem]) -> Result<()> {
+        // batched decode: the linears run as one m=B GEMM per layer
+        let tokens: Vec<i32> = batch.iter().map(|i| i.token).collect();
+        let positions: Vec<usize> = batch.iter().map(|i| i.pos).collect();
+        let mut kvs: Vec<(&mut [f32], &mut [f32])> = batch
+            .iter_mut()
+            .map(|i| (i.kv_k.as_mut_slice(), i.kv_v.as_mut_slice()))
+            .collect();
+        let logits = self.model.forward_decode_batch(&tokens, &positions, &mut kvs);
+        drop(kvs);
+        for (item, lg) in batch.iter_mut().zip(logits) {
+            item.logits = lg;
+        }
+        Ok(())
+    }
+
+    fn label(&self) -> String {
+        "stc-native".into()
+    }
+}
+
+/// Deterministic mock for engine unit tests: next token = (last + 1) mod
+/// vocab; KV is a single counter cell so preemption resets are visible.
+pub struct MockExecutor {
+    pub vocab: usize,
+    pub smax: usize,
+    pub prefill_calls: usize,
+    pub decode_calls: usize,
+}
+
+impl MockExecutor {
+    pub fn new(vocab: usize, smax: usize) -> MockExecutor {
+        MockExecutor { vocab, smax, prefill_calls: 0, decode_calls: 0 }
+    }
+
+    fn logits_for(&self, next: i32) -> Vec<f32> {
+        let mut l = vec![0.0f32; self.vocab];
+        l[(next.rem_euclid(self.vocab as i32)) as usize] = 1.0;
+        l
+    }
+}
+
+impl Executor for MockExecutor {
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn max_prompt(&self) -> usize {
+        self.smax - 1
+    }
+
+    fn smax(&self) -> usize {
+        self.smax
+    }
+
+    fn kv_len(&self) -> usize {
+        1
+    }
+
+    fn decode_buckets(&self) -> Vec<usize> {
+        vec![usize::MAX]
+    }
+
+    fn prefill(&mut self, batch: &mut [PrefillItem]) -> Result<()> {
+        self.prefill_calls += 1;
+        for item in batch {
+            item.kv_k.resize(1, 0.0);
+            item.kv_v.resize(1, 0.0);
+            item.kv_k[0] = item.tokens.len() as f32;
+            let last = *item.tokens.last().unwrap();
+            item.logits = self.logits_for(last + 1);
+        }
+        Ok(())
+    }
+
+    fn decode(&mut self, batch: &mut [DecodeItem]) -> Result<()> {
+        self.decode_calls += 1;
+        for item in batch {
+            assert!(!item.kv_k.is_empty(), "decode before prefill");
+            item.kv_k[0] += 1.0;
+            item.logits = self.logits_for(item.token + 1);
+        }
+        Ok(())
+    }
+
+    fn label(&self) -> String {
+        "mock".into()
+    }
+}

@@ -1,0 +1,268 @@
+//! Paged KV-cache block manager (the PagedAttention-style allocator the
+//! engine uses for admission control and preemption decisions).
+//!
+//! Logical blocks of `block_size` token slots are allocated from a fixed
+//! pool with reference counting (copy-on-write forks share blocks until
+//! a write). The numeric KV tensors live in per-sequence stores that the
+//! batcher materializes into the PJRT decode layout; the block manager is
+//! the capacity authority: a sequence may only grow if its block table
+//! can (paper §4.3: scheduling/KV components are untouched by
+//! SlideSparse -- we still need them to serve at all).
+
+use std::collections::HashMap;
+
+pub type BlockId = usize;
+pub type SeqId = u64;
+
+/// Block allocation failure: not enough free blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OutOfBlocks;
+
+/// Fixed-pool block allocator with refcounts.
+#[derive(Debug)]
+pub struct BlockManager {
+    pub block_size: usize,
+    pub num_blocks: usize,
+    free: Vec<BlockId>,
+    refcount: Vec<u32>,
+    tables: HashMap<SeqId, Vec<BlockId>>,
+    /// tokens stored per sequence (to compute block needs)
+    lens: HashMap<SeqId, usize>,
+}
+
+impl BlockManager {
+    pub fn new(num_blocks: usize, block_size: usize) -> BlockManager {
+        BlockManager {
+            block_size,
+            num_blocks,
+            free: (0..num_blocks).rev().collect(),
+            refcount: vec![0; num_blocks],
+            tables: HashMap::new(),
+            lens: HashMap::new(),
+        }
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.num_blocks - self.free.len()
+    }
+
+    fn blocks_needed(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    /// Can a new sequence of `tokens` be admitted?
+    pub fn can_allocate(&self, tokens: usize) -> bool {
+        self.blocks_needed(tokens.max(1)) <= self.free.len()
+    }
+
+    /// Allocate the block table for a new sequence.
+    pub fn allocate(&mut self, seq: SeqId, tokens: usize) -> Result<(), OutOfBlocks> {
+        assert!(!self.tables.contains_key(&seq), "seq {seq} already allocated");
+        let need = self.blocks_needed(tokens.max(1));
+        if need > self.free.len() {
+            return Err(OutOfBlocks);
+        }
+        let mut table = Vec::with_capacity(need);
+        for _ in 0..need {
+            let b = self.free.pop().unwrap();
+            self.refcount[b] = 1;
+            table.push(b);
+        }
+        self.tables.insert(seq, table);
+        self.lens.insert(seq, tokens);
+        Ok(())
+    }
+
+    /// Grow a sequence by one token, allocating a block at boundaries.
+    pub fn append_token(&mut self, seq: SeqId) -> Result<(), OutOfBlocks> {
+        let len = *self.lens.get(&seq).expect("unknown seq");
+        let need = self.blocks_needed(len + 1);
+        let table = self.tables.get_mut(&seq).unwrap();
+        debug_assert!(need >= table.len());
+        if need > table.len() {
+            let Some(b) = self.free.pop() else {
+                return Err(OutOfBlocks);
+            };
+            self.refcount[b] = 1;
+            table.push(b);
+        }
+        // copy-on-write: appending into a shared tail block splits it
+        let tail = *table.last().unwrap();
+        if self.refcount[tail] > 1 {
+            let Some(nb) = self.free.pop() else {
+                return Err(OutOfBlocks);
+            };
+            self.refcount[tail] -= 1;
+            self.refcount[nb] = 1;
+            *self.tables.get_mut(&seq).unwrap().last_mut().unwrap() = nb;
+        }
+        *self.lens.get_mut(&seq).unwrap() = len + 1;
+        Ok(())
+    }
+
+    /// Fork `parent` into `child` sharing all blocks (copy-on-write).
+    pub fn fork(&mut self, parent: SeqId, child: SeqId) {
+        let table = self.tables.get(&parent).expect("unknown parent").clone();
+        for &b in &table {
+            self.refcount[b] += 1;
+        }
+        let len = self.lens[&parent];
+        self.tables.insert(child, table);
+        self.lens.insert(child, len);
+    }
+
+    /// Release a sequence's blocks.
+    pub fn release(&mut self, seq: SeqId) {
+        if let Some(table) = self.tables.remove(&seq) {
+            for b in table {
+                self.refcount[b] -= 1;
+                if self.refcount[b] == 0 {
+                    self.free.push(b);
+                }
+            }
+            self.lens.remove(&seq);
+        }
+    }
+
+    pub fn table(&self, seq: SeqId) -> Option<&[BlockId]> {
+        self.tables.get(&seq).map(|t| t.as_slice())
+    }
+
+    pub fn seq_len(&self, seq: SeqId) -> Option<usize> {
+        self.lens.get(&seq).copied()
+    }
+
+    /// Fraction of the pool in use (the scheduler's watermark input).
+    pub fn utilization(&self) -> f64 {
+        self.used_blocks() as f64 / self.num_blocks as f64
+    }
+
+    /// Internal consistency: refcounts vs free list (used by tests).
+    pub fn check_invariants(&self) {
+        let free_set: std::collections::HashSet<_> = self.free.iter().collect();
+        assert_eq!(free_set.len(), self.free.len(), "free list has duplicates");
+        for (b, rc) in self.refcount.iter().enumerate() {
+            if free_set.contains(&b) {
+                assert_eq!(*rc, 0, "free block {b} has refcount {rc}");
+            }
+        }
+        let mut rc_check = vec![0u32; self.num_blocks];
+        for table in self.tables.values() {
+            for &b in table {
+                rc_check[b] += 1;
+            }
+        }
+        assert_eq!(rc_check, self.refcount, "refcount mismatch");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prng::XorShift, prop};
+
+    #[test]
+    fn allocate_release_roundtrip() {
+        let mut bm = BlockManager::new(8, 16);
+        bm.allocate(1, 20).unwrap(); // 2 blocks
+        assert_eq!(bm.free_blocks(), 6);
+        assert_eq!(bm.table(1).unwrap().len(), 2);
+        bm.release(1);
+        assert_eq!(bm.free_blocks(), 8);
+        bm.check_invariants();
+    }
+
+    #[test]
+    fn append_allocates_at_boundary() {
+        let mut bm = BlockManager::new(4, 4);
+        bm.allocate(1, 4).unwrap(); // exactly one block
+        assert_eq!(bm.table(1).unwrap().len(), 1);
+        bm.append_token(1).unwrap(); // 5 tokens -> 2 blocks
+        assert_eq!(bm.table(1).unwrap().len(), 2);
+        for _ in 0..3 {
+            bm.append_token(1).unwrap(); // up to 8 tokens, still 2
+        }
+        assert_eq!(bm.table(1).unwrap().len(), 2);
+        bm.check_invariants();
+    }
+
+    #[test]
+    fn admission_control() {
+        let mut bm = BlockManager::new(2, 16);
+        assert!(bm.can_allocate(32));
+        assert!(!bm.can_allocate(33));
+        bm.allocate(1, 17).unwrap(); // takes both blocks
+        assert!(!bm.can_allocate(1));
+        assert_eq!(bm.allocate(2, 1), Err(OutOfBlocks));
+        bm.check_invariants();
+    }
+
+    #[test]
+    fn fork_shares_then_cow_splits() {
+        let mut bm = BlockManager::new(4, 4);
+        bm.allocate(1, 6).unwrap(); // 2 blocks
+        bm.fork(1, 2);
+        assert_eq!(bm.used_blocks(), 2, "fork shares blocks");
+        assert_eq!(bm.table(1).unwrap(), bm.table(2).unwrap());
+        // child appends -> tail block copy-on-write
+        bm.append_token(2).unwrap();
+        assert_ne!(bm.table(1).unwrap()[1], bm.table(2).unwrap()[1]);
+        assert_eq!(bm.table(1).unwrap()[0], bm.table(2).unwrap()[0]);
+        bm.release(1);
+        bm.release(2);
+        assert_eq!(bm.free_blocks(), 4);
+        bm.check_invariants();
+    }
+
+    #[test]
+    fn prop_no_leaks_no_double_alloc() {
+        // random alloc/append/fork/release traffic keeps invariants
+        prop::for_all("block manager invariants", |rng: &mut XorShift, _| {
+            let mut bm = BlockManager::new(32, 8);
+            let mut live: Vec<SeqId> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..200 {
+                match rng.below(4) {
+                    0 => {
+                        let tokens = 1 + rng.below(40);
+                        if bm.can_allocate(tokens) {
+                            bm.allocate(next_id, tokens).unwrap();
+                            live.push(next_id);
+                            next_id += 1;
+                        }
+                    }
+                    1 => {
+                        if !live.is_empty() {
+                            let s = live[rng.below(live.len())];
+                            let _ = bm.append_token(s);
+                        }
+                    }
+                    2 => {
+                        if !live.is_empty() && bm.free_blocks() > 0 {
+                            let s = live[rng.below(live.len())];
+                            bm.fork(s, next_id);
+                            live.push(next_id);
+                            next_id += 1;
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let s = live.swap_remove(rng.below(live.len()));
+                            bm.release(s);
+                        }
+                    }
+                }
+                bm.check_invariants();
+            }
+            for s in live {
+                bm.release(s);
+            }
+            bm.check_invariants();
+            assert_eq!(bm.free_blocks(), 32, "all blocks returned");
+        });
+    }
+}

@@ -1,0 +1,94 @@
+//! Engine metrics: request latencies, token throughput, step breakdown.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+#[derive(Default)]
+pub struct EngineMetrics {
+    pub requests_submitted: u64,
+    pub requests_finished: u64,
+    pub requests_rejected: u64,
+    pub prompt_tokens: u64,
+    pub generated_tokens: u64,
+    pub prefill_steps: u64,
+    pub decode_steps: u64,
+    pub preemptions: u64,
+    pub ttft: Summary,
+    pub latency: Summary,
+    pub prefill_step_time: Summary,
+    pub decode_step_time: Summary,
+    started: Option<Instant>,
+}
+
+impl EngineMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn mark_start(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0)
+    }
+
+    /// End-to-end generation throughput (tokens/s).
+    pub fn decode_throughput(&self) -> f64 {
+        let e = self.elapsed();
+        if e > 0.0 {
+            self.generated_tokens as f64 / e
+        } else {
+            0.0
+        }
+    }
+
+    /// Total processed tokens/s (prompt + generated) -- the prefill-side
+    /// throughput metric the paper's D.4.1 tables report.
+    pub fn total_throughput(&self) -> f64 {
+        let e = self.elapsed();
+        if e > 0.0 {
+            (self.prompt_tokens + self.generated_tokens) as f64 / e
+        } else {
+            0.0
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={}/{} tokens={}p+{}g steps={}p+{}d preempt={} \
+             ttft_p50={:.1}ms lat_p50={:.1}ms gen_tput={:.0} tok/s total_tput={:.0} tok/s",
+            self.requests_finished,
+            self.requests_submitted,
+            self.prompt_tokens,
+            self.generated_tokens,
+            self.prefill_steps,
+            self.decode_steps,
+            self.preemptions,
+            self.ttft.p50() * 1e3,
+            self.latency.p50() * 1e3,
+            self.decode_throughput(),
+            self.total_throughput(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_accounting() {
+        let mut m = EngineMetrics::new();
+        m.mark_start();
+        m.prompt_tokens = 100;
+        m.generated_tokens = 50;
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert!(m.decode_throughput() > 0.0);
+        assert!(m.total_throughput() > m.decode_throughput());
+        assert!(!m.report().is_empty());
+    }
+}

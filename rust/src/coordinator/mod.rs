@@ -1,0 +1,25 @@
+//! The L3 serving coordinator: a vLLM-shaped engine with continuous
+//! batching, a paged KV-cache block manager, prefill/decode scheduling,
+//! shape bucketing for AOT artifacts, and a multi-worker router.
+//! SlideSparse plugs in underneath as a linear-layer backend
+//! (`model::Backend`) -- everything in this module is agnostic to it,
+//! mirroring the paper's minimal-invasive vLLM integration (§4.3).
+
+pub mod batcher;
+pub mod engine;
+pub mod executor;
+pub mod kvcache;
+pub mod metrics;
+pub mod pjrt_exec;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+pub mod sequence;
+
+pub use engine::{Engine, EngineConfig};
+pub use executor::{Executor, MockExecutor, StcExecutor};
+pub use kvcache::BlockManager;
+pub use pjrt_exec::PjrtExecutor;
+pub use request::{FinishReason, Request, RequestOutput, SamplingParams};
+pub use router::{Policy, Router};
+pub use scheduler::{Scheduler, SchedulerConfig};

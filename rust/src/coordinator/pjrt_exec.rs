@@ -1,0 +1,236 @@
+//! PJRT executor: serves the AOT-compiled JAX transformer artifacts.
+//!
+//! Shape-bucketed: prompts pad into the compiled (B, S) prefill buckets,
+//! decode batches pad into the compiled B buckets. Per-sequence KV
+//! stores ([L, H, Smax, hd]) are assembled into the artifact's batched
+//! [L, B, H, Smax, hd] layout per step and scattered back after.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use super::executor::{DecodeItem, Executor, PrefillItem};
+use crate::coordinator::batcher::pick_bucket;
+use crate::runtime::{literal_f32, literal_i32, Runtime};
+
+pub struct PjrtExecutor {
+    rt: Rc<Runtime>,
+    variant: String,
+    weights: Vec<xla::Literal>,
+    prefill_buckets: Vec<(usize, usize)>,
+    decode_buckets: Vec<usize>,
+    // model dims
+    l: usize,
+    h: usize,
+    hd: usize,
+    smax: usize,
+    vocab: usize,
+}
+
+impl PjrtExecutor {
+    /// Load weights + manifest for one variant ("dense" or "slideN").
+    pub fn new(artifacts_dir: &Path, variant: &str) -> Result<PjrtExecutor> {
+        let rt = Rc::new(Runtime::new(artifacts_dir)?);
+        Self::with_runtime(rt, variant)
+    }
+
+    pub fn with_runtime(rt: Rc<Runtime>, variant: &str) -> Result<PjrtExecutor> {
+        let m = rt.manifest().model;
+        let weights_raw = rt.manifest().load_weights(variant)?;
+        let specs = &rt.manifest().weights[variant].tensors;
+        let mut weights = Vec::with_capacity(weights_raw.len());
+        for (w, s) in weights_raw.iter().zip(specs.iter()) {
+            weights.push(literal_f32(w, &s.shape)?);
+        }
+        Ok(PjrtExecutor {
+            variant: variant.to_string(),
+            prefill_buckets: rt.manifest().prefill_buckets.clone(),
+            decode_buckets: rt.manifest().decode_buckets.clone(),
+            l: m.n_layers,
+            h: m.n_heads,
+            hd: m.head_dim(),
+            smax: m.max_seq,
+            vocab: m.vocab,
+            rt,
+            weights,
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// Pre-compile all buckets (avoids first-request latency spikes).
+    pub fn warmup(&self) -> Result<()> {
+        for (b, s) in &self.prefill_buckets {
+            self.rt.load(&format!("prefill_{}_b{b}_s{s}", self.variant))?;
+        }
+        for b in &self.decode_buckets {
+            self.rt.load(&format!("decode_{}_b{b}", self.variant))?;
+        }
+        Ok(())
+    }
+
+    fn kv_layer_stride(&self) -> usize {
+        self.h * self.smax * self.hd
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn max_prompt(&self) -> usize {
+        self.prefill_buckets.iter().map(|(_, s)| *s).max().unwrap_or(0)
+    }
+
+    fn smax(&self) -> usize {
+        self.smax
+    }
+
+    fn kv_len(&self) -> usize {
+        self.l * self.kv_layer_stride()
+    }
+
+    fn decode_buckets(&self) -> Vec<usize> {
+        self.decode_buckets.clone()
+    }
+
+    fn max_prefill_batch(&self) -> usize {
+        self.prefill_buckets.iter().map(|(b, _)| *b).max().unwrap_or(1)
+    }
+
+    fn prefill(&mut self, batch: &mut [PrefillItem]) -> Result<()> {
+        // pick the (B, S) bucket: B >= batch len, S >= longest prompt
+        let need_s = batch.iter().map(|i| i.tokens.len()).max().unwrap_or(1);
+        let need_b = batch.len();
+        let (b, s) = self
+            .prefill_buckets
+            .iter()
+            .copied()
+            .filter(|(bb, ss)| *bb >= need_b && *ss >= need_s)
+            .min_by_key(|(bb, ss)| bb * ss)
+            .ok_or_else(|| anyhow!("no prefill bucket fits b={need_b} s={need_s}"))?;
+
+        let mut tokens = vec![0i32; b * s];
+        for (slot, item) in batch.iter().enumerate() {
+            tokens[slot * s..slot * s + item.tokens.len()].copy_from_slice(item.tokens);
+        }
+        let name = format!("prefill_{}_b{b}_s{s}", self.variant);
+        let mut inputs = vec![literal_i32(&tokens, &[b, s])?];
+        // weights are positional after tokens; clone of a Literal is not
+        // available -- re-execute with borrowed refs via Borrow<Literal>
+        let outs = {
+            let exe = self.rt.load(&name)?;
+            let mut refs: Vec<&xla::Literal> = Vec::with_capacity(1 + self.weights.len());
+            refs.push(&inputs[0]);
+            refs.extend(self.weights.iter());
+            let result = exe.execute::<&xla::Literal>(&refs)?;
+            result
+                .into_iter()
+                .next()
+                .ok_or_else(|| anyhow!("no replica"))?
+                .into_iter()
+                .next()
+                .ok_or_else(|| anyhow!("no buffer"))?
+                .to_literal_sync()?
+                .to_tuple()?
+        };
+        inputs.clear();
+
+        let logits = outs[0].to_vec::<f32>()?; // [b, s, vocab]
+        let kc = outs[1].to_vec::<f32>()?; // [l, b, h, s, hd]
+        let vc = outs[2].to_vec::<f32>()?;
+
+        let stride = self.kv_layer_stride();
+        for (slot, item) in batch.iter_mut().enumerate() {
+            let plen = item.tokens.len();
+            // last-position logits
+            let off = (slot * s + plen - 1) * self.vocab;
+            item.logits = logits[off..off + self.vocab].to_vec();
+            // scatter kv rows 0..plen into the per-seq store [L,H,Smax,hd]
+            if item.kv_k.is_empty() {
+                item.kv_k.resize(self.l * stride, 0.0);
+                item.kv_v.resize(self.l * stride, 0.0);
+            }
+            for l in 0..self.l {
+                for h in 0..self.h {
+                    for t in 0..plen {
+                        let src = (((l * b + slot) * self.h + h) * s + t) * self.hd;
+                        let dst = l * stride + (h * self.smax + t) * self.hd;
+                        item.kv_k[dst..dst + self.hd]
+                            .copy_from_slice(&kc[src..src + self.hd]);
+                        item.kv_v[dst..dst + self.hd]
+                            .copy_from_slice(&vc[src..src + self.hd]);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn decode(&mut self, batch: &mut [DecodeItem]) -> Result<()> {
+        let b = pick_bucket(&self.decode_buckets, batch.len())
+            .ok_or_else(|| anyhow!("decode batch {} exceeds buckets", batch.len()))?;
+        let name = format!("decode_{}_b{b}", self.variant);
+
+        let mut tokens = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        let stride = self.kv_layer_stride();
+        let mut kc = vec![0.0f32; self.l * b * stride];
+        let mut vc = vec![0.0f32; self.l * b * stride];
+        for (slot, item) in batch.iter().enumerate() {
+            tokens[slot] = item.token;
+            pos[slot] = item.pos as i32;
+            for l in 0..self.l {
+                let src = l * stride;
+                let dst = (l * b + slot) * stride;
+                kc[dst..dst + stride].copy_from_slice(&item.kv_k[src..src + stride]);
+                vc[dst..dst + stride].copy_from_slice(&item.kv_v[src..src + stride]);
+            }
+        }
+        let kv_shape = [self.l, b, self.h, self.smax, self.hd];
+        let in_tokens = literal_i32(&tokens, &[b])?;
+        let in_pos = literal_i32(&pos, &[b])?;
+        let in_k = literal_f32(&kc, &kv_shape)?;
+        let in_v = literal_f32(&vc, &kv_shape)?;
+
+        let outs = {
+            let exe = self.rt.load(&name)?;
+            let mut refs: Vec<&xla::Literal> = vec![&in_tokens, &in_pos, &in_k, &in_v];
+            refs.extend(self.weights.iter());
+            let result = exe.execute::<&xla::Literal>(&refs)?;
+            result
+                .into_iter()
+                .next()
+                .ok_or_else(|| anyhow!("no replica"))?
+                .into_iter()
+                .next()
+                .ok_or_else(|| anyhow!("no buffer"))?
+                .to_literal_sync()?
+                .to_tuple()?
+        };
+
+        let logits = outs[0].to_vec::<f32>()?; // [b, vocab]
+        let kc_new = outs[1].to_vec::<f32>()?;
+        let vc_new = outs[2].to_vec::<f32>()?;
+        for (slot, item) in batch.iter_mut().enumerate() {
+            item.logits = logits[slot * self.vocab..(slot + 1) * self.vocab].to_vec();
+            for l in 0..self.l {
+                let src = (l * b + slot) * stride;
+                let dst = l * stride;
+                item.kv_k[dst..dst + stride]
+                    .copy_from_slice(&kc_new[src..src + stride]);
+                item.kv_v[dst..dst + stride]
+                    .copy_from_slice(&vc_new[src..src + stride]);
+            }
+        }
+        Ok(())
+    }
+
+    fn label(&self) -> String {
+        format!("pjrt-{}", self.variant)
+    }
+}

@@ -1,0 +1,87 @@
+//! Request/response types of the serving engine.
+
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+/// Sampling parameters (greedy by default; temperature via the engine's
+/// deterministic PRNG for reproducible serving tests).
+#[derive(Clone, Copy, Debug)]
+pub struct SamplingParams {
+    pub max_new_tokens: usize,
+    pub temperature: f32,
+    /// stop generation when this token is produced (e.g. an EOS id)
+    pub stop_token: Option<i32>,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        Self { max_new_tokens: 16, temperature: 0.0, stop_token: None }
+    }
+}
+
+/// An inference request submitted to the engine.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<i32>,
+    pub params: SamplingParams,
+    pub arrival: Instant,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: Vec<i32>, params: SamplingParams) -> Request {
+        Request { id, prompt, params, arrival: Instant::now() }
+    }
+}
+
+/// Why a sequence finished.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    MaxTokens,
+    StopToken,
+    /// The engine rejected the request (e.g. prompt too long).
+    Rejected,
+}
+
+/// Terminal output for one request.
+#[derive(Clone, Debug)]
+pub struct RequestOutput {
+    pub id: RequestId,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    pub finish: FinishReason,
+    /// time to first token (seconds since arrival)
+    pub ttft: f64,
+    /// total latency (seconds since arrival)
+    pub latency: f64,
+}
+
+impl RequestOutput {
+    /// Mean time-per-output-token for the decode phase.
+    pub fn tpot(&self) -> f64 {
+        if self.tokens.len() > 1 {
+            (self.latency - self.ttft) / (self.tokens.len() - 1) as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tpot_math() {
+        let out = RequestOutput {
+            id: 1,
+            prompt_len: 4,
+            tokens: vec![1, 2, 3, 4, 5],
+            finish: FinishReason::MaxTokens,
+            ttft: 0.1,
+            latency: 0.5,
+        };
+        assert!((out.tpot() - 0.1).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,232 @@
+//! Multi-worker request router: shards requests across engine workers
+//! (each on its own thread, since PJRT handles are not Send) with
+//! round-robin or least-loaded policies, and merges outputs.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{
+    atomic::{AtomicUsize, Ordering},
+    Arc,
+};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use super::engine::{Engine, EngineConfig};
+use super::executor::Executor;
+use super::request::{Request, RequestOutput};
+
+/// Dispatch policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    RoundRobin,
+    LeastLoaded,
+}
+
+enum Msg {
+    Req(Request),
+    Flush,
+    Shutdown,
+}
+
+struct Worker {
+    tx: Sender<Msg>,
+    inflight: Arc<AtomicUsize>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// The router: owns worker threads, each running an engine loop.
+pub struct Router {
+    workers: Vec<Worker>,
+    out_rx: Receiver<RequestOutput>,
+    policy: Policy,
+    rr_next: usize,
+    submitted: usize,
+}
+
+impl Router {
+    /// Spawn `n` workers. `factory(worker_index)` builds each worker's
+    /// executor ON ITS OWN THREAD (PJRT handles are thread-pinned).
+    pub fn spawn<E, F>(n: usize, cfg: EngineConfig, policy: Policy, factory: F) -> Router
+    where
+        E: Executor,
+        F: Fn(usize) -> E + Send + Sync + 'static,
+    {
+        let (out_tx, out_rx) = channel::<RequestOutput>();
+        let factory = Arc::new(factory);
+        let mut workers = Vec::with_capacity(n);
+        for wid in 0..n {
+            let (tx, rx) = channel::<Msg>();
+            let inflight = Arc::new(AtomicUsize::new(0));
+            let inflight2 = inflight.clone();
+            let out_tx = out_tx.clone();
+            let factory = factory.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("worker-{wid}"))
+                .spawn(move || {
+                    let mut engine = Engine::new(factory(wid), cfg);
+                    loop {
+                        // drain pending messages without blocking while
+                        // the engine has work; block when idle
+                        let msg = if engine.has_work() {
+                            match rx.try_recv() {
+                                Ok(m) => Some(m),
+                                Err(std::sync::mpsc::TryRecvError::Empty) => None,
+                                Err(_) => Some(Msg::Shutdown),
+                            }
+                        } else {
+                            match rx.recv() {
+                                Ok(m) => Some(m),
+                                Err(_) => Some(Msg::Shutdown),
+                            }
+                        };
+                        match msg {
+                            Some(Msg::Req(r)) => {
+                                engine.submit(r);
+                                continue;
+                            }
+                            Some(Msg::Flush) => {}
+                            Some(Msg::Shutdown) => break,
+                            None => {}
+                        }
+                        let _ = engine.step();
+                        for out in engine.poll_outputs() {
+                            inflight2.fetch_sub(1, Ordering::SeqCst);
+                            let _ = out_tx.send(out);
+                        }
+                    }
+                })
+                .expect("spawn worker");
+            workers.push(Worker { tx, inflight, handle: Some(handle) });
+        }
+        Router { workers, out_rx, policy, rr_next: 0, submitted: 0 }
+    }
+
+    fn pick_worker(&mut self) -> usize {
+        match self.policy {
+            Policy::RoundRobin => {
+                let w = self.rr_next % self.workers.len();
+                self.rr_next += 1;
+                w
+            }
+            Policy::LeastLoaded => {
+                let mut best = 0;
+                let mut best_load = usize::MAX;
+                for (i, w) in self.workers.iter().enumerate() {
+                    let load = w.inflight.load(Ordering::SeqCst);
+                    if load < best_load {
+                        best_load = load;
+                        best = i;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    pub fn submit(&mut self, request: Request) {
+        let w = self.pick_worker();
+        self.workers[w].inflight.fetch_add(1, Ordering::SeqCst);
+        self.submitted += 1;
+        self.workers[w]
+            .tx
+            .send(Msg::Req(request))
+            .expect("worker alive");
+        let _ = self.workers[w].tx.send(Msg::Flush);
+    }
+
+    /// Per-worker inflight counts (for tests / metrics).
+    pub fn loads(&self) -> Vec<usize> {
+        self.workers
+            .iter()
+            .map(|w| w.inflight.load(Ordering::SeqCst))
+            .collect()
+    }
+
+    /// Wait for all submitted requests to complete.
+    pub fn drain(&mut self) -> Result<Vec<RequestOutput>> {
+        let mut outs = Vec::with_capacity(self.submitted);
+        while outs.len() < self.submitted {
+            outs.push(self.out_rx.recv()?);
+        }
+        self.submitted = 0;
+        Ok(outs)
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(Msg::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::executor::MockExecutor;
+    use crate::coordinator::request::SamplingParams;
+
+    fn req(id: u64, start: i32) -> Request {
+        Request::new(
+            id,
+            vec![start],
+            SamplingParams { max_new_tokens: 3, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn round_robin_completes_all() {
+        let mut r = Router::spawn(
+            3,
+            EngineConfig::default(),
+            Policy::RoundRobin,
+            |_| MockExecutor::new(10_000, 64),
+        );
+        for i in 0..12 {
+            r.submit(req(i, i as i32 * 10));
+        }
+        let mut outs = r.drain().unwrap();
+        assert_eq!(outs.len(), 12);
+        outs.sort_by_key(|o| o.id);
+        for out in outs {
+            let base = out.id as i32 * 10;
+            assert_eq!(out.tokens, vec![base + 1, base + 2, base + 3]);
+        }
+    }
+
+    #[test]
+    fn least_loaded_balances() {
+        let mut r = Router::spawn(
+            2,
+            EngineConfig::default(),
+            Policy::LeastLoaded,
+            |_| MockExecutor::new(1000, 64),
+        );
+        for i in 0..8 {
+            r.submit(req(i, i as i32));
+        }
+        // with least-loaded, neither worker should have all 8
+        let loads = r.loads();
+        assert_eq!(loads.iter().sum::<usize>(), 8);
+        assert!(loads.iter().all(|l| *l >= 1), "loads {loads:?}");
+        let outs = r.drain().unwrap();
+        assert_eq!(outs.len(), 8);
+    }
+
+    #[test]
+    fn shutdown_is_clean() {
+        let r = Router::spawn(
+            2,
+            EngineConfig::default(),
+            Policy::RoundRobin,
+            |_| MockExecutor::new(10, 16),
+        );
+        drop(r); // must not hang or panic
+    }
+}

@@ -1,0 +1,282 @@
+//! Continuous-batching scheduler (the vLLM-style core loop): admits
+//! waiting sequences when KV blocks allow, runs one prefill *or* one
+//! decode batch per step (prefill-prioritized), and preempts the
+//! youngest running sequence when the block pool runs dry.
+
+use std::collections::VecDeque;
+
+use super::kvcache::{BlockManager, OutOfBlocks, SeqId};
+
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    /// maximum sequences decoded together (largest decode bucket)
+    pub max_batch: usize,
+    /// maximum total prompt tokens per prefill step
+    pub prefill_token_budget: usize,
+    /// refuse new admissions above this block-pool utilization
+    pub watermark: f64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self { max_batch: 8, prefill_token_budget: 512, watermark: 0.95 }
+    }
+}
+
+/// What the engine should run this step.
+#[derive(Debug, Default, PartialEq)]
+pub struct Step {
+    pub prefill: Vec<SeqId>,
+    pub decode: Vec<SeqId>,
+    /// sequences preempted while building this step (engine must clear
+    /// their KV and requeue state)
+    pub preempted: Vec<SeqId>,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct WaitingSeq {
+    id: SeqId,
+    prompt_len: usize,
+}
+
+/// The scheduler: sequence queues + the block-pool authority.
+pub struct Scheduler {
+    pub cfg: SchedulerConfig,
+    pub blocks: BlockManager,
+    waiting: VecDeque<WaitingSeq>,
+    running: Vec<SeqId>,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig, blocks: BlockManager) -> Scheduler {
+        Scheduler { cfg, blocks, waiting: VecDeque::new(), running: Vec::new() }
+    }
+
+    pub fn add_waiting(&mut self, id: SeqId, prompt_len: usize) {
+        self.waiting.push_back(WaitingSeq { id, prompt_len });
+    }
+
+    /// Re-queue a preempted sequence at the FRONT (it already waited).
+    pub fn requeue_front(&mut self, id: SeqId, prompt_len: usize) {
+        self.waiting.push_front(WaitingSeq { id, prompt_len });
+    }
+
+    pub fn num_waiting(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn num_running(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.waiting.is_empty() || !self.running.is_empty()
+    }
+
+    /// Build the next step: admit prefills first (vLLM's policy -- new
+    /// requests reduce queueing latency and fill the batch), otherwise
+    /// decode all running sequences.
+    pub fn schedule(&mut self) -> Step {
+        let mut step = Step::default();
+
+        // admission: FIFO while budget + blocks + batch slots allow
+        let mut token_budget = self.cfg.prefill_token_budget;
+        while let Some(&ws) = self.waiting.front() {
+            if self.running.len() + step.prefill.len() >= self.cfg.max_batch {
+                break;
+            }
+            if ws.prompt_len > token_budget {
+                break;
+            }
+            if self.blocks.utilization() >= self.cfg.watermark
+                || !self.blocks.can_allocate(ws.prompt_len + 1)
+            {
+                break;
+            }
+            self.blocks
+                .allocate(ws.id, ws.prompt_len)
+                .expect("can_allocate checked");
+            token_budget -= ws.prompt_len;
+            step.prefill.push(ws.id);
+            self.waiting.pop_front();
+        }
+        if !step.prefill.is_empty() {
+            self.running.extend(step.prefill.iter().copied());
+            return step;
+        }
+
+        step.decode = self.running.clone();
+        step
+    }
+
+    /// Record a generated token for `id`, preempting others if the pool
+    /// is exhausted. Returns the evicted ids (the engine clears them).
+    pub fn append_token(&mut self, id: SeqId) -> Vec<SeqId> {
+        let mut evicted = Vec::new();
+        loop {
+            match self.blocks.append_token(id) {
+                Ok(()) => return evicted,
+                Err(OutOfBlocks) => {
+                    // evict the youngest running sequence that isn't `id`
+                    let victim = self
+                        .running
+                        .iter()
+                        .rev()
+                        .copied()
+                        .find(|v| *v != id);
+                    match victim {
+                        Some(v) => {
+                            self.preempt(v);
+                            evicted.push(v);
+                        }
+                        None => {
+                            // nothing to evict: preempt id itself
+                            self.preempt(id);
+                            evicted.push(id);
+                            return evicted;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn preempt(&mut self, id: SeqId) {
+        self.running.retain(|r| *r != id);
+        self.blocks.release(id);
+    }
+
+    /// Sequence finished: release blocks and drop from running.
+    pub fn finish(&mut self, id: SeqId) {
+        self.running.retain(|r| *r != id);
+        self.blocks.release(id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prng::XorShift, prop};
+
+    fn sched(blocks: usize, block_size: usize, max_batch: usize) -> Scheduler {
+        Scheduler::new(
+            SchedulerConfig { max_batch, prefill_token_budget: 256, watermark: 1.0 },
+            BlockManager::new(blocks, block_size),
+        )
+    }
+
+    #[test]
+    fn prefill_takes_priority() {
+        let mut s = sched(16, 16, 4);
+        s.add_waiting(1, 10);
+        let st = s.schedule();
+        assert_eq!(st.prefill, vec![1]);
+        assert!(st.decode.is_empty());
+        // next step: no waiting -> decode
+        let st = s.schedule();
+        assert_eq!(st.decode, vec![1]);
+    }
+
+    #[test]
+    fn fifo_admission_respects_batch_cap() {
+        let mut s = sched(64, 16, 2);
+        for id in 1..=4 {
+            s.add_waiting(id, 8);
+        }
+        let st = s.schedule();
+        assert_eq!(st.prefill, vec![1, 2], "cap 2");
+        let st = s.schedule();
+        assert!(st.prefill.is_empty(), "running full");
+        assert_eq!(st.decode, vec![1, 2]);
+        s.finish(1);
+        let st = s.schedule();
+        assert_eq!(st.prefill, vec![3]);
+    }
+
+    #[test]
+    fn token_budget_limits_prefill() {
+        let mut s = Scheduler::new(
+            SchedulerConfig { max_batch: 8, prefill_token_budget: 20, watermark: 1.0 },
+            BlockManager::new(64, 16),
+        );
+        s.add_waiting(1, 15);
+        s.add_waiting(2, 15);
+        let st = s.schedule();
+        assert_eq!(st.prefill, vec![1], "second would exceed the budget");
+    }
+
+    #[test]
+    fn blocks_gate_admission() {
+        let mut s = sched(2, 16, 8); // only 32 token slots
+        s.add_waiting(1, 16); // needs 2 blocks (16+1 tokens)
+        s.add_waiting(2, 16);
+        let st = s.schedule();
+        assert_eq!(st.prefill, vec![1]);
+        let st = s.schedule();
+        assert!(st.prefill.is_empty(), "no blocks for seq 2");
+        assert_eq!(st.decode, vec![1]);
+    }
+
+    #[test]
+    fn preemption_evicts_youngest() {
+        let mut s = sched(2, 4, 8); // 8 slots
+        s.add_waiting(1, 3);
+        s.add_waiting(2, 3);
+        let st = s.schedule();
+        assert_eq!(st.prefill, vec![1, 2]);
+        // grow seq 1 until pool is dry; seq 2 must be evicted
+        let mut evicted = Vec::new();
+        for _ in 0..6 {
+            evicted.extend(s.append_token(1));
+            if !evicted.is_empty() {
+                break;
+            }
+        }
+        assert_eq!(evicted, vec![2]);
+        assert_eq!(s.num_running(), 1);
+    }
+
+    #[test]
+    fn prop_scheduler_conservation() {
+        // sequences never vanish: waiting + running + finished == submitted
+        prop::for_all("scheduler conservation", |rng: &mut XorShift, _| {
+            let mut s = sched(16, 8, 4);
+            let mut submitted = 0u64;
+            let mut finished = 0usize;
+            let mut preempted_back: Vec<(SeqId, usize)> = Vec::new();
+            for _ in 0..100 {
+                match rng.below(3) {
+                    0 => {
+                        submitted += 1;
+                        s.add_waiting(submitted, 1 + rng.below(12));
+                    }
+                    1 => {
+                        // requeue preempted
+                        if let Some((id, pl)) = preempted_back.pop() {
+                            s.requeue_front(id, pl);
+                        }
+                        let st = s.schedule();
+                        for id in st.decode {
+                            for v in s.append_token(id) {
+                                preempted_back.push((v, 1 + rng.below(12)));
+                            }
+                        }
+                    }
+                    _ => {
+                        let st = s.schedule();
+                        if let Some(&id) = st.decode.first() {
+                            s.finish(id);
+                            finished += 1;
+                        }
+                    }
+                }
+                s.blocks.check_invariants();
+                let accounted = s.num_waiting()
+                    + s.num_running()
+                    + finished
+                    + preempted_back.len();
+                assert_eq!(accounted as u64, submitted, "sequence lost");
+            }
+        });
+    }
+}

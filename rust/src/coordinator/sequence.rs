@@ -1,0 +1,134 @@
+//! Per-sequence serving state: tokens, phase, and the numeric KV store
+//! that the batcher materializes into the decode artifact layout.
+
+use std::time::Instant;
+
+use super::kvcache::SeqId;
+use super::request::Request;
+
+/// Lifecycle phase of a sequence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// queued, prompt not yet prefetched
+    Waiting,
+    /// prefill done, generating tokens
+    Decoding,
+    /// preempted: blocks were reclaimed; needs re-prefill
+    Preempted,
+    Finished,
+}
+
+/// The numeric KV tensors of one sequence: [L, H, Smax, hd] row-major per
+/// cache, pre-sized to Smax so batch assembly is a straight copy.
+#[derive(Clone, Debug, Default)]
+pub struct KvStore {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+#[derive(Debug)]
+pub struct Sequence {
+    pub seq_id: SeqId,
+    pub request: Request,
+    pub phase: Phase,
+    /// generated tokens (excludes prompt)
+    pub output: Vec<i32>,
+    /// current context length (prompt + generated already in KV)
+    pub pos: usize,
+    pub kv: KvStore,
+    pub first_token_at: Option<Instant>,
+    /// number of times this sequence was preempted (fairness metric)
+    pub preemptions: usize,
+}
+
+impl Sequence {
+    pub fn new(seq_id: SeqId, request: Request) -> Sequence {
+        Sequence {
+            seq_id,
+            request,
+            phase: Phase::Waiting,
+            output: Vec::new(),
+            pos: 0,
+            kv: KvStore::default(),
+            first_token_at: None,
+            preemptions: 0,
+        }
+    }
+
+    /// The token fed to the next decode step (last generated, or last
+    /// prompt token right after prefill).
+    pub fn last_token(&self) -> i32 {
+        *self
+            .output
+            .last()
+            .unwrap_or_else(|| self.request.prompt.last().expect("empty prompt"))
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.request.prompt.len() + self.output.len()
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.phase == Phase::Finished
+    }
+
+    /// Check stop conditions after appending a token.
+    pub fn should_stop(&self) -> bool {
+        if self.output.len() >= self.request.params.max_new_tokens {
+            return true;
+        }
+        if let Some(stop) = self.request.params.stop_token {
+            if self.output.last() == Some(&stop) {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::SamplingParams;
+
+    fn req(prompt: Vec<i32>, max_new: usize) -> Request {
+        Request::new(
+            1,
+            prompt,
+            SamplingParams { max_new_tokens: max_new, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn last_token_progression() {
+        let mut s = Sequence::new(1, req(vec![5, 6, 7], 4));
+        assert_eq!(s.last_token(), 7);
+        s.output.push(9);
+        assert_eq!(s.last_token(), 9);
+        assert_eq!(s.total_len(), 4);
+    }
+
+    #[test]
+    fn stop_conditions() {
+        let mut s = Sequence::new(1, req(vec![1], 2));
+        s.output.push(3);
+        assert!(!s.should_stop());
+        s.output.push(4);
+        assert!(s.should_stop(), "max_new_tokens reached");
+
+        let mut s = Sequence::new(
+            2,
+            Request::new(
+                2,
+                vec![1],
+                SamplingParams {
+                    max_new_tokens: 10,
+                    stop_token: Some(0),
+                    ..Default::default()
+                },
+            ),
+        );
+        s.output.push(0);
+        assert!(s.should_stop(), "stop token");
+    }
+}

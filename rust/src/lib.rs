@@ -1,0 +1,31 @@
+//! # SlideSparse
+//!
+//! A complete reproduction of *SlideSparse: Fast and Flexible (2N-2):2N
+//! Structured Sparsity* as a three-layer Rust + JAX + Pallas system:
+//!
+//! * [`sparsity`] -- the paper's core algorithm: sliding-window weight
+//!   decomposition (Phi), activation lifting (Psi), magnitude pruning,
+//!   and the generalized Z:L -> M:N theory.
+//! * [`quant`] -- per-token INT8/FP8 quantization and the fused
+//!   quantization-slide hot-path kernel (paper Algorithm 1).
+//! * [`stc`] -- the Sparse-Tensor-Core simulator: dense baselines and
+//!   2:4 compressed GEMM with genuine 2x compute reduction.
+//! * [`runtime`] -- PJRT client executing AOT-compiled JAX/Pallas HLO.
+//! * [`model`] -- transformer configs (paper model zoo shapes) and the
+//!   SlideSparse linear backend interception point.
+//! * [`coordinator`] -- the vLLM-like serving engine: continuous
+//!   batching, paged KV cache, prefill/decode scheduling, routing.
+//! * [`perfmodel`] -- calibrated analytical GPU cost model regenerating
+//!   the paper's per-GPU speedup tables.
+//! * [`bench`] -- the harness that regenerates every paper table/figure.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod model;
+pub mod perfmodel;
+pub mod quant;
+pub mod runtime;
+pub mod sparsity;
+pub mod stc;
+pub mod util;

@@ -1,0 +1,171 @@
+//! SlideSparse CLI: the serving launcher + bench/exploration entry
+//! points.
+//!
+//! ```text
+//! slidesparse serve   [--config cfg.json] [--requests N]
+//! slidesparse bench   [--suite kernel|e2e|figures|all]
+//! slidesparse explore [--pattern Z:L] [--hw M:N]
+//! slidesparse pack    --o O --k K [--n N]        # packer demo + stats
+//! ```
+
+use anyhow::{anyhow, Result};
+
+use slidesparse::bench::tables;
+use slidesparse::config::Config;
+use slidesparse::coordinator::{
+    Engine, PjrtExecutor, Request, SamplingParams, StcExecutor,
+};
+use slidesparse::model::Backend;
+use slidesparse::quant::Precision;
+use slidesparse::sparsity::general::Decomposition;
+use slidesparse::sparsity::pattern::Pattern;
+use slidesparse::util::cli::Args;
+use slidesparse::util::prng::XorShift;
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    match args.subcommand.as_deref() {
+        Some("serve") => serve(&args),
+        Some("bench") => bench(&args),
+        Some("explore") => explore(&args),
+        Some("pack") => pack(&args),
+        _ => {
+            eprintln!(
+                "usage: slidesparse <serve|bench|explore|pack> [options]\n\
+                 see rust/src/main.rs for per-command flags"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let cfg = match args.opt("config") {
+        Some(path) => Config::from_file(std::path::Path::new(path))?,
+        None => Config::default(),
+    };
+    let backend = cfg.backend()?;
+    let n_requests = args.opt_usize("requests", 16);
+    println!("serving with sparsity={} executor={}", cfg.sparsity, cfg.executor);
+
+    let outs;
+    let report;
+    if cfg.executor == "pjrt" {
+        let variant = match backend {
+            Backend::Dense => "dense".to_string(),
+            Backend::Slide { n } => format!("slide{n}"),
+            Backend::Native24 => {
+                return Err(anyhow!("pjrt executor ships dense and slide variants"))
+            }
+        };
+        let exec = PjrtExecutor::new(std::path::Path::new(&cfg.artifacts_dir), &variant)?;
+        exec.warmup()?;
+        let mut engine = Engine::new(exec, cfg.engine);
+        submit_demo(&mut engine, n_requests, 512);
+        outs = engine.run_to_completion()?;
+        report = engine.metrics.report();
+    } else {
+        let model = tables::e2e_model(backend);
+        let vocab = model.vocab;
+        let mut engine = Engine::new(StcExecutor::new(model), cfg.engine);
+        submit_demo(&mut engine, n_requests, vocab);
+        outs = engine.run_to_completion()?;
+        report = engine.metrics.report();
+    }
+    println!("finished {} requests", outs.len());
+    for o in outs.iter().take(4) {
+        println!(
+            "  req {}: {} prompt + {} generated, ttft {:.1} ms, latency {:.1} ms",
+            o.id,
+            o.prompt_len,
+            o.tokens.len(),
+            o.ttft * 1e3,
+            o.latency * 1e3
+        );
+    }
+    println!("{report}");
+    Ok(())
+}
+
+fn submit_demo<E: slidesparse::coordinator::Executor>(
+    engine: &mut Engine<E>,
+    n: usize,
+    vocab: usize,
+) {
+    let mut rng = XorShift::new(42);
+    for i in 0..n {
+        let plen = 8 + rng.below(24);
+        let prompt: Vec<i32> = (0..plen).map(|_| rng.below(vocab) as i32).collect();
+        engine.submit(Request::new(
+            i as u64,
+            prompt,
+            SamplingParams { max_new_tokens: 8 + rng.below(8), ..Default::default() },
+        ));
+    }
+}
+
+fn bench(args: &Args) -> Result<()> {
+    let suite = args.opt_str("suite", "all");
+    if matches!(suite, "kernel" | "all") {
+        tables::kernel_square_measured(&[16, 64, 256], 480).print();
+        let g = slidesparse::perfmodel::gpu("A100").unwrap();
+        tables::kernel_square_gpu(&g, Precision::Int8, &[64, 1024, 16384]).print();
+    }
+    if matches!(suite, "e2e" | "all") {
+        tables::e2e_measured(false).print();
+        tables::e2e_measured(true).print();
+    }
+    if matches!(suite, "figures" | "all") {
+        tables::fig1_limit_table().print();
+        tables::fig3_space().print();
+        tables::efficiency_modeled(8192, Precision::Int8).print();
+    }
+    Ok(())
+}
+
+fn explore(args: &Args) -> Result<()> {
+    let pat = parse_zl(args.opt_str("pattern", "6:8"))?;
+    let hw = parse_zl(args.opt_str("hw", "2:4"))?;
+    let d = Decomposition::new(pat, hw);
+    println!("decomposing {pat} onto {hw} hardware:");
+    println!("  stride          : {}", d.stride());
+    println!("  windows/block   : {}", d.window_count());
+    println!("  capacity        : {} (non-zeros: {})", d.capacity(), pat.z);
+    println!("  valid (Thm. 2)  : {}", d.is_valid());
+    println!("  gamma (Eq. 10)  : {:.4}", d.gamma());
+    println!("  alpha           : {:.2}", d.alpha());
+    println!("  S_eff           : {:.4}", d.s_eff());
+    println!("  bound L/Z       : {:.4} (Thm. 3)", d.s_bound());
+    println!("  achieves bound  : {}", d.achieves_bound());
+    Ok(())
+}
+
+fn parse_zl(s: &str) -> Result<Pattern> {
+    let (z, l) = s.split_once(':').ok_or_else(|| anyhow!("want Z:L, got '{s}'"))?;
+    Ok(Pattern::new(z.trim().parse()?, l.trim().parse()?))
+}
+
+fn pack(args: &Args) -> Result<()> {
+    let o = args.opt_usize("o", 1024);
+    let k = args.opt_usize("k", 4096);
+    let n = args.opt_usize("n", 4);
+    let mut rng = XorShift::new(1);
+    let w: Vec<f32> = (0..o * k).map(|_| rng.normal()).collect();
+    let pat = Pattern::family(n);
+    let pruned = slidesparse::sparsity::prune::prune_magnitude(&w, o, k, pat.z, pat.l);
+    let t0 = std::time::Instant::now();
+    let packed = slidesparse::sparsity::pack_matrix(&pruned, o, k, n)
+        .map_err(|e| anyhow!("{e}"))?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "packed {o}x{k} ({} pattern) in {:.1} ms ({:.2} GB/s)",
+        pat,
+        dt * 1e3,
+        (o * k * 4) as f64 / dt / 1e9
+    );
+    println!("  expansion: K {k} -> K' {} (gamma {:.3})", packed.k_packed, pat.gamma());
+    let nz: usize = packed.data.iter().filter(|v| **v != 0.0).count();
+    println!("  non-zeros preserved: {} ({:.1}% of packed slots)", nz,
+             100.0 * nz as f64 / packed.data.len() as f64);
+    Ok(())
+}

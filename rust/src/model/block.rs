@@ -1,0 +1,486 @@
+//! A native-Rust transformer over the STC backends with a real KV cache:
+//! the serving engine's fast path (`StcExecutor`) and the substrate for
+//! the E2E benches (paper D.4) and the accuracy experiment (Fig. 2).
+//! Mirrors python/compile/model.py: RMSNorm -> causal attention ->
+//! RMSNorm -> SwiGLU, per-token-quantized linears.
+
+use super::layer::{Backend, Linear};
+use crate::util::prng::XorShift;
+
+/// Architecture of the native transformer.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockConfig {
+    pub dim: usize,
+    pub n_heads: usize,
+    pub ffn: usize,
+}
+
+impl BlockConfig {
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.n_heads
+    }
+}
+
+/// One transformer block with prepared linears.
+pub struct Block {
+    pub cfg: BlockConfig,
+    pub wqkv: Linear,
+    pub wo: Linear,
+    pub w13: Linear,
+    pub w2: Linear,
+}
+
+impl Block {
+    /// Generate deterministic weights and prepare under `backend`.
+    pub fn generate(cfg: BlockConfig, seed: u64, backend: Backend) -> Block {
+        let mut rng = XorShift::new(seed);
+        let d = cfg.dim;
+        let gen = |rng: &mut XorShift, o: usize, k: usize| -> Vec<f32> {
+            let s = 1.0 / (k as f32).sqrt();
+            (0..o * k).map(|_| rng.normal() * s).collect()
+        };
+        let wqkv = gen(&mut rng, 3 * d, d);
+        let wo = gen(&mut rng, d, d);
+        let w13 = gen(&mut rng, 2 * cfg.ffn, d);
+        let w2 = gen(&mut rng, d, cfg.ffn);
+        Block {
+            cfg,
+            wqkv: Linear::prepare(&wqkv, 3 * d, d, backend),
+            wo: Linear::prepare(&wo, d, d, backend),
+            w13: Linear::prepare(&w13, 2 * cfg.ffn, d, backend),
+            w2: Linear::prepare(&w2, d, cfg.ffn, backend),
+        }
+    }
+
+    /// Forward `s` new rows starting at context position `start`,
+    /// reading/writing this block's KV cache slices (`kc`/`vc`, each
+    /// [n_heads, smax, head_dim] row-major).
+    pub fn forward_with_kv(
+        &self,
+        x: &[f32],
+        s: usize,
+        start: usize,
+        kc: &mut [f32],
+        vc: &mut [f32],
+        smax: usize,
+    ) -> Vec<f32> {
+        let d = self.cfg.dim;
+        let h = self.cfg.n_heads;
+        let hd = d / h;
+        debug_assert_eq!(kc.len(), h * smax * hd);
+        assert!(start + s <= smax, "kv overflow: {start}+{s} > {smax}");
+
+        let normed = rmsnorm(x, s, d);
+        let qkv = self.wqkv.forward(&normed, s);
+
+        // write new K/V rows into the cache
+        for i in 0..s {
+            for head in 0..h {
+                let koff = head * smax * hd + (start + i) * hd;
+                let src_k = &qkv[i * 3 * d + d + head * hd..][..hd];
+                let src_v = &qkv[i * 3 * d + 2 * d + head * hd..][..hd];
+                kc[koff..koff + hd].copy_from_slice(src_k);
+                vc[koff..koff + hd].copy_from_slice(src_v);
+            }
+        }
+
+        // attention: each new row i attends to cache[0..=start+i]
+        let mut attn_out = vec![0.0f32; s * d];
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut scores: Vec<f32> = Vec::new();
+        for head in 0..h {
+            let kbase = head * smax * hd;
+            for i in 0..s {
+                let ctx = start + i + 1;
+                let q = &qkv[i * 3 * d + head * hd..][..hd];
+                scores.clear();
+                scores.reserve(ctx);
+                let mut maxs = f32::NEG_INFINITY;
+                for t in 0..ctx {
+                    let krow = &kc[kbase + t * hd..][..hd];
+                    let dot: f32 = q.iter().zip(krow).map(|(a, b)| a * b).sum();
+                    let sc = dot * scale;
+                    maxs = maxs.max(sc);
+                    scores.push(sc);
+                }
+                let mut denom = 0.0f32;
+                for sc in scores.iter_mut() {
+                    *sc = (*sc - maxs).exp();
+                    denom += *sc;
+                }
+                let out = &mut attn_out[i * d + head * hd..][..hd];
+                for t in 0..ctx {
+                    let p = scores[t] / denom;
+                    let vrow = &vc[kbase + t * hd..][..hd];
+                    for (o, v) in out.iter_mut().zip(vrow) {
+                        *o += p * v;
+                    }
+                }
+            }
+        }
+
+        let proj = self.wo.forward(&attn_out, s);
+        let mut x1: Vec<f32> = x.iter().zip(proj.iter()).map(|(a, b)| a + b).collect();
+
+        let normed = rmsnorm(&x1, s, d);
+        let w13 = self.w13.forward(&normed, s);
+        let f = self.cfg.ffn;
+        let mut gated = vec![0.0f32; s * f];
+        for r in 0..s {
+            for c in 0..f {
+                let w1 = w13[r * 2 * f + c];
+                let w3 = w13[r * 2 * f + f + c];
+                gated[r * f + c] = silu(w1) * w3;
+            }
+        }
+        let mlp = self.w2.forward(&gated, s);
+        for (a, b) in x1.iter_mut().zip(mlp.iter()) {
+            *a += b;
+        }
+        x1
+    }
+
+    /// Full-sequence forward with a scratch KV cache (prefill-style).
+    pub fn forward(&self, x: &[f32], s: usize) -> Vec<f32> {
+        let h = self.cfg.n_heads;
+        let hd = self.cfg.head_dim();
+        let mut kc = vec![0.0f32; h * s * hd];
+        let mut vc = vec![0.0f32; h * s * hd];
+        self.forward_with_kv(x, s, 0, &mut kc, &mut vc, s)
+    }
+
+    pub fn weight_bytes(&self) -> usize {
+        self.wqkv.weight_bytes()
+            + self.wo.weight_bytes()
+            + self.w13.weight_bytes()
+            + self.w2.weight_bytes()
+    }
+}
+
+/// A stack of blocks + tied embedding/unembedding: the native serving
+/// model. KV caches are external (owned by the engine's sequences).
+pub struct NativeModel {
+    pub blocks: Vec<Block>,
+    pub embed: Vec<f32>,
+    pub vocab: usize,
+    pub dim: usize,
+    pub smax: usize,
+}
+
+impl NativeModel {
+    pub fn generate(
+        cfg: BlockConfig,
+        n_layers: usize,
+        vocab: usize,
+        smax: usize,
+        seed: u64,
+        backend: Backend,
+    ) -> NativeModel {
+        let blocks = (0..n_layers)
+            .map(|i| Block::generate(cfg, seed + 1000 * i as u64, backend))
+            .collect();
+        let mut rng = XorShift::new(seed + 777);
+        let embed = (0..vocab * cfg.dim)
+            .map(|_| rng.normal() / (cfg.dim as f32).sqrt())
+            .collect();
+        NativeModel { blocks, embed, vocab, dim: cfg.dim, smax }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Per-layer KV cache stride in the flat per-sequence store
+    /// ([L, H, smax, hd] row-major).
+    pub fn kv_layer_stride(&self) -> usize {
+        let cfg = self.blocks[0].cfg;
+        cfg.n_heads * self.smax * cfg.head_dim()
+    }
+
+    pub fn kv_len(&self) -> usize {
+        self.n_layers() * self.kv_layer_stride()
+    }
+
+    /// Run `s` tokens starting at position `start` through all blocks,
+    /// updating the sequence's KV store; returns logits for the LAST of
+    /// the new rows.
+    pub fn forward_tokens(
+        &self,
+        tokens: &[i32],
+        start: usize,
+        kv_k: &mut [f32],
+        kv_v: &mut [f32],
+    ) -> Vec<f32> {
+        let s = tokens.len();
+        let d = self.dim;
+        let mut x = vec![0.0f32; s * d];
+        for (i, t) in tokens.iter().enumerate() {
+            let t = *t as usize % self.vocab;
+            x[i * d..(i + 1) * d].copy_from_slice(&self.embed[t * d..(t + 1) * d]);
+        }
+        let stride = self.kv_layer_stride();
+        for (li, b) in self.blocks.iter().enumerate() {
+            x = b.forward_with_kv(
+                &x,
+                s,
+                start,
+                &mut kv_k[li * stride..(li + 1) * stride],
+                &mut kv_v[li * stride..(li + 1) * stride],
+                self.smax,
+            );
+        }
+        let last = rmsnorm(&x[(s - 1) * d..s * d], 1, d);
+        let mut logits = vec![0.0f32; self.vocab];
+        for v in 0..self.vocab {
+            logits[v] = self.embed[v * d..(v + 1) * d]
+                .iter()
+                .zip(last.iter())
+                .map(|(a, b)| a * b)
+                .sum();
+        }
+        logits
+    }
+
+    /// Batched single-token decode: one engine step for B sequences at
+    /// (possibly different) positions. The linear layers run as m=B
+    /// GEMMs -- the batching that makes continuous-batching decode pay
+    /// off -- while attention/KV-update stay per-sequence.
+    pub fn forward_decode_batch(
+        &self,
+        tokens: &[i32],
+        positions: &[usize],
+        kv: &mut [(&mut [f32], &mut [f32])],
+    ) -> Vec<Vec<f32>> {
+        let b = tokens.len();
+        assert_eq!(positions.len(), b);
+        assert_eq!(kv.len(), b);
+        let d = self.dim;
+        let cfg = self.blocks[0].cfg;
+        let h = cfg.n_heads;
+        let hd = cfg.head_dim();
+        let stride = self.kv_layer_stride();
+
+        let mut x = vec![0.0f32; b * d];
+        for (i, t) in tokens.iter().enumerate() {
+            let t = *t as usize % self.vocab;
+            x[i * d..(i + 1) * d].copy_from_slice(&self.embed[t * d..(t + 1) * d]);
+        }
+
+        for (li, blk) in self.blocks.iter().enumerate() {
+            let normed = rmsnorm(&x, b, d);
+            let qkv = blk.wqkv.forward(&normed, b); // [b, 3d] batched
+            let mut attn_out = vec![0.0f32; b * d];
+            let scale = 1.0 / (hd as f32).sqrt();
+            for (bi, ((kk, vv), &pos)) in kv.iter_mut().zip(positions).enumerate() {
+                let kc = &mut kk[li * stride..(li + 1) * stride];
+                let vc = &mut vv[li * stride..(li + 1) * stride];
+                for head in 0..h {
+                    let koff = head * self.smax * hd + pos * hd;
+                    kc[koff..koff + hd]
+                        .copy_from_slice(&qkv[bi * 3 * d + d + head * hd..][..hd]);
+                    vc[koff..koff + hd]
+                        .copy_from_slice(&qkv[bi * 3 * d + 2 * d + head * hd..][..hd]);
+                }
+                let ctx = pos + 1;
+                for head in 0..h {
+                    let kbase = head * self.smax * hd;
+                    let q = &qkv[bi * 3 * d + head * hd..][..hd];
+                    let mut scores = Vec::with_capacity(ctx);
+                    let mut maxs = f32::NEG_INFINITY;
+                    for t in 0..ctx {
+                        let dot: f32 = q
+                            .iter()
+                            .zip(&kc[kbase + t * hd..kbase + t * hd + hd])
+                            .map(|(a, b)| a * b)
+                            .sum();
+                        let sc = dot * scale;
+                        maxs = maxs.max(sc);
+                        scores.push(sc);
+                    }
+                    let mut denom = 0.0f32;
+                    for sc in scores.iter_mut() {
+                        *sc = (*sc - maxs).exp();
+                        denom += *sc;
+                    }
+                    let out = &mut attn_out[bi * d + head * hd..][..hd];
+                    for t in 0..ctx {
+                        let p = scores[t] / denom;
+                        let vrow = &vc[kbase + t * hd..][..hd];
+                        for (o, v) in out.iter_mut().zip(vrow) {
+                            *o += p * v;
+                        }
+                    }
+                }
+            }
+            let proj = blk.wo.forward(&attn_out, b);
+            let mut x1: Vec<f32> = x.iter().zip(&proj).map(|(a, b)| a + b).collect();
+            let normed = rmsnorm(&x1, b, d);
+            let w13 = blk.w13.forward(&normed, b);
+            let f = cfg.ffn;
+            let mut gated = vec![0.0f32; b * f];
+            for r in 0..b {
+                for c in 0..f {
+                    let w1 = w13[r * 2 * f + c];
+                    let w3 = w13[r * 2 * f + f + c];
+                    gated[r * f + c] = silu(w1) * w3;
+                }
+            }
+            let mlp = blk.w2.forward(&gated, b);
+            for (a, bb) in x1.iter_mut().zip(&mlp) {
+                *a += bb;
+            }
+            x = x1;
+        }
+
+        // batched unembedding: logits = rmsnorm(x) @ embed^T
+        let last = rmsnorm(&x, b, d);
+        let lg = crate::stc::gemm_f32(&last, &self.embed, b, self.vocab, d);
+        (0..b).map(|r| lg[r * self.vocab..(r + 1) * self.vocab].to_vec()).collect()
+    }
+
+    /// Convenience: full-prompt logits with a scratch cache.
+    pub fn logits(&self, tokens: &[usize]) -> Vec<f32> {
+        let toks: Vec<i32> = tokens.iter().map(|t| *t as i32).collect();
+        let mut k = vec![0.0f32; self.kv_len()];
+        let mut v = vec![0.0f32; self.kv_len()];
+        self.forward_tokens(&toks, 0, &mut k, &mut v)
+    }
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+fn rmsnorm(x: &[f32], rows: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * d];
+    for r in 0..rows {
+        let row = &x[r * d..(r + 1) * d];
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + 1e-5).sqrt();
+        for (o, v) in out[r * d..(r + 1) * d].iter_mut().zip(row) {
+            *o = v * inv;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> BlockConfig {
+        BlockConfig { dim: 32, n_heads: 2, ffn: 48 }
+    }
+
+    #[test]
+    fn block_forward_shapes_and_finite() {
+        let b = Block::generate(tiny(), 1, Backend::Dense);
+        let mut rng = XorShift::new(9);
+        let s = 5;
+        let x: Vec<f32> = (0..s * 32).map(|_| rng.normal()).collect();
+        let y = b.forward(&x, s);
+        assert_eq!(y.len(), s * 32);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn causality() {
+        let b = Block::generate(tiny(), 2, Backend::Dense);
+        let mut rng = XorShift::new(10);
+        let s = 4;
+        let mut x: Vec<f32> = (0..s * 32).map(|_| rng.normal()).collect();
+        let y1 = b.forward(&x, s);
+        for v in &mut x[3 * 32..] {
+            *v += 1.0;
+        }
+        let y2 = b.forward(&x, s);
+        assert_eq!(&y1[..3 * 32], &y2[..3 * 32]);
+        assert_ne!(&y1[3 * 32..], &y2[3 * 32..]);
+    }
+
+    #[test]
+    fn incremental_decode_matches_full_prefill() {
+        // THE kv-cache correctness check: prefill(t0..t3) == prefill(t0..t2)
+        // then decode(t3)
+        let m = NativeModel::generate(tiny(), 2, 64, 16, 5, Backend::Dense);
+        let toks = [1i32, 5, 9, 30];
+        let full = {
+            let mut k = vec![0.0; m.kv_len()];
+            let mut v = vec![0.0; m.kv_len()];
+            m.forward_tokens(&toks, 0, &mut k, &mut v)
+        };
+        let incr = {
+            let mut k = vec![0.0; m.kv_len()];
+            let mut v = vec![0.0; m.kv_len()];
+            m.forward_tokens(&toks[..3], 0, &mut k, &mut v);
+            m.forward_tokens(&toks[3..], 3, &mut k, &mut v)
+        };
+        for (a, b) in full.iter().zip(incr.iter()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn slide_backend_close_to_dense_weights_model() {
+        let d = Block::generate(tiny(), 3, Backend::Dense);
+        let s4 = Block::generate(tiny(), 3, Backend::Slide { n: 4 });
+        let mut rng = XorShift::new(11);
+        let x: Vec<f32> = (0..2 * 32).map(|_| rng.normal()).collect();
+        let yd = d.forward(&x, 2);
+        let ys = s4.forward(&x, 2);
+        let cos = cosine(&yd, &ys);
+        assert!(cos > 0.8, "6:8 pruning should preserve block output, cos={cos}");
+    }
+
+    fn cosine(a: &[f32], b: &[f32]) -> f32 {
+        let dot: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+        let na: f32 = a.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let nb: f32 = b.iter().map(|v| v * v).sum::<f32>().sqrt();
+        dot / (na * nb)
+    }
+
+    #[test]
+    fn batched_decode_matches_sequential() {
+        let m = NativeModel::generate(tiny(), 2, 64, 16, 5, Backend::Dense);
+        // two sequences with different prefixes/positions
+        let seqs = [vec![1i32, 5, 9], vec![2i32, 7]];
+        let mut kvs: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+        let mut seq_logits = Vec::new();
+        for s in &seqs {
+            let mut k = vec![0.0; m.kv_len()];
+            let mut v = vec![0.0; m.kv_len()];
+            m.forward_tokens(&s[..s.len() - 1], 0, &mut k, &mut v);
+            // sequential decode of the last token
+            let mut k2 = k.clone();
+            let mut v2 = v.clone();
+            seq_logits.push(m.forward_tokens(
+                &s[s.len() - 1..],
+                s.len() - 1,
+                &mut k2,
+                &mut v2,
+            ));
+            kvs.push((k, v));
+        }
+        // batched decode of both last tokens together
+        let tokens: Vec<i32> = seqs.iter().map(|s| *s.last().unwrap()).collect();
+        let positions: Vec<usize> = seqs.iter().map(|s| s.len() - 1).collect();
+        let mut views: Vec<(&mut [f32], &mut [f32])> = kvs
+            .iter_mut()
+            .map(|(k, v)| (k.as_mut_slice(), v.as_mut_slice()))
+            .collect();
+        let batched = m.forward_decode_batch(&tokens, &positions, &mut views);
+        for (b, s) in batched.iter().zip(&seq_logits) {
+            for (x, y) in b.iter().zip(s.iter()) {
+                assert!((x - y).abs() < 2e-3, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn native_model_logits() {
+        let m = NativeModel::generate(tiny(), 2, 64, 16, 5, Backend::Dense);
+        let lg = m.logits(&[1, 5, 9]);
+        assert_eq!(lg.len(), 64);
+        assert!(lg.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,207 @@
+//! The linear-layer quantization backend -- the interception point the
+//! paper adds to vLLM (§4.3 "Minimal-Invasive Design"). A layer is
+//! prepared offline under one of three backends and served through a
+//! uniform `forward`; K dimensions that do not tile into 2N blocks are
+//! zero-padded (the paper's "K Dimension Adjustment", Appendix D.3).
+
+use crate::sparsity::pattern::Pattern;
+use crate::stc::{DenseLinear, SlideLinear};
+
+/// Which GEMM backend a linear layer runs on (the vLLM config flag).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Per-token INT8 quant + dense GEMM (cuBLASLt role).
+    Dense,
+    /// SlideSparse: prune to (2N-2):2N, pack, 2:4-compressed GEMM.
+    Slide { n: usize },
+    /// Native 2:4 (the upper-bound baseline): prune 2:4, compress, GEMM.
+    Native24,
+}
+
+impl Backend {
+    pub fn pattern(&self) -> Pattern {
+        match self {
+            Backend::Dense => Pattern::dense(),
+            Backend::Slide { n } => Pattern::family(*n),
+            Backend::Native24 => Pattern::new(2, 4),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Backend::Dense => "dense".into(),
+            Backend::Slide { n } => format!("{}", Pattern::family(*n)),
+            Backend::Native24 => "2:4".into(),
+        }
+    }
+}
+
+/// Round k up to a multiple of the pattern block (2N).
+pub fn padded_k(k: usize, block: usize) -> usize {
+    k.div_ceil(block) * block
+}
+
+enum Inner {
+    Dense(DenseLinear),
+    Slide(SlideLinear),
+}
+
+/// A served linear layer: backend + padding bookkeeping.
+pub struct Linear {
+    pub o: usize,
+    pub k: usize,
+    k_pad: usize,
+    backend: Backend,
+    inner: Inner,
+}
+
+impl Linear {
+    /// Offline preparation: prune (per backend pattern), quantize, pack,
+    /// compress. `w` is dense row-major [o, k].
+    pub fn prepare(w: &[f32], o: usize, k: usize, backend: Backend) -> Linear {
+        assert_eq!(w.len(), o * k);
+        match backend {
+            Backend::Dense => Linear {
+                o,
+                k,
+                k_pad: k,
+                backend,
+                inner: Inner::Dense(DenseLinear::prepare(w, o, k)),
+            },
+            Backend::Slide { n } => {
+                let block = 2 * n;
+                let kp = padded_k(k, block);
+                let wp = pad_cols(w, o, k, kp);
+                Linear {
+                    o,
+                    k,
+                    k_pad: kp,
+                    backend,
+                    inner: Inner::Slide(SlideLinear::prepare(&wp, o, kp, n)),
+                }
+            }
+            Backend::Native24 => {
+                // native 2:4 is the N=2 family member: sliding degenerates
+                // to the identity (gamma = 1)
+                let kp = padded_k(k, 4);
+                let wp = pad_cols(w, o, k, kp);
+                Linear {
+                    o,
+                    k,
+                    k_pad: kp,
+                    backend,
+                    inner: Inner::Slide(SlideLinear::prepare(&wp, o, kp, 2)),
+                }
+            }
+        }
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Serve: y [m, o] from x [m, k].
+    pub fn forward(&self, x: &[f32], m: usize) -> Vec<f32> {
+        assert_eq!(x.len(), m * self.k);
+        match &self.inner {
+            Inner::Dense(l) => l.forward(x, m),
+            Inner::Slide(l) => {
+                if self.k_pad == self.k {
+                    l.forward(x, m)
+                } else {
+                    let xp = pad_cols(x, m, self.k, self.k_pad);
+                    l.forward(&xp, m)
+                }
+            }
+        }
+    }
+
+    /// Weight bytes actually stored (compressed for sparse backends).
+    pub fn weight_bytes(&self) -> usize {
+        match &self.inner {
+            Inner::Dense(l) => l.weight_bytes(),
+            Inner::Slide(l) => l.weight_bytes(),
+        }
+    }
+}
+
+fn pad_cols(x: &[f32], rows: usize, k: usize, kp: usize) -> Vec<f32> {
+    if k == kp {
+        return x.to_vec();
+    }
+    let mut out = vec![0.0f32; rows * kp];
+    for r in 0..rows {
+        out[r * kp..r * kp + k].copy_from_slice(&x[r * k..(r + 1) * k]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::prune::prune_magnitude;
+    use crate::util::{prng::XorShift, prop};
+
+    #[test]
+    fn padding_roundup() {
+        assert_eq!(padded_k(2048, 8), 2048);
+        assert_eq!(padded_k(2048, 6), 2052);
+        assert_eq!(padded_k(18944, 10), 18950);
+    }
+
+    #[test]
+    fn prop_slide_backend_equals_dense_on_pruned() {
+        prop::for_all("layer slide == dense", |rng: &mut XorShift, case| {
+            let n = 3 + case % 3;
+            let k = 2 * n * (2 + rng.below(3));
+            let o = 8 + rng.below(8);
+            let m = 1 + rng.below(3);
+            let w: Vec<f32> = (0..o * k).map(|_| rng.normal()).collect();
+            let pruned = prune_magnitude(&w, o, k, 2 * n - 2, 2 * n);
+            let slide = Linear::prepare(&pruned, o, k, Backend::Slide { n });
+            let dense = Linear::prepare(&pruned, o, k, Backend::Dense);
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            assert_eq!(slide.forward(&x, m), dense.forward(&x, m));
+        });
+    }
+
+    #[test]
+    fn unaligned_k_pads_and_works() {
+        let mut rng = XorShift::new(1);
+        let (o, k, n, m) = (8, 50, 4, 3); // 50 not a multiple of 8
+        let w: Vec<f32> = (0..o * k).map(|_| rng.normal() * 0.2).collect();
+        let l = Linear::prepare(&w, o, k, Backend::Slide { n });
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let y = l.forward(&x, m);
+        assert_eq!(y.len(), m * o);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn native24_is_identity_sliding() {
+        // N=2: gamma=1, the packed width equals k
+        let mut rng = XorShift::new(2);
+        let (o, k) = (4, 32);
+        let w: Vec<f32> = (0..o * k).map(|_| rng.normal()).collect();
+        let l = Linear::prepare(&w, o, k, Backend::Native24);
+        assert_eq!(l.backend().pattern(), Pattern::new(2, 4));
+        let x: Vec<f32> = (0..k).map(|_| rng.normal()).collect();
+        let y = l.forward(&x, 1);
+        // forward against f32 reference on the 2:4-pruned weights
+        let pruned = prune_magnitude(&w, o, k, 2, 4);
+        for c in 0..o {
+            let exact: f32 = (0..k).map(|t| x[t] * pruned[c * k + t]).sum();
+            assert!((y[c] - exact).abs() < 0.05 * (1.0 + exact.abs()));
+        }
+    }
+
+    #[test]
+    fn sparse_backends_store_fewer_value_bytes() {
+        let mut rng = XorShift::new(3);
+        let (o, k) = (64, 256);
+        let w: Vec<f32> = (0..o * k).map(|_| rng.normal()).collect();
+        let d = Linear::prepare(&w, o, k, Backend::Dense).weight_bytes();
+        let s24 = Linear::prepare(&w, o, k, Backend::Native24).weight_bytes();
+        assert!(s24 < d, "2:4 compressed {s24} !< dense {d}");
+    }
+}

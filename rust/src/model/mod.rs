@@ -1,0 +1,11 @@
+//! Model definitions: the paper's evaluation zoo shapes, the quantization
+//! backend interception point (`layer`), and a native transformer block
+//! used by STC-path benches and the accuracy experiment.
+
+pub mod block;
+pub mod layer;
+pub mod zoo;
+
+pub use block::{Block, BlockConfig, NativeModel};
+pub use layer::{padded_k, Backend, Linear};
+pub use zoo::{by_name, zoo, LinearShape, ZooModel};

@@ -1,0 +1,130 @@
+//! The paper's evaluation model zoo (§5.1): linear-layer shapes for
+//! Llama-3.2-1B/3B, Qwen-2.5-7B/14B and BitNet-2B. Model-mode kernel
+//! benchmarks (Appendix D.3.2) aggregate the four linear types
+//! (Wqkv, Wo, W13, W2) that execute together per transformer block.
+
+/// One linear layer's GEMM shape: y[M, o] = x[M, k] @ W[o, k]^T.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LinearShape {
+    pub name: &'static str,
+    pub o: usize,
+    pub k: usize,
+}
+
+/// A zoo model: architecture metadata + per-block linear shapes.
+#[derive(Clone, Debug)]
+pub struct ZooModel {
+    pub name: &'static str,
+    pub dim: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub ffn: usize,
+    pub params_b: f64,
+}
+
+impl ZooModel {
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.n_heads
+    }
+
+    /// The four linear GEMMs of one transformer block.
+    pub fn linears(&self) -> Vec<LinearShape> {
+        let hd = self.head_dim();
+        let qkv_o = self.dim + 2 * self.n_kv_heads * hd;
+        vec![
+            LinearShape { name: "Wqkv", o: qkv_o, k: self.dim },
+            LinearShape { name: "Wo", o: self.dim, k: self.dim },
+            LinearShape { name: "W13", o: 2 * self.ffn, k: self.dim },
+            LinearShape { name: "W2", o: self.dim, k: self.ffn },
+        ]
+    }
+
+    /// Total linear-layer MACs per token (all blocks).
+    pub fn macs_per_token(&self) -> u64 {
+        self.linears()
+            .iter()
+            .map(|l| (l.o * l.k) as u64)
+            .sum::<u64>()
+            * self.n_layers as u64
+    }
+
+    /// Total linear weight elements.
+    pub fn weight_elements(&self) -> u64 {
+        self.linears()
+            .iter()
+            .map(|l| (l.o * l.k) as u64)
+            .sum::<u64>()
+            * self.n_layers as u64
+    }
+}
+
+/// All five evaluation models (paper §5.1).
+pub fn zoo() -> Vec<ZooModel> {
+    vec![
+        ZooModel {
+            name: "Llama3.2-1B", dim: 2048, n_layers: 16, n_heads: 32,
+            n_kv_heads: 8, ffn: 8192, params_b: 1.2,
+        },
+        ZooModel {
+            name: "BitNet-2B", dim: 2560, n_layers: 30, n_heads: 20,
+            n_kv_heads: 5, ffn: 6912, params_b: 2.4,
+        },
+        ZooModel {
+            name: "Llama3.2-3B", dim: 3072, n_layers: 28, n_heads: 24,
+            n_kv_heads: 8, ffn: 8192, params_b: 3.2,
+        },
+        ZooModel {
+            name: "Qwen2.5-7B", dim: 3584, n_layers: 28, n_heads: 28,
+            n_kv_heads: 4, ffn: 18944, params_b: 7.6,
+        },
+        ZooModel {
+            name: "Qwen2.5-14B", dim: 5120, n_layers: 48, n_heads: 40,
+            n_kv_heads: 8, ffn: 13824, params_b: 14.8,
+        },
+    ]
+}
+
+pub fn by_name(name: &str) -> Option<ZooModel> {
+    zoo().into_iter().find(|m| m.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qwen7b_shapes() {
+        let m = by_name("Qwen2.5-7B").unwrap();
+        let l = m.linears();
+        assert_eq!(l[0], LinearShape { name: "Wqkv", o: 4608, k: 3584 });
+        assert_eq!(l[1], LinearShape { name: "Wo", o: 3584, k: 3584 });
+        assert_eq!(l[2], LinearShape { name: "W13", o: 37888, k: 3584 });
+        assert_eq!(l[3], LinearShape { name: "W2", o: 3584, k: 18944 });
+    }
+
+    #[test]
+    fn param_counts_in_right_ballpark() {
+        // linear weights dominate; they should land within ~40% of the
+        // nominal parameter count
+        for m in zoo() {
+            let linear_b = m.weight_elements() as f64 / 1e9;
+            assert!(
+                linear_b > 0.5 * m.params_b && linear_b < 1.3 * m.params_b,
+                "{}: linear {:.2}B vs nominal {:.2}B",
+                m.name,
+                linear_b,
+                m.params_b
+            );
+        }
+    }
+
+    #[test]
+    fn model_sizes_are_ordered() {
+        let z = zoo();
+        for w in z.windows(2) {
+            assert!(w[0].macs_per_token() < w[1].macs_per_token(),
+                "{} !< {}", w[0].name, w[1].name);
+        }
+    }
+}

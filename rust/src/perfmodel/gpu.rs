@@ -1,0 +1,363 @@
+//! Analytical GPU cost model for Sparse-Tensor-Core GEMMs.
+//!
+//! Roofline-style: latency = max(compute, memory) + fixed overheads,
+//! with per-(GPU, precision) calibration factors chosen so the model
+//! reproduces the paper's Appendix D tables *qualitatively*: the
+//! M~1024 crossover, S_eff = N/(N-1) asymptotes on mature baselines
+//! (A100 INT8), the B200-INT8 dense-baseline anomaly (2:4 at ~6x), and
+//! modest memory-bound decode gains.
+//!
+//! This model substitutes for the six-GPU testbed (DESIGN.md §2): the
+//! shape of every reported ratio comes out of the same mechanics the
+//! hardware exhibits (compute reduction gamma/2, weight-byte reduction,
+//! sparse-format fixed overhead).
+
+use crate::quant::Precision;
+use crate::sparsity::pattern::Pattern;
+
+/// GEMM execution mode on the modeled hardware.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Mode {
+    /// cuBLASLt dense
+    Dense,
+    /// cuSPARSELt on a (slid) 2:4 operand; `gamma` is the K expansion
+    /// (1.0 for native 2:4) and `density` the weight-value density used
+    /// for memory traffic (0.5 for native 2:4).
+    Sparse { gamma: f64, density: f64 },
+}
+
+impl Mode {
+    /// Mode for serving a Z:L pattern via SlideSparse on 2:4 cores.
+    pub fn for_pattern(p: Pattern) -> Mode {
+        if p.is_dense() {
+            // the paper's inf:inf control: dense weights in slid layout
+            Mode::Sparse { gamma: 2.0, density: 1.0 }
+        } else if p == Pattern::new(2, 4) {
+            Mode::Sparse { gamma: 1.0, density: 0.5 }
+        } else {
+            Mode::Sparse { gamma: p.gamma(), density: p.density() }
+        }
+    }
+}
+
+/// One modeled GPU.
+#[derive(Clone, Copy, Debug)]
+pub struct Gpu {
+    pub name: &'static str,
+    /// memory bandwidth, GB/s
+    pub mem_gbps: f64,
+    /// dense tensor-core peak at INT8, TOPS (FP8 same, BF16/FP16 half,
+    /// FP4 double, modulated by `Precision::bytes`)
+    pub int8_tops: f64,
+    /// kernel launch + epilogue floor, us
+    pub launch_us: f64,
+    /// extra fixed cost of the sparse path (metadata setup), us
+    pub sparse_fixed_us: f64,
+    /// fraction of peak the DENSE library achieves per precision
+    /// (cuBLASLt maturity; the B200-INT8 anomaly lives here)
+    pub dense_eff: fn(Precision) -> f64,
+    /// fraction of peak-per-density the SPARSE library achieves
+    pub sparse_eff: fn(Precision) -> f64,
+    /// M at which utilization reaches half of its asymptote
+    pub m_half: f64,
+}
+
+fn a100_dense(p: Precision) -> f64 {
+    match p {
+        Precision::Int8 => 0.52,
+        Precision::Fp8E4M3 => 0.52, // A100 has no FP8; unused
+        _ => 0.55,
+    }
+}
+
+fn a100_sparse(p: Precision) -> f64 {
+    match p {
+        Precision::Int8 => 0.57, // 2:4 slightly out-tunes dense => 2.18x
+        _ => 0.50,
+    }
+}
+
+fn h100_dense(p: Precision) -> f64 {
+    match p {
+        Precision::Int8 => 0.62,
+        Precision::Fp8E4M3 => 0.60,
+        _ => 0.62,
+    }
+}
+
+fn h100_sparse(p: Precision) -> f64 {
+    match p {
+        Precision::Int8 => 0.56, // better dense baseline => 1.79x
+        Precision::Fp8E4M3 => 0.52,
+        _ => 0.47,
+    }
+}
+
+fn b200_dense(p: Precision) -> f64 {
+    match p {
+        // cuBLASLt INT8 not yet optimized on Blackwell (paper D.3.3):
+        // dense runs at ~16% of peak, inflating every sparse ratio
+        Precision::Int8 => 0.16,
+        Precision::Fp8E4M3 => 0.55,
+        _ => 0.55,
+    }
+}
+
+fn b200_sparse(p: Precision) -> f64 {
+    match p {
+        Precision::Int8 => 0.50, // 2:4 => ~6.3x over the weak baseline
+        Precision::Fp8E4M3 => 0.51,
+        _ => 0.45,
+    }
+}
+
+fn rtx4090_dense(p: Precision) -> f64 {
+    match p {
+        Precision::Int8 => 0.55,
+        Precision::Fp8E4M3 => 0.50,
+        _ => 0.52,
+    }
+}
+
+fn rtx4090_sparse(p: Precision) -> f64 {
+    match p {
+        Precision::Int8 => 0.44,
+        Precision::Fp8E4M3 => 0.52,
+        _ => 0.51,
+    }
+}
+
+fn rtx5080_dense(p: Precision) -> f64 {
+    match p {
+        Precision::Int8 => 0.52,
+        _ => 0.50,
+    }
+}
+
+fn rtx5080_sparse(p: Precision) -> f64 {
+    match p {
+        Precision::Int8 => 0.41,
+        _ => 0.44,
+    }
+}
+
+fn gb10_dense(p: Precision) -> f64 {
+    match p {
+        Precision::Int8 => 0.45,
+        _ => 0.42,
+    }
+}
+
+fn gb10_sparse(p: Precision) -> f64 {
+    match p {
+        Precision::Int8 => 0.32,
+        _ => 0.27,
+    }
+}
+
+/// The six evaluation GPUs (paper §5.1).
+pub fn gpus() -> Vec<Gpu> {
+    vec![
+        Gpu {
+            name: "A100", mem_gbps: 2039.0, int8_tops: 624.0,
+            launch_us: 4.5, sparse_fixed_us: 2.5,
+            dense_eff: a100_dense, sparse_eff: a100_sparse, m_half: 64.0,
+        },
+        Gpu {
+            name: "H100", mem_gbps: 3350.0, int8_tops: 1979.0,
+            launch_us: 4.3, sparse_fixed_us: 2.8,
+            dense_eff: h100_dense, sparse_eff: h100_sparse, m_half: 128.0,
+        },
+        Gpu {
+            name: "B200", mem_gbps: 8000.0, int8_tops: 4500.0,
+            launch_us: 4.8, sparse_fixed_us: 2.0,
+            dense_eff: b200_dense, sparse_eff: b200_sparse, m_half: 128.0,
+        },
+        Gpu {
+            name: "RTX4090", mem_gbps: 1008.0, int8_tops: 660.0,
+            launch_us: 9.0, sparse_fixed_us: 3.0,
+            dense_eff: rtx4090_dense, sparse_eff: rtx4090_sparse, m_half: 96.0,
+        },
+        Gpu {
+            name: "RTX5080", mem_gbps: 960.0, int8_tops: 900.0,
+            launch_us: 4.0, sparse_fixed_us: 2.2,
+            dense_eff: rtx5080_dense, sparse_eff: rtx5080_sparse, m_half: 64.0,
+        },
+        Gpu {
+            name: "GB10", mem_gbps: 273.0, int8_tops: 250.0,
+            launch_us: 5.0, sparse_fixed_us: 3.5,
+            dense_eff: gb10_dense, sparse_eff: gb10_sparse, m_half: 64.0,
+        },
+    ]
+}
+
+pub fn gpu(name: &str) -> Option<Gpu> {
+    gpus().into_iter().find(|g| g.name == name)
+}
+
+impl Gpu {
+    /// Dense peak OPS for a precision (byte-width scaling).
+    fn peak_ops(&self, p: Precision) -> f64 {
+        self.int8_tops * 1e12 / p.bytes()
+    }
+
+    /// Utilization ramp with M (tile-quantization / occupancy effects).
+    fn util(&self, m: usize) -> f64 {
+        let m = m as f64;
+        m / (m + self.m_half)
+    }
+
+    /// Modeled GEMM latency in seconds: y[M,N] = x[M,K] w[N,K]^T.
+    pub fn gemm_latency(&self, m: usize, n: usize, k: usize, p: Precision, mode: Mode) -> f64 {
+        let ops = 2.0 * m as f64 * n as f64 * k as f64;
+        let bpe = p.bytes();
+        let act_bytes = (m * k) as f64 * bpe + (m * n) as f64 * 4.0;
+        match mode {
+            Mode::Dense => {
+                let eff = (self.dense_eff)(p) * self.util(m);
+                let t_c = ops / (self.peak_ops(p) * eff.max(1e-3));
+                let w_bytes = (n * k) as f64 * bpe;
+                let t_m = (act_bytes + w_bytes) / (self.mem_gbps * 1e9);
+                t_c.max(t_m) + self.launch_us * 1e-6
+            }
+            Mode::Sparse { gamma, density } => {
+                // compute: gamma*K wide operand on 2x-rate sparse cores
+                let eff = (self.sparse_eff)(p) * self.util(m);
+                let t_c = ops * gamma / (2.0 * self.peak_ops(p) * eff.max(1e-3));
+                // memory: values = density*K*N (non-zeros only) + 2-bit
+                // metadata per kept value; lifted activations gamma*M*K
+                let w_bytes = (n * k) as f64 * bpe * density * 1.125;
+                let a_bytes = (m * k) as f64 * bpe * gamma + (m * n) as f64 * 4.0;
+                let t_m = (w_bytes + a_bytes) / (self.mem_gbps * 1e9);
+                t_c.max(t_m) + (self.launch_us + self.sparse_fixed_us) * 1e-6
+            }
+        }
+    }
+
+    /// Speedup of `pattern` served via SlideSparse over the dense
+    /// baseline for a square or rectangular GEMM.
+    pub fn speedup(&self, m: usize, n: usize, k: usize, p: Precision, pattern: Pattern) -> f64 {
+        let dense = self.gemm_latency(m, n, k, p, Mode::Dense);
+        let sparse = self.gemm_latency(m, n, k, p, Mode::for_pattern(pattern));
+        dense / sparse
+    }
+
+    /// Fused quant(+slide) kernel latency (paper D.2): memory-bound pass
+    /// over activations; the slide variant writes gamma*K per row.
+    /// Byte-granular int8 stores run far below streaming bandwidth
+    /// (write-allocate + sub-word store throughput); the amplification
+    /// factor is calibrated so overhead lands in the paper's measured
+    /// +25..53% band (Table 1).
+    pub fn fused_kernel_latency(&self, m: usize, k: usize, gamma: f64) -> f64 {
+        const WRITE_AMP: f64 = 8.0;
+        let read = (m * k) as f64 * 4.0; // f32 in
+        let write = (m * k) as f64 * gamma * WRITE_AMP; // int8 out
+        (read + write) / (self.mem_gbps * 1e9) + self.launch_us * 1e-6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p68() -> Pattern {
+        Pattern::family(4)
+    }
+
+    #[test]
+    fn a100_int8_large_m_matches_paper() {
+        // paper D.3.1: A100 INT8 M=16384: 2:4 -> 2.18x, 6:8 -> 1.46x,
+        // 4:6 -> 1.37x, 8:10 -> 1.36x (we require the right ballpark)
+        let g = gpu("A100").unwrap();
+        let m = 16384;
+        let s24 = g.speedup(m, m, m, Precision::Int8, Pattern::new(2, 4));
+        assert!((1.95..2.4).contains(&s24), "2:4 {s24}");
+        let s68 = g.speedup(m, m, m, Precision::Int8, p68());
+        assert!((1.3..1.6).contains(&s68), "6:8 {s68}");
+        let s46 = g.speedup(m, m, m, Precision::Int8, Pattern::family(3));
+        assert!(s24 > s46 && s46 > s68, "ordering");
+    }
+
+    #[test]
+    fn small_m_is_overhead_dominated() {
+        // paper: below M~256 sparse speedup is ~1.0 or below
+        let g = gpu("A100").unwrap();
+        let s = g.speedup(64, 64, 64, Precision::Int8, Pattern::new(2, 4));
+        assert!(s < 1.15, "small-M speedup {s}");
+    }
+
+    #[test]
+    fn crossover_near_1024() {
+        let g = gpu("A100").unwrap();
+        let below = g.speedup(256, 256, 256, Precision::Int8, p68());
+        let above = g.speedup(4096, 4096, 4096, Precision::Int8, p68());
+        assert!(below < 1.1, "below crossover {below}");
+        assert!(above > 1.25, "above crossover {above}");
+    }
+
+    #[test]
+    fn b200_int8_anomaly() {
+        // paper D.3.3: B200 INT8 2:4 ~6.3x due to weak dense baseline;
+        // even inf:inf (gamma=2 dense) beats the baseline
+        let g = gpu("B200").unwrap();
+        let m = 8192;
+        let s24 = g.speedup(m, m, m, Precision::Int8, Pattern::new(2, 4));
+        assert!((4.5..8.0).contains(&s24), "B200 2:4 {s24}");
+        let sinf = g.speedup(m, m, m, Precision::Int8, Pattern::dense());
+        assert!(sinf > 2.0, "inf:inf {sinf} should exceed 1 on B200 INT8");
+        // and FP8 is normal
+        let s24f = g.speedup(m, m, m, Precision::Fp8E4M3, Pattern::new(2, 4));
+        assert!((1.4..2.2).contains(&s24f), "B200 FP8 2:4 {s24f}");
+    }
+
+    #[test]
+    fn decode_like_memory_bound_gains_are_modest() {
+        // M=64 with large N,K is memory-bound: 6:8 gains only a few %
+        let g = gpu("A100").unwrap();
+        let s = g.speedup(64, 4096, 4096, Precision::Int8, p68());
+        assert!((0.9..1.25).contains(&s), "decode-ish 6:8 {s}");
+    }
+
+    #[test]
+    fn fused_kernel_overhead_matches_paper_range() {
+        // paper Table 1: quant+slide vs quant-only overhead +25..53%
+        let g = gpu("A100").unwrap();
+        for m in [4096usize, 8192, 16384] {
+            let q = g.fused_kernel_latency(m, 4096, 1.0);
+            let qs = g.fused_kernel_latency(m, 4096, 1.5);
+            let overhead = qs / q - 1.0;
+            assert!(
+                (0.05..0.55).contains(&overhead),
+                "m={m} overhead {overhead}"
+            );
+        }
+    }
+
+    #[test]
+    fn family_ratios_approach_seff_on_mature_baselines() {
+        // efficiency = measured ratio / (alpha/gamma-ish expectation)
+        // should be within ~25% of N/(N-1) at large M on A100
+        let g = gpu("A100").unwrap();
+        for n in [3usize, 4, 5] {
+            let p = Pattern::family(n);
+            let s = g.speedup(16384, 16384, 16384, Precision::Int8, p);
+            let bound = n as f64 / (n - 1) as f64;
+            assert!(
+                (s / bound - 1.0).abs() < 0.30,
+                "N={n}: {s} vs bound {bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn all_gpus_have_finite_latencies() {
+        for g in gpus() {
+            for p in Precision::all() {
+                for mode in [Mode::Dense, Mode::for_pattern(Pattern::family(4))] {
+                    let t = g.gemm_latency(512, 512, 512, p, mode);
+                    assert!(t.is_finite() && t > 0.0, "{} {:?}", g.name, p);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Calibrated analytical GPU cost model: regenerates the paper's
+//! per-GPU/precision speedup tables (kernel-level, Appendix D.3) and the
+//! end-to-end prefill/decode ratios (Appendix D.4) on the modeled six-GPU
+//! testbed. See DESIGN.md §2 for why this substitutes for real hardware.
+
+pub mod e2e;
+pub mod gpu;
+
+pub use e2e::{e2e_speedup, linear_step_latency, E2eParams};
+pub use gpu::{gpu, gpus, Gpu, Mode};

@@ -1,0 +1,96 @@
+//! Simulated FP8 E4M3 quantization (no native fp8 on CPU): values are
+//! rounded to the nearest representable E4M3 number and carried in f32.
+//! E4M3: 1 sign, 4 exponent (bias 7), 3 mantissa; max finite 448, no inf,
+//! single NaN encoding (S.1111.111).
+
+/// Largest finite E4M3 magnitude.
+pub const FP8_MAX: f32 = 448.0;
+
+/// Round an f32 to the nearest representable E4M3 value (saturating).
+pub fn to_fp8_e4m3(x: f32) -> f32 {
+    if x == 0.0 || x.is_nan() {
+        return if x.is_nan() { f32::NAN } else { 0.0 };
+    }
+    let sign = x.signum();
+    let mag = x.abs().min(FP8_MAX);
+    // subnormal range: below 2^-6, step 2^-9
+    let min_normal = 2f32.powi(-6);
+    if mag < min_normal {
+        let step = 2f32.powi(-9);
+        let q = (mag / step).round_ties_even() * step;
+        return sign * q;
+    }
+    let e = mag.log2().floor() as i32;
+    let e = e.clamp(-6, 8);
+    let step = 2f32.powi(e - 3); // 3 mantissa bits
+    let q = (mag / step).round_ties_even() * step;
+    sign * q.min(FP8_MAX)
+}
+
+/// Per-row absmax scaling into the E4M3 dynamic range, then rounding.
+/// Returns (values-as-f32, scale) with x ~= values * scale.
+pub fn quantize_row_fp8(x: &[f32], out: &mut [f32]) -> f32 {
+    let mut a = 0f32;
+    for v in x {
+        a = a.max(v.abs());
+    }
+    a = a.max(1e-12);
+    let scale = a / FP8_MAX;
+    for (o, v) in out.iter_mut().zip(x.iter()) {
+        *o = to_fp8_e4m3(v / scale);
+    }
+    scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prng::XorShift, prop};
+
+    #[test]
+    fn representable_values_are_fixed_points() {
+        for v in [1.0f32, 1.125, 2.0, 448.0, -0.875, 0.015625] {
+            assert_eq!(to_fp8_e4m3(v), v, "{v} should be representable");
+        }
+    }
+
+    #[test]
+    fn saturates_at_max() {
+        assert_eq!(to_fp8_e4m3(1e9), FP8_MAX);
+        assert_eq!(to_fp8_e4m3(-1e9), -FP8_MAX);
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        // E4M3 has 3 mantissa bits: relative error <= 2^-4 for normals
+        prop::for_all("fp8 relative error", |rng: &mut XorShift, _| {
+            let v = rng.range_f32(-400.0, 400.0);
+            if v.abs() < 0.02 {
+                return;
+            }
+            let q = to_fp8_e4m3(v);
+            assert!(
+                (q - v).abs() / v.abs() <= 1.0 / 16.0 + 1e-6,
+                "{v} -> {q}"
+            );
+        });
+    }
+
+    #[test]
+    fn quantize_row_roundtrip() {
+        let mut rng = XorShift::new(8);
+        let x: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+        let mut q = vec![0f32; 64];
+        let s = quantize_row_fp8(&x, &mut q);
+        for (xi, qi) in x.iter().zip(q.iter()) {
+            assert!((xi - qi * s).abs() < 0.08 * (xi.abs() + 0.1));
+        }
+    }
+
+    #[test]
+    fn subnormals_quantize_to_grid() {
+        let v = 0.001953125f32; // 2^-9, the smallest subnormal
+        assert_eq!(to_fp8_e4m3(v), v);
+        assert_eq!(to_fp8_e4m3(v * 0.4), 0.0); // rounds to zero
+    }
+}

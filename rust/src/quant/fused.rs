@@ -1,0 +1,142 @@
+//! The fused quantization-slide kernel (paper Algorithm 1) -- native Rust
+//! hot-path implementation used by the serving engine.
+//!
+//! Naive two-step (quantize, then slide) costs four memory operations per
+//! row: read X, write X', read X', write Y. The fused kernel does two:
+//! read X, write Y -- the only extra cost over plain quantization is the
+//! gamma*K-wide store (paper §4.2).
+//!
+//! Output-oriented design: a single loop over global window index j with
+//! g = j/(N-1), l = j%(N-1), b = 2N*g + 2*l (Alg. 1 lines 10-11), reading
+//! 4 source elements per window and writing one packed 4-byte word
+//! (`u32`), the "vectorized byte packing" of Alg. 1 line 17.
+
+use crate::sparsity::LiftPlan;
+
+use super::int8::QMAX;
+
+/// Precomputed fused quantize+slide kernel for fixed (K, N).
+#[derive(Clone, Debug)]
+pub struct FusedQuantSlide {
+    plan: LiftPlan,
+}
+
+impl FusedQuantSlide {
+    pub fn new(k: usize, n: usize) -> Self {
+        Self { plan: LiftPlan::new(k, n) }
+    }
+
+    pub fn k(&self) -> usize {
+        self.plan.k
+    }
+
+    pub fn k_packed(&self) -> usize {
+        self.plan.k_packed
+    }
+
+    /// Fused pass over one row: returns the scale, fills `out`
+    /// (len = gamma*K) with lifted int8 values.
+    ///
+    /// Pass 1 computes the dynamic range; pass 2 runs the whole
+    /// read->quantize->slide->pack->write pipeline per window with a
+    /// single 32-bit store.
+    pub fn run_row(&self, x: &[f32], out: &mut [i8]) -> f32 {
+        debug_assert_eq!(x.len(), self.plan.k);
+        debug_assert_eq!(out.len(), self.plan.k_packed);
+        // Pass 1: absmax
+        let mut a = 0f32;
+        for v in x {
+            a = a.max(v.abs());
+        }
+        a = a.max(1e-12);
+        let r = QMAX / a;
+        // Pass 2: output-oriented fused loop, one u32 store per window
+        let idx = self.plan.indices();
+        // SAFETY-free path: view out as u32 words via chunks
+        for (w, chunk) in out.chunks_exact_mut(4).enumerate() {
+            let b = idx[w * 4] as usize;
+            let q0 = (x[b] * r).round_ties_even().clamp(-QMAX, QMAX) as i8;
+            let q1 = (x[b + 1] * r).round_ties_even().clamp(-QMAX, QMAX) as i8;
+            let q2 = (x[b + 2] * r).round_ties_even().clamp(-QMAX, QMAX) as i8;
+            let q3 = (x[b + 3] * r).round_ties_even().clamp(-QMAX, QMAX) as i8;
+            // p = q0 | q1<<8 | q2<<16 | q3<<24 (Alg.1 line 17): the
+            // 4-lane write below compiles to a single word store.
+            chunk[0] = q0;
+            chunk[1] = q1;
+            chunk[2] = q2;
+            chunk[3] = q3;
+        }
+        a / QMAX
+    }
+
+    /// Fused pass over a [m, k] matrix into [m, gamma*k] + scales.
+    pub fn run(&self, x: &[f32], m: usize) -> (Vec<i8>, Vec<f32>) {
+        assert_eq!(x.len(), m * self.plan.k);
+        let kp = self.plan.k_packed;
+        let mut out = vec![0i8; m * kp];
+        let mut scales = vec![0f32; m];
+        for row in 0..m {
+            scales[row] = self.run_row(
+                &x[row * self.plan.k..(row + 1) * self.plan.k],
+                &mut out[row * kp..(row + 1) * kp],
+            );
+        }
+        (out, scales)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::int8::quantize_per_token;
+    use crate::util::{prng::XorShift, prop};
+
+    #[test]
+    fn fused_equals_quantize_then_lift() {
+        // the fusion identity: lift(quantize(x)) == fused(x)
+        prop::for_all("fused == quant∘lift", |rng: &mut XorShift, case| {
+            let n = 3 + case % 5;
+            let k = 2 * n * (1 + rng.below(4));
+            let m = 1 + rng.below(6);
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal() * 3.0).collect();
+            let kern = FusedQuantSlide::new(k, n);
+            let (fused, fs) = kern.run(&x, m);
+            let (q, s) = quantize_per_token(&x, m, k);
+            let plan = LiftPlan::new(k, n);
+            for row in 0..m {
+                let lifted = plan.lift_row(&q[row * k..(row + 1) * k]);
+                assert_eq!(
+                    &fused[row * kern.k_packed()..(row + 1) * kern.k_packed()],
+                    &lifted[..]
+                );
+                assert_eq!(fs[row], s[row]);
+            }
+        });
+    }
+
+    #[test]
+    fn expansion_factor_is_gamma() {
+        for n in 3..8 {
+            let k = 2 * n * 4;
+            let kern = FusedQuantSlide::new(k, n);
+            let gamma = 2.0 - 2.0 / n as f64;
+            assert_eq!(kern.k_packed(), (k as f64 * gamma).round() as usize);
+        }
+    }
+
+    #[test]
+    fn zero_and_extreme_rows() {
+        let kern = FusedQuantSlide::new(16, 4);
+        let mut out = vec![0i8; kern.k_packed()];
+        let s = kern.run_row(&[0.0; 16], &mut out);
+        assert!(s.is_finite());
+        assert!(out.iter().all(|v| *v == 0));
+
+        let mut big = [0.0f32; 16];
+        big[3] = 1e30;
+        big[7] = -1e30;
+        let s = kern.run_row(&big, &mut out);
+        assert!(s.is_finite());
+        assert!(out.iter().all(|v| (-127..=127).contains(&(*v as i32))));
+    }
+}

@@ -1,0 +1,142 @@
+//! Per-token (row) dynamic INT8 quantization, matching the numpy oracle
+//! (`ref.quantize_per_token`) bit-for-bit: absmax scale, round-half-even,
+//! clamp to +/-127.
+
+pub const QMAX: f32 = 127.0;
+
+/// Quantize one row; returns the scale (a/QMAX).
+pub fn quantize_row_into(x: &[f32], out: &mut [i8]) -> f32 {
+    debug_assert_eq!(x.len(), out.len());
+    let mut a = 0f32;
+    for v in x {
+        a = a.max(v.abs());
+    }
+    a = a.max(1e-12);
+    let r = QMAX / a;
+    for (o, v) in out.iter_mut().zip(x.iter()) {
+        *o = (v * r).round_ties_even().clamp(-QMAX, QMAX) as i8;
+    }
+    a / QMAX
+}
+
+/// Per-token quantization of a [m, k] matrix. Returns (q, scales).
+pub fn quantize_per_token(x: &[f32], m: usize, k: usize) -> (Vec<i8>, Vec<f32>) {
+    assert_eq!(x.len(), m * k);
+    let mut q = vec![0i8; m * k];
+    let mut s = vec![0f32; m];
+    for r in 0..m {
+        s[r] = quantize_row_into(&x[r * k..(r + 1) * k], &mut q[r * k..(r + 1) * k]);
+    }
+    (q, s)
+}
+
+/// Per-output-channel symmetric weight quantization (offline).
+pub fn quantize_weight_per_channel(w: &[f32], o: usize, k: usize) -> (Vec<i8>, Vec<f32>) {
+    assert_eq!(w.len(), o * k);
+    let mut q = vec![0i8; o * k];
+    let mut s = vec![0f32; o];
+    for r in 0..o {
+        s[r] = quantize_row_into(&w[r * k..(r + 1) * k], &mut q[r * k..(r + 1) * k]);
+    }
+    (q, s)
+}
+
+/// Dequantize an int32 accumulator tile: y = acc * xs[m] * ws[o].
+pub fn dequantize(acc: &[i32], m: usize, o: usize, xs: &[f32], ws: &[f32]) -> Vec<f32> {
+    assert_eq!(acc.len(), m * o);
+    let mut y = vec![0f32; m * o];
+    for r in 0..m {
+        let sx = xs[r];
+        for c in 0..o {
+            y[r * o + c] = acc[r * o + c] as f32 * sx * ws[c];
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prng::XorShift, prop};
+
+    #[test]
+    fn quantize_error_bounded_by_half_scale() {
+        prop::for_all("int8 quant error bound", |rng: &mut XorShift, _| {
+            let k = 8 + rng.below(120);
+            let x: Vec<f32> = (0..k).map(|_| rng.normal() * 10.0).collect();
+            let mut q = vec![0i8; k];
+            let s = quantize_row_into(&x, &mut q);
+            for (xi, qi) in x.iter().zip(q.iter()) {
+                let err = (xi - *qi as f32 * s).abs();
+                assert!(err <= s / 2.0 + 1e-6, "err {err} scale {s}");
+            }
+        });
+    }
+
+    #[test]
+    fn zero_row_is_safe() {
+        let x = [0.0f32; 16];
+        let mut q = [0i8; 16];
+        let s = quantize_row_into(&x, &mut q);
+        assert!(s.is_finite() && s > 0.0);
+        assert!(q.iter().all(|v| *v == 0));
+    }
+
+    #[test]
+    fn absmax_element_hits_qmax() {
+        let x = [1.0f32, -4.0, 2.0, 0.5];
+        let mut q = [0i8; 4];
+        let s = quantize_row_into(&x, &mut q);
+        assert_eq!(q[1], -127);
+        assert!((s - 4.0 / 127.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn round_half_even_matches_numpy_rint() {
+        // numpy rint(0.5) = 0, rint(1.5) = 2, rint(2.5) = 2
+        // craft scale=1 by absmax=127
+        let x = [127.0f32, 0.5, 1.5, 2.5];
+        let mut q = [0i8; 4];
+        quantize_row_into(&x, &mut q);
+        assert_eq!(q, [127, 0, 2, 2]);
+    }
+
+    #[test]
+    fn per_token_scales_independent() {
+        let x = [1.0f32, 0.0, 0.0, 100.0];
+        let (_, s) = quantize_per_token(&x, 2, 2);
+        assert!((s[0] - 1.0 / 127.0).abs() < 1e-9);
+        assert!((s[1] - 100.0 / 127.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dequantize_roundtrip() {
+        let mut rng = XorShift::new(4);
+        let (m, k, o) = (3, 32, 5);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..o * k).map(|_| rng.normal()).collect();
+        let (xq, xs) = quantize_per_token(&x, m, k);
+        let (wq, ws) = quantize_weight_per_channel(&w, o, k);
+        let mut acc = vec![0i32; m * o];
+        for r in 0..m {
+            for c in 0..o {
+                let mut sum = 0i32;
+                for t in 0..k {
+                    sum += xq[r * k + t] as i32 * wq[c * k + t] as i32;
+                }
+                acc[r * o + c] = sum;
+            }
+        }
+        let y = dequantize(&acc, m, o, &xs, &ws);
+        for r in 0..m {
+            for c in 0..o {
+                let exact: f32 = (0..k).map(|t| x[r * k + t] * w[c * k + t]).sum();
+                let got = y[r * o + c];
+                assert!(
+                    (exact - got).abs() < 0.05 * (1.0 + exact.abs()),
+                    "r{r} c{c}: {exact} vs {got}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,49 @@
+//! Per-token dynamic quantization (INT8 and simulated FP8 E4M3), plus the
+//! fused quantization-slide hot-path kernel (paper Algorithm 1).
+
+pub mod fp8;
+pub mod fused;
+pub mod int8;
+
+pub use fused::FusedQuantSlide;
+pub use int8::{dequantize, quantize_per_token, quantize_weight_per_channel};
+
+/// Quantization precision of the serving path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Precision {
+    Int8,
+    Fp8E4M3,
+    Bf16,
+    Fp16,
+    Fp4E2M1,
+}
+
+impl Precision {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::Int8 => "INT8",
+            Precision::Fp8E4M3 => "FP8",
+            Precision::Bf16 => "BF16",
+            Precision::Fp16 => "FP16",
+            Precision::Fp4E2M1 => "FP4",
+        }
+    }
+
+    pub fn bytes(&self) -> f64 {
+        match self {
+            Precision::Int8 | Precision::Fp8E4M3 => 1.0,
+            Precision::Bf16 | Precision::Fp16 => 2.0,
+            Precision::Fp4E2M1 => 0.5,
+        }
+    }
+
+    pub fn all() -> [Precision; 5] {
+        [
+            Precision::Fp4E2M1,
+            Precision::Int8,
+            Precision::Fp8E4M3,
+            Precision::Bf16,
+            Precision::Fp16,
+        ]
+    }
+}

@@ -1,0 +1,317 @@
+//! Artifact manifest: the build-time contract between `python/compile`
+//! (which lowers JAX/Pallas to HLO text + writes weights) and the rust
+//! runtime (which compiles and executes them).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Tensor dtype in the feed schema.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => Err(anyhow!("unsupported dtype {other}")),
+        }
+    }
+}
+
+/// Shape+dtype of one input/output.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            shape: j.req("shape").usize_arr(),
+            dtype: DType::parse(j.req("dtype").as_str().unwrap_or("f32"))?,
+        })
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub variant: String,
+    pub b: Option<usize>,
+    pub s: Option<usize>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One serialized weight tensor inside a weights_<variant>.bin.
+#[derive(Clone, Debug)]
+pub struct WeightSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// Weight file + tensor directory for one model variant.
+#[derive(Clone, Debug)]
+pub struct WeightsFile {
+    pub file: String,
+    pub tensors: Vec<WeightSpec>,
+}
+
+/// Golden test vectors emitted by aot.py.
+#[derive(Clone, Debug)]
+pub struct Golden {
+    pub tokens: Vec<i32>,
+    pub b: usize,
+    pub s: usize,
+    pub last_logits_head: Vec<f32>,
+    pub last_logits_sum: f64,
+    pub last_argmax: usize,
+}
+
+/// Serving-model architecture as recorded in the manifest.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelMeta {
+    pub dim: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub ffn_dim: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub slide_n: usize,
+}
+
+impl ModelMeta {
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.n_heads
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelMeta,
+    pub prefill_buckets: Vec<(usize, usize)>,
+    pub decode_buckets: Vec<usize>,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub weights: BTreeMap<String, WeightsFile>,
+    pub golden: Golden,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+
+        let mj = j.req("model");
+        let model = ModelMeta {
+            dim: mj.req("dim").as_usize().unwrap(),
+            n_layers: mj.req("n_layers").as_usize().unwrap(),
+            n_heads: mj.req("n_heads").as_usize().unwrap(),
+            ffn_dim: mj.req("ffn_dim").as_usize().unwrap(),
+            vocab: mj.req("vocab").as_usize().unwrap(),
+            max_seq: mj.req("max_seq").as_usize().unwrap(),
+            slide_n: mj.req("slide_n").as_usize().unwrap(),
+        };
+
+        let prefill_buckets = j
+            .req("prefill_buckets")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|b| {
+                let v = b.usize_arr();
+                (v[0], v[1])
+            })
+            .collect();
+        let decode_buckets = j.req("decode_buckets").usize_arr();
+
+        let mut artifacts = Vec::new();
+        for a in j.req("artifacts").as_arr().unwrap() {
+            artifacts.push(ArtifactSpec {
+                name: a.req("name").as_str().unwrap().to_string(),
+                file: a.req("file").as_str().unwrap().to_string(),
+                kind: a.req("kind").as_str().unwrap().to_string(),
+                variant: a.req("variant").as_str().unwrap().to_string(),
+                b: a.get("b").and_then(|v| v.as_usize()),
+                s: a.get("s").and_then(|v| v.as_usize()),
+                inputs: a
+                    .req("inputs")
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_>>()?,
+                outputs: a
+                    .req("outputs")
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_>>()?,
+            });
+        }
+
+        let mut weights = BTreeMap::new();
+        if let Json::Obj(wm) = j.req("weights") {
+            for (variant, wf) in wm {
+                let tensors = wf
+                    .req("tensors")
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|t| WeightSpec {
+                        name: t.req("name").as_str().unwrap().to_string(),
+                        shape: t.req("shape").usize_arr(),
+                        offset: t.req("offset").as_usize().unwrap(),
+                        nbytes: t.req("nbytes").as_usize().unwrap(),
+                    })
+                    .collect();
+                weights.insert(
+                    variant.clone(),
+                    WeightsFile {
+                        file: wf.req("file").as_str().unwrap().to_string(),
+                        tensors,
+                    },
+                );
+            }
+        }
+
+        let g = j.req("golden");
+        let golden = Golden {
+            tokens: g
+                .req("tokens")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_i64().unwrap() as i32)
+                .collect(),
+            b: g.req("b").as_usize().unwrap(),
+            s: g.req("s").as_usize().unwrap(),
+            last_logits_head: g
+                .req("last_logits_head")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_f64().unwrap() as f32)
+                .collect(),
+            last_logits_sum: g.req("last_logits_sum").as_f64().unwrap(),
+            last_argmax: g.req("last_argmax").as_usize().unwrap(),
+        };
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            prefill_buckets,
+            decode_buckets,
+            artifacts,
+            weights,
+            golden,
+        })
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// Load one variant's weight tensors (f32, flat per-tensor vectors in
+    /// manifest order — the exact positional feed for model artifacts).
+    pub fn load_weights(&self, variant: &str) -> Result<Vec<Vec<f32>>> {
+        let wf = self
+            .weights
+            .get(variant)
+            .ok_or_else(|| anyhow!("no weights for variant '{variant}'"))?;
+        let raw = std::fs::read(self.dir.join(&wf.file))
+            .with_context(|| format!("reading {}", wf.file))?;
+        let mut out = Vec::with_capacity(wf.tensors.len());
+        for t in &wf.tensors {
+            let bytes = raw
+                .get(t.offset..t.offset + t.nbytes)
+                .ok_or_else(|| anyhow!("weight {} out of range", t.name))?;
+            let mut v = Vec::with_capacity(t.nbytes / 4);
+            for c in bytes.chunks_exact(4) {
+                v.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The real artifacts directory (built by `make artifacts`). Tests
+    /// that need it are skipped when it has not been built.
+    pub fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if d.join("manifest.json").exists() {
+            Some(d)
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn manifest_parses_and_is_consistent() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.model.dim > 0 && m.model.vocab > 0);
+        assert!(!m.artifacts.is_empty());
+        // every artifact file exists
+        for a in &m.artifacts {
+            assert!(dir.join(&a.file).exists(), "{} missing", a.file);
+        }
+        // weights load and match declared shapes
+        for variant in m.weights.keys() {
+            let ws = m.load_weights(variant).unwrap();
+            let specs = &m.weights[variant].tensors;
+            for (w, s) in ws.iter().zip(specs.iter()) {
+                assert_eq!(w.len(), s.shape.iter().product::<usize>(), "{}", s.name);
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_artifact_schema() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        for (b, s) in &m.prefill_buckets {
+            for variant in ["dense", &format!("slide{}", m.model.slide_n)] {
+                let name = format!("prefill_{variant}_b{b}_s{s}");
+                let a = m.find(&name).unwrap();
+                assert_eq!(a.inputs[0].shape, vec![*b, *s]);
+                assert_eq!(a.inputs[0].dtype, DType::I32);
+                assert_eq!(a.outputs[0].shape, vec![*b, *s, m.model.vocab]);
+            }
+        }
+    }
+}

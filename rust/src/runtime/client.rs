@@ -1,0 +1,194 @@
+//! PJRT runtime: compile HLO-text artifacts once, execute them from the
+//! serving hot path.
+//!
+//! The `xla` crate's handles wrap raw PJRT pointers and are not `Send`;
+//! the coordinator therefore pins one `Runtime` to a dedicated executor
+//! thread (the "GPU worker" in vLLM terms) and feeds it through channels
+//! (see `coordinator::engine`).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifacts::Manifest;
+
+/// Build a f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(data.len() == n, "literal size mismatch: {} vs {:?}", data.len(), shape);
+    let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(data.len() == n, "literal size mismatch");
+    let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Scalar i32 literal.
+pub fn literal_scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// The PJRT runtime: client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the artifact manifest.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        let manifest = Manifest::load(artifacts_dir)?;
+        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.find(name)?;
+        let path = self.manifest.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?,
+        );
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Execute an artifact with literal inputs; returns the flattened
+    /// tuple outputs (aot.py lowers with return_tuple=True).
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let spec = self.manifest.find(name)?;
+        anyhow::ensure!(
+            inputs.len() == spec.inputs.len(),
+            "{name}: expected {} inputs, got {}",
+            spec.inputs.len(),
+            inputs.len()
+        );
+        let exe = self.load(name)?;
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let out = result
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("no output replica"))?
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("no output buffer"))?
+            .to_literal_sync()?;
+        Ok(out.to_tuple()?)
+    }
+
+    /// Extract a f32 vector from an output literal.
+    pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+        Ok(lit.to_vec::<f32>()?)
+    }
+
+    /// Extract an i32 vector from an output literal.
+    pub fn to_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+        Ok(lit.to_vec::<i32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn gemm_artifact_executes_and_matches_stc() {
+        // dense int8 GEMM artifact vs the native DenseLinear: identical
+        // quantization choices => identical results.
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = Runtime::new(&dir).unwrap();
+        let (m, o, k) = (64, 128, 128);
+        let mut rng = crate::util::prng::XorShift::new(3);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..o * k).map(|_| rng.normal()).collect();
+        let lits = rt
+            .execute(
+                &format!("gemm_dense_int8_m{m}_o{o}_k{k}"),
+                &[
+                    literal_f32(&x, &[m, k]).unwrap(),
+                    literal_f32(&w, &[o, k]).unwrap(),
+                    literal_f32(&vec![1.0; o], &[o]).unwrap(),
+                ],
+            )
+            .unwrap();
+        let y = Runtime::to_f32(&lits[0]).unwrap();
+        assert_eq!(y.len(), m * o);
+
+        // native: quantize weights to int-valued floats first (the
+        // artifact takes *already quantized* weights + scales)
+        let (wq, _) = crate::quant::quantize_weight_per_channel(&w, o, k);
+        let wq_f: Vec<f32> = wq.iter().map(|v| *v as f32).collect();
+        let lits2 = rt
+            .execute(
+                &format!("gemm_dense_int8_m{m}_o{o}_k{k}"),
+                &[
+                    literal_f32(&x, &[m, k]).unwrap(),
+                    literal_f32(&wq_f, &[o, k]).unwrap(),
+                    literal_f32(&vec![1.0; o], &[o]).unwrap(),
+                ],
+            )
+            .unwrap();
+        let y2 = Runtime::to_f32(&lits2[0]).unwrap();
+        let (xq, xs) = crate::quant::quantize_per_token(&x, m, k);
+        let acc = crate::stc::gemm_i8(&xq, &wq, m, o, k);
+        for i in 0..m * o {
+            let native = acc[i] as f32 * xs[i / o];
+            assert!(
+                (native - y2[i]).abs() < 1e-3 * (1.0 + native.abs()),
+                "i={i}: {native} vs {}",
+                y2[i]
+            );
+        }
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let rt = Runtime::new(&dir).unwrap();
+        assert_eq!(rt.cached(), 0);
+        rt.load("gemm_dense_int8_m64_o128_k128").unwrap();
+        rt.load("gemm_dense_int8_m64_o128_k128").unwrap();
+        assert_eq!(rt.cached(), 1);
+    }
+}

@@ -1,0 +1,8 @@
+//! PJRT runtime layer: artifact manifest parsing and the compiled-HLO
+//! execution client (see /opt/xla-example/load_hlo for the pattern).
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactSpec, Manifest, ModelMeta};
+pub use client::{literal_f32, literal_i32, literal_scalar_i32, Runtime};

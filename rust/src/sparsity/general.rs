@@ -1,0 +1,172 @@
+//! Generalized sliding-window theory (paper Appendix C.1): decompose any
+//! Z:L source pattern onto any M:N hardware pattern.
+
+use super::pattern::Pattern;
+
+/// A sliding-window decomposition of `source` (Z:L) onto `hw` (M:N).
+#[derive(Clone, Copy, Debug)]
+pub struct Decomposition {
+    pub source: Pattern,
+    pub hw: Pattern,
+}
+
+impl Decomposition {
+    pub fn new(source: Pattern, hw: Pattern) -> Decomposition {
+        assert!(hw.z < hw.l, "hardware pattern must be sparse");
+        Decomposition { source, hw }
+    }
+
+    /// Stride s = N - M (windows overlap by M positions).
+    pub fn stride(&self) -> usize {
+        self.hw.l - self.hw.z
+    }
+
+    /// Window count w = (L - N)/(N - M) + 1 (Eq. 8).
+    /// Requires (L - N) divisible by the stride.
+    pub fn window_count(&self) -> usize {
+        let (l, n) = (self.source.l, self.hw.l);
+        assert!(l >= n, "source block smaller than hardware window");
+        assert_eq!(
+            (l - n) % self.stride(),
+            0,
+            "L-N must be a multiple of the stride for exact tiling"
+        );
+        (l - n) / self.stride() + 1
+    }
+
+    /// Total capacity w*M.
+    pub fn capacity(&self) -> usize {
+        self.window_count() * self.hw.z
+    }
+
+    /// Theorem 2: the decomposition is valid iff capacity >= Z.
+    pub fn is_valid(&self) -> bool {
+        self.capacity() >= self.source.z
+    }
+
+    /// Expansion factor gamma = w*N/L (Eq. 9/10).
+    pub fn gamma(&self) -> f64 {
+        (self.window_count() * self.hw.l) as f64 / self.source.l as f64
+    }
+
+    /// Hardware speedup alpha = N/M.
+    pub fn alpha(&self) -> f64 {
+        self.hw.l as f64 / self.hw.z as f64
+    }
+
+    /// Effective speedup S_eff = alpha/gamma.
+    pub fn s_eff(&self) -> f64 {
+        self.alpha() / self.gamma()
+    }
+
+    /// Density-determined upper bound L/Z (Theorem 3).
+    pub fn s_bound(&self) -> f64 {
+        self.source.l as f64 / self.source.z as f64
+    }
+
+    /// Does this decomposition achieve the density-determined limit?
+    pub fn achieves_bound(&self) -> bool {
+        (self.s_eff() - self.s_bound()).abs() < 1e-9
+    }
+
+    /// The window start offsets within one source block.
+    pub fn window_starts(&self) -> Vec<usize> {
+        (0..self.window_count()).map(|j| j * self.stride()).collect()
+    }
+}
+
+/// Appendix C.1.7: 1:4 hardware achieves the density bound for *any* Z:L
+/// pattern needing exactly Z windows. Returns (gamma, s_eff).
+pub fn hypothetical_1_4(source: Pattern) -> (f64, f64) {
+    let gamma = 4.0 * source.z as f64 / source.l as f64;
+    (gamma, 4.0 / gamma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::XorShift;
+
+    #[test]
+    fn family_decomposition_matches_paper() {
+        // (2N-2):2N -> 2:4: w = N-1, gamma = 2 - 2/N, S_eff = N/(N-1)
+        for n in 3..9 {
+            let d = Decomposition::new(Pattern::family(n), Pattern::new(2, 4));
+            assert_eq!(d.stride(), 2);
+            assert_eq!(d.window_count(), n - 1);
+            assert!(d.is_valid());
+            assert!((d.gamma() - (2.0 - 2.0 / n as f64)).abs() < 1e-12);
+            assert!((d.s_eff() - n as f64 / (n - 1) as f64).abs() < 1e-12);
+            assert!(d.achieves_bound());
+        }
+    }
+
+    #[test]
+    fn eq10_verification_case() {
+        // Appendix C.1.3 worked example: Z=2N-2, L=2N, M=2, N_hw=4.
+        let d = Decomposition::new(Pattern::new(6, 8), Pattern::new(2, 4));
+        assert_eq!(d.window_count(), 3);
+        assert!((d.gamma() - 1.5).abs() < 1e-12);
+        // closed form (L-M)*N / (L*(N-M)) = (8-2)*4/(8*2) = 1.5
+        let closed = ((8 - 2) * 4) as f64 / (8 * 2) as f64;
+        assert_eq!(d.gamma(), closed);
+    }
+
+    #[test]
+    fn theorem3_bound_holds_for_random_patterns() {
+        // S_eff <= L/Z for any valid decomposition (property test).
+        crate::util::prop::for_all("theorem 3 bound", |rng: &mut XorShift, _| {
+            let m = 1 + rng.below(3); // hw nnz 1..3
+            let n = m + 1 + rng.below(4); // hw window > m
+            let s = n - m;
+            let w_extra = rng.below(6);
+            let l = n + s * w_extra; // exact tiling
+            let z_max = (w_extra + 1) * m;
+            let z = (1 + rng.below(z_max)).min(l);
+            let src = Pattern::new(z, l);
+            if (src.density()) < (m as f64 / n as f64) {
+                return; // paper constraint Eq. 7: source at least as dense
+            }
+            let d = Decomposition::new(src, Pattern::new(m, n));
+            if d.is_valid() {
+                assert!(
+                    d.s_eff() <= d.s_bound() + 1e-9,
+                    "S_eff {} > bound {} for {src} on {}:{}",
+                    d.s_eff(),
+                    d.s_bound(),
+                    m,
+                    n
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn hypothetical_1_4_achieves_bound_universally() {
+        for (z, l) in [(7, 10), (3, 4), (5, 8), (9, 12), (1, 4)] {
+            let (gamma, s) = hypothetical_1_4(Pattern::new(z, l));
+            assert!((s - l as f64 / z as f64).abs() < 1e-12);
+            assert!(gamma <= 4.0);
+        }
+    }
+
+    #[test]
+    fn seventy_percent_pattern_example() {
+        // Practical implication from C.1.6: 7:10 caps at 1.43x anywhere.
+        let p = Pattern::new(7, 10);
+        assert!((p.s_bound() - 10.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn insufficient_capacity_detected() {
+        // A dense 8-block (8 nonzeros) cannot fit 3 windows x 2.
+        let d = Decomposition::new(Pattern::new(8, 8), Pattern::new(2, 4));
+        assert!(!d.is_valid());
+    }
+
+    #[test]
+    fn window_starts_cover_block() {
+        let d = Decomposition::new(Pattern::family(4), Pattern::new(2, 4));
+        assert_eq!(d.window_starts(), vec![0, 2, 4]);
+    }
+}

@@ -1,0 +1,106 @@
+//! Activation lifting Psi (paper Eq. 4): replicate activations according
+//! to window coverage. Pure index remapping -- no arithmetic -- which is
+//! what lets it fuse into quantization at near-zero cost (§3.3).
+
+use super::packer::{expanded_k, lift_indices};
+
+/// Precomputed lifting plan for a fixed (K, N).
+#[derive(Clone, Debug)]
+pub struct LiftPlan {
+    pub k: usize,
+    pub n: usize,
+    pub k_packed: usize,
+    idx: Vec<u32>,
+}
+
+impl LiftPlan {
+    pub fn new(k: usize, n: usize) -> LiftPlan {
+        LiftPlan { k, n, k_packed: expanded_k(k, n), idx: lift_indices(k, n) }
+    }
+
+    pub fn indices(&self) -> &[u32] {
+        &self.idx
+    }
+
+    /// Lift one row: out[j] = x[idx[j]].
+    pub fn lift_row_into<T: Copy>(&self, x: &[T], out: &mut [T]) {
+        debug_assert_eq!(x.len(), self.k);
+        debug_assert_eq!(out.len(), self.k_packed);
+        // windows copy 4 contiguous elements; unrolled copy per window
+        for (o, chunk) in out.chunks_exact_mut(4).enumerate() {
+            let b = self.idx[o * 4] as usize;
+            chunk.copy_from_slice(&x[b..b + 4]);
+        }
+    }
+
+    pub fn lift_row<T: Copy + Default>(&self, x: &[T]) -> Vec<T> {
+        let mut out = vec![T::default(); self.k_packed];
+        self.lift_row_into(x, &mut out);
+        out
+    }
+
+    /// Lift a [m, k] row-major matrix into [m, k_packed].
+    pub fn lift_matrix(&self, x: &[f32], m: usize) -> Vec<f32> {
+        assert_eq!(x.len(), m * self.k);
+        let mut out = vec![0.0f32; m * self.k_packed];
+        for r in 0..m {
+            self.lift_row_into(
+                &x[r * self.k..(r + 1) * self.k],
+                &mut out[r * self.k_packed..(r + 1) * self.k_packed],
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prng::XorShift, prop};
+
+    #[test]
+    fn lift_matches_eq4_example() {
+        let plan = LiftPlan::new(8, 4);
+        let x: Vec<f32> = (0..8).map(|v| v as f32).collect();
+        assert_eq!(
+            plan.lift_row(&x),
+            vec![0., 1., 2., 3., 2., 3., 4., 5., 4., 5., 6., 7.]
+        );
+    }
+
+    #[test]
+    fn lift_is_pure_remap() {
+        // every output element equals some input element (no arithmetic)
+        prop::for_all("lift pure remap", |rng: &mut XorShift, case| {
+            let n = 3 + case % 4;
+            let k = 2 * n * (1 + rng.below(3));
+            let plan = LiftPlan::new(k, n);
+            let x: Vec<f32> = (0..k).map(|_| rng.normal()).collect();
+            let y = plan.lift_row(&x);
+            assert_eq!(y.len(), plan.k_packed);
+            for (j, v) in y.iter().enumerate() {
+                assert_eq!(*v, x[plan.indices()[j] as usize]);
+            }
+        });
+    }
+
+    #[test]
+    fn lift_matrix_rows_independent() {
+        let plan = LiftPlan::new(16, 4);
+        let mut rng = XorShift::new(1);
+        let x: Vec<f32> = (0..3 * 16).map(|_| rng.normal()).collect();
+        let y = plan.lift_matrix(&x, 3);
+        for r in 0..3 {
+            let row = plan.lift_row(&x[r * 16..(r + 1) * 16]);
+            assert_eq!(&y[r * plan.k_packed..(r + 1) * plan.k_packed], &row[..]);
+        }
+    }
+
+    #[test]
+    fn lift_works_for_int_types() {
+        let plan = LiftPlan::new(8, 4);
+        let x: Vec<i8> = (0..8).collect();
+        let y = plan.lift_row(&x);
+        assert_eq!(y, vec![0, 1, 2, 3, 2, 3, 4, 5, 4, 5, 6, 7]);
+    }
+}

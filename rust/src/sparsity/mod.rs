@@ -1,0 +1,14 @@
+//! The paper's core contribution: (2N-2):2N -> 2:4 sliding-window
+//! decomposition (weights: packer/Phi, activations: lift/Psi), magnitude
+//! pruning into the family patterns, and the generalized Z:L -> M:N
+//! theory from Appendix C.1.
+
+pub mod general;
+pub mod lift;
+pub mod packer;
+pub mod pattern;
+pub mod prune;
+
+pub use lift::LiftPlan;
+pub use packer::{pack_matrix, pack_row, PackedMatrix};
+pub use pattern::{Pattern, ALPHA_2_4, HW_2_4};

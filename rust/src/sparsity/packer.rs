@@ -1,0 +1,259 @@
+//! Offline weight packer: paper Algorithm 2 (greedy residual allocation).
+//!
+//! Transforms a (2N-2):2N sparse row into an equivalent 2:4-compliant row
+//! of length gamma*K by assigning each non-zero to the earliest stride-2
+//! window with spare capacity; the 2-position overlap between adjacent
+//! windows is the "spillover buffer" that makes the greedy pass lossless
+//! (Theorem 1).
+
+/// Packing error: the input row violates its declared pattern.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackError {
+    pub row: usize,
+    pub unplaced: usize,
+}
+
+impl std::fmt::Display for PackError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "row {} violates the sparsity budget: {} non-zeros unplaced",
+            self.row, self.unplaced
+        )
+    }
+}
+
+impl std::error::Error for PackError {}
+
+/// Expanded row length: K/(2N) groups x (N-1) windows x 4 slots.
+pub fn expanded_k(k: usize, n: usize) -> usize {
+    assert_eq!(k % (2 * n), 0, "K={k} must be a multiple of 2N={}", 2 * n);
+    (k / (2 * n)) * (n - 1) * 4
+}
+
+/// Source index of every element in the lifted/packed layout; the same
+/// table drives activation lifting Psi (Eq. 4) and weight packing Phi.
+pub fn lift_indices(k: usize, n: usize) -> Vec<u32> {
+    let mut idx = Vec::with_capacity(expanded_k(k, n));
+    for g in 0..k / (2 * n) {
+        for l in 0..n - 1 {
+            let b = (2 * n * g + 2 * l) as u32;
+            idx.extend_from_slice(&[b, b + 1, b + 2, b + 3]);
+        }
+    }
+    idx
+}
+
+/// Pack one row (Algorithm 2). `out` must have length expanded_k(k, n)
+/// and be zero-filled. Returns the number of unplaced non-zeros (0 on
+/// success).
+pub fn pack_row_into(w: &[f32], n: usize, out: &mut [f32], used: &mut [bool]) -> usize {
+    let k = w.len();
+    debug_assert_eq!(out.len(), expanded_k(k, n));
+    used.iter_mut().for_each(|u| *u = false);
+    let mut wi = 0usize;
+    for g in 0..k / (2 * n) {
+        for l in 0..n - 1 {
+            let b = 2 * n * g + 2 * l;
+            let mut cnt = 0;
+            for d in 0..4 {
+                if w[b + d] != 0.0 && !used[b + d] && cnt < 2 {
+                    out[4 * wi + d] = w[b + d];
+                    used[b + d] = true;
+                    cnt += 1;
+                }
+            }
+            wi += 1;
+        }
+    }
+    w.iter()
+        .zip(used.iter())
+        .filter(|(v, u)| **v != 0.0 && !**u)
+        .count()
+}
+
+/// Pack one row, allocating the output.
+pub fn pack_row(w: &[f32], n: usize) -> Result<Vec<f32>, PackError> {
+    let mut out = vec![0.0; expanded_k(w.len(), n)];
+    let mut used = vec![false; w.len()];
+    let unplaced = pack_row_into(w, n, &mut out, &mut used);
+    if unplaced > 0 {
+        return Err(PackError { row: 0, unplaced });
+    }
+    Ok(out)
+}
+
+/// A packed weight matrix: [o, gamma*k] row-major, plus provenance.
+#[derive(Clone, Debug)]
+pub struct PackedMatrix {
+    pub data: Vec<f32>,
+    pub rows: usize,
+    pub k_orig: usize,
+    pub k_packed: usize,
+    pub n: usize,
+}
+
+impl PackedMatrix {
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.k_packed..(r + 1) * self.k_packed]
+    }
+}
+
+/// Pack a [rows, k] row-major matrix (the offline phase of Fig. 5).
+pub fn pack_matrix(w: &[f32], rows: usize, k: usize, n: usize)
+    -> Result<PackedMatrix, PackError> {
+    assert_eq!(w.len(), rows * k);
+    let kp = expanded_k(k, n);
+    let mut data = vec![0.0f32; rows * kp];
+    let mut used = vec![false; k];
+    for r in 0..rows {
+        let unplaced = pack_row_into(
+            &w[r * k..(r + 1) * k],
+            n,
+            &mut data[r * kp..(r + 1) * kp],
+            &mut used,
+        );
+        if unplaced > 0 {
+            return Err(PackError { row: r, unplaced });
+        }
+    }
+    Ok(PackedMatrix { data, rows, k_orig: k, k_packed: kp, n })
+}
+
+/// Validate 2:4 compliance of a packed row (every 4-window holds <= 2).
+pub fn is_24_compliant(row: &[f32]) -> bool {
+    row.chunks(4)
+        .all(|w| w.iter().filter(|v| **v != 0.0).count() <= 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::prune;
+    use crate::util::prng::XorShift;
+    use crate::util::prop;
+
+    fn random_family_row(rng: &mut XorShift, k: usize, n: usize) -> Vec<f32> {
+        let mut row = vec![0.0; k];
+        for g in 0..k / (2 * n) {
+            for p in rng.choose(2 * n, 2 * n - 2) {
+                row[g * 2 * n + p] = rng.normal();
+            }
+        }
+        row
+    }
+
+    #[test]
+    fn packs_the_paper_worked_example() {
+        // 6 non-zeros clustered at the front of an 8-block (the
+        // "incompatible gap" case): spillover must place all of them.
+        let row = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 0.0, 0.0];
+        let packed = pack_row(&row, 4).unwrap();
+        assert!(is_24_compliant(&packed));
+        assert_eq!(packed.iter().filter(|v| **v != 0.0).count(), 6);
+        // window 0 gets {1,2}; 3,4 spill to window 1; 5,6 to window 2
+        assert_eq!(&packed[0..4], &[1.0, 2.0, 0.0, 0.0]);
+        assert_eq!(&packed[4..8], &[3.0, 4.0, 0.0, 0.0]);
+        assert_eq!(&packed[8..12], &[5.0, 6.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn rejects_overfull_rows() {
+        let row = [1.0; 8]; // 8 nonzeros > capacity 6
+        assert!(pack_row(&row, 4).is_err());
+    }
+
+    #[test]
+    fn lift_indices_window_structure() {
+        // Eq. 4 for 6:8
+        assert_eq!(
+            lift_indices(8, 4),
+            vec![0, 1, 2, 3, 2, 3, 4, 5, 4, 5, 6, 7]
+        );
+    }
+
+    #[test]
+    fn prop_pack_lossless_and_compliant() {
+        // Theorem 1 as a property: for random family rows the packed row
+        // is 2:4 compliant and preserves the inner product with any
+        // lifted input (Eq. 3).
+        prop::for_all("packer lossless", |rng, case| {
+            let n = 3 + case % 6; // N in 3..8
+            let k = 2 * n * (1 + rng.below(4));
+            let row = random_family_row(rng, k, n);
+            let packed = pack_row(&row, n).unwrap();
+            assert!(is_24_compliant(&packed));
+            let x: Vec<f32> = (0..k).map(|_| rng.normal()).collect();
+            let idx = lift_indices(k, n);
+            let lifted: f64 = packed
+                .iter()
+                .zip(idx.iter())
+                .map(|(w, i)| *w as f64 * x[*i as usize] as f64)
+                .sum();
+            let dense: f64 = row
+                .iter()
+                .zip(x.iter())
+                .map(|(w, x)| *w as f64 * *x as f64)
+                .sum();
+            assert!(
+                (lifted - dense).abs() < 1e-4 * (1.0 + dense.abs()),
+                "Eq.3 violated: {lifted} vs {dense}"
+            );
+        });
+    }
+
+    #[test]
+    fn prop_pack_deterministic() {
+        prop::for_all("packer deterministic", |rng, _| {
+            let n = 4;
+            let row = random_family_row(rng, 32, n);
+            assert_eq!(pack_row(&row, n).unwrap(), pack_row(&row, n).unwrap());
+        });
+    }
+
+    #[test]
+    fn pack_matrix_shape_and_error_row() {
+        let n = 4;
+        let (rows, k) = (6, 16);
+        let mut rng = XorShift::new(3);
+        let mut w = Vec::new();
+        for _ in 0..rows {
+            w.extend(random_family_row(&mut rng, k, n));
+        }
+        let pm = pack_matrix(&w, rows, k, n).unwrap();
+        assert_eq!(pm.k_packed, expanded_k(k, n));
+        assert_eq!(pm.data.len(), rows * pm.k_packed);
+
+        // make row 3 dense -> error should name row 3
+        let mut bad = w.clone();
+        for v in &mut bad[3 * k..3 * k + 8] {
+            *v = 1.0;
+        }
+        let err = pack_matrix(&bad, rows, k, n).unwrap_err();
+        assert_eq!(err.row, 3);
+    }
+
+    #[test]
+    fn pack_pruned_weights_roundtrip() {
+        // end-to-end: random dense -> magnitude prune 6:8 -> pack -> check
+        let mut rng = XorShift::new(11);
+        let (rows, k, n) = (8, 32, 4);
+        let w: Vec<f32> = (0..rows * k).map(|_| rng.normal()).collect();
+        let pruned = prune::prune_magnitude(&w, rows, k, 2 * n - 2, 2 * n);
+        let pm = pack_matrix(&pruned, rows, k, n).unwrap();
+        for r in 0..rows {
+            assert!(is_24_compliant(pm.row(r)));
+        }
+    }
+
+    #[test]
+    fn sparser_than_budget_rows_pack() {
+        // rows with FEWER nonzeros than the budget must also pack
+        let mut row = vec![0.0f32; 16];
+        row[0] = 1.0;
+        row[9] = 2.0;
+        let packed = pack_row(&row, 4).unwrap();
+        let s: f32 = packed.iter().sum();
+        assert_eq!(s, 3.0);
+    }
+}

@@ -1,0 +1,208 @@
+//! Sparsity pattern definitions and the paper's cost model (§3.4, §C.1.5).
+//!
+//! A `Pattern` is Z:L — at most Z non-zeros in every L consecutive
+//! elements. The hardware format is M:N (2:4 on Sparse Tensor Cores).
+
+use std::fmt;
+
+/// A Z:L structured sparsity pattern (Z non-zeros per L elements).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Pattern {
+    pub z: usize,
+    pub l: usize,
+}
+
+/// NVIDIA Sparse Tensor Core hardware constraint.
+pub const HW_2_4: Pattern = Pattern { z: 2, l: 4 };
+
+/// Nominal hardware speedup of 2:4 Sparse Tensor Cores over dense.
+pub const ALPHA_2_4: f64 = 2.0;
+
+impl Pattern {
+    pub fn new(z: usize, l: usize) -> Pattern {
+        assert!(z <= l && l > 0, "invalid pattern {z}:{l}");
+        Pattern { z, l }
+    }
+
+    /// The (2N-2):2N family member for a given N (paper §2): 6:8 is N=4.
+    pub fn family(n: usize) -> Pattern {
+        assert!(n >= 2, "N must be >= 2");
+        Pattern { z: 2 * n - 2, l: 2 * n }
+    }
+
+    /// N for family patterns; None when the pattern is not (2N-2):2N.
+    pub fn family_n(&self) -> Option<usize> {
+        if self.l % 2 == 0 && self.z + 2 == self.l && self.l >= 4 {
+            Some(self.l / 2)
+        } else {
+            None
+        }
+    }
+
+    /// Fully dense pseudo-pattern in slid layout (the paper's inf:inf).
+    pub fn dense() -> Pattern {
+        Pattern { z: usize::MAX, l: usize::MAX }
+    }
+
+    pub fn is_dense(&self) -> bool {
+        self.z == usize::MAX
+    }
+
+    /// Fraction of non-zero weights: Z/L.
+    pub fn density(&self) -> f64 {
+        if self.is_dense() {
+            1.0
+        } else {
+            self.z as f64 / self.l as f64
+        }
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.density()
+    }
+
+    /// Expansion factor gamma for sliding onto 2:4 hardware (Eq. 5 for the
+    /// family; Eq. 10 in general).
+    pub fn gamma(&self) -> f64 {
+        if self.is_dense() {
+            1.0
+        } else if *self == HW_2_4 {
+            1.0 // native, no sliding needed
+        } else {
+            super::general::Decomposition::new(*self, HW_2_4).gamma()
+        }
+    }
+
+    /// Theoretical effective speedup over dense on 2:4 hardware:
+    /// S_eff = alpha / gamma (Corollary 1.2); N/(N-1) for the family.
+    pub fn s_eff(&self) -> f64 {
+        if self.is_dense() {
+            1.0
+        } else {
+            ALPHA_2_4 / self.gamma()
+        }
+    }
+
+    /// Density-determined upper bound L/Z (Theorem 3).
+    pub fn s_bound(&self) -> f64 {
+        if self.is_dense() {
+            1.0
+        } else {
+            self.l as f64 / self.z as f64
+        }
+    }
+
+    /// Does a row of length k tile evenly into this pattern's blocks?
+    pub fn divides(&self, k: usize) -> bool {
+        self.is_dense() || k % self.l == 0
+    }
+
+    /// Check a slice against the pattern budget (Eq. 2).
+    pub fn check(&self, row: &[f32]) -> bool {
+        if self.is_dense() {
+            return true;
+        }
+        if row.len() % self.l != 0 {
+            return false;
+        }
+        row.chunks(self.l)
+            .all(|b| b.iter().filter(|v| **v != 0.0).count() <= self.z)
+    }
+}
+
+impl fmt::Display for Pattern {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_dense() {
+            write!(f, "inf:inf")
+        } else {
+            write!(f, "{}:{}", self.z, self.l)
+        }
+    }
+}
+
+/// The evaluation family used throughout the paper: 4:6 6:8 8:10 10:12
+/// 12:14 14:16.
+pub fn eval_family() -> Vec<Pattern> {
+    (3..=8).map(Pattern::family).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_definitions() {
+        assert_eq!(Pattern::family(3), Pattern::new(4, 6));
+        assert_eq!(Pattern::family(4), Pattern::new(6, 8));
+        assert_eq!(Pattern::family(5), Pattern::new(8, 10));
+        assert_eq!(Pattern::family(8), Pattern::new(14, 16));
+    }
+
+    #[test]
+    fn family_n_roundtrip() {
+        for n in 2..10 {
+            assert_eq!(Pattern::family(n).family_n(), Some(n));
+        }
+        // 2:4 itself is the N=2 member (sliding degenerates to identity)
+        assert_eq!(Pattern::new(2, 4).family_n(), Some(2));
+        assert_eq!(Pattern::new(3, 8).family_n(), None);
+    }
+
+    #[test]
+    fn gamma_matches_eq5() {
+        // gamma = 2 - 2/N (paper Eq. 5)
+        for n in 3..9 {
+            let p = Pattern::family(n);
+            let expect = 2.0 - 2.0 / n as f64;
+            assert!((p.gamma() - expect).abs() < 1e-12, "N={n}");
+        }
+    }
+
+    #[test]
+    fn s_eff_matches_family_bound() {
+        // For the family, S_eff = N/(N-1) = L/Z: 2:4 hardware achieves the
+        // density-determined limit (paper §C.1.5 key observation).
+        for n in 3..9 {
+            let p = Pattern::family(n);
+            assert!((p.s_eff() - n as f64 / (n - 1) as f64).abs() < 1e-12);
+            assert!((p.s_eff() - p.s_bound()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn table_c15_values() {
+        // The exact table in Appendix C.1.5.
+        let cases = [
+            (3, 0.667, 1.33, 1.50),
+            (4, 0.750, 1.50, 1.33),
+            (5, 0.800, 1.60, 1.25),
+            (6, 0.833, 1.67, 1.20),
+            (8, 0.875, 1.75, 1.14),
+        ];
+        for (n, d, g, s) in cases {
+            let p = Pattern::family(n);
+            assert!((p.density() - d).abs() < 0.001);
+            assert!((p.gamma() - g).abs() < 0.005);
+            assert!((p.s_eff() - s).abs() < 0.005);
+        }
+    }
+
+    #[test]
+    fn check_budget() {
+        let p = Pattern::new(6, 8);
+        let ok = [1., 1., 1., 0., 1., 1., 1., 0.];
+        let bad = [1., 1., 1., 1., 1., 1., 1., 0.];
+        assert!(p.check(&ok));
+        assert!(!p.check(&bad));
+        assert!(!p.check(&ok[..7])); // length not multiple of L
+    }
+
+    #[test]
+    fn dense_pattern() {
+        let d = Pattern::dense();
+        assert!(d.is_dense());
+        assert_eq!(d.density(), 1.0);
+        assert_eq!(d.s_eff(), 1.0);
+        assert!(d.check(&[1.0; 13]));
+    }
+}

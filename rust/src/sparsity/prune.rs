@@ -1,0 +1,112 @@
+//! Magnitude pruning into Z:L structured patterns (the offline phase that
+//! produces (2N-2):2N weights from dense checkpoints, paper §2.1/§7).
+
+/// Prune a [rows, k] row-major matrix: keep the top-z magnitudes in every
+/// block of l along the row axis, zero the rest. Ties break toward the
+/// lower index (deterministic, matches the numpy oracle).
+pub fn prune_magnitude(w: &[f32], rows: usize, k: usize, z: usize, l: usize) -> Vec<f32> {
+    assert_eq!(w.len(), rows * k);
+    assert_eq!(k % l, 0, "K={k} must be a multiple of L={l}");
+    let mut out = vec![0.0f32; w.len()];
+    let mut order: Vec<usize> = Vec::with_capacity(l);
+    for r in 0..rows {
+        for g in 0..k / l {
+            let base = r * k + g * l;
+            let block = &w[base..base + l];
+            order.clear();
+            order.extend(0..l);
+            // stable sort by descending |v|; stability = lower index wins ties
+            order.sort_by(|&a, &b| {
+                block[b]
+                    .abs()
+                    .partial_cmp(&block[a].abs())
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            for &p in order.iter().take(z) {
+                out[base + p] = block[p];
+            }
+        }
+    }
+    out
+}
+
+/// Fraction of zero entries.
+pub fn measured_sparsity(w: &[f32]) -> f64 {
+    if w.is_empty() {
+        return 0.0;
+    }
+    w.iter().filter(|v| **v == 0.0).count() as f64 / w.len() as f64
+}
+
+/// Relative energy kept after pruning: ||pruned||^2 / ||orig||^2.
+/// The accuracy experiment (paper Fig. 2 proxy) reports this per pattern.
+pub fn energy_kept(orig: &[f32], pruned: &[f32]) -> f64 {
+    let e0: f64 = orig.iter().map(|v| (*v as f64).powi(2)).sum();
+    let e1: f64 = pruned.iter().map(|v| (*v as f64).powi(2)).sum();
+    if e0 == 0.0 {
+        1.0
+    } else {
+        e1 / e0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::pattern::Pattern;
+    use crate::util::{prng::XorShift, prop};
+
+    #[test]
+    fn keeps_largest_magnitudes() {
+        let w = [0.1, -5.0, 2.0, 0.3, 4.0, -0.2, 0.0, 1.0];
+        let p = prune_magnitude(&w, 1, 8, 6, 8);
+        // drops the two smallest |.|: 0.1 and 0.0 -> wait, -0.2 vs 0.1 vs 0.0:
+        // smallest two are 0.0 and 0.1
+        assert_eq!(p[0], 0.0);
+        assert_eq!(p[6], 0.0);
+        assert_eq!(p[1], -5.0);
+        assert_eq!(p.iter().filter(|v| **v != 0.0).count(), 6);
+    }
+
+    #[test]
+    fn prop_pruned_obeys_pattern() {
+        prop::for_all("prune obeys budget", |rng: &mut XorShift, case| {
+            let n = 3 + case % 5;
+            let pat = Pattern::family(n);
+            let (rows, k) = (4, pat.l * (1 + rng.below(3)));
+            let w: Vec<f32> = (0..rows * k).map(|_| rng.normal()).collect();
+            let p = prune_magnitude(&w, rows, k, pat.z, pat.l);
+            for r in 0..rows {
+                assert!(pat.check(&p[r * k..(r + 1) * k]));
+            }
+            // sparsity >= 1 - z/l (random normals have no exact zeros)
+            let s = measured_sparsity(&p);
+            assert!((s - pat.sparsity()).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn energy_ordering_matches_severity() {
+        // milder patterns keep more energy: dense > 6:8 > 4:6 > 2:4
+        let mut rng = XorShift::new(2);
+        let k = 4080; // lcm(8, 6, 4) * 170
+        let w: Vec<f32> = (0..k).map(|_| rng.normal()).collect();
+        let e68 = energy_kept(&w, &prune_magnitude(&w, 1, k, 6, 8));
+        let e46 = energy_kept(&w, &prune_magnitude(&w, 1, k, 4, 6));
+        let e24 = energy_kept(&w, &prune_magnitude(&w, 1, k, 2, 4));
+        assert!(e68 > e46 && e46 > e24, "{e68} {e46} {e24}");
+        assert!(e68 > 0.95, "25% magnitude pruning keeps >95% energy");
+        assert!(e24 < 0.90, "50% pruning loses substantially more energy");
+    }
+
+    #[test]
+    fn tie_break_is_deterministic() {
+        let w = [1.0f32; 8];
+        let a = prune_magnitude(&w, 1, 8, 6, 8);
+        let b = prune_magnitude(&w, 1, 8, 6, 8);
+        assert_eq!(a, b);
+        assert_eq!(a.iter().filter(|v| **v != 0.0).count(), 6);
+        // stable: the first 6 positions survive
+        assert_eq!(&a[..6], &[1.0; 6]);
+    }
+}

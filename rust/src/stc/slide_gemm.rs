@@ -1,0 +1,178 @@
+//! End-to-end SlideSparse linear operator on the STC simulator:
+//! fused quant+slide (Psi) -> compressed 2:4 GEMM (Phi(W)) -> dequant.
+//!
+//! This is the per-request "online" phase of Fig. 5, and the native
+//! backend the serving engine uses when it is not executing PJRT
+//! artifacts.
+
+use crate::quant::fused::FusedQuantSlide;
+use crate::quant::int8::{dequantize, quantize_per_token, quantize_weight_per_channel};
+use crate::sparsity::packer::pack_matrix;
+use crate::sparsity::prune::prune_magnitude;
+use crate::stc::compressed::{gemm_compressed_i8_mtile, gemv_compressed_i8, Compressed24};
+use crate::stc::dense::gemm_i8_mtile;
+
+/// A prepared SlideSparse linear layer: offline-packed + compressed
+/// weights and the fused activation kernel.
+pub struct SlideLinear {
+    pub o: usize,
+    pub k: usize,
+    pub n: usize,
+    pub weights: Compressed24,
+    pub w_scales: Vec<f32>,
+    pub kernel: FusedQuantSlide,
+}
+
+impl SlideLinear {
+    /// Offline phase: prune dense f32 weights to (2N-2):2N, quantize
+    /// per-channel, pack (Phi), compress to the 2:4 format.
+    pub fn prepare(w: &[f32], o: usize, k: usize, n: usize) -> SlideLinear {
+        assert_eq!(w.len(), o * k);
+        let pruned = prune_magnitude(w, o, k, 2 * n - 2, 2 * n);
+        let (wq, ws) = quantize_weight_per_channel(&pruned, o, k);
+        let wq_f: Vec<f32> = wq.iter().map(|v| *v as f32).collect();
+        let packed = pack_matrix(&wq_f, o, k, n).expect("pruned weights must pack");
+        let packed_i8: Vec<i8> = packed.data.iter().map(|v| *v as i8).collect();
+        let weights = Compressed24::from_dense(&packed_i8, o, packed.k_packed)
+            .expect("packed weights are 2:4 compliant");
+        SlideLinear {
+            o,
+            k,
+            n,
+            weights,
+            w_scales: ws,
+            kernel: FusedQuantSlide::new(k, n),
+        }
+    }
+
+    /// Prepare from already-pruned weights (skips pruning).
+    pub fn prepare_pruned(pruned: &[f32], o: usize, k: usize, n: usize) -> SlideLinear {
+        let (wq, ws) = quantize_weight_per_channel(pruned, o, k);
+        let wq_f: Vec<f32> = wq.iter().map(|v| *v as f32).collect();
+        let packed = pack_matrix(&wq_f, o, k, n).expect("weights must satisfy pattern");
+        let packed_i8: Vec<i8> = packed.data.iter().map(|v| *v as i8).collect();
+        let weights = Compressed24::from_dense(&packed_i8, o, packed.k_packed)
+            .expect("packed weights are 2:4 compliant");
+        SlideLinear { o, k, n, weights, w_scales: ws, kernel: FusedQuantSlide::new(k, n) }
+    }
+
+    /// Online phase: y [m, o] = dequant(compressed_gemm(fused(x))).
+    /// m == 1 takes the metadata-walking GEMV (memory-bound decode path);
+    /// larger m takes the M-tiled compute kernel.
+    pub fn forward(&self, x: &[f32], m: usize) -> Vec<f32> {
+        let (xq, xs) = self.kernel.run(x, m);
+        let kp = self.kernel.k_packed();
+        let acc = if m < crate::stc::dense::MT / 2 {
+            // small batches: metadata-walking GEMV per row (no M-tile
+            // padding waste; matches the dense small-m routing)
+            let mut acc = Vec::with_capacity(m * self.o);
+            for r in 0..m {
+                acc.extend(gemv_compressed_i8(&xq[r * kp..(r + 1) * kp], &self.weights));
+            }
+            acc
+        } else {
+            gemm_compressed_i8_mtile(&xq, &self.weights, m)
+        };
+        dequantize(&acc, m, self.o, &xs, &self.w_scales)
+    }
+
+    /// Weight storage bytes in compressed form.
+    pub fn weight_bytes(&self) -> usize {
+        self.weights.storage_bytes() + self.w_scales.len() * 4
+    }
+}
+
+/// The dense INT8 baseline layer (per-token quant + dense GEMM), sharing
+/// quantization choices with `SlideLinear` so outputs are comparable.
+pub struct DenseLinear {
+    pub o: usize,
+    pub k: usize,
+    pub wq: Vec<i8>,
+    pub w_scales: Vec<f32>,
+}
+
+impl DenseLinear {
+    pub fn prepare(w: &[f32], o: usize, k: usize) -> DenseLinear {
+        let (wq, ws) = quantize_weight_per_channel(w, o, k);
+        DenseLinear { o, k, wq, w_scales: ws }
+    }
+
+    pub fn forward(&self, x: &[f32], m: usize) -> Vec<f32> {
+        let (xq, xs) = quantize_per_token(x, m, self.k);
+        // small batches: the k-inner blocked kernel (no M-tile padding
+        // waste); larger batches: the M-tiled kernel
+        let acc = if m < crate::stc::dense::MT / 2 {
+            crate::stc::dense::gemm_i8(&xq, &self.wq, m, self.o, self.k)
+        } else {
+            gemm_i8_mtile(&xq, &self.wq, m, self.o, self.k)
+        };
+        dequantize(&acc, m, self.o, &xs, &self.w_scales)
+    }
+
+    pub fn weight_bytes(&self) -> usize {
+        self.wq.len() + self.w_scales.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prng::XorShift, prop};
+
+    #[test]
+    fn prop_slide_equals_dense_on_pruned_weights() {
+        // THE paper claim (Eq. 3 end to end): on (2N-2):2N weights the
+        // SlideSparse path output is IDENTICAL to the dense-int8 path.
+        prop::for_all("slide == dense linear", |rng: &mut XorShift, case| {
+            let n = 3 + case % 4;
+            let k = 2 * n * (1 + rng.below(3));
+            let o = 4 + rng.below(12);
+            let m = 1 + rng.below(4);
+            let w: Vec<f32> = (0..o * k).map(|_| rng.normal()).collect();
+            let pruned = prune_magnitude(&w, o, k, 2 * n - 2, 2 * n);
+            let slide = SlideLinear::prepare_pruned(&pruned, o, k, n);
+            let dense = DenseLinear::prepare(&pruned, o, k);
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            assert_eq!(slide.forward(&x, m), dense.forward(&x, m));
+        });
+    }
+
+    #[test]
+    fn forward_close_to_f32_reference() {
+        let mut rng = XorShift::new(7);
+        let (o, k, n, m) = (16, 64, 4, 3);
+        let w: Vec<f32> = (0..o * k).map(|_| rng.normal() * 0.1).collect();
+        let pruned = prune_magnitude(&w, o, k, 2 * n - 2, 2 * n);
+        let slide = SlideLinear::prepare_pruned(&pruned, o, k, n);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let y = slide.forward(&x, m);
+        for r in 0..m {
+            for c in 0..o {
+                let exact: f32 = (0..k).map(|t| x[r * k + t] * pruned[c * k + t]).sum();
+                assert!(
+                    (y[r * o + c] - exact).abs() < 0.05 * (1.0 + exact.abs()),
+                    "{} vs {exact}",
+                    y[r * o + c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn memory_footprint_reduced() {
+        // 6:8 compressed slide weights: gamma*K/2 values + gamma*K/4 meta
+        // = 0.75K + 0.375K ~= 1.125x ... vs dense K bytes. The *format*
+        // overhead is the gamma expansion; the paper's decode win comes
+        // from density (only 75% non-zeros) -- check against dense int8
+        // storing the SAME pruned weights densely (K bytes/row).
+        let mut rng = XorShift::new(8);
+        let (o, k, n) = (32, 128, 4);
+        let w: Vec<f32> = (0..o * k).map(|_| rng.normal()).collect();
+        let slide = SlideLinear::prepare(&w, o, k, n);
+        let dense = DenseLinear::prepare(&w, o, k);
+        // compressed-slide values bytes = gamma*K/2 = 0.75K < K
+        let val_bytes = slide.weights.vals.len();
+        assert!(val_bytes < dense.wq.len());
+        assert_eq!(val_bytes, (o * k * 3) / 4);
+    }
+}

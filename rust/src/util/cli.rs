@@ -1,0 +1,111 @@
+//! Tiny CLI argument parser (clap is not in the offline crate set).
+//!
+//! Grammar: `binary <subcommand> [--flag] [--key value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without the binary name).
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = it.into_iter().peekable();
+        if let Some(first) = iter.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = iter.next();
+            }
+        }
+        while let Some(a) = iter.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    // unambiguous --key=value form
+                    args.options.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                match iter.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        let v = iter.next().unwrap();
+                        args.options.insert(key.to_string(), v);
+                    }
+                    _ => args.flags.push(key.to_string()),
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn parse() -> Args {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse_from(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NB: a bare `--flag` directly followed by a positional is
+        // ambiguous; use `--flag=...`-free trailing flags or key=value.
+        let a = parse(&["serve", "--port", "8080", "file.json", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.opt("port"), Some("8080"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["file.json"]);
+    }
+
+    #[test]
+    fn key_equals_value_form() {
+        let a = parse(&["bench", "--gpu=A100", "--m", "64"]);
+        assert_eq!(a.opt("gpu"), Some("A100"));
+        assert_eq!(a.opt_usize("m", 0), 64);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["bench"]);
+        assert_eq!(a.opt_usize("iters", 100), 100);
+        assert_eq!(a.opt_f64("scale", 1.5), 1.5);
+        assert_eq!(a.opt_str("out", "x"), "x");
+    }
+
+    #[test]
+    fn no_subcommand_when_flag_first() {
+        let a = parse(&["--help"]);
+        assert_eq!(a.subcommand, None);
+        assert!(a.flag("help"));
+    }
+}

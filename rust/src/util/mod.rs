@@ -1,0 +1,9 @@
+//! Shared infrastructure: JSON, PRNGs, statistics, CLI parsing, and the
+//! mini property-test harness. These substitute for serde/clap/proptest,
+//! which are unavailable in the offline crate set (DESIGN.md §8).
+
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod prop;
+pub mod stats;

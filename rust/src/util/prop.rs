@@ -1,0 +1,57 @@
+//! Mini property-based testing harness (proptest is not in the offline
+//! crate set). Runs an invariant over many seeded random cases and, on
+//! failure, reports the seed so the case can be replayed.
+
+use super::prng::XorShift;
+
+/// Number of cases per property (override with SLIDESPARSE_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("SLIDESPARSE_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `f(rng, case_index)` for `cases` seeded cases; panics with the
+/// failing seed on the first violated invariant (assert inside `f`).
+pub fn for_all_cases<F: FnMut(&mut XorShift, usize)>(name: &str, cases: usize, mut f: F) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = XorShift::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng, case)
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed at case {case} (seed {seed:#x})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Run with the default case count.
+pub fn for_all<F: FnMut(&mut XorShift, usize)>(name: &str, f: F) {
+    for_all_cases(name, default_cases(), f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        for_all("u64 parity", |rng, _| {
+            let v = rng.next_u64();
+            assert_eq!(v % 2, v & 1);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn reports_failing_property() {
+        for_all_cases("always false", 4, |_, _| {
+            assert!(false, "intentional");
+        });
+    }
+}

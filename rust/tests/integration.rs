@@ -1,0 +1,204 @@
+//! Integration tests across runtime + coordinator + artifacts: the full
+//! python-AOT -> rust-serve path. Skipped (with a notice) when
+//! `artifacts/` has not been built (`make artifacts`).
+
+use std::path::PathBuf;
+
+use slidesparse::coordinator::{
+    Engine, EngineConfig, PjrtExecutor, Request, SamplingParams, StcExecutor,
+};
+use slidesparse::model::{Backend, BlockConfig, NativeModel};
+use slidesparse::runtime::Runtime;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    d.join("manifest.json").exists().then_some(d)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn golden_prefill_matches_python() {
+    // Execute the slide-variant prefill artifact on the golden input and
+    // compare logits with the values python recorded at build time.
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let m = rt.manifest().clone();
+    let g = &m.golden;
+    let variant = format!("slide{}", m.model.slide_n);
+
+    let weights = m.load_weights(&variant).unwrap();
+    let specs = &m.weights[&variant].tensors;
+    let mut inputs = vec![slidesparse::runtime::literal_i32(&g.tokens, &[g.b, g.s]).unwrap()];
+    for (w, s) in weights.iter().zip(specs.iter()) {
+        inputs.push(slidesparse::runtime::literal_f32(w, &s.shape).unwrap());
+    }
+    let name = format!("prefill_{variant}_b{}_s{}", g.b, g.s);
+    let outs = rt.execute(&name, &inputs).unwrap();
+    let logits = Runtime::to_f32(&outs[0]).unwrap();
+    let v = m.model.vocab;
+    let last = &logits[(g.s - 1) * v..g.s * v];
+
+    // Tolerance note: xla_extension 0.5.1 (rust runtime) and jax 0.8's
+    // bundled XLA produce slightly different f32 transcendentals in the
+    // attention softmax; the int8 GEMM path itself is exact (the
+    // dense-vs-slide bit-identity test below is the strict check).
+    for (i, expect) in g.last_logits_head.iter().enumerate() {
+        assert!(
+            (last[i] - expect).abs() < 2e-2 * (1.0 + expect.abs()),
+            "logit {i}: rust {} vs python {}",
+            last[i],
+            expect
+        );
+    }
+    let sum: f64 = last.iter().map(|v| *v as f64).sum();
+    assert!(
+        (sum - g.last_logits_sum).abs() < 5e-2 * (1.0 + g.last_logits_sum.abs()),
+        "sum {sum} vs {}",
+        g.last_logits_sum
+    );
+    let argmax = last
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    assert_eq!(argmax, g.last_argmax);
+}
+
+#[test]
+fn dense_and_slide_variants_agree_end_to_end() {
+    // The paper's losslessness claim through the ENTIRE serving stack:
+    // greedy generations from the dense backend (on pruned weights) and
+    // the SlideSparse backend are identical.
+    let dir = require_artifacts!();
+    let slide_variant = {
+        let rt = Runtime::new(&dir).unwrap();
+        format!("slide{}", rt.manifest().model.slide_n)
+    };
+    let run = |variant: &str| {
+        let exec = PjrtExecutor::new(&dir, variant).unwrap();
+        let mut engine = Engine::new(exec, EngineConfig::default());
+        for i in 0..3u64 {
+            let prompt: Vec<i32> = (0..10).map(|t| (t * 13 + i as i32 * 7) % 512).collect();
+            engine.submit(Request::new(
+                i,
+                prompt,
+                SamplingParams { max_new_tokens: 6, ..Default::default() },
+            ));
+        }
+        let mut outs = engine.run_to_completion().unwrap();
+        outs.sort_by_key(|o| o.id);
+        outs.into_iter().map(|o| o.tokens).collect::<Vec<_>>()
+    };
+    let dense = run("dense");
+    let slide = run(&slide_variant);
+    assert_eq!(dense, slide, "slide backend must be lossless (bit-exact)");
+    assert_eq!(dense.len(), 3);
+    for t in &dense {
+        assert_eq!(t.len(), 6);
+    }
+}
+
+#[test]
+fn pjrt_decode_matches_prefill_teacher_forcing() {
+    // decode(t_n | prefill KV of t_0..t_{n-1}) must equal prefill logits
+    // at position n-1... realized through the executor interface.
+    let dir = require_artifacts!();
+    let mut exec = PjrtExecutor::new(&dir, "dense").unwrap();
+    use slidesparse::coordinator::executor::{DecodeItem, Executor, PrefillItem};
+
+    let toks: Vec<i32> = (0..9).map(|t| (t * 31 + 5) % 512).collect();
+    // full prefill over 9 tokens
+    let (mut k_full, mut v_full) = (Vec::new(), Vec::new());
+    let mut full = vec![PrefillItem {
+        tokens: &toks,
+        kv_k: &mut k_full,
+        kv_v: &mut v_full,
+        logits: Vec::new(),
+    }];
+    exec.prefill(&mut full).unwrap();
+    let expect = full[0].logits.clone();
+
+    // prefill 8 then decode the 9th
+    let (mut k8, mut v8) = (Vec::new(), Vec::new());
+    let mut pre = vec![PrefillItem {
+        tokens: &toks[..8],
+        kv_k: &mut k8,
+        kv_v: &mut v8,
+        logits: Vec::new(),
+    }];
+    exec.prefill(&mut pre).unwrap();
+    let mut dec = vec![DecodeItem {
+        token: toks[8],
+        pos: 8,
+        kv_k: &mut k8,
+        kv_v: &mut v8,
+        logits: Vec::new(),
+    }];
+    exec.decode(&mut dec).unwrap();
+    for (a, b) in dec[0].logits.iter().zip(expect.iter()) {
+        assert!((a - b).abs() < 2e-3 * (1.0 + b.abs()), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn stc_engine_serves_with_all_backends() {
+    // the native STC path through the full engine, all three backends
+    for backend in [Backend::Dense, Backend::Slide { n: 4 }, Backend::Native24] {
+        let model = NativeModel::generate(
+            BlockConfig { dim: 64, n_heads: 4, ffn: 96 },
+            2,
+            128,
+            64,
+            42,
+            backend,
+        );
+        let mut engine = Engine::new(StcExecutor::new(model), EngineConfig::default());
+        for i in 0..4u64 {
+            engine.submit(Request::new(
+                i,
+                vec![1 + i as i32, 2, 3],
+                SamplingParams { max_new_tokens: 5, ..Default::default() },
+            ));
+        }
+        let outs = engine.run_to_completion().unwrap();
+        assert_eq!(outs.len(), 4, "{backend:?}");
+        for o in outs {
+            assert_eq!(o.tokens.len(), 5);
+            assert!(o.tokens.iter().all(|t| (0..128).contains(t)));
+        }
+    }
+}
+
+#[test]
+fn stc_engine_slide_lossless_vs_dense_pruned() {
+    // native-path losslessness: a model built with Slide{4} and a dense
+    // model over the SAME 6:8-pruned weights generate identical tokens.
+    // (Backend::Slide prunes internally; to compare we prune first and
+    // use prepare paths that share quantization.)
+    use slidesparse::model::Linear;
+    use slidesparse::sparsity::prune::prune_magnitude;
+    use slidesparse::util::prng::XorShift;
+
+    let (o, k) = (48, 64);
+    let mut rng = XorShift::new(3);
+    let w: Vec<f32> = (0..o * k).map(|_| rng.normal()).collect();
+    let pruned = prune_magnitude(&w, o, k, 6, 8);
+    let slide = Linear::prepare(&pruned, o, k, Backend::Slide { n: 4 });
+    let dense = Linear::prepare(&pruned, o, k, Backend::Dense);
+    for m in [1usize, 3, 17] {
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        assert_eq!(slide.forward(&x, m), dense.forward(&x, m), "m={m}");
+    }
+}
