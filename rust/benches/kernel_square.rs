@@ -1,6 +1,10 @@
 //! Paper Fig. 6 + Appendix D.3.1: square-kernel speedup tables.
 //! Measured rows: the CPU STC simulator. Modeled rows: the six-GPU
-//! perfmodel across precisions.
+//! perfmodel across precisions. The thread-scaling sweep (threads x
+//! {dense, 2:4, 6:8} on the 1024^3 workload) prints GB/s + speedup
+//! ratios and writes `BENCH_kernel_square.json` so future PRs get a
+//! perf trajectory.
+use slidesparse::bench::harness::{thread_sweep, write_json};
 use slidesparse::bench::tables;
 use slidesparse::perfmodel::gpus;
 use slidesparse::quant::Precision;
@@ -8,6 +12,15 @@ use slidesparse::quant::Precision;
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
     tables::kernel_square_measured(&[16, 64, 256], 480).print();
+
+    // thread scaling on the acceptance workload (1024x1024x1024, 6:8)
+    let (scaling, json) = tables::kernel_square_scaling(&thread_sweep(), 1024, 1024);
+    scaling.print();
+    match write_json("BENCH_kernel_square.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_kernel_square.json"),
+        Err(e) => eprintln!("could not write BENCH_kernel_square.json: {e}"),
+    }
+
     let ms: &[usize] = if full {
         &[64, 256, 1024, 4096, 8192, 16384]
     } else {

@@ -1,8 +1,12 @@
 //! Timing harness for the paper-table benches (criterion is not in the
 //! offline crate set): warmup + repeated measurement with mean/min/std,
-//! adaptive iteration counts, and aligned table printing.
+//! adaptive iteration counts, aligned table printing, and JSON dumps so
+//! successive PRs can diff a perf trajectory.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 /// One benchmark measurement.
 #[derive(Clone, Copy, Debug)]
@@ -107,6 +111,37 @@ impl Table {
     pub fn print(&self) {
         print!("{}", self.render());
     }
+
+    /// Machine-readable form: {"title", "headers", "rows"} with every
+    /// cell kept as the rendered string.
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("title".to_string(), Json::Str(self.title.clone()));
+        obj.insert(
+            "headers".to_string(),
+            Json::Arr(self.headers.iter().map(|h| Json::Str(h.clone())).collect()),
+        );
+        obj.insert(
+            "rows".to_string(),
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
+                    .collect(),
+            ),
+        );
+        Json::Obj(obj)
+    }
+}
+
+/// The thread counts the scaling benches sweep.
+pub fn thread_sweep() -> Vec<usize> {
+    vec![1, 2, 4, 8]
+}
+
+/// Write a JSON value to `path` (pretty-printed).
+pub fn write_json(path: &str, j: &Json) -> std::io::Result<()> {
+    std::fs::write(path, j.to_string_pretty())
 }
 
 /// Format a speedup cell.
@@ -151,5 +186,23 @@ mod tests {
     fn table_rejects_ragged_rows() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn table_json_roundtrips() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let j = t.to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.req("title").as_str(), Some("demo"));
+        assert_eq!(parsed.req("headers").as_arr().unwrap().len(), 2);
+        assert_eq!(parsed.req("rows").as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn thread_sweep_is_powers_of_two_from_one() {
+        let s = thread_sweep();
+        assert_eq!(s[0], 1);
+        assert!(s.windows(2).all(|w| w[1] == 2 * w[0]));
     }
 }

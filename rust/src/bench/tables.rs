@@ -4,6 +4,9 @@
 //! serving engine; modeled numbers come from `perfmodel` (the six-GPU
 //! substitute). EXPERIMENTS.md records paper-vs-ours for each.
 
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
 use crate::bench::harness::{bench, quick, sx, Table};
 use crate::coordinator::{Engine, EngineConfig, Request, SamplingParams, StcExecutor};
 use crate::model::{by_name, Backend, BlockConfig, Linear, NativeModel};
@@ -11,7 +14,9 @@ use crate::perfmodel::{e2e_speedup, gpus, E2eParams, Gpu};
 use crate::quant::{FusedQuantSlide, Precision};
 use crate::sparsity::pattern::Pattern;
 use crate::sparsity::{pack_matrix, prune};
+use crate::util::json::Json;
 use crate::util::prng::XorShift;
+use crate::util::ThreadPool;
 
 /// The sparsity columns of the paper's main tables.
 pub fn main_patterns() -> Vec<Pattern> {
@@ -88,6 +93,69 @@ pub fn kernel_square_gpu(gpu: &Gpu, p: Precision, ms: &[usize]) -> Table {
         t.row(row);
     }
     t
+}
+
+/// Thread-scaling sweep on the square-kernel workload: effective GB/s
+/// (dense-equivalent bytes m*K + O*K + 4*m*O over wall time, so the
+/// ratio of two cells is their speed ratio) for dense / 2:4 / 6:8 at
+/// each pool width, plus the 6:8-vs-dense and vs-1-thread ratios.
+/// Returns the printable table and a JSON record for the perf
+/// trajectory (`BENCH_kernel_square.json`).
+pub fn kernel_square_scaling(threads: &[usize], ok: usize, m: usize) -> (Table, Json) {
+    let mut t = Table::new(
+        &format!("Square-kernel thread scaling (STC, INT8, M={m}, N=K={ok}) — effective GB/s"),
+        &["threads", "dense GB/s", "2:4 GB/s", "6:8 GB/s", "6:8 vs dense", "dense xT1", "6:8 xT1"],
+    );
+    let mut rng = XorShift::new(19);
+    let w: Vec<f32> = (0..ok * ok).map(|_| rng.normal()).collect();
+    let x: Vec<f32> = (0..m * ok).map(|_| rng.normal()).collect();
+    let backends = [Backend::Dense, Backend::Native24, Backend::Slide { n: 4 }];
+    let mut layers: Vec<Linear> = backends
+        .iter()
+        .map(|b| Linear::prepare(&w, ok, ok, *b))
+        .collect();
+    let bytes = (m * ok + ok * ok + 4 * m * ok) as f64;
+    let gbps = |s: f64| bytes / s / 1e9;
+    let mut t1: Option<[f64; 3]> = None;
+    let mut rows_json = Vec::new();
+    for &nthreads in threads {
+        let pool = Arc::new(ThreadPool::new(nthreads));
+        let mut secs = [0f64; 3];
+        for (li, layer) in layers.iter_mut().enumerate() {
+            layer.set_pool(pool.clone());
+            let layer: &Linear = layer;
+            let meas = bench(1, 0.6, 4, || {
+                std::hint::black_box(layer.forward(&x, m));
+            });
+            secs[li] = meas.min_s;
+        }
+        let base = *t1.get_or_insert(secs);
+        t.row(vec![
+            nthreads.to_string(),
+            format!("{:.2}", gbps(secs[0])),
+            format!("{:.2}", gbps(secs[1])),
+            format!("{:.2}", gbps(secs[2])),
+            sx(secs[0] / secs[2]),
+            sx(base[0] / secs[0]),
+            sx(base[2] / secs[2]),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("threads".to_string(), Json::Num(nthreads as f64));
+        for (key, v) in [("dense_s", secs[0]), ("s24_s", secs[1]), ("s68_s", secs[2])] {
+            row.insert(key.to_string(), Json::Num(v));
+        }
+        row.insert("s68_vs_dense".to_string(), Json::Num(secs[0] / secs[2]));
+        row.insert("s68_x_t1".to_string(), Json::Num(base[2] / secs[2]));
+        rows_json.push(Json::Obj(row));
+    }
+    let mut j = BTreeMap::new();
+    j.insert("bench".to_string(), Json::Str("kernel_square_scaling".to_string()));
+    j.insert("m".to_string(), Json::Num(m as f64));
+    j.insert("k".to_string(), Json::Num(ok as f64));
+    j.insert("o".to_string(), Json::Num(ok as f64));
+    j.insert("dense_equiv_bytes".to_string(), Json::Num(bytes));
+    j.insert("rows".to_string(), Json::Arr(rows_json));
+    (t, Json::Obj(j))
 }
 
 // ---------------------------------------------------------------------
@@ -255,12 +323,26 @@ pub fn engine_throughput(
     prompt_len: usize,
     new_tokens: usize,
 ) -> f64 {
+    engine_throughput_threads(backend, n_requests, prompt_len, new_tokens, 1)
+}
+
+/// `engine_throughput` with a `threads`-lane executor pool (generated
+/// tokens are bit-exact with the serial run; only wall time changes).
+pub fn engine_throughput_threads(
+    backend: Backend,
+    n_requests: usize,
+    prompt_len: usize,
+    new_tokens: usize,
+    threads: usize,
+) -> f64 {
     let model = e2e_model(backend);
+    // Engine::new installs cfg.threads on the executor's pool
     let mut engine = Engine::new(
         StcExecutor::new(model),
         EngineConfig {
             kv_blocks: 2048,
             kv_block_size: 16,
+            threads,
             ..Default::default()
         },
     );
@@ -560,5 +642,20 @@ mod tests {
     fn engine_throughput_runs() {
         let tput = engine_throughput(Backend::Dense, 2, 8, 2);
         assert!(tput > 0.0);
+        let tput2 = engine_throughput_threads(Backend::Dense, 2, 8, 2, 2);
+        assert!(tput2 > 0.0);
+    }
+
+    #[test]
+    fn kernel_square_scaling_table_and_json() {
+        let (t, j) = kernel_square_scaling(&[1, 2], 120, 16);
+        let r = t.render();
+        assert!(r.contains("6:8 vs dense"));
+        let rows = j.req("rows").as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        for row in rows {
+            assert!(row.req("s68_s").as_f64().unwrap() > 0.0);
+            assert!(row.req("s68_x_t1").as_f64().unwrap() > 0.0);
+        }
     }
 }

@@ -60,8 +60,13 @@ impl Config {
         if let Some(v) = j.get("executor").and_then(|v| v.as_str()) {
             cfg.executor = v.to_string();
         }
+        // `threads` rides in EngineConfig so it reaches the executor:
+        // accepted at the top level (the common case) or under "engine"
+        if let Some(v) = j.get("threads").and_then(|v| v.as_usize()) {
+            cfg.engine.threads = v;
+        }
         if let Some(e) = j.get("engine") {
-            let mut ec = EngineConfig::default();
+            let mut ec = EngineConfig { threads: cfg.engine.threads, ..Default::default() };
             if let Some(v) = e.get("kv_blocks").and_then(|v| v.as_usize()) {
                 ec.kv_blocks = v;
             }
@@ -70,6 +75,9 @@ impl Config {
             }
             if let Some(v) = e.get("seed").and_then(|v| v.as_i64()) {
                 ec.seed = v as u64;
+            }
+            if let Some(v) = e.get("threads").and_then(|v| v.as_usize()) {
+                ec.threads = v;
             }
             let mut sc = SchedulerConfig::default();
             if let Some(v) = e.get("max_batch").and_then(|v| v.as_usize()) {
@@ -149,6 +157,24 @@ mod tests {
         assert_eq!(cfg.engine.kv_blocks, 64);
         assert_eq!(cfg.engine.scheduler.max_batch, 4);
         assert!((cfg.engine.scheduler.watermark - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn threads_knob_parses_at_both_levels() {
+        assert_eq!(Config::default().engine.threads, 1);
+        let top = Config::from_json(r#"{"threads": 8}"#).unwrap();
+        assert_eq!(top.engine.threads, 8);
+        // top-level value survives an "engine" object without "threads"
+        let kept = Config::from_json(r#"{"threads": 4, "engine": {"kv_blocks": 32}}"#).unwrap();
+        assert_eq!(kept.engine.threads, 4);
+        assert_eq!(kept.engine.kv_blocks, 32);
+        // nested form wins when both are present
+        let nested =
+            Config::from_json(r#"{"threads": 4, "engine": {"threads": 2}}"#).unwrap();
+        assert_eq!(nested.engine.threads, 2);
+        // 0 = auto (resolved by the pool to the available cores)
+        let auto = Config::from_json(r#"{"threads": 0}"#).unwrap();
+        assert_eq!(auto.engine.threads, 0);
     }
 
     #[test]

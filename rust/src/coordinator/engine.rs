@@ -24,6 +24,12 @@ pub struct EngineConfig {
     pub kv_block_size: usize,
     /// sampling seed (greedy when requests use temperature 0)
     pub seed: u64,
+    /// worker-pool lanes for the executor's GEMM hot path (1 = serial,
+    /// 0 = one per available core); results are bit-exact at any count.
+    /// Authoritative: `Engine::new` installs it on the executor via
+    /// `Executor::set_threads`, overriding however the executor was
+    /// built (a no-op for executors without a pooled hot path).
+    pub threads: usize,
 }
 
 impl Default for EngineConfig {
@@ -33,6 +39,7 @@ impl Default for EngineConfig {
             kv_blocks: 256,
             kv_block_size: 16,
             seed: 0,
+            threads: 1,
         }
     }
 }
@@ -48,7 +55,8 @@ pub struct Engine<E: Executor> {
 }
 
 impl<E: Executor> Engine<E> {
-    pub fn new(executor: E, cfg: EngineConfig) -> Engine<E> {
+    pub fn new(mut executor: E, cfg: EngineConfig) -> Engine<E> {
+        executor.set_threads(cfg.threads);
         let blocks = BlockManager::new(cfg.kv_blocks, cfg.kv_block_size);
         Engine {
             executor,
@@ -396,7 +404,7 @@ mod tests {
                 prefill_token_budget: 64,
                 watermark: 1.0,
             },
-            seed: 0,
+            ..Default::default()
         };
         let mut e = Engine::new(MockExecutor::new(1000, 64), cfg);
         for i in 0..3 {

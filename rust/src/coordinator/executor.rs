@@ -3,7 +3,11 @@
 //! sparse speedups measurable) and the PJRT executor (compiled HLO
 //! artifacts, shape-bucketed) in `pjrt_exec` -- plus a mock for tests.
 
+use std::sync::Arc;
+
 use anyhow::Result;
+
+use crate::util::ThreadPool;
 
 /// One sequence's view of a prefill batch.
 pub struct PrefillItem<'a> {
@@ -45,17 +49,38 @@ pub trait Executor {
     fn decode(&mut self, batch: &mut [DecodeItem]) -> Result<()>;
     /// descriptive label for logs/metrics
     fn label(&self) -> String;
+    /// Install `threads` worker-pool lanes on executors with a pooled
+    /// hot path (default: no-op). `Engine::new` calls this with
+    /// `EngineConfig.threads`, making the config knob authoritative.
+    fn set_threads(&mut self, _threads: usize) {}
 }
 
 /// Native executor over the STC transformer (the fast path for E2E
-/// benches: sparse backends genuinely run fewer MACs here).
+/// benches: sparse backends genuinely run fewer MACs here). With a
+/// multi-lane pool, prefill items fan out across cores (each sequence's
+/// forward is independent) and every linear's GEMM partitions over row
+/// blocks; outputs are bit-exact with the serial executor.
 pub struct StcExecutor {
     pub model: crate::model::NativeModel,
+    pool: Arc<ThreadPool>,
 }
 
 impl StcExecutor {
     pub fn new(model: crate::model::NativeModel) -> StcExecutor {
-        StcExecutor { model }
+        Self::with_threads(model, 1)
+    }
+
+    /// Executor with a `threads`-lane worker pool (1 = serial, 0 = one
+    /// lane per available core), shared by the prefill fan-out and every
+    /// linear layer's GEMM.
+    pub fn with_threads(model: crate::model::NativeModel, threads: usize) -> StcExecutor {
+        let mut exec = StcExecutor { model, pool: ThreadPool::serial() };
+        Executor::set_threads(&mut exec, threads);
+        exec
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
     }
 }
 
@@ -81,14 +106,27 @@ impl Executor for StcExecutor {
     }
 
     fn prefill(&mut self, batch: &mut [PrefillItem]) -> Result<()> {
-        for item in batch {
+        let model = &self.model;
+        let run_item = |item: &mut PrefillItem| {
             if item.kv_k.is_empty() {
-                item.kv_k.resize(self.model.kv_len(), 0.0);
-                item.kv_v.resize(self.model.kv_len(), 0.0);
+                item.kv_k.resize(model.kv_len(), 0.0);
+                item.kv_v.resize(model.kv_len(), 0.0);
             }
-            item.logits =
-                self.model
-                    .forward_tokens(item.tokens, 0, item.kv_k, item.kv_v);
+            item.logits = model.forward_tokens(item.tokens, 0, item.kv_k, item.kv_v);
+        };
+        if self.pool.is_serial() || batch.len() == 1 {
+            for item in batch {
+                run_item(item);
+            }
+        } else {
+            // fan the independent per-sequence forwards across the pool;
+            // their inner GEMMs nest on the same pool (deadlock-free, see
+            // util::pool) and each sequence's math is unchanged
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = batch
+                .iter_mut()
+                .map(|item| Box::new(|| run_item(item)) as Box<dyn FnOnce() + Send + '_>)
+                .collect();
+            self.pool.run(tasks);
         }
         Ok(())
     }
@@ -111,6 +149,15 @@ impl Executor for StcExecutor {
 
     fn label(&self) -> String {
         "stc-native".into()
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        if ThreadPool::resolve(threads) == self.pool.threads() {
+            return; // already at this width; keep the live pool
+        }
+        let pool = Arc::new(ThreadPool::new(threads));
+        self.model.set_pool(&pool);
+        self.pool = pool;
     }
 }
 
@@ -180,5 +227,186 @@ impl Executor for MockExecutor {
 
     fn label(&self) -> String {
         "mock".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Backend, BlockConfig, NativeModel};
+
+    fn tiny_model(backend: Backend) -> NativeModel {
+        NativeModel::generate(
+            BlockConfig { dim: 32, n_heads: 2, ffn: 48 },
+            2,
+            64,
+            32,
+            9,
+            backend,
+        )
+    }
+
+    fn prefill_one(exec: &mut StcExecutor, tokens: &[i32]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        let mut items = vec![PrefillItem {
+            tokens,
+            kv_k: &mut k,
+            kv_v: &mut v,
+            logits: Vec::new(),
+        }];
+        exec.prefill(&mut items).unwrap();
+        let logits = items.pop().unwrap().logits;
+        (logits, k, v)
+    }
+
+    #[test]
+    fn stc_prefill_matches_direct_model_forward() {
+        let mut exec = StcExecutor::new(tiny_model(Backend::Dense));
+        let tokens = [3i32, 11, 40, 7];
+        let (logits, k, _v) = prefill_one(&mut exec, &tokens);
+        assert_eq!(k.len(), exec.model.kv_len(), "prefill must size the KV store");
+        let expect = exec.model.logits(&[3, 11, 40, 7]);
+        assert_eq!(logits, expect, "executor prefill is the model forward");
+    }
+
+    #[test]
+    fn stc_decode_continues_from_prefill_kv() {
+        let mut exec = StcExecutor::new(tiny_model(Backend::Dense));
+        let toks = [5i32, 9, 13];
+        let (_, mut k, mut v) = prefill_one(&mut exec, &toks[..2]);
+        let mut dec = vec![DecodeItem {
+            token: toks[2],
+            pos: 2,
+            kv_k: &mut k,
+            kv_v: &mut v,
+            logits: Vec::new(),
+        }];
+        exec.decode(&mut dec).unwrap();
+        // teacher forcing: decode(t2 | kv(t0,t1)) == prefill(t0..t2)
+        let expect = exec.model.logits(&[5, 9, 13]);
+        for (a, b) in dec[0].logits.iter().zip(expect.iter()) {
+            assert!((a - b).abs() < 2e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn threaded_executor_bit_exact_with_serial() {
+        // same model seed, batch of prefills + a batched decode: the
+        // 4-lane executor must produce byte-identical logits
+        for backend in [Backend::Dense, Backend::Slide { n: 4 }] {
+            let mut serial = StcExecutor::new(tiny_model(backend));
+            let mut pooled = StcExecutor::with_threads(tiny_model(backend), 4);
+            assert_eq!(pooled.threads(), 4);
+            let prompts: Vec<Vec<i32>> =
+                (0..3).map(|i| (0..4).map(|t| i * 7 + t).collect()).collect();
+            let run = |exec: &mut StcExecutor| {
+                let mut kvs: Vec<(Vec<f32>, Vec<f32>)> =
+                    prompts.iter().map(|_| (Vec::new(), Vec::new())).collect();
+                let mut items: Vec<PrefillItem> = prompts
+                    .iter()
+                    .zip(kvs.iter_mut())
+                    .map(|(p, (k, v))| PrefillItem {
+                        tokens: p,
+                        kv_k: k,
+                        kv_v: v,
+                        logits: Vec::new(),
+                    })
+                    .collect();
+                exec.prefill(&mut items).unwrap();
+                let prefill_logits: Vec<Vec<f32>> =
+                    items.into_iter().map(|i| i.logits).collect();
+                let mut dec: Vec<DecodeItem> = kvs
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(i, (k, v))| DecodeItem {
+                        token: i as i32 + 1,
+                        pos: 4,
+                        kv_k: k,
+                        kv_v: v,
+                        logits: Vec::new(),
+                    })
+                    .collect();
+                exec.decode(&mut dec).unwrap();
+                let decode_logits: Vec<Vec<f32>> =
+                    dec.into_iter().map(|i| i.logits).collect();
+                (prefill_logits, decode_logits)
+            };
+            assert_eq!(run(&mut serial), run(&mut pooled), "{backend:?}");
+        }
+    }
+
+    #[test]
+    fn engine_config_threads_is_authoritative() {
+        use crate::coordinator::engine::{Engine, EngineConfig};
+        // the config knob alone must widen the executor's pool
+        let e = Engine::new(
+            StcExecutor::new(tiny_model(Backend::Dense)),
+            EngineConfig { threads: 4, ..Default::default() },
+        );
+        assert_eq!(e.executor.threads(), 4);
+        // and an executor built wide is narrowed back by a serial config
+        let e = Engine::new(
+            StcExecutor::with_threads(tiny_model(Backend::Dense), 4),
+            EngineConfig::default(),
+        );
+        assert_eq!(e.executor.threads(), 1);
+    }
+
+    #[test]
+    fn stc_interface_surface() {
+        let exec = StcExecutor::new(tiny_model(Backend::Dense));
+        assert_eq!(exec.vocab(), 64);
+        assert_eq!(exec.smax(), 32);
+        assert_eq!(exec.max_prompt(), 31);
+        assert_eq!(exec.decode_buckets(), vec![usize::MAX]);
+        assert_eq!(exec.max_prefill_batch(), usize::MAX);
+        assert_eq!(exec.label(), "stc-native");
+        assert_eq!(exec.threads(), 1);
+    }
+
+    #[test]
+    fn mock_counts_calls_and_tracks_kv() {
+        let mut mock = MockExecutor::new(10, 16);
+        assert_eq!(mock.label(), "mock");
+        assert_eq!(mock.kv_len(), 1);
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        let toks = [4i32, 6];
+        let mut items = vec![PrefillItem {
+            tokens: &toks,
+            kv_k: &mut k,
+            kv_v: &mut v,
+            logits: Vec::new(),
+        }];
+        mock.prefill(&mut items).unwrap();
+        assert_eq!(mock.prefill_calls, 1);
+        assert_eq!(k[0], 2.0, "mock kv counts prefilled tokens");
+        let logits = items.pop().unwrap().logits;
+        assert_eq!(logits.iter().position(|v| *v == 1.0), Some(7), "next = last + 1");
+        let mut dec = vec![DecodeItem {
+            token: 7,
+            pos: 2,
+            kv_k: &mut k,
+            kv_v: &mut v,
+            logits: Vec::new(),
+        }];
+        mock.decode(&mut dec).unwrap();
+        assert_eq!(mock.decode_calls, 1);
+        assert_eq!(k[0], 3.0, "decode advances the kv counter");
+        assert_eq!(dec[0].logits.iter().position(|v| *v == 1.0), Some(8));
+    }
+
+    #[test]
+    #[should_panic(expected = "decode before prefill")]
+    fn mock_decode_requires_prefill() {
+        let mut mock = MockExecutor::new(10, 16);
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        let mut dec = vec![DecodeItem {
+            token: 1,
+            pos: 0,
+            kv_k: &mut k,
+            kv_v: &mut v,
+            logits: Vec::new(),
+        }];
+        let _ = mock.decode(&mut dec);
     }
 }

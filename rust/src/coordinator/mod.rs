@@ -10,6 +10,7 @@ pub mod engine;
 pub mod executor;
 pub mod kvcache;
 pub mod metrics;
+#[cfg(feature = "pjrt")]
 pub mod pjrt_exec;
 pub mod request;
 pub mod router;
@@ -19,6 +20,7 @@ pub mod sequence;
 pub use engine::{Engine, EngineConfig};
 pub use executor::{Executor, MockExecutor, StcExecutor};
 pub use kvcache::BlockManager;
+#[cfg(feature = "pjrt")]
 pub use pjrt_exec::PjrtExecutor;
 pub use request::{FinishReason, Request, RequestOutput, SamplingParams};
 pub use router::{Policy, Router};

@@ -12,9 +12,9 @@ use anyhow::{anyhow, Result};
 
 use slidesparse::bench::tables;
 use slidesparse::config::Config;
-use slidesparse::coordinator::{
-    Engine, PjrtExecutor, Request, SamplingParams, StcExecutor,
-};
+#[cfg(feature = "pjrt")]
+use slidesparse::coordinator::PjrtExecutor;
+use slidesparse::coordinator::{Engine, Request, RequestOutput, SamplingParams, StcExecutor};
 use slidesparse::model::Backend;
 use slidesparse::quant::Precision;
 use slidesparse::sparsity::general::Decomposition;
@@ -40,38 +40,29 @@ fn main() -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
-    let cfg = match args.opt("config") {
+    let mut cfg = match args.opt("config") {
         Some(path) => Config::from_file(std::path::Path::new(path))?,
         None => Config::default(),
     };
+    cfg.engine.threads = args.opt_usize("threads", cfg.engine.threads);
     let backend = cfg.backend()?;
     let n_requests = args.opt_usize("requests", 16);
-    println!("serving with sparsity={} executor={}", cfg.sparsity, cfg.executor);
+    println!(
+        "serving with sparsity={} executor={} threads={}",
+        cfg.sparsity, cfg.executor, cfg.engine.threads
+    );
 
-    let outs;
-    let report;
-    if cfg.executor == "pjrt" {
-        let variant = match backend {
-            Backend::Dense => "dense".to_string(),
-            Backend::Slide { n } => format!("slide{n}"),
-            Backend::Native24 => {
-                return Err(anyhow!("pjrt executor ships dense and slide variants"))
-            }
-        };
-        let exec = PjrtExecutor::new(std::path::Path::new(&cfg.artifacts_dir), &variant)?;
-        exec.warmup()?;
-        let mut engine = Engine::new(exec, cfg.engine);
-        submit_demo(&mut engine, n_requests, 512);
-        outs = engine.run_to_completion()?;
-        report = engine.metrics.report();
+    let (outs, report) = if cfg.executor == "pjrt" {
+        serve_pjrt(&cfg, backend, n_requests)?
     } else {
         let model = tables::e2e_model(backend);
         let vocab = model.vocab;
+        // Engine::new installs cfg.engine.threads on the executor
         let mut engine = Engine::new(StcExecutor::new(model), cfg.engine);
         submit_demo(&mut engine, n_requests, vocab);
-        outs = engine.run_to_completion()?;
-        report = engine.metrics.report();
-    }
+        let outs = engine.run_to_completion()?;
+        (outs, engine.metrics.report())
+    };
     println!("finished {} requests", outs.len());
     for o in outs.iter().take(4) {
         println!(
@@ -85,6 +76,40 @@ fn serve(args: &Args) -> Result<()> {
     }
     println!("{report}");
     Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn serve_pjrt(
+    cfg: &Config,
+    backend: Backend,
+    n_requests: usize,
+) -> Result<(Vec<RequestOutput>, String)> {
+    let variant = match backend {
+        Backend::Dense => "dense".to_string(),
+        Backend::Slide { n } => format!("slide{n}"),
+        Backend::Native24 => {
+            return Err(anyhow!("pjrt executor ships dense and slide variants"))
+        }
+    };
+    let exec = PjrtExecutor::new(std::path::Path::new(&cfg.artifacts_dir), &variant)?;
+    exec.warmup()?;
+    let mut engine = Engine::new(exec, cfg.engine);
+    submit_demo(&mut engine, n_requests, 512);
+    let outs = engine.run_to_completion()?;
+    Ok((outs, engine.metrics.report()))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn serve_pjrt(
+    _cfg: &Config,
+    _backend: Backend,
+    _n_requests: usize,
+) -> Result<(Vec<RequestOutput>, String)> {
+    Err(anyhow!(
+        "this build has no PJRT executor: the `pjrt` feature additionally \
+         needs the `xla` crate vendored/patched into rust/Cargo.toml (it is \
+         outside the offline crate set) — use executor = \"stc\" instead"
+    ))
 }
 
 fn submit_demo<E: slidesparse::coordinator::Executor>(

@@ -52,6 +52,14 @@ impl Block {
         }
     }
 
+    /// Install the worker pool on every linear in this block.
+    pub fn set_pool(&mut self, pool: &std::sync::Arc<crate::util::ThreadPool>) {
+        self.wqkv.set_pool(pool.clone());
+        self.wo.set_pool(pool.clone());
+        self.w13.set_pool(pool.clone());
+        self.w2.set_pool(pool.clone());
+    }
+
     /// Forward `s` new rows starting at context position `start`,
     /// reading/writing this block's KV cache slices (`kc`/`vc`, each
     /// [n_heads, smax, head_dim] row-major).
@@ -188,6 +196,14 @@ impl NativeModel {
 
     pub fn n_layers(&self) -> usize {
         self.blocks.len()
+    }
+
+    /// Install the worker pool on every linear in the model. Generation
+    /// is bit-exact with the serial model at any thread count.
+    pub fn set_pool(&mut self, pool: &std::sync::Arc<crate::util::ThreadPool>) {
+        for b in &mut self.blocks {
+            b.set_pool(pool);
+        }
     }
 
     /// Per-layer KV cache stride in the flat per-sequence store

@@ -100,6 +100,15 @@ impl Linear {
         self.backend
     }
 
+    /// Install the worker pool the backend GEMMs partition over
+    /// (bit-exact with serial execution at any thread count).
+    pub fn set_pool(&mut self, pool: std::sync::Arc<crate::util::ThreadPool>) {
+        match &mut self.inner {
+            Inner::Dense(l) => l.set_pool(pool),
+            Inner::Slide(l) => l.set_pool(pool),
+        }
+    }
+
     /// Serve: y [m, o] from x [m, k].
     pub fn forward(&self, x: &[f32], m: usize) -> Vec<f32> {
         assert_eq!(x.len(), m * self.k);

@@ -93,4 +93,60 @@ mod tests {
         assert_eq!(to_fp8_e4m3(v), v);
         assert_eq!(to_fp8_e4m3(v * 0.4), 0.0); // rounds to zero
     }
+
+    #[test]
+    fn all_zero_row_gives_safe_nonzero_scale() {
+        // an all-zero token row must not divide by zero or emit NaN:
+        // the absmax floor keeps the scale finite and strictly positive
+        let x = [0.0f32; 32];
+        let mut q = [f32::NAN; 32];
+        let s = quantize_row_fp8(&x, &mut q);
+        assert!(s.is_finite() && s > 0.0, "scale {s}");
+        assert!(q.iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn quantize_row_saturates_outliers_not_the_row() {
+        // one huge outlier: it maps to +/-FP8_MAX exactly and every
+        // dequantized value stays finite and within the input range
+        let x = [1.0f32, -2.0, 1e3, -1e3, 0.25, 0.0];
+        let mut q = [0f32; 6];
+        let s = quantize_row_fp8(&x, &mut q);
+        assert_eq!(q[2], FP8_MAX);
+        assert_eq!(q[3], -FP8_MAX);
+        for (xi, qi) in x.iter().zip(q.iter()) {
+            let back = qi * s;
+            assert!(back.is_finite());
+            assert!(back.abs() <= x[2].abs() * (1.0 + 1e-6), "{xi} -> {back}");
+        }
+    }
+
+    #[test]
+    fn rounding_is_sign_symmetric() {
+        prop::for_all("fp8 odd symmetry", |rng: &mut XorShift, _| {
+            let v = rng.range_f32(-500.0, 500.0);
+            assert_eq!(to_fp8_e4m3(-v), -to_fp8_e4m3(v), "{v}");
+        });
+    }
+
+    #[test]
+    fn nan_propagates_zero_preserved() {
+        assert!(to_fp8_e4m3(f32::NAN).is_nan());
+        assert_eq!(to_fp8_e4m3(0.0), 0.0);
+        assert_eq!(to_fp8_e4m3(-0.0), 0.0);
+        // infinities saturate (E4M3 has no inf encoding)
+        assert_eq!(to_fp8_e4m3(f32::INFINITY), FP8_MAX);
+        assert_eq!(to_fp8_e4m3(f32::NEG_INFINITY), -FP8_MAX);
+    }
+
+    #[test]
+    fn values_land_on_the_e4m3_grid() {
+        // every output must be exactly representable: quantizing twice
+        // changes nothing (idempotence over the whole dynamic range)
+        prop::for_all("fp8 idempotent", |rng: &mut XorShift, _| {
+            let v = rng.normal() * 100.0;
+            let q = to_fp8_e4m3(v);
+            assert_eq!(to_fp8_e4m3(q), q, "{v} -> {q}");
+        });
+    }
 }

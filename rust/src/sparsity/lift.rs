@@ -103,4 +103,37 @@ mod tests {
         let y = plan.lift_row(&x);
         assert_eq!(y, vec![0, 1, 2, 3, 2, 3, 4, 5, 4, 5, 6, 7]);
     }
+
+    #[test]
+    fn prop_lift_row_into_matches_naive_gather() {
+        // the unrolled window-copy against the definition out[j] = x[idx[j]],
+        // into a DIRTY buffer (no reliance on pre-zeroed output)
+        prop::for_all("lift_row_into == naive gather", |rng: &mut XorShift, case| {
+            let n = 2 + case % 7; // N in 2..=8 (N=2 is the identity plan)
+            let k = 2 * n * (1 + rng.below(5));
+            let plan = LiftPlan::new(k, n);
+            let x: Vec<i8> = (0..k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let mut out = vec![99i8; plan.k_packed];
+            plan.lift_row_into(&x, &mut out);
+            let naive: Vec<i8> = plan.indices().iter().map(|i| x[*i as usize]).collect();
+            assert_eq!(out, naive);
+        });
+    }
+
+    #[test]
+    fn lift_indices_stride_two_window_layout() {
+        // windows advance by 2 source elements and copy 4: window l of
+        // group g starts at 2N*g + 2*l (paper Eq. 4)
+        for n in [3usize, 4, 8] {
+            let k = 2 * n * 3;
+            let plan = LiftPlan::new(k, n);
+            let idx = plan.indices();
+            for (w, win) in idx.chunks(4).enumerate() {
+                let g = w / (n - 1);
+                let l = w % (n - 1);
+                let b = (2 * n * g + 2 * l) as u32;
+                assert_eq!(win, &[b, b + 1, b + 2, b + 3][..], "N={n} window {w}");
+            }
+        }
+    }
 }

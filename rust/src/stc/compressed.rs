@@ -95,12 +95,21 @@ impl Compressed24 {
 pub fn gemm_compressed_i8_mtile(x: &[i8], w: &Compressed24, m: usize) -> Vec<i32> {
     use crate::stc::dense::{transpose_tiles_i8, MT};
     let kp = w.k_packed;
-    let half = kp / 2;
     assert_eq!(x.len(), m * kp);
-    let o = w.rows;
     let xt = transpose_tiles_i8(x, m, kp);
-    let mut y = vec![0i32; m * o];
-    for tile in 0..m.div_ceil(MT) {
+    let mut y = vec![0i32; m * w.rows];
+    cmtile_block(&xt, w, m, 0, m.div_ceil(MT), &mut y);
+    y
+}
+
+/// M-tile block worker shared by the serial and pooled compressed
+/// kernels: tiles [t0, t1) into the output chunk covering their rows.
+fn cmtile_block(xt: &[i8], w: &Compressed24, m: usize, t0: usize, t1: usize, y: &mut [i32]) {
+    use crate::stc::dense::MT;
+    let kp = w.k_packed;
+    let half = kp / 2;
+    let o = w.rows;
+    for tile in t0..t1 {
         let xtile = &xt[tile * kp * MT..(tile + 1) * kp * MT];
         let rows = (m - tile * MT).min(MT);
         for c in 0..o {
@@ -116,10 +125,40 @@ pub fn gemm_compressed_i8_mtile(x: &[i8], w: &Compressed24, m: usize) -> Vec<i32
                 }
             }
             for lane in 0..rows {
-                y[(tile * MT + lane) * o + c] = acc[lane];
+                y[(tile * MT + lane - t0 * MT) * o + c] = acc[lane];
             }
         }
     }
+}
+
+/// Pooled M-tiled compressed GEMM: M-tiles partition into contiguous
+/// row blocks, one per pool lane. Bit-exact with
+/// `gemm_compressed_i8_mtile` at any thread count.
+pub fn gemm_compressed_i8_mtile_pool(
+    pool: &crate::util::ThreadPool,
+    x: &[i8],
+    w: &Compressed24,
+    m: usize,
+) -> Vec<i32> {
+    use crate::stc::dense::{transpose_tiles_i8, MT};
+    if pool.is_serial() {
+        return gemm_compressed_i8_mtile(x, w, m);
+    }
+    let kp = w.k_packed;
+    assert_eq!(x.len(), m * kp);
+    let o = w.rows;
+    let xt = transpose_tiles_i8(x, m, kp);
+    let tiles = m.div_ceil(MT);
+    let ranges = crate::util::pool::partition(tiles, pool.threads());
+    let lens: Vec<usize> = ranges
+        .iter()
+        .map(|&(t0, t1)| ((t1 * MT).min(m) - t0 * MT) * o)
+        .collect();
+    let mut y = vec![0i32; m * o];
+    crate::util::pool::run_over_chunks(pool, &mut y, &lens, |i, chunk| {
+        let (t0, t1) = ranges[i];
+        cmtile_block(&xt, w, m, t0, t1, chunk);
+    });
     y
 }
 
@@ -127,12 +166,20 @@ pub fn gemm_compressed_i8_mtile(x: &[i8], w: &Compressed24, m: usize) -> Vec<i32
 /// the 2-bit metadata directly so weight-byte traffic is vals (kp/2) +
 /// meta (kp/4) instead of kp dense bytes.
 pub fn gemv_compressed_i8(x: &[i8], w: &Compressed24) -> Vec<i32> {
+    assert_eq!(x.len(), w.k_packed);
+    let mut y = vec![0i32; w.rows];
+    gemv_rows_block(x, w, 0, &mut y);
+    y
+}
+
+/// Output-row block worker shared by the serial and pooled GEMV: rows
+/// [c0, c0+y.len()) of the metadata-walking decode kernel.
+fn gemv_rows_block(x: &[i8], w: &Compressed24, c0: usize, y: &mut [i32]) {
     let kp = w.k_packed;
     let half = kp / 2;
     let wins = kp / 4;
-    assert_eq!(x.len(), kp);
-    let mut y = vec![0i32; w.rows];
-    for c in 0..w.rows {
+    for (i, yc) in y.iter_mut().enumerate() {
+        let c = c0 + i;
         let vs = &w.vals[c * half..(c + 1) * half];
         let ms = &w.meta[c * wins..(c + 1) * wins];
         let mut acc = 0i32;
@@ -143,9 +190,50 @@ pub fn gemv_compressed_i8(x: &[i8], w: &Compressed24) -> Vec<i32> {
             acc += vs[2 * win] as i32 * x[base + p0] as i32;
             acc += vs[2 * win + 1] as i32 * x[base + p1] as i32;
         }
-        y[c] = acc;
+        *yc = acc;
     }
+}
+
+/// Pooled batch of compressed GEMVs: `x` holds `m` lifted rows and the
+/// whole (row, output-row-block) task grid runs under ONE fork-join, so
+/// small-m batches pay a single barrier instead of one per row.
+/// Bit-exact with `m` serial `gemv_compressed_i8` calls concatenated.
+pub fn gemv_compressed_i8_batch_pool(
+    pool: &crate::util::ThreadPool,
+    x: &[i8],
+    w: &Compressed24,
+    m: usize,
+) -> Vec<i32> {
+    let kp = w.k_packed;
+    assert_eq!(x.len(), m * kp);
+    let o = w.rows;
+    let mut y = vec![0i32; m * o];
+    if pool.is_serial() {
+        for (r, yr) in y.chunks_mut(o).enumerate() {
+            gemv_rows_block(&x[r * kp..(r + 1) * kp], w, 0, yr);
+        }
+        return y;
+    }
+    let ranges = crate::util::pool::partition(o, pool.threads());
+    let nr = ranges.len();
+    // row-major (row, output-row-block) grid, one fork-join for all rows
+    let lens: Vec<usize> = (0..m * nr).map(|i| ranges[i % nr].1 - ranges[i % nr].0).collect();
+    crate::util::pool::run_over_chunks(pool, &mut y, &lens, |i, chunk| {
+        let r = i / nr;
+        gemv_rows_block(&x[r * kp..(r + 1) * kp], w, ranges[i % nr].0, chunk);
+    });
     y
+}
+
+/// Pooled compressed GEMV: the single-row view of
+/// `gemv_compressed_i8_batch_pool` (one token, output rows partitioned
+/// across lanes). Bit-exact with `gemv_compressed_i8`.
+pub fn gemv_compressed_i8_pool(
+    pool: &crate::util::ThreadPool,
+    x: &[i8],
+    w: &Compressed24,
+) -> Vec<i32> {
+    gemv_compressed_i8_batch_pool(pool, x, w, 1)
 }
 
 /// Compressed GEMM: y[m,o] = sum over stored pairs. x is the *lifted*
@@ -254,6 +342,29 @@ mod tests {
             let c = Compressed24::from_dense(&w, o, kp).unwrap();
             assert_eq!(gemv_compressed_i8(&x, &c), gemm_compressed_i8(&x, &c, 1));
         });
+    }
+
+    #[test]
+    fn pooled_compressed_kernels_match_serial() {
+        use crate::util::ThreadPool;
+        let mut rng = XorShift::new(31);
+        let pool = ThreadPool::new(4);
+        for (m, o, kp) in [(1usize, 11, 16), (6, 30, 32), (37, 9, 48)] {
+            let mut w = Vec::new();
+            for _ in 0..o {
+                w.extend(random_24_row(&mut rng, kp));
+            }
+            let c = Compressed24::from_dense(&w, o, kp).unwrap();
+            let x: Vec<i8> = (0..m * kp).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            assert_eq!(
+                gemm_compressed_i8_mtile_pool(&pool, &x, &c, m),
+                gemm_compressed_i8_mtile(&x, &c, m)
+            );
+            assert_eq!(
+                gemv_compressed_i8_pool(&pool, &x[..kp], &c),
+                gemv_compressed_i8(&x[..kp], &c)
+            );
+        }
     }
 
     #[test]

@@ -31,15 +31,22 @@ pub fn transpose_tiles_i8(x: &[i8], m: usize, k: usize) -> Vec<i8> {
     xt
 }
 
-/// M-tiled dense int8 GEMM: same inner structure as the compressed
-/// kernel (broadcast weight x MT contiguous activations) so measured
-/// sparse/dense ratios track the MAC reduction.
-pub fn gemm_i8_mtile(x: &[i8], w: &[i8], m: usize, o: usize, k: usize) -> Vec<i32> {
-    assert_eq!(x.len(), m * k);
-    assert_eq!(w.len(), o * k);
-    let xt = transpose_tiles_i8(x, m, k);
-    let mut y = vec![0i32; m * o];
-    for tile in 0..m.div_ceil(MT) {
+/// M-tile block worker shared by the serial and pooled kernels: computes
+/// tiles [t0, t1) into `y`, the output chunk covering exactly the rows of
+/// those tiles. Per-element accumulation order is independent of the
+/// block split, so any partitioning is bit-exact with the full-range run.
+#[allow(clippy::too_many_arguments)] // private hot-loop worker; grouping dims would add a struct for one caller pair
+fn mtile_block(
+    xt: &[i8],
+    w: &[i8],
+    m: usize,
+    o: usize,
+    k: usize,
+    t0: usize,
+    t1: usize,
+    y: &mut [i32],
+) {
+    for tile in t0..t1 {
         let xtile = &xt[tile * k * MT..(tile + 1) * k * MT];
         let rows = (m - tile * MT).min(MT);
         for c in 0..o {
@@ -53,11 +60,92 @@ pub fn gemm_i8_mtile(x: &[i8], w: &[i8], m: usize, o: usize, k: usize) -> Vec<i3
                 }
             }
             for lane in 0..rows {
-                y[(tile * MT + lane) * o + c] = acc[lane];
+                y[(tile * MT + lane - t0 * MT) * o + c] = acc[lane];
             }
         }
     }
+}
+
+/// M-tiled dense int8 GEMM: same inner structure as the compressed
+/// kernel (broadcast weight x MT contiguous activations) so measured
+/// sparse/dense ratios track the MAC reduction.
+pub fn gemm_i8_mtile(x: &[i8], w: &[i8], m: usize, o: usize, k: usize) -> Vec<i32> {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), o * k);
+    let xt = transpose_tiles_i8(x, m, k);
+    let mut y = vec![0i32; m * o];
+    mtile_block(&xt, w, m, o, k, 0, m.div_ceil(MT), &mut y);
     y
+}
+
+/// Pooled M-tiled dense int8 GEMM: M-tiles are partitioned into
+/// contiguous row blocks, one per pool lane. Bit-exact with
+/// `gemm_i8_mtile` at any thread count.
+pub fn gemm_i8_mtile_pool(
+    pool: &crate::util::ThreadPool,
+    x: &[i8],
+    w: &[i8],
+    m: usize,
+    o: usize,
+    k: usize,
+) -> Vec<i32> {
+    if pool.is_serial() {
+        return gemm_i8_mtile(x, w, m, o, k);
+    }
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), o * k);
+    let xt = transpose_tiles_i8(x, m, k);
+    let tiles = m.div_ceil(MT);
+    let ranges = crate::util::pool::partition(tiles, pool.threads());
+    let lens: Vec<usize> = ranges
+        .iter()
+        .map(|&(t0, t1)| ((t1 * MT).min(m) - t0 * MT) * o)
+        .collect();
+    let mut y = vec![0i32; m * o];
+    crate::util::pool::run_over_chunks(pool, &mut y, &lens, |i, chunk| {
+        let (t0, t1) = ranges[i];
+        mtile_block(&xt, w, m, o, k, t0, t1, chunk);
+    });
+    y
+}
+
+/// Output-column block worker shared by the serial and pooled k-inner
+/// kernels: one activation row `xr` against weight rows [c0, c0+yr.len()),
+/// register-blocked 1x4 so LLVM autovectorizes the widening
+/// multiply-accumulate. Each column accumulates in fixed t-order, so any
+/// column split is bit-exact with the full-range run.
+fn row_cols_block(xr: &[i8], w: &[i8], k: usize, c0: usize, yr: &mut [i32]) {
+    let cn = yr.len();
+    let c4 = cn - cn % 4;
+    let mut c = 0;
+    while c < c4 {
+        let w0 = &w[(c0 + c) * k..(c0 + c + 1) * k];
+        let w1 = &w[(c0 + c + 1) * k..(c0 + c + 2) * k];
+        let w2 = &w[(c0 + c + 2) * k..(c0 + c + 3) * k];
+        let w3 = &w[(c0 + c + 3) * k..(c0 + c + 4) * k];
+        let (mut a0, mut a1, mut a2, mut a3) = (0i32, 0i32, 0i32, 0i32);
+        for t in 0..k {
+            let xv = xr[t] as i32;
+            a0 += xv * w0[t] as i32;
+            a1 += xv * w1[t] as i32;
+            a2 += xv * w2[t] as i32;
+            a3 += xv * w3[t] as i32;
+        }
+        yr[c] = a0;
+        yr[c + 1] = a1;
+        yr[c + 2] = a2;
+        yr[c + 3] = a3;
+        c += 4;
+    }
+    while c < cn {
+        let wc = &w[(c0 + c) * k..(c0 + c + 1) * k];
+        let mut acc = 0i32;
+        for t in 0..k {
+            acc += xr[t] as i32 * wc[t] as i32;
+        }
+        yr[c] = acc;
+        c += 1;
+    }
 }
 
 /// y[m,o] = sum_k x[m,k] * w[o,k]  -- int8 inputs, int32 accumulation.
@@ -66,42 +154,37 @@ pub fn gemm_i8(x: &[i8], w: &[i8], m: usize, o: usize, k: usize) -> Vec<i32> {
     assert_eq!(x.len(), m * k);
     assert_eq!(w.len(), o * k);
     let mut y = vec![0i32; m * o];
-    // register-block 1x4 over output columns; unrolled k-loop lets LLVM
-    // autovectorize the widening multiply-accumulate.
-    let o4 = o - o % 4;
     for r in 0..m {
-        let xr = &x[r * k..(r + 1) * k];
-        let yr = &mut y[r * o..(r + 1) * o];
-        let mut c = 0;
-        while c < o4 {
-            let w0 = &w[c * k..(c + 1) * k];
-            let w1 = &w[(c + 1) * k..(c + 2) * k];
-            let w2 = &w[(c + 2) * k..(c + 3) * k];
-            let w3 = &w[(c + 3) * k..(c + 4) * k];
-            let (mut a0, mut a1, mut a2, mut a3) = (0i32, 0i32, 0i32, 0i32);
-            for t in 0..k {
-                let xv = xr[t] as i32;
-                a0 += xv * w0[t] as i32;
-                a1 += xv * w1[t] as i32;
-                a2 += xv * w2[t] as i32;
-                a3 += xv * w3[t] as i32;
-            }
-            yr[c] = a0;
-            yr[c + 1] = a1;
-            yr[c + 2] = a2;
-            yr[c + 3] = a3;
-            c += 4;
-        }
-        while c < o {
-            let wc = &w[c * k..(c + 1) * k];
-            let mut acc = 0i32;
-            for t in 0..k {
-                acc += xr[t] as i32 * wc[t] as i32;
-            }
-            yr[c] = acc;
-            c += 1;
-        }
+        row_cols_block(&x[r * k..(r + 1) * k], w, k, 0, &mut y[r * o..(r + 1) * o]);
     }
+    y
+}
+
+/// Pooled k-inner dense int8 GEMM for small m (the decode path): every
+/// (row, output-column block) pair becomes one task, so even an m=1 GEMV
+/// partitions over output rows. Bit-exact with `gemm_i8`.
+pub fn gemm_i8_pool(
+    pool: &crate::util::ThreadPool,
+    x: &[i8],
+    w: &[i8],
+    m: usize,
+    o: usize,
+    k: usize,
+) -> Vec<i32> {
+    if pool.is_serial() {
+        return gemm_i8(x, w, m, o, k);
+    }
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), o * k);
+    let ranges = crate::util::pool::partition(o, pool.threads());
+    let nr = ranges.len();
+    // row-major (row, column-block) grid: chunks of row r are consecutive
+    let lens: Vec<usize> = (0..m * nr).map(|i| ranges[i % nr].1 - ranges[i % nr].0).collect();
+    let mut y = vec![0i32; m * o];
+    crate::util::pool::run_over_chunks(pool, &mut y, &lens, |i, chunk| {
+        let r = i / nr;
+        row_cols_block(&x[r * k..(r + 1) * k], w, k, ranges[i % nr].0, chunk);
+    });
     y
 }
 
@@ -192,6 +275,22 @@ mod tests {
             let x: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
             let w: Vec<i8> = (0..o * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
             assert_eq!(gemm_i8(&x, &w, m, o, k), naive_i8(&x, &w, m, o, k));
+        }
+    }
+
+    #[test]
+    fn pooled_kernels_match_serial() {
+        use crate::util::ThreadPool;
+        let mut rng = XorShift::new(21);
+        let pool = ThreadPool::new(4);
+        for (m, o, k) in [(1, 9, 16), (7, 33, 32), (40, 17, 64)] {
+            let x: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let w: Vec<i8> = (0..o * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            assert_eq!(
+                gemm_i8_mtile_pool(&pool, &x, &w, m, o, k),
+                gemm_i8_mtile(&x, &w, m, o, k)
+            );
+            assert_eq!(gemm_i8_pool(&pool, &x, &w, m, o, k), gemm_i8(&x, &w, m, o, k));
         }
     }
 

@@ -12,9 +12,10 @@ pub mod dense;
 pub mod slide_gemm;
 
 pub use compressed::{
-    gemm_compressed_i8, gemm_compressed_i8_mtile, gemv_compressed_i8, Compressed24,
+    gemm_compressed_i8, gemm_compressed_i8_mtile, gemm_compressed_i8_mtile_pool,
+    gemv_compressed_i8, gemv_compressed_i8_batch_pool, gemv_compressed_i8_pool, Compressed24,
 };
-pub use dense::{gemm_f32, gemm_i8, gemm_i8_mtile};
+pub use dense::{gemm_f32, gemm_i8, gemm_i8_mtile, gemm_i8_mtile_pool, gemm_i8_pool};
 pub use slide_gemm::{DenseLinear, SlideLinear};
 
 /// MAC counts for the cost accounting used by benches.

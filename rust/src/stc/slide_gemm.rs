@@ -5,15 +5,21 @@
 //! backend the serving engine uses when it is not executing PJRT
 //! artifacts.
 
+use std::sync::Arc;
+
 use crate::quant::fused::FusedQuantSlide;
 use crate::quant::int8::{dequantize, quantize_per_token, quantize_weight_per_channel};
 use crate::sparsity::packer::pack_matrix;
 use crate::sparsity::prune::prune_magnitude;
-use crate::stc::compressed::{gemm_compressed_i8_mtile, gemv_compressed_i8, Compressed24};
-use crate::stc::dense::gemm_i8_mtile;
+use crate::stc::compressed::{
+    gemm_compressed_i8_mtile_pool, gemv_compressed_i8_batch_pool, Compressed24,
+};
+use crate::stc::dense::{gemm_i8_mtile_pool, gemm_i8_pool};
+use crate::util::ThreadPool;
 
 /// A prepared SlideSparse linear layer: offline-packed + compressed
-/// weights and the fused activation kernel.
+/// weights and the fused activation kernel. Executes on `pool` (the
+/// process-serial pool unless `set_pool` installed a parallel one).
 pub struct SlideLinear {
     pub o: usize,
     pub k: usize,
@@ -21,6 +27,7 @@ pub struct SlideLinear {
     pub weights: Compressed24,
     pub w_scales: Vec<f32>,
     pub kernel: FusedQuantSlide,
+    pool: Arc<ThreadPool>,
 }
 
 impl SlideLinear {
@@ -42,6 +49,7 @@ impl SlideLinear {
             weights,
             w_scales: ws,
             kernel: FusedQuantSlide::new(k, n),
+            pool: ThreadPool::serial(),
         }
     }
 
@@ -53,7 +61,21 @@ impl SlideLinear {
         let packed_i8: Vec<i8> = packed.data.iter().map(|v| *v as i8).collect();
         let weights = Compressed24::from_dense(&packed_i8, o, packed.k_packed)
             .expect("packed weights are 2:4 compliant");
-        SlideLinear { o, k, n, weights, w_scales: ws, kernel: FusedQuantSlide::new(k, n) }
+        SlideLinear {
+            o,
+            k,
+            n,
+            weights,
+            w_scales: ws,
+            kernel: FusedQuantSlide::new(k, n),
+            pool: ThreadPool::serial(),
+        }
+    }
+
+    /// Install the worker pool the GEMM hot path partitions over
+    /// (bit-exact with serial execution at any thread count).
+    pub fn set_pool(&mut self, pool: Arc<ThreadPool>) {
+        self.pool = pool;
     }
 
     /// Online phase: y [m, o] = dequant(compressed_gemm(fused(x))).
@@ -61,17 +83,13 @@ impl SlideLinear {
     /// larger m takes the M-tiled compute kernel.
     pub fn forward(&self, x: &[f32], m: usize) -> Vec<f32> {
         let (xq, xs) = self.kernel.run(x, m);
-        let kp = self.kernel.k_packed();
         let acc = if m < crate::stc::dense::MT / 2 {
-            // small batches: metadata-walking GEMV per row (no M-tile
+            // small batches: metadata-walking GEMVs partitioned over
+            // output rows, all rows under one fork-join (no M-tile
             // padding waste; matches the dense small-m routing)
-            let mut acc = Vec::with_capacity(m * self.o);
-            for r in 0..m {
-                acc.extend(gemv_compressed_i8(&xq[r * kp..(r + 1) * kp], &self.weights));
-            }
-            acc
+            gemv_compressed_i8_batch_pool(&self.pool, &xq, &self.weights, m)
         } else {
-            gemm_compressed_i8_mtile(&xq, &self.weights, m)
+            gemm_compressed_i8_mtile_pool(&self.pool, &xq, &self.weights, m)
         };
         dequantize(&acc, m, self.o, &xs, &self.w_scales)
     }
@@ -89,22 +107,29 @@ pub struct DenseLinear {
     pub k: usize,
     pub wq: Vec<i8>,
     pub w_scales: Vec<f32>,
+    pool: Arc<ThreadPool>,
 }
 
 impl DenseLinear {
     pub fn prepare(w: &[f32], o: usize, k: usize) -> DenseLinear {
         let (wq, ws) = quantize_weight_per_channel(w, o, k);
-        DenseLinear { o, k, wq, w_scales: ws }
+        DenseLinear { o, k, wq, w_scales: ws, pool: ThreadPool::serial() }
+    }
+
+    /// Install the worker pool the GEMM hot path partitions over.
+    pub fn set_pool(&mut self, pool: Arc<ThreadPool>) {
+        self.pool = pool;
     }
 
     pub fn forward(&self, x: &[f32], m: usize) -> Vec<f32> {
         let (xq, xs) = quantize_per_token(x, m, self.k);
-        // small batches: the k-inner blocked kernel (no M-tile padding
-        // waste); larger batches: the M-tiled kernel
+        // small batches: the k-inner blocked kernel partitioned over
+        // output columns (no M-tile padding waste); larger batches: the
+        // M-tiled kernel partitioned over row blocks
         let acc = if m < crate::stc::dense::MT / 2 {
-            crate::stc::dense::gemm_i8(&xq, &self.wq, m, self.o, self.k)
+            gemm_i8_pool(&self.pool, &xq, &self.wq, m, self.o, self.k)
         } else {
-            gemm_i8_mtile(&xq, &self.wq, m, self.o, self.k)
+            gemm_i8_mtile_pool(&self.pool, &xq, &self.wq, m, self.o, self.k)
         };
         dequantize(&acc, m, self.o, &xs, &self.w_scales)
     }
@@ -155,6 +180,27 @@ mod tests {
                     y[r * o + c]
                 );
             }
+        }
+    }
+
+    #[test]
+    fn pooled_forward_bit_exact_with_serial() {
+        // both routing branches (GEMV decode path and M-tiled prefill
+        // path) must be unchanged by the worker pool
+        let mut rng = XorShift::new(77);
+        let (o, k, n) = (24, 48, 4);
+        let w: Vec<f32> = (0..o * k).map(|_| rng.normal()).collect();
+        let serial_s = SlideLinear::prepare(&w, o, k, n);
+        let serial_d = DenseLinear::prepare(&w, o, k);
+        let mut pooled_s = SlideLinear::prepare(&w, o, k, n);
+        let mut pooled_d = DenseLinear::prepare(&w, o, k);
+        let pool = Arc::new(ThreadPool::new(4));
+        pooled_s.set_pool(pool.clone());
+        pooled_d.set_pool(pool);
+        for m in [1usize, 3, 17] {
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            assert_eq!(serial_s.forward(&x, m), pooled_s.forward(&x, m), "slide m={m}");
+            assert_eq!(serial_d.forward(&x, m), pooled_d.forward(&x, m), "dense m={m}");
         }
     }
 

@@ -1,9 +1,13 @@
-//! Shared infrastructure: JSON, PRNGs, statistics, CLI parsing, and the
-//! mini property-test harness. These substitute for serde/clap/proptest,
-//! which are unavailable in the offline crate set (DESIGN.md §8).
+//! Shared infrastructure: JSON, PRNGs, statistics, CLI parsing, the
+//! mini property-test harness, and the scoped worker pool. These
+//! substitute for serde/clap/proptest/rayon, which are unavailable in
+//! the offline crate set (DESIGN.md §8).
 
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod prng;
 pub mod prop;
 pub mod stats;
+
+pub use pool::ThreadPool;

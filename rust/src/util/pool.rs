@@ -1,0 +1,399 @@
+//! Scoped fork-join thread pool (rayon is not in the offline crate set).
+//!
+//! A fixed set of `std::thread` workers drains a shared FIFO of jobs.
+//! `run` submits a batch of scoped closures and blocks until every one
+//! of them has finished, so the closures may borrow from the caller's
+//! stack (the lifetime is erased internally, soundly, because `run`
+//! never returns while a job is pending). The calling thread *helps*:
+//! while waiting it pops and executes queued jobs itself, which both
+//! uses the caller as the N-th lane and makes nested `run` calls (a
+//! pooled prefill item whose inner GEMMs are themselves pooled)
+//! deadlock-free — a nested caller can always make progress on its own
+//! sub-jobs.
+//!
+//! Determinism: the pool assigns *which thread* runs a job, never *what*
+//! the job computes. The GEMM kernels partition output rows into
+//! disjoint blocks whose per-element accumulation order is identical to
+//! the single-threaded kernel, so pooled results are bit-exact with
+//! serial results at any thread count (gated by `tests/conformance.rs`).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// One scoped task, lifetime-erased for the queue.
+type Job = (Box<dyn FnOnce() + Send>, Arc<BatchState>);
+
+/// Completion state of one `run` call.
+struct BatchState {
+    remaining: AtomicUsize,
+    panicked: AtomicBool,
+}
+
+struct Inner {
+    queue: Mutex<VecDeque<Job>>,
+    /// workers wait here for jobs
+    work_cv: Condvar,
+    /// callers wait here for their batch to drain
+    done_cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+impl Inner {
+    fn exec(&self, (job, batch): Job) {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+        if result.is_err() {
+            batch.panicked.store(true, Ordering::Release);
+        }
+        if batch.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // lock-then-notify so a caller cannot check `remaining` and
+            // block between our decrement and our notification
+            drop(self.queue.lock().unwrap());
+            self.done_cv.notify_all();
+        }
+    }
+
+    fn worker(self: Arc<Self>) {
+        loop {
+            let job = {
+                let mut q = self.queue.lock().unwrap();
+                loop {
+                    if let Some(j) = q.pop_front() {
+                        break Some(j);
+                    }
+                    if self.shutdown.load(Ordering::Acquire) {
+                        break None;
+                    }
+                    q = self.work_cv.wait(q).unwrap();
+                }
+            };
+            match job {
+                Some(j) => self.exec(j),
+                None => return,
+            }
+        }
+    }
+}
+
+/// Worker pool executing scoped job batches; `new(1)` (and `serial()`)
+/// spawn no threads and run everything inline.
+pub struct ThreadPool {
+    inner: Option<Arc<Inner>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Hard cap on pool lanes: the value flows in from user config, and
+    /// spawning an OS thread per requested lane must not let a typo'd
+    /// `"threads": 1000000` exhaust the process.
+    pub const MAX_THREADS: usize = 256;
+
+    /// Resolve a requested lane count: 0 = one per available core,
+    /// capped at `MAX_THREADS`. `new(t)` always builds a pool of
+    /// `resolve(t)` lanes, so callers can compare widths before
+    /// rebuilding a live pool.
+    pub fn resolve(threads: usize) -> usize {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        threads.min(Self::MAX_THREADS)
+    }
+
+    /// Pool with `threads` lanes (0 = one per available core, capped at
+    /// `MAX_THREADS`). The calling thread counts as a lane, so
+    /// `threads - 1` workers spawn.
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = Self::resolve(threads);
+        if threads <= 1 {
+            return ThreadPool { inner: None, handles: Vec::new(), threads: 1 };
+        }
+        let inner = Arc::new(Inner {
+            queue: Mutex::new(VecDeque::new()),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..threads - 1)
+            .map(|i| {
+                let inner = inner.clone();
+                std::thread::Builder::new()
+                    .name(format!("slidesparse-pool-{i}"))
+                    .spawn(move || inner.worker())
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { inner: Some(inner), handles, threads }
+    }
+
+    /// The process-wide serial pool (no workers, inline execution) —
+    /// the default every prepared layer starts with.
+    pub fn serial() -> Arc<ThreadPool> {
+        static SERIAL: OnceLock<Arc<ThreadPool>> = OnceLock::new();
+        SERIAL.get_or_init(|| Arc::new(ThreadPool::new(1))).clone()
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn is_serial(&self) -> bool {
+        self.inner.is_none()
+    }
+
+    /// Execute every task, blocking until all complete. Tasks may borrow
+    /// caller-local data. Panics (after the whole batch drains) if any
+    /// task panicked. Serial pools and single-task batches run inline.
+    pub fn run<'scope>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        let inner = match &self.inner {
+            Some(inner) if tasks.len() > 1 => inner,
+            _ => {
+                for t in tasks {
+                    t();
+                }
+                return;
+            }
+        };
+        let batch = Arc::new(BatchState {
+            remaining: AtomicUsize::new(tasks.len()),
+            panicked: AtomicBool::new(false),
+        });
+        {
+            let mut q = inner.queue.lock().unwrap();
+            for t in tasks {
+                // SAFETY: `run` does not return until `remaining` hits
+                // zero, i.e. until every enqueued closure has finished
+                // executing (panics included — `exec` catches and still
+                // decrements). The erased borrows therefore never
+                // outlive the data they point into.
+                let t: Box<dyn FnOnce() + Send + 'static> =
+                    unsafe { std::mem::transmute(t) };
+                q.push_back((t, batch.clone()));
+            }
+            inner.work_cv.notify_all();
+        }
+        // Help drain the queue (our jobs or a concurrent batch's) until
+        // our batch completes. Callers pop NEWEST-first: our own jobs
+        // sit at the back, so a nested caller reaches its sub-jobs
+        // before older top-level work and keeps its stack shallow;
+        // workers pop oldest-first for fairness.
+        loop {
+            let job = {
+                let mut q = inner.queue.lock().unwrap();
+                loop {
+                    if batch.remaining.load(Ordering::Acquire) == 0 {
+                        break None;
+                    }
+                    if let Some(j) = q.pop_back() {
+                        break Some(j);
+                    }
+                    q = inner.done_cv.wait(q).unwrap();
+                }
+            };
+            match job {
+                Some(j) => inner.exec(j),
+                None => break,
+            }
+        }
+        if batch.panicked.load(Ordering::Acquire) {
+            panic!("thread pool task panicked");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        if let Some(inner) = &self.inner {
+            inner.shutdown.store(true, Ordering::Release);
+            drop(inner.queue.lock().unwrap());
+            inner.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Split `out` into consecutive chunks of the given lengths (which must
+/// sum to `out.len()`) and run `work(chunk_index, chunk)` for each under
+/// ONE fork-join — the shared scaffolding of every pooled GEMM kernel.
+/// Serial pools (or a single chunk) run inline in index order.
+pub fn run_over_chunks<T, F>(pool: &ThreadPool, out: &mut [T], lens: &[usize], work: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    debug_assert_eq!(lens.iter().sum::<usize>(), out.len());
+    if pool.is_serial() || lens.len() <= 1 {
+        let mut start = 0;
+        for (i, &len) in lens.iter().enumerate() {
+            work(i, &mut out[start..start + len]);
+            start += len;
+        }
+        return;
+    }
+    let work = &work;
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(lens.len());
+    let mut rest: &mut [T] = out;
+    for (i, &len) in lens.iter().enumerate() {
+        let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(len);
+        rest = tail;
+        tasks.push(Box::new(move || work(i, chunk)));
+    }
+    pool.run(tasks);
+}
+
+/// Split `n` units into at most `parts` contiguous `(begin, end)` ranges
+/// of near-equal size (used for row-block GEMM partitioning).
+pub fn partition(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, n);
+    let per = n.div_ceil(parts);
+    let mut ranges = Vec::with_capacity(parts);
+    let mut begin = 0;
+    while begin < n {
+        let end = (begin + per).min(n);
+        ranges.push((begin, end));
+        begin = end;
+    }
+    ranges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_every_task_once() {
+        let pool = ThreadPool::new(4);
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..64)
+            .map(|_| {
+                Box::new(|| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run(tasks);
+        assert_eq!(counter.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn scoped_borrows_write_disjoint_chunks() {
+        let pool = ThreadPool::new(3);
+        let mut data = vec![0u64; 90];
+        {
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for (i, chunk) in data.chunks_mut(30).enumerate() {
+                tasks.push(Box::new(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = (i * 30 + j) as u64;
+                    }
+                }));
+            }
+            pool.run(tasks);
+        }
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u64);
+        }
+    }
+
+    #[test]
+    fn nested_run_completes() {
+        let pool = ThreadPool::new(2);
+        let total = AtomicUsize::new(0);
+        let outer: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|_| {
+                Box::new(|| {
+                    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+                        .map(|_| {
+                            Box::new(|| {
+                                total.fetch_add(1, Ordering::Relaxed);
+                            })
+                                as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                    pool.run(tasks);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run(outer);
+        assert_eq!(total.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "thread pool task panicked")]
+    fn task_panic_propagates_to_caller() {
+        let pool = ThreadPool::new(2);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+            Box::new(|| {}),
+            Box::new(|| panic!("boom")),
+            Box::new(|| {}),
+        ];
+        pool.run(tasks);
+    }
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = ThreadPool::new(1);
+        assert!(pool.is_serial());
+        assert_eq!(pool.threads(), 1);
+        let mut hit = false;
+        pool.run(vec![Box::new(|| {
+            hit = true;
+        })]);
+        assert!(hit);
+    }
+
+    #[test]
+    fn run_over_chunks_visits_each_chunk_once() {
+        for threads in [1usize, 3] {
+            let pool = ThreadPool::new(threads);
+            let mut out = vec![0usize; 10];
+            let lens = [4usize, 1, 5];
+            run_over_chunks(&pool, &mut out, &lens, |i, chunk| {
+                for v in chunk.iter_mut() {
+                    *v = i + 1;
+                }
+            });
+            let expect: Vec<usize> = [1usize; 4]
+                .into_iter()
+                .chain([2])
+                .chain([3; 5])
+                .collect();
+            assert_eq!(out, expect, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn partition_covers_exactly() {
+        for (n, parts) in [(10, 3), (1, 8), (16, 4), (7, 7), (5, 1), (9, 100)] {
+            let ranges = partition(n, parts);
+            assert!(ranges.len() <= parts.max(1));
+            let mut next = 0;
+            for (a, b) in &ranges {
+                assert_eq!(*a, next);
+                assert!(b > a);
+                next = *b;
+            }
+            assert_eq!(next, n);
+        }
+        assert!(partition(0, 4).is_empty());
+    }
+
+    #[test]
+    fn zero_threads_means_auto() {
+        let pool = ThreadPool::new(0);
+        assert!(pool.threads() >= 1);
+    }
+
+    #[test]
+    fn absurd_thread_counts_are_capped() {
+        let pool = ThreadPool::new(usize::MAX);
+        assert_eq!(pool.threads(), ThreadPool::MAX_THREADS);
+    }
+}

@@ -1,0 +1,256 @@
+//! Differential conformance suite for the STC simulator (the VENOM /
+//! cuSPARSELt-style validation): every compressed execution path is
+//! checked bit-exact against the dense int8 reference, the storage
+//! format round-trips, and the pooled kernels are bit-exact with the
+//! single-threaded kernels at 1/2/4/8 threads. All integer math — exact
+//! equality throughout, no tolerances.
+
+use std::sync::Arc;
+
+use slidesparse::coordinator::{Engine, EngineConfig, Request, SamplingParams, StcExecutor};
+use slidesparse::model::{Backend, BlockConfig, NativeModel};
+use slidesparse::quant::quantize_weight_per_channel;
+use slidesparse::sparsity::prune::prune_magnitude;
+use slidesparse::sparsity::LiftPlan;
+use slidesparse::sparsity::{pack_matrix, Pattern};
+use slidesparse::stc::{
+    gemm_compressed_i8, gemm_compressed_i8_mtile, gemm_compressed_i8_mtile_pool, gemm_i8,
+    gemm_i8_mtile, gemm_i8_mtile_pool, gemm_i8_pool, gemv_compressed_i8,
+    gemv_compressed_i8_batch_pool, gemv_compressed_i8_pool, Compressed24,
+};
+use slidesparse::util::prng::XorShift;
+use slidesparse::util::{prop, ThreadPool};
+
+/// The N values under test: native 2:4 (N=2, identity slide) through
+/// 14:16 (N=8).
+const FAMILY_NS: [usize; 4] = [2, 3, 4, 8];
+
+fn random_i8(rng: &mut XorShift, len: usize) -> Vec<i8> {
+    (0..len).map(|_| (rng.below(255) as i32 - 127) as i8).collect()
+}
+
+/// A random row that is 2:4-compliant per 4-wide window.
+fn random_24_row(rng: &mut XorShift, kp: usize) -> Vec<i8> {
+    let mut row = vec![0i8; kp];
+    for w in 0..kp / 4 {
+        for p in rng.choose(4, 2) {
+            row[w * 4 + p] = (rng.below(253) as i32 - 126) as i8;
+        }
+    }
+    row
+}
+
+// ---------------------------------------------------------------------
+// (a) prune -> pack -> compress -> slide-GEMM == dense int8 reference
+// ---------------------------------------------------------------------
+
+#[test]
+fn slide_pipeline_bit_exact_with_dense_reference() {
+    // The paper's Eq. 3 as integer arithmetic: for (2N-2):2N weights,
+    // compressed GEMM over (packed weights, lifted activations) equals
+    // the dense GEMM over (weights, activations) EXACTLY.
+    for n in FAMILY_NS {
+        prop::for_all(&format!("slide pipeline == dense, N={n}"), |rng, _| {
+            let k = 2 * n * (1 + rng.below(4));
+            let o = 1 + rng.below(12);
+            let m = 1 + rng.below(20);
+            let w: Vec<f32> = (0..o * k).map(|_| rng.normal()).collect();
+            let pruned = prune_magnitude(&w, o, k, 2 * n - 2, 2 * n);
+            let (wq, _scales) = quantize_weight_per_channel(&pruned, o, k);
+
+            // offline: pack Phi, compress to the 2:4 hardware format
+            let wq_f: Vec<f32> = wq.iter().map(|v| *v as f32).collect();
+            let packed = pack_matrix(&wq_f, o, k, n).expect("pruned weights pack");
+            let packed_i8: Vec<i8> = packed.data.iter().map(|v| *v as i8).collect();
+            let c = Compressed24::from_dense(&packed_i8, o, packed.k_packed).unwrap();
+
+            // online: lift Psi on int8 activations
+            let x = random_i8(rng, m * k);
+            let plan = LiftPlan::new(k, n);
+            let mut lifted = vec![0i8; m * plan.k_packed];
+            for r in 0..m {
+                plan.lift_row_into(
+                    &x[r * k..(r + 1) * k],
+                    &mut lifted[r * plan.k_packed..(r + 1) * plan.k_packed],
+                );
+            }
+
+            let reference = gemm_i8(&x, &wq, m, o, k);
+            assert_eq!(gemm_compressed_i8(&lifted, &c, m), reference, "simple kernel");
+            assert_eq!(
+                gemm_compressed_i8_mtile(&lifted, &c, m),
+                reference,
+                "mtile kernel"
+            );
+            if m == 1 {
+                assert_eq!(gemv_compressed_i8(&lifted, &c), reference, "gemv kernel");
+            }
+        });
+    }
+}
+
+#[test]
+fn family_patterns_have_expected_expansion() {
+    // gamma = 2 - 2/N ties the packed width to the pattern; N=2 is the
+    // identity (native 2:4) with no expansion.
+    for n in FAMILY_NS {
+        let k = 2 * n * 6;
+        let plan = LiftPlan::new(k, n);
+        let gamma = Pattern::family(n).gamma();
+        assert_eq!(plan.k_packed, (k as f64 * gamma).round() as usize, "N={n}");
+        if n == 2 {
+            assert_eq!(plan.k_packed, k);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// (b) Compressed24 round-trip
+// ---------------------------------------------------------------------
+
+#[test]
+fn compressed24_roundtrips_and_meta_is_wellformed() {
+    prop::for_all("compress/decompress roundtrip", |rng, _| {
+        let kp = 4 * (1 + rng.below(24));
+        let o = 1 + rng.below(12);
+        let mut w = Vec::new();
+        for _ in 0..o {
+            w.extend(random_24_row(rng, kp));
+        }
+        let c = Compressed24::from_dense(&w, o, kp).unwrap();
+        assert_eq!(c.to_dense(), w, "decompress must invert compress");
+        assert_eq!(c.storage_bytes(), o * (kp / 2 + kp / 4));
+        for mb in &c.meta {
+            let p0 = mb & 3;
+            let p1 = (mb >> 2) & 3;
+            assert_ne!(p0, p1, "metadata positions must be distinct");
+        }
+    });
+}
+
+#[test]
+fn compressed24_rejects_overfull_windows() {
+    let mut w = vec![0i8; 16];
+    w[4] = 1;
+    w[5] = 2;
+    w[6] = 3; // window 1 has 3 non-zeros
+    assert!(Compressed24::from_dense(&w, 1, 16).is_err());
+}
+
+// ---------------------------------------------------------------------
+// (c) pooled kernels bit-exact with single-threaded at 1/2/4/8 threads
+// ---------------------------------------------------------------------
+
+#[test]
+fn parallel_gemm_bit_exact_across_thread_counts() {
+    let pools: Vec<ThreadPool> = [1usize, 2, 4, 8].iter().map(|t| ThreadPool::new(*t)).collect();
+    prop::for_all("pooled == serial kernels", |rng, _| {
+        let kp = 4 * (1 + rng.below(16));
+        let o = 1 + rng.below(40);
+        let m = 1 + rng.below(48);
+        let mut w = Vec::new();
+        for _ in 0..o {
+            w.extend(random_24_row(rng, kp));
+        }
+        let c = Compressed24::from_dense(&w, o, kp).unwrap();
+        let x = random_i8(rng, m * kp);
+        let serial_mtile = gemm_compressed_i8_mtile(&x, &c, m);
+        let serial_gemv = gemv_compressed_i8(&x[..kp], &c);
+        let serial_gemv_batch: Vec<i32> = (0..m)
+            .flat_map(|r| gemv_compressed_i8(&x[r * kp..(r + 1) * kp], &c))
+            .collect();
+        let serial_dense_mtile = gemm_i8_mtile(&x, &w, m, o, kp);
+        let serial_dense = gemm_i8(&x, &w, m, o, kp);
+        for pool in &pools {
+            let t = pool.threads();
+            assert_eq!(
+                gemm_compressed_i8_mtile_pool(pool, &x, &c, m),
+                serial_mtile,
+                "compressed mtile, {t} threads"
+            );
+            assert_eq!(
+                gemv_compressed_i8_pool(pool, &x[..kp], &c),
+                serial_gemv,
+                "compressed gemv, {t} threads"
+            );
+            assert_eq!(
+                gemv_compressed_i8_batch_pool(pool, &x, &c, m),
+                serial_gemv_batch,
+                "batched compressed gemv, {t} threads"
+            );
+            assert_eq!(
+                gemm_i8_mtile_pool(pool, &x, &w, m, o, kp),
+                serial_dense_mtile,
+                "dense mtile, {t} threads"
+            );
+            assert_eq!(
+                gemm_i8_pool(pool, &x, &w, m, o, kp),
+                serial_dense,
+                "dense k-inner, {t} threads"
+            );
+        }
+    });
+}
+
+#[test]
+fn threaded_serving_engine_generates_identical_tokens() {
+    // end-to-end determinism: the full engine (continuous batching,
+    // pooled prefill fan-out, pooled decode GEMVs) over a SlideSparse
+    // model produces byte-identical generations at every thread count.
+    let run = |threads: usize| {
+        let model = NativeModel::generate(
+            BlockConfig { dim: 48, n_heads: 2, ffn: 64 },
+            2,
+            128,
+            64,
+            17,
+            Backend::Slide { n: 4 },
+        );
+        // the threads knob flows through EngineConfig alone: Engine::new
+        // installs it on the executor via Executor::set_threads
+        let mut engine = Engine::new(
+            StcExecutor::new(model),
+            EngineConfig { threads, ..Default::default() },
+        );
+        for i in 0..6u64 {
+            let prompt: Vec<i32> = (0..5).map(|t| (i as i32 * 11 + t * 3) % 128).collect();
+            engine.submit(Request::new(
+                i,
+                prompt,
+                SamplingParams { max_new_tokens: 8, ..Default::default() },
+            ));
+        }
+        let mut outs = engine.run_to_completion().unwrap();
+        outs.sort_by_key(|o| o.id);
+        outs.into_iter().map(|o| o.tokens).collect::<Vec<_>>()
+    };
+    let serial = run(1);
+    assert_eq!(serial.len(), 6);
+    for threads in [2usize, 4, 8] {
+        assert_eq!(run(threads), serial, "{threads} threads");
+    }
+}
+
+#[test]
+fn pooled_layer_forward_bit_exact_for_all_backends() {
+    // the serving-layer view of (c): Linear::forward under a pool equals
+    // the serial forward for every backend and both m-routing branches
+    use slidesparse::model::Linear;
+    let mut rng = XorShift::new(55);
+    let (o, k) = (20, 48);
+    let w: Vec<f32> = (0..o * k).map(|_| rng.normal()).collect();
+    let pool = Arc::new(ThreadPool::new(4));
+    for backend in [Backend::Dense, Backend::Native24, Backend::Slide { n: 4 }] {
+        let serial = Linear::prepare(&w, o, k, backend);
+        let mut pooled = Linear::prepare(&w, o, k, backend);
+        pooled.set_pool(pool.clone());
+        for m in [1usize, 5, 24] {
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            assert_eq!(
+                serial.forward(&x, m),
+                pooled.forward(&x, m),
+                "{backend:?} m={m}"
+            );
+        }
+    }
+}

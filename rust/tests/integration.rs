@@ -1,20 +1,26 @@
 //! Integration tests across runtime + coordinator + artifacts: the full
-//! python-AOT -> rust-serve path. Skipped (with a notice) when
-//! `artifacts/` has not been built (`make artifacts`).
+//! python-AOT -> rust-serve path. The PJRT tests build only with the
+//! `pjrt` feature (the xla crate is outside the offline crate set) and
+//! are skipped (with a notice) when `artifacts/` has not been built
+//! (`make artifacts`).
 
+#[cfg(feature = "pjrt")]
 use std::path::PathBuf;
 
-use slidesparse::coordinator::{
-    Engine, EngineConfig, PjrtExecutor, Request, SamplingParams, StcExecutor,
-};
+#[cfg(feature = "pjrt")]
+use slidesparse::coordinator::PjrtExecutor;
+use slidesparse::coordinator::{Engine, EngineConfig, Request, SamplingParams, StcExecutor};
 use slidesparse::model::{Backend, BlockConfig, NativeModel};
+#[cfg(feature = "pjrt")]
 use slidesparse::runtime::Runtime;
 
+#[cfg(feature = "pjrt")]
 fn artifacts_dir() -> Option<PathBuf> {
     let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     d.join("manifest.json").exists().then_some(d)
 }
 
+#[cfg(feature = "pjrt")]
 macro_rules! require_artifacts {
     () => {
         match artifacts_dir() {
@@ -27,6 +33,7 @@ macro_rules! require_artifacts {
     };
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn golden_prefill_matches_python() {
     // Execute the slide-variant prefill artifact on the golden input and
@@ -76,6 +83,7 @@ fn golden_prefill_matches_python() {
     assert_eq!(argmax, g.last_argmax);
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn dense_and_slide_variants_agree_end_to_end() {
     // The paper's losslessness claim through the ENTIRE serving stack:
@@ -110,6 +118,7 @@ fn dense_and_slide_variants_agree_end_to_end() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_decode_matches_prefill_teacher_forcing() {
     // decode(t_n | prefill KV of t_0..t_{n-1}) must equal prefill logits
