@@ -1,22 +1,34 @@
 //! Paper Fig. 6 + Appendix D.3.1: square-kernel speedup tables.
 //! Measured rows: the CPU STC simulator. Modeled rows: the six-GPU
-//! perfmodel across precisions. The thread-scaling sweep (threads x
-//! {dense, 2:4, 6:8} on the 1024^3 workload) prints GB/s + speedup
-//! ratios and writes `BENCH_kernel_square.json` so future PRs get a
-//! perf trajectory.
+//! perfmodel across precisions. Two sweeps feed
+//! `BENCH_kernel_square.json` so future PRs get a perf trajectory:
+//! microkernel backends (scalar/blocked/avx2 x {dense, 2:4, 6:8},
+//! single-threaded) and thread scaling (threads x {dense, 2:4, 6:8} on
+//! the 1024^3 workload).
+use std::collections::BTreeMap;
+
 use slidesparse::bench::harness::{thread_sweep, write_json};
 use slidesparse::bench::tables;
 use slidesparse::perfmodel::gpus;
 use slidesparse::quant::Precision;
+use slidesparse::util::json::Json;
 
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
     tables::kernel_square_measured(&[16, 64, 256], 480).print();
 
+    // microkernel backends on the square workload (per-core effect)
+    let (kernels, kjson) = tables::kernel_square_kernels(1024, 256);
+    kernels.print();
+
     // thread scaling on the acceptance workload (1024x1024x1024, 6:8)
-    let (scaling, json) = tables::kernel_square_scaling(&thread_sweep(), 1024, 1024);
+    let (scaling, sjson) = tables::kernel_square_scaling(&thread_sweep(), 1024, 1024);
     scaling.print();
-    match write_json("BENCH_kernel_square.json", &json) {
+
+    let mut top = BTreeMap::new();
+    top.insert("kernel_backends".to_string(), kjson);
+    top.insert("thread_scaling".to_string(), sjson);
+    match write_json("BENCH_kernel_square.json", &Json::Obj(top)) {
         Ok(()) => println!("\nwrote BENCH_kernel_square.json"),
         Err(e) => eprintln!("could not write BENCH_kernel_square.json: {e}"),
     }

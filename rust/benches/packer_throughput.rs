@@ -1,9 +1,19 @@
-//! Appendix A.2: offline weight-packer throughput + 70B projection.
+//! Appendix A.2: offline weight-packer throughput + 70B projection,
+//! swept over worker-pool widths (the row loop partitions over
+//! `util::pool::ThreadPool`; the packed output is byte-identical at
+//! every width). Writes `BENCH_packer_throughput.json` so future PRs
+//! get a perf trajectory.
+use slidesparse::bench::harness::{thread_sweep, write_json};
 use slidesparse::bench::tables;
 
 fn main() {
-    tables::packer_throughput(2048, 4096).print();
+    let (table, json) = tables::packer_throughput(2048, 4096, &thread_sweep());
+    table.print();
+    match write_json("BENCH_packer_throughput.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_packer_throughput.json"),
+        Err(e) => eprintln!("could not write BENCH_packer_throughput.json: {e}"),
+    }
     println!("\npaper A.2 reference: >10 GB/s on H100 (GPU-parallel packer),");
-    println!("Llama-3-70B (140 GB) converted in <30 s; ours is the");
-    println!("single-thread CPU reference implementation of Algorithm 2.");
+    println!("Llama-3-70B (140 GB) converted in <30 s; ours is the pooled");
+    println!("CPU implementation of Algorithm 2 (see the x T1 column).");
 }

@@ -13,7 +13,8 @@ use crate::model::{by_name, Backend, BlockConfig, Linear, NativeModel};
 use crate::perfmodel::{e2e_speedup, gpus, E2eParams, Gpu};
 use crate::quant::{FusedQuantSlide, Precision};
 use crate::sparsity::pattern::Pattern;
-use crate::sparsity::{pack_matrix, prune};
+use crate::sparsity::{pack_matrix_pool, prune};
+use crate::stc::microkernel::available_kernels;
 use crate::util::json::Json;
 use crate::util::prng::XorShift;
 use crate::util::ThreadPool;
@@ -154,6 +155,74 @@ pub fn kernel_square_scaling(threads: &[usize], ok: usize, m: usize) -> (Table, 
     j.insert("k".to_string(), Json::Num(ok as f64));
     j.insert("o".to_string(), Json::Num(ok as f64));
     j.insert("dense_equiv_bytes".to_string(), Json::Num(bytes));
+    j.insert("rows".to_string(), Json::Arr(rows_json));
+    (t, Json::Obj(j))
+}
+
+/// Microkernel-backend comparison on the square-kernel workload:
+/// seconds per forward for every available backend (scalar reference,
+/// unrolled blocked, AVX2 when the CPU has it) x {dense, 2:4, 6:8},
+/// single-threaded on purpose so the table isolates the per-core
+/// speedup the explicit kernels buy. Returns the printable table and a
+/// JSON record (merged into `BENCH_kernel_square.json`); the record's
+/// `blocked_vs_scalar_s68` field is the blocked-over-scalar speedup on
+/// the 6:8 square GEMM.
+pub fn kernel_square_kernels(ok: usize, m: usize) -> (Table, Json) {
+    let mut t = Table::new(
+        &format!("Square-kernel microkernel backends (STC, INT8, M={m}, N=K={ok}, 1 thread)"),
+        &["kernel", "dense (ms)", "2:4 (ms)", "6:8 (ms)", "6:8 x scalar"],
+    );
+    let mut rng = XorShift::new(43);
+    let w: Vec<f32> = (0..ok * ok).map(|_| rng.normal()).collect();
+    let x: Vec<f32> = (0..m * ok).map(|_| rng.normal()).collect();
+    let backends = [Backend::Dense, Backend::Native24, Backend::Slide { n: 4 }];
+    let mut layers: Vec<Linear> = backends
+        .iter()
+        .map(|b| Linear::prepare(&w, ok, ok, *b))
+        .collect();
+    let mut scalar_s68 = None;
+    let mut blocked_s68 = None;
+    let mut rows_json = Vec::new();
+    for kern in available_kernels() {
+        let mut secs = [0f64; 3];
+        for (li, layer) in layers.iter_mut().enumerate() {
+            layer.set_microkernel(kern);
+            let layer: &Linear = layer;
+            let meas = bench(1, 0.3, 4, || {
+                std::hint::black_box(layer.forward(&x, m));
+            });
+            secs[li] = meas.min_s;
+        }
+        match kern.name() {
+            "scalar" => scalar_s68 = Some(secs[2]),
+            "blocked" => blocked_s68 = Some(secs[2]),
+            _ => {}
+        }
+        let base = scalar_s68.expect("scalar runs first");
+        t.row(vec![
+            kern.name().to_string(),
+            format!("{:.2}", secs[0] * 1e3),
+            format!("{:.2}", secs[1] * 1e3),
+            format!("{:.2}", secs[2] * 1e3),
+            sx(base / secs[2]),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("kernel".to_string(), Json::Str(kern.name().to_string()));
+        for (key, v) in [("dense_s", secs[0]), ("s24_s", secs[1]), ("s68_s", secs[2])] {
+            row.insert(key.to_string(), Json::Num(v));
+        }
+        row.insert("s68_x_scalar".to_string(), Json::Num(base / secs[2]));
+        rows_json.push(Json::Obj(row));
+    }
+    let mut j = BTreeMap::new();
+    j.insert("bench".to_string(), Json::Str("kernel_square_kernels".to_string()));
+    j.insert("m".to_string(), Json::Num(m as f64));
+    j.insert("k".to_string(), Json::Num(ok as f64));
+    j.insert("o".to_string(), Json::Num(ok as f64));
+    j.insert(
+        "blocked_vs_scalar_s68".to_string(),
+        Json::Num(scalar_s68.unwrap() / blocked_s68.unwrap()),
+    );
     j.insert("rows".to_string(), Json::Arr(rows_json));
     (t, Json::Obj(j))
 }
@@ -577,27 +646,51 @@ pub fn fig3_space() -> Table {
 // Appendix A.2: packer throughput
 // ---------------------------------------------------------------------
 
-pub fn packer_throughput(rows: usize, k: usize) -> Table {
+/// Offline packer throughput swept over worker-pool widths: the packed
+/// output is byte-identical at every width, so only wall time moves.
+/// Returns the printable table and a JSON record for the perf
+/// trajectory (`BENCH_packer_throughput.json`).
+pub fn packer_throughput(rows: usize, k: usize, threads: &[usize]) -> (Table, Json) {
     let mut t = Table::new(
         &format!("Offline packer throughput ({rows}x{k} matrix, 6:8) — cf. A.2"),
-        &["phase", "time (ms)", "GB/s", "Llama-70B (140GB) projection"],
+        &["threads", "time (ms)", "GB/s", "x T1", "Llama-70B (140GB) projection"],
     );
     let mut rng = XorShift::new(23);
     let w: Vec<f32> = (0..rows * k).map(|_| rng.normal()).collect();
     let pruned = prune::prune_magnitude(&w, rows, k, 6, 8);
     let bytes = (rows * k * 4) as f64;
-    let m = bench(1, 0.5, 10, || {
-        std::hint::black_box(pack_matrix(&pruned, rows, k, 4).unwrap());
-    });
-    let gbps = bytes / m.min_s / 1e9;
-    let proj_s = 140e9 / (gbps * 1e9);
-    t.row(vec![
-        "pack (Phi)".into(),
-        format!("{:.1}", m.min_s * 1e3),
-        format!("{gbps:.2}"),
-        format!("{proj_s:.0} s single-thread"),
-    ]);
-    t
+    let mut t1 = None;
+    let mut rows_json = Vec::new();
+    for &nthreads in threads {
+        let pool = ThreadPool::new(nthreads);
+        let m = bench(1, 0.5, 10, || {
+            std::hint::black_box(pack_matrix_pool(&pool, &pruned, rows, k, 4).unwrap());
+        });
+        let base = *t1.get_or_insert(m.min_s);
+        let gbps = bytes / m.min_s / 1e9;
+        let proj_s = 140e9 / (gbps * 1e9);
+        t.row(vec![
+            nthreads.to_string(),
+            format!("{:.1}", m.min_s * 1e3),
+            format!("{gbps:.2}"),
+            sx(base / m.min_s),
+            format!("{proj_s:.0} s"),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("threads".to_string(), Json::Num(nthreads as f64));
+        row.insert("pack_s".to_string(), Json::Num(m.min_s));
+        row.insert("gbps".to_string(), Json::Num(gbps));
+        row.insert("x_t1".to_string(), Json::Num(base / m.min_s));
+        row.insert("llama70b_proj_s".to_string(), Json::Num(proj_s));
+        rows_json.push(Json::Obj(row));
+    }
+    let mut j = BTreeMap::new();
+    j.insert("bench".to_string(), Json::Str("packer_throughput".to_string()));
+    j.insert("rows_dim".to_string(), Json::Num(rows as f64));
+    j.insert("k".to_string(), Json::Num(k as f64));
+    j.insert("bytes".to_string(), Json::Num(bytes));
+    j.insert("rows".to_string(), Json::Arr(rows_json));
+    (t, Json::Obj(j))
 }
 
 #[cfg(test)]
@@ -656,6 +749,30 @@ mod tests {
         for row in rows {
             assert!(row.req("s68_s").as_f64().unwrap() > 0.0);
             assert!(row.req("s68_x_t1").as_f64().unwrap() > 0.0);
+        }
+    }
+
+    #[test]
+    fn kernel_square_kernels_table_and_json() {
+        let (t, j) = kernel_square_kernels(120, 16);
+        let r = t.render();
+        assert!(r.contains("scalar") && r.contains("blocked"));
+        let rows = j.req("rows").as_arr().unwrap();
+        assert_eq!(rows.len(), available_kernels().len());
+        for row in rows {
+            assert!(row.req("s68_s").as_f64().unwrap() > 0.0);
+        }
+        assert!(j.req("blocked_vs_scalar_s68").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn packer_throughput_table_and_json() {
+        let (t, j) = packer_throughput(64, 96, &[1, 2]);
+        assert!(t.render().contains("GB/s"));
+        let rows = j.req("rows").as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        for row in rows {
+            assert!(row.req("gbps").as_f64().unwrap() > 0.0);
         }
     }
 }

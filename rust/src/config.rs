@@ -60,13 +60,21 @@ impl Config {
         if let Some(v) = j.get("executor").and_then(|v| v.as_str()) {
             cfg.executor = v.to_string();
         }
-        // `threads` rides in EngineConfig so it reaches the executor:
-        // accepted at the top level (the common case) or under "engine"
+        // `threads` and `kernel` ride in EngineConfig so they reach the
+        // executor: accepted at the top level (the common case) or under
+        // "engine"
         if let Some(v) = j.get("threads").and_then(|v| v.as_usize()) {
             cfg.engine.threads = v;
         }
+        if let Some(v) = j.get("kernel").and_then(|v| v.as_str()) {
+            cfg.engine.kernel = v.parse().map_err(|e| anyhow!("config: {e}"))?;
+        }
         if let Some(e) = j.get("engine") {
-            let mut ec = EngineConfig { threads: cfg.engine.threads, ..Default::default() };
+            let mut ec = EngineConfig {
+                threads: cfg.engine.threads,
+                kernel: cfg.engine.kernel,
+                ..Default::default()
+            };
             if let Some(v) = e.get("kv_blocks").and_then(|v| v.as_usize()) {
                 ec.kv_blocks = v;
             }
@@ -78,6 +86,9 @@ impl Config {
             }
             if let Some(v) = e.get("threads").and_then(|v| v.as_usize()) {
                 ec.threads = v;
+            }
+            if let Some(v) = e.get("kernel").and_then(|v| v.as_str()) {
+                ec.kernel = v.parse().map_err(|e| anyhow!("config: {e}"))?;
             }
             let mut sc = SchedulerConfig::default();
             if let Some(v) = e.get("max_batch").and_then(|v| v.as_usize()) {
@@ -178,9 +189,27 @@ mod tests {
     }
 
     #[test]
+    fn kernel_knob_parses_at_both_levels() {
+        use crate::stc::KernelChoice;
+        assert_eq!(Config::default().engine.kernel, KernelChoice::Auto);
+        let top = Config::from_json(r#"{"kernel": "scalar"}"#).unwrap();
+        assert_eq!(top.engine.kernel, KernelChoice::Scalar);
+        // top-level value survives an "engine" object without "kernel"
+        let kept =
+            Config::from_json(r#"{"kernel": "blocked", "engine": {"kv_blocks": 32}}"#).unwrap();
+        assert_eq!(kept.engine.kernel, KernelChoice::Blocked);
+        // nested form wins when both are present
+        let nested =
+            Config::from_json(r#"{"kernel": "scalar", "engine": {"kernel": "avx2"}}"#).unwrap();
+        assert_eq!(nested.engine.kernel, KernelChoice::Avx2);
+    }
+
+    #[test]
     fn bad_configs_rejected() {
         assert!(Config::from_json(r#"{"sparsity": "5:9"}"#).is_err());
         assert!(Config::from_json(r#"{"executor": "cuda"}"#).is_err());
+        assert!(Config::from_json(r#"{"kernel": "sse9"}"#).is_err());
+        assert!(Config::from_json(r#"{"engine": {"kernel": "gpu"}}"#).is_err());
         assert!(Config::from_json("not json").is_err());
     }
 }

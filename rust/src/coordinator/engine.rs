@@ -30,6 +30,11 @@ pub struct EngineConfig {
     /// `Executor::set_threads`, overriding however the executor was
     /// built (a no-op for executors without a pooled hot path).
     pub threads: usize,
+    /// microkernel backend for the executor's int8 GEMMs
+    /// (auto/scalar/blocked/avx2; all bit-exact). Authoritative like
+    /// `threads`: `Engine::new` installs it via `Executor::set_kernel`
+    /// (a no-op for executors without the STC microkernel layer).
+    pub kernel: crate::stc::KernelChoice,
 }
 
 impl Default for EngineConfig {
@@ -40,6 +45,7 @@ impl Default for EngineConfig {
             kv_block_size: 16,
             seed: 0,
             threads: 1,
+            kernel: crate::stc::KernelChoice::Auto,
         }
     }
 }
@@ -56,6 +62,7 @@ pub struct Engine<E: Executor> {
 
 impl<E: Executor> Engine<E> {
     pub fn new(mut executor: E, cfg: EngineConfig) -> Engine<E> {
+        executor.set_kernel(cfg.kernel);
         executor.set_threads(cfg.threads);
         let blocks = BlockManager::new(cfg.kv_blocks, cfg.kv_block_size);
         Engine {

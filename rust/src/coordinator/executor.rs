@@ -7,6 +7,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::stc::{KernelChoice, Microkernel};
 use crate::util::ThreadPool;
 
 /// One sequence's view of a prefill batch.
@@ -53,6 +54,12 @@ pub trait Executor {
     /// hot path (default: no-op). `Engine::new` calls this with
     /// `EngineConfig.threads`, making the config knob authoritative.
     fn set_threads(&mut self, _threads: usize) {}
+    /// Install a microkernel backend on executors whose GEMMs run on
+    /// the STC microkernel layer (default: no-op). `Engine::new` calls
+    /// this with `EngineConfig.kernel`, making the config knob
+    /// authoritative; every backend is bit-exact, so this only changes
+    /// speed.
+    fn set_kernel(&mut self, _choice: KernelChoice) {}
 }
 
 /// Native executor over the STC transformer (the fast path for E2E
@@ -63,6 +70,7 @@ pub trait Executor {
 pub struct StcExecutor {
     pub model: crate::model::NativeModel,
     pool: Arc<ThreadPool>,
+    kernel: &'static dyn Microkernel,
 }
 
 impl StcExecutor {
@@ -74,13 +82,22 @@ impl StcExecutor {
     /// lane per available core), shared by the prefill fan-out and every
     /// linear layer's GEMM.
     pub fn with_threads(model: crate::model::NativeModel, threads: usize) -> StcExecutor {
-        let mut exec = StcExecutor { model, pool: ThreadPool::serial() };
+        let mut exec = StcExecutor {
+            model,
+            pool: ThreadPool::serial(),
+            kernel: crate::stc::auto_kernel(),
+        };
         Executor::set_threads(&mut exec, threads);
         exec
     }
 
     pub fn threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    /// Name of the microkernel backend the model's GEMMs run on.
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernel.name()
     }
 }
 
@@ -158,6 +175,12 @@ impl Executor for StcExecutor {
         let pool = Arc::new(ThreadPool::new(threads));
         self.model.set_pool(&pool);
         self.pool = pool;
+    }
+
+    fn set_kernel(&mut self, choice: KernelChoice) {
+        let kern = crate::stc::select_kernel(choice);
+        self.model.set_microkernel(kern);
+        self.kernel = kern;
     }
 }
 
@@ -350,6 +373,38 @@ mod tests {
             EngineConfig::default(),
         );
         assert_eq!(e.executor.threads(), 1);
+    }
+
+    #[test]
+    fn engine_config_kernel_is_authoritative() {
+        use crate::coordinator::engine::{Engine, EngineConfig};
+        use crate::stc::KernelChoice;
+        // the config knob alone must switch the executor's microkernel,
+        // and generations must be byte-identical across backends
+        let run = |kernel: KernelChoice| {
+            let mut e = Engine::new(
+                StcExecutor::new(tiny_model(Backend::Slide { n: 4 })),
+                EngineConfig { kernel, ..Default::default() },
+            );
+            let name = e.executor.kernel_name().to_string();
+            e.submit(crate::coordinator::Request::new(
+                1,
+                vec![3, 7, 11],
+                crate::coordinator::SamplingParams {
+                    max_new_tokens: 4,
+                    ..Default::default()
+                },
+            ));
+            (name, e.run_to_completion().unwrap()[0].tokens.clone())
+        };
+        let (scalar_name, scalar_toks) = run(KernelChoice::Scalar);
+        assert_eq!(scalar_name, "scalar");
+        let (blocked_name, blocked_toks) = run(KernelChoice::Blocked);
+        assert_eq!(blocked_name, "blocked");
+        assert_eq!(scalar_toks, blocked_toks);
+        let (auto_name, auto_toks) = run(KernelChoice::Auto);
+        assert!(auto_name == "avx2" || auto_name == "blocked", "{auto_name}");
+        assert_eq!(auto_toks, scalar_toks);
     }
 
     #[test]

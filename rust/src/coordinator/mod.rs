@@ -4,6 +4,25 @@
 //! SlideSparse plugs in underneath as a linear-layer backend
 //! (`model::Backend`) -- everything in this module is agnostic to it,
 //! mirroring the paper's minimal-invasive vLLM integration (§4.3).
+//!
+//! ## Request lifecycle (docs/ARCHITECTURE.md §1 in full)
+//!
+//! [`router`] shards requests across worker OS threads, one [`Engine`]
+//! each; `Router::drain` surfaces an error when a worker dies with
+//! inflight work instead of blocking forever. Each engine `step()` asks
+//! [`scheduler`] for one prefill OR one decode batch (admission and
+//! preemption are decided against the paged [`kvcache`] block pool),
+//! runs it on its [`executor::Executor`], samples a token per sequence,
+//! and emits finished outputs. Preemption recovery is recompute-based:
+//! the victim replays prompt + generated tokens on a later prefill.
+//!
+//! Two config knobs are authoritative here: `Engine::new` installs
+//! `EngineConfig::threads` (worker-pool lanes) and
+//! `EngineConfig::kernel` (microkernel backend) on the executor, so the
+//! serving config alone decides both. Neither changes results — pooled
+//! execution and every microkernel backend are bit-exact with the
+//! serial scalar reference (gated by `rust/tests/conformance.rs`); the
+//! engine's sampling state depends on neither.
 
 pub mod batcher;
 pub mod engine;

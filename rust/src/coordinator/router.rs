@@ -9,7 +9,7 @@ use std::sync::{
 };
 use std::thread::JoinHandle;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use super::engine::{Engine, EngineConfig};
 use super::executor::Executor;
@@ -102,18 +102,30 @@ impl Router {
     }
 
     fn pick_worker(&mut self) -> usize {
+        let alive = |w: &Worker| match &w.handle {
+            Some(h) => !h.is_finished(),
+            None => false,
+        };
         match self.policy {
             Policy::RoundRobin => {
-                let w = self.rr_next % self.workers.len();
-                self.rr_next += 1;
-                w
+                // skip workers whose thread has died (executor panic);
+                // if none are alive, fall through — submit's send will
+                // fail and report it
+                for _ in 0..self.workers.len() {
+                    let w = self.rr_next % self.workers.len();
+                    self.rr_next += 1;
+                    if alive(&self.workers[w]) {
+                        return w;
+                    }
+                }
+                self.rr_next % self.workers.len()
             }
             Policy::LeastLoaded => {
                 let mut best = 0;
                 let mut best_load = usize::MAX;
                 for (i, w) in self.workers.iter().enumerate() {
                     let load = w.inflight.load(Ordering::SeqCst);
-                    if load < best_load {
+                    if load < best_load && alive(w) {
                         best_load = load;
                         best = i;
                     }
@@ -123,15 +135,30 @@ impl Router {
         }
     }
 
+    /// Dispatch a request to a live worker. Dead workers (their channel
+    /// is gone with the thread) are routed around; panics only when no
+    /// worker can accept work at all.
     pub fn submit(&mut self, request: Request) {
-        let w = self.pick_worker();
-        self.workers[w].inflight.fetch_add(1, Ordering::SeqCst);
-        self.submitted += 1;
-        self.workers[w]
-            .tx
-            .send(Msg::Req(request))
-            .expect("worker alive");
-        let _ = self.workers[w].tx.send(Msg::Flush);
+        let mut req = request;
+        for _ in 0..self.workers.len() {
+            let w = self.pick_worker();
+            // increment BEFORE send so the worker cannot decrement first
+            self.workers[w].inflight.fetch_add(1, Ordering::SeqCst);
+            match self.workers[w].tx.send(Msg::Req(req)) {
+                Ok(()) => {
+                    self.submitted += 1;
+                    let _ = self.workers[w].tx.send(Msg::Flush);
+                    return;
+                }
+                Err(std::sync::mpsc::SendError(m)) => {
+                    // worker died between liveness check and send
+                    self.workers[w].inflight.fetch_sub(1, Ordering::SeqCst);
+                    let Msg::Req(r) = m else { unreachable!() };
+                    req = r;
+                }
+            }
+        }
+        panic!("no live router workers to accept request");
     }
 
     /// Per-worker inflight counts (for tests / metrics).
@@ -142,14 +169,69 @@ impl Router {
             .collect()
     }
 
-    /// Wait for all submitted requests to complete.
+    /// Wait for all submitted requests to complete. A worker whose
+    /// engine loop died (an executor panic unwinds the worker thread)
+    /// can never deliver its inflight requests, so instead of blocking
+    /// forever on `out_rx`, drain polls with a timeout, keeps collecting
+    /// everything live workers can still deliver, and errors once the
+    /// only outstanding requests belong to dead workers. The channel is
+    /// fully drained of this batch either way, so a later submit+drain
+    /// round never sees stale outputs; on error the partial results are
+    /// discarded with the batch.
     pub fn drain(&mut self) -> Result<Vec<RequestOutput>> {
+        use std::sync::mpsc::RecvTimeoutError;
+        use std::time::Duration;
         let mut outs = Vec::with_capacity(self.submitted);
-        while outs.len() < self.submitted {
-            outs.push(self.out_rx.recv()?);
+        let mut lost = 0usize;
+        while outs.len() + lost < self.submitted {
+            match self.out_rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(o) => outs.push(o),
+                Err(RecvTimeoutError::Timeout) => {
+                    // inflight counts of dead workers can only be
+                    // requests whose outputs will never arrive
+                    lost = self.lost_inflight();
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    self.submitted = 0;
+                    return Err(anyhow!("all router workers are gone"));
+                }
+            }
         }
         self.submitted = 0;
+        if lost > 0 {
+            // the lost counts belong to this (now failed) batch; zero
+            // the dead workers' gauges so a later drain doesn't count
+            // them again
+            for w in &self.workers {
+                let dead = match &w.handle {
+                    Some(h) => h.is_finished(),
+                    None => true,
+                };
+                if dead {
+                    w.inflight.store(0, Ordering::SeqCst);
+                }
+            }
+            return Err(anyhow!(
+                "router worker(s) died with {lost} request(s) inflight \
+                 (executor panic?)"
+            ));
+        }
         Ok(outs)
+    }
+
+    /// Total inflight requests owned by workers whose thread has
+    /// exited. Workers only exit on Shutdown, so a finished handle with
+    /// inflight > 0 means the engine loop panicked; those outputs can
+    /// never arrive.
+    fn lost_inflight(&self) -> usize {
+        self.workers
+            .iter()
+            .filter(|w| match &w.handle {
+                Some(h) => h.is_finished(),
+                None => true,
+            })
+            .map(|w| w.inflight.load(Ordering::SeqCst))
+            .sum()
     }
 }
 
@@ -228,5 +310,101 @@ mod tests {
             |_| MockExecutor::new(10, 16),
         );
         drop(r); // must not hang or panic
+    }
+
+    /// Executor that panics on its first batch when `poisoned`,
+    /// otherwise behaves like the deterministic mock.
+    struct FlakyExecutor {
+        inner: MockExecutor,
+        poisoned: bool,
+    }
+
+    impl crate::coordinator::executor::Executor for FlakyExecutor {
+        fn vocab(&self) -> usize {
+            self.inner.vocab
+        }
+
+        fn max_prompt(&self) -> usize {
+            self.inner.smax - 1
+        }
+
+        fn smax(&self) -> usize {
+            self.inner.smax
+        }
+
+        fn kv_len(&self) -> usize {
+            1
+        }
+
+        fn decode_buckets(&self) -> Vec<usize> {
+            vec![usize::MAX]
+        }
+
+        fn prefill(
+            &mut self,
+            batch: &mut [crate::coordinator::executor::PrefillItem],
+        ) -> Result<()> {
+            assert!(!self.poisoned, "injected executor fault");
+            self.inner.prefill(batch)
+        }
+
+        fn decode(
+            &mut self,
+            batch: &mut [crate::coordinator::executor::DecodeItem],
+        ) -> Result<()> {
+            assert!(!self.poisoned, "injected executor fault");
+            self.inner.decode(batch)
+        }
+
+        fn label(&self) -> String {
+            "flaky".into()
+        }
+    }
+
+    #[test]
+    fn single_worker_panic_surfaces_from_drain() {
+        let mut r = Router::spawn(
+            1,
+            EngineConfig::default(),
+            Policy::RoundRobin,
+            |_| FlakyExecutor { inner: MockExecutor::new(100, 64), poisoned: true },
+        );
+        r.submit(req(1, 10));
+        let err = r.drain().expect_err("dead worker must not hang drain");
+        assert!(err.to_string().contains("worker"), "{err}");
+        // the router stays usable as an object: a second drain with
+        // nothing submitted returns empty instead of hanging
+        assert!(r.drain().unwrap().is_empty());
+    }
+
+    #[test]
+    fn partial_worker_panic_surfaces_instead_of_hanging() {
+        // worker 0 panics on its first batch; worker 1 is healthy and
+        // keeps serving. drain must report the dead worker's lost
+        // requests, not block forever on out_rx.recv().
+        let mut r = Router::spawn(
+            2,
+            EngineConfig::default(),
+            Policy::RoundRobin,
+            |wid| FlakyExecutor { inner: MockExecutor::new(1000, 64), poisoned: wid == 0 },
+        );
+        for i in 0..6 {
+            r.submit(req(i, i as i32 * 10));
+        }
+        let err = r.drain().expect_err("dead worker must not hang drain");
+        assert!(err.to_string().contains("died"), "{err}");
+
+        // the router survives: new requests route around the dead
+        // worker, and the failed batch left no stale outputs behind to
+        // corrupt this round's results
+        r.submit(req(100, 7));
+        r.submit(req(101, 20));
+        let mut outs = r.drain().expect("live worker keeps serving");
+        outs.sort_by_key(|o| o.id);
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].id, 100);
+        assert_eq!(outs[0].tokens, vec![8, 9, 10]);
+        assert_eq!(outs[1].id, 101);
+        assert_eq!(outs[1].tokens, vec![21, 22, 23]);
     }
 }

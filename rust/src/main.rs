@@ -2,10 +2,11 @@
 //! points.
 //!
 //! ```text
-//! slidesparse serve   [--config cfg.json] [--requests N]
+//! slidesparse serve   [--config cfg.json] [--requests N] [--threads T]
+//!                     [--kernel auto|scalar|blocked|avx2]
 //! slidesparse bench   [--suite kernel|e2e|figures|all]
 //! slidesparse explore [--pattern Z:L] [--hw M:N]
-//! slidesparse pack    --o O --k K [--n N]        # packer demo + stats
+//! slidesparse pack    --o O --k K [--n N] [--threads T]  # packer demo + stats
 //! ```
 
 use anyhow::{anyhow, Result};
@@ -45,11 +46,14 @@ fn serve(args: &Args) -> Result<()> {
         None => Config::default(),
     };
     cfg.engine.threads = args.opt_usize("threads", cfg.engine.threads);
+    if let Some(k) = args.opt("kernel") {
+        cfg.engine.kernel = k.parse().map_err(|e: String| anyhow!(e))?;
+    }
     let backend = cfg.backend()?;
     let n_requests = args.opt_usize("requests", 16);
     println!(
-        "serving with sparsity={} executor={} threads={}",
-        cfg.sparsity, cfg.executor, cfg.engine.threads
+        "serving with sparsity={} executor={} threads={} kernel={}",
+        cfg.sparsity, cfg.executor, cfg.engine.threads, cfg.engine.kernel
     );
 
     let (outs, report) = if cfg.executor == "pjrt" {
@@ -174,17 +178,20 @@ fn pack(args: &Args) -> Result<()> {
     let o = args.opt_usize("o", 1024);
     let k = args.opt_usize("k", 4096);
     let n = args.opt_usize("n", 4);
+    let threads = args.opt_usize("threads", 1);
     let mut rng = XorShift::new(1);
     let w: Vec<f32> = (0..o * k).map(|_| rng.normal()).collect();
     let pat = Pattern::family(n);
     let pruned = slidesparse::sparsity::prune::prune_magnitude(&w, o, k, pat.z, pat.l);
+    let pool = slidesparse::util::ThreadPool::new(threads);
     let t0 = std::time::Instant::now();
-    let packed = slidesparse::sparsity::pack_matrix(&pruned, o, k, n)
+    let packed = slidesparse::sparsity::pack_matrix_pool(&pool, &pruned, o, k, n)
         .map_err(|e| anyhow!("{e}"))?;
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "packed {o}x{k} ({} pattern) in {:.1} ms ({:.2} GB/s)",
+        "packed {o}x{k} ({} pattern, {} threads) in {:.1} ms ({:.2} GB/s)",
         pat,
+        pool.threads(),
         dt * 1e3,
         (o * k * 4) as f64 / dt / 1e9
     );

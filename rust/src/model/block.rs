@@ -60,6 +60,14 @@ impl Block {
         self.w2.set_pool(pool.clone());
     }
 
+    /// Install a microkernel backend on every linear in this block.
+    pub fn set_microkernel(&mut self, kern: &'static dyn crate::stc::Microkernel) {
+        self.wqkv.set_microkernel(kern);
+        self.wo.set_microkernel(kern);
+        self.w13.set_microkernel(kern);
+        self.w2.set_microkernel(kern);
+    }
+
     /// Forward `s` new rows starting at context position `start`,
     /// reading/writing this block's KV cache slices (`kc`/`vc`, each
     /// [n_heads, smax, head_dim] row-major).
@@ -203,6 +211,15 @@ impl NativeModel {
     pub fn set_pool(&mut self, pool: &std::sync::Arc<crate::util::ThreadPool>) {
         for b in &mut self.blocks {
             b.set_pool(pool);
+        }
+    }
+
+    /// Install a microkernel backend on every linear in the model.
+    /// Generation is bit-exact with the scalar reference on every
+    /// backend; only wall time changes.
+    pub fn set_microkernel(&mut self, kern: &'static dyn crate::stc::Microkernel) {
+        for b in &mut self.blocks {
+            b.set_microkernel(kern);
         }
     }
 

@@ -109,6 +109,15 @@ impl Linear {
         }
     }
 
+    /// Install an explicit microkernel backend on the underlying GEMMs
+    /// (bit-exact with the scalar reference on every backend).
+    pub fn set_microkernel(&mut self, kern: &'static dyn crate::stc::Microkernel) {
+        match &mut self.inner {
+            Inner::Dense(l) => l.set_microkernel(kern),
+            Inner::Slide(l) => l.set_microkernel(kern),
+        }
+    }
+
     /// Serve: y [m, o] from x [m, k].
     pub fn forward(&self, x: &[f32], m: usize) -> Vec<f32> {
         assert_eq!(x.len(), m * self.k);

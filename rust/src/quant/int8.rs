@@ -41,7 +41,7 @@ pub fn quantize_weight_per_channel(w: &[f32], o: usize, k: usize) -> (Vec<i8>, V
     (q, s)
 }
 
-/// Dequantize an int32 accumulator tile: y = acc * xs[m] * ws[o].
+/// Dequantize an int32 accumulator tile: `y = acc * xs[m] * ws[o]`.
 pub fn dequantize(acc: &[i32], m: usize, o: usize, xs: &[f32], ws: &[f32]) -> Vec<f32> {
     assert_eq!(acc.len(), m * o);
     let mut y = vec![0f32; m * o];

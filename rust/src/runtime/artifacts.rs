@@ -59,7 +59,7 @@ pub struct ArtifactSpec {
     pub outputs: Vec<TensorSpec>,
 }
 
-/// One serialized weight tensor inside a weights_<variant>.bin.
+/// One serialized weight tensor inside a `weights_<variant>.bin`.
 #[derive(Clone, Debug)]
 pub struct WeightSpec {
     pub name: String,

@@ -22,7 +22,7 @@ impl LiftPlan {
         &self.idx
     }
 
-    /// Lift one row: out[j] = x[idx[j]].
+    /// Lift one row: `out[j] = x[idx[j]]`.
     pub fn lift_row_into<T: Copy>(&self, x: &[T], out: &mut [T]) {
         debug_assert_eq!(x.len(), self.k);
         debug_assert_eq!(out.len(), self.k_packed);

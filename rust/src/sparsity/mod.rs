@@ -1,7 +1,35 @@
 //! The paper's core contribution: (2N-2):2N -> 2:4 sliding-window
 //! decomposition (weights: packer/Phi, activations: lift/Psi), magnitude
 //! pruning into the family patterns, and the generalized Z:L -> M:N
-//! theory from Appendix C.1.
+//! theory from Appendix C.1. (docs/ARCHITECTURE.md §2 walks the whole
+//! operator end to end.)
+//!
+//! ## The N-1 overlapping-window decomposition
+//!
+//! A K-wide (2N-2):2N row splits into K/(2N) groups; each group is
+//! covered by N-1 stride-2 windows of width 4, so window l of group g
+//! reads source positions [2N*g + 2*l, 2N*g + 2*l + 4). Adjacent
+//! windows overlap by 2 positions — the spillover buffer that lets the
+//! greedy pass of [`packer`] (Algorithm 2) place all 2N-2 non-zeros
+//! with at most 2 per window (Theorem 1). The packed row has
+//! gamma*K = (N-1)*4/(2N)*K slots and is 2:4-compliant by
+//! construction.
+//!
+//! ## The Activation Lifting contract (Psi, Eq. 4)
+//!
+//! [`lift`] replicates activations by the SAME window table the packer
+//! used: `out[j] = x[idx[j]]` — a pure index remap, no arithmetic,
+//! which is what lets it fuse into per-token quantization at near-zero
+//! cost (`quant::fused`, Algorithm 1). The joint contract, gated by
+//! `rust/tests/conformance.rs` as integer arithmetic (paper Eq. 3):
+//! for any (2N-2):2N-compliant int8 row w and any activation row x,
+//!
+//! ```text
+//! dot(pack(w), lift(x)) == dot(w, x)     (exactly, in i32)
+//! ```
+//!
+//! because packing assigns every non-zero of w to exactly one window
+//! slot and lifting places exactly the activation that slot multiplies.
 
 pub mod general;
 pub mod lift;
@@ -10,5 +38,5 @@ pub mod pattern;
 pub mod prune;
 
 pub use lift::LiftPlan;
-pub use packer::{pack_matrix, pack_row, PackedMatrix};
+pub use packer::{pack_matrix, pack_matrix_pool, pack_row, PackedMatrix};
 pub use pattern::{Pattern, ALPHA_2_4, HW_2_4};

@@ -120,6 +120,56 @@ pub fn pack_matrix(w: &[f32], rows: usize, k: usize, n: usize)
     Ok(PackedMatrix { data, rows, k_orig: k, k_packed: kp, n })
 }
 
+/// `pack_matrix` with the row loop partitioned over a worker pool (the
+/// A.2 projection: the offline 70B conversion wants every core). Rows
+/// are split into contiguous blocks, one per lane, each writing its own
+/// disjoint slice of the output — the packed matrix is byte-identical
+/// to the serial result regardless of thread count, and on a
+/// pattern-violating input the reported error row is the FIRST bad row,
+/// exactly as in the serial pass.
+pub fn pack_matrix_pool(
+    pool: &crate::util::ThreadPool,
+    w: &[f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+) -> Result<PackedMatrix, PackError> {
+    if pool.is_serial() {
+        return pack_matrix(w, rows, k, n);
+    }
+    assert_eq!(w.len(), rows * k);
+    let kp = expanded_k(k, n);
+    let mut data = vec![0.0f32; rows * kp];
+    let ranges = crate::util::pool::partition(rows, pool.threads());
+    let lens: Vec<usize> = ranges.iter().map(|&(r0, r1)| (r1 - r0) * kp).collect();
+    let first_err = std::sync::Mutex::new(None::<PackError>);
+    crate::util::pool::run_over_chunks(pool, &mut data, &lens, |i, chunk| {
+        let (r0, _) = ranges[i];
+        let mut used = vec![false; k];
+        for (j, out) in chunk.chunks_mut(kp).enumerate() {
+            let r = r0 + j;
+            let unplaced = pack_row_into(&w[r * k..(r + 1) * k], n, out, &mut used);
+            if unplaced > 0 {
+                let mut e = first_err.lock().unwrap();
+                // rows before the global first error never fail, so the
+                // min over per-block first errors IS the serial error
+                let keep = match e.as_ref() {
+                    Some(p) => r < p.row,
+                    None => true,
+                };
+                if keep {
+                    *e = Some(PackError { row: r, unplaced });
+                }
+                return;
+            }
+        }
+    });
+    if let Some(e) = first_err.into_inner().unwrap() {
+        return Err(e);
+    }
+    Ok(PackedMatrix { data, rows, k_orig: k, k_packed: kp, n })
+}
+
 /// Validate 2:4 compliance of a packed row (every 4-window holds <= 2).
 pub fn is_24_compliant(row: &[f32]) -> bool {
     row.chunks(4)
@@ -231,6 +281,38 @@ mod tests {
         }
         let err = pack_matrix(&bad, rows, k, n).unwrap_err();
         assert_eq!(err.row, 3);
+    }
+
+    #[test]
+    fn pooled_pack_matrix_bit_identical_and_same_error() {
+        use crate::util::ThreadPool;
+        let n = 4;
+        let (rows, k) = (37, 32); // rows not a multiple of any lane count
+        let mut rng = XorShift::new(29);
+        let mut w = Vec::new();
+        for _ in 0..rows {
+            w.extend(random_family_row(&mut rng, k, n));
+        }
+        let serial = pack_matrix(&w, rows, k, n).unwrap();
+        for threads in [1usize, 2, 4, 8] {
+            let pool = ThreadPool::new(threads);
+            let pooled = pack_matrix_pool(&pool, &w, rows, k, n).unwrap();
+            assert_eq!(pooled.data, serial.data, "{threads} threads");
+            assert_eq!(pooled.k_packed, serial.k_packed);
+        }
+        // densify rows 5 and 30: every thread count must report row 5
+        let mut bad = w.clone();
+        for r in [5usize, 30] {
+            for v in &mut bad[r * k..r * k + 8] {
+                *v = 1.0;
+            }
+        }
+        assert_eq!(pack_matrix(&bad, rows, k, n).unwrap_err().row, 5);
+        for threads in [2usize, 4, 8] {
+            let pool = ThreadPool::new(threads);
+            let err = pack_matrix_pool(&pool, &bad, rows, k, n).unwrap_err();
+            assert_eq!(err.row, 5, "{threads} threads");
+        }
     }
 
     #[test]

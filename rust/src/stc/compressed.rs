@@ -8,6 +8,8 @@
 //! plus the 2x weight-byte reduction that drives memory-bound decode
 //! gains (paper §5.3 "Memory-Bound Decode").
 
+use crate::stc::microkernel::{auto_kernel, Microkernel};
+
 /// Compressed 2:4 matrix: for every output row, k_packed/2 (value, column)
 /// pairs. Columns are absolute (precomputed from the 2-bit metadata) so
 /// the hot loop is a pure gather-multiply.
@@ -86,25 +88,44 @@ impl Compressed24 {
     }
 }
 
-/// M-tiled compressed GEMM: y[m,o] over MT activation rows at once.
-/// x is the *lifted* activation matrix [m, k_packed] (int8). The inner
-/// loop runs over the k_packed/2 stored (value, column) pairs -- exactly
-/// half the dense MACs -- with the same broadcast-scalar x MT-vector
-/// structure as `dense::gemm_i8_mtile`, so the measured ratio tracks the
-/// compute reduction like cuSPARSELt vs cuBLASLt.
+/// M-tiled compressed GEMM on the auto-dispatched microkernel: y[m,o]
+/// over MT activation rows at once. x is the *lifted* activation matrix
+/// [m, k_packed] (int8). The inner loop runs over the k_packed/2 stored
+/// (value, column) pairs -- exactly half the dense MACs -- with the same
+/// one-weight-against-MT-wide-tile structure as `dense::gemm_i8_mtile`,
+/// so the measured ratio tracks the compute reduction like cuSPARSELt
+/// vs cuBLASLt.
 pub fn gemm_compressed_i8_mtile(x: &[i8], w: &Compressed24, m: usize) -> Vec<i32> {
+    gemm_compressed_i8_mtile_with(auto_kernel(), x, w, m)
+}
+
+/// `gemm_compressed_i8_mtile` on an explicit microkernel backend.
+pub fn gemm_compressed_i8_mtile_with(
+    kern: &dyn Microkernel,
+    x: &[i8],
+    w: &Compressed24,
+    m: usize,
+) -> Vec<i32> {
     use crate::stc::dense::{transpose_tiles_i8, MT};
     let kp = w.k_packed;
     assert_eq!(x.len(), m * kp);
     let xt = transpose_tiles_i8(x, m, kp);
     let mut y = vec![0i32; m * w.rows];
-    cmtile_block(&xt, w, m, 0, m.div_ceil(MT), &mut y);
+    cmtile_block(kern, &xt, w, m, 0, m.div_ceil(MT), &mut y);
     y
 }
 
 /// M-tile block worker shared by the serial and pooled compressed
 /// kernels: tiles [t0, t1) into the output chunk covering their rows.
-fn cmtile_block(xt: &[i8], w: &Compressed24, m: usize, t0: usize, t1: usize, y: &mut [i32]) {
+fn cmtile_block(
+    kern: &dyn Microkernel,
+    xt: &[i8],
+    w: &Compressed24,
+    m: usize,
+    t0: usize,
+    t1: usize,
+    y: &mut [i32],
+) {
     use crate::stc::dense::MT;
     let kp = w.k_packed;
     let half = kp / 2;
@@ -113,17 +134,13 @@ fn cmtile_block(xt: &[i8], w: &Compressed24, m: usize, t0: usize, t1: usize, y: 
         let xtile = &xt[tile * kp * MT..(tile + 1) * kp * MT];
         let rows = (m - tile * MT).min(MT);
         for c in 0..o {
-            let vs = &w.vals[c * half..(c + 1) * half];
-            let cs = &w.cols[c * half..(c + 1) * half];
             let mut acc = [0i32; MT];
-            for t in 0..half {
-                let wv = vs[t] as i32;
-                let col = cs[t] as usize;
-                let xcol = &xtile[col * MT..col * MT + MT];
-                for lane in 0..MT {
-                    acc[lane] += wv * xcol[lane] as i32;
-                }
-            }
+            kern.compressed_mtile_acc(
+                xtile,
+                &w.vals[c * half..(c + 1) * half],
+                &w.cols[c * half..(c + 1) * half],
+                &mut acc,
+            );
             for lane in 0..rows {
                 y[(tile * MT + lane - t0 * MT) * o + c] = acc[lane];
             }
@@ -140,9 +157,20 @@ pub fn gemm_compressed_i8_mtile_pool(
     w: &Compressed24,
     m: usize,
 ) -> Vec<i32> {
+    gemm_compressed_i8_mtile_pool_with(pool, auto_kernel(), x, w, m)
+}
+
+/// `gemm_compressed_i8_mtile_pool` on an explicit microkernel backend.
+pub fn gemm_compressed_i8_mtile_pool_with(
+    pool: &crate::util::ThreadPool,
+    kern: &dyn Microkernel,
+    x: &[i8],
+    w: &Compressed24,
+    m: usize,
+) -> Vec<i32> {
     use crate::stc::dense::{transpose_tiles_i8, MT};
     if pool.is_serial() {
-        return gemm_compressed_i8_mtile(x, w, m);
+        return gemm_compressed_i8_mtile_with(kern, x, w, m);
     }
     let kp = w.k_packed;
     assert_eq!(x.len(), m * kp);
@@ -157,7 +185,7 @@ pub fn gemm_compressed_i8_mtile_pool(
     let mut y = vec![0i32; m * o];
     crate::util::pool::run_over_chunks(pool, &mut y, &lens, |i, chunk| {
         let (t0, t1) = ranges[i];
-        cmtile_block(&xt, w, m, t0, t1, chunk);
+        cmtile_block(kern, &xt, w, m, t0, t1, chunk);
     });
     y
 }
@@ -166,31 +194,30 @@ pub fn gemm_compressed_i8_mtile_pool(
 /// the 2-bit metadata directly so weight-byte traffic is vals (kp/2) +
 /// meta (kp/4) instead of kp dense bytes.
 pub fn gemv_compressed_i8(x: &[i8], w: &Compressed24) -> Vec<i32> {
+    gemv_compressed_i8_with(auto_kernel(), x, w)
+}
+
+/// `gemv_compressed_i8` on an explicit microkernel backend.
+pub fn gemv_compressed_i8_with(kern: &dyn Microkernel, x: &[i8], w: &Compressed24) -> Vec<i32> {
     assert_eq!(x.len(), w.k_packed);
     let mut y = vec![0i32; w.rows];
-    gemv_rows_block(x, w, 0, &mut y);
+    gemv_rows_block(kern, x, w, 0, &mut y);
     y
 }
 
 /// Output-row block worker shared by the serial and pooled GEMV: rows
 /// [c0, c0+y.len()) of the metadata-walking decode kernel.
-fn gemv_rows_block(x: &[i8], w: &Compressed24, c0: usize, y: &mut [i32]) {
+fn gemv_rows_block(kern: &dyn Microkernel, x: &[i8], w: &Compressed24, c0: usize, y: &mut [i32]) {
     let kp = w.k_packed;
     let half = kp / 2;
     let wins = kp / 4;
     for (i, yc) in y.iter_mut().enumerate() {
         let c = c0 + i;
-        let vs = &w.vals[c * half..(c + 1) * half];
-        let ms = &w.meta[c * wins..(c + 1) * wins];
-        let mut acc = 0i32;
-        for (win, mb) in ms.iter().enumerate() {
-            let base = win * 4;
-            let p0 = (mb & 3) as usize;
-            let p1 = ((mb >> 2) & 3) as usize;
-            acc += vs[2 * win] as i32 * x[base + p0] as i32;
-            acc += vs[2 * win + 1] as i32 * x[base + p1] as i32;
-        }
-        *yc = acc;
+        *yc = kern.gemv_dot(
+            x,
+            &w.vals[c * half..(c + 1) * half],
+            &w.meta[c * wins..(c + 1) * wins],
+        );
     }
 }
 
@@ -204,13 +231,24 @@ pub fn gemv_compressed_i8_batch_pool(
     w: &Compressed24,
     m: usize,
 ) -> Vec<i32> {
+    gemv_compressed_i8_batch_pool_with(pool, auto_kernel(), x, w, m)
+}
+
+/// `gemv_compressed_i8_batch_pool` on an explicit microkernel backend.
+pub fn gemv_compressed_i8_batch_pool_with(
+    pool: &crate::util::ThreadPool,
+    kern: &dyn Microkernel,
+    x: &[i8],
+    w: &Compressed24,
+    m: usize,
+) -> Vec<i32> {
     let kp = w.k_packed;
     assert_eq!(x.len(), m * kp);
     let o = w.rows;
     let mut y = vec![0i32; m * o];
     if pool.is_serial() {
         for (r, yr) in y.chunks_mut(o).enumerate() {
-            gemv_rows_block(&x[r * kp..(r + 1) * kp], w, 0, yr);
+            gemv_rows_block(kern, &x[r * kp..(r + 1) * kp], w, 0, yr);
         }
         return y;
     }
@@ -220,7 +258,7 @@ pub fn gemv_compressed_i8_batch_pool(
     let lens: Vec<usize> = (0..m * nr).map(|i| ranges[i % nr].1 - ranges[i % nr].0).collect();
     crate::util::pool::run_over_chunks(pool, &mut y, &lens, |i, chunk| {
         let r = i / nr;
-        gemv_rows_block(&x[r * kp..(r + 1) * kp], w, ranges[i % nr].0, chunk);
+        gemv_rows_block(kern, &x[r * kp..(r + 1) * kp], w, ranges[i % nr].0, chunk);
     });
     y
 }
@@ -342,6 +380,34 @@ mod tests {
             let c = Compressed24::from_dense(&w, o, kp).unwrap();
             assert_eq!(gemv_compressed_i8(&x, &c), gemm_compressed_i8(&x, &c, 1));
         });
+    }
+
+    #[test]
+    fn every_backend_matches_simple_compressed() {
+        let mut rng = XorShift::new(41);
+        for (m, o, kp) in [(1usize, 5, 12), (9, 13, 24), (35, 7, 40)] {
+            let mut w = Vec::new();
+            for _ in 0..o {
+                w.extend(random_24_row(&mut rng, kp));
+            }
+            let c = Compressed24::from_dense(&w, o, kp).unwrap();
+            let x: Vec<i8> = (0..m * kp).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let want = gemm_compressed_i8(&x, &c, m);
+            for kern in crate::stc::microkernel::available_kernels() {
+                assert_eq!(
+                    gemm_compressed_i8_mtile_with(kern, &x, &c, m),
+                    want,
+                    "mtile {} ({m},{o},{kp})",
+                    kern.name()
+                );
+                assert_eq!(
+                    gemv_compressed_i8_with(kern, &x[..kp], &c),
+                    want[..o].to_vec(),
+                    "gemv {} ({o},{kp})",
+                    kern.name()
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,8 +1,11 @@
 //! Dense GEMM baselines -- the "cuBLASLt" role in the Sparse-Tensor-Core
 //! simulator. Both the dense and compressed kernels get the same
-//! optimization treatment (register blocking + unrolled inner loops) so
-//! measured sparse/dense ratios track the compute reduction, as they do
-//! between cuBLASLt and cuSPARSELt on real hardware.
+//! optimization treatment (the same [`Microkernel`] backend drives both
+//! inner loops) so measured sparse/dense ratios track the compute
+//! reduction, as they do between cuBLASLt and cuSPARSELt on real
+//! hardware.
+
+use crate::stc::microkernel::{auto_kernel, Microkernel};
 
 /// Lane count of the M-tile kernels: outputs for MT activation rows are
 /// produced together so the inner loop is a broadcast-scalar x
@@ -12,7 +15,7 @@ pub const MT: usize = 16;
 
 /// Transpose an [m, k] row-major i8 matrix into k-major MT-wide tiles:
 /// output tile t holds columns [t*MT..t*MT+MT) of x^T, i.e.
-/// xt[tile][kk*MT + lane] = x[tile*MT + lane][kk] (zero-padded rows).
+/// `xt[tile][kk*MT + lane] = x[tile*MT + lane][kk]` (zero-padded rows).
 pub fn transpose_tiles_i8(x: &[i8], m: usize, k: usize) -> Vec<i8> {
     let tiles = m.div_ceil(MT);
     let mut xt = vec![0i8; tiles * k * MT];
@@ -33,10 +36,13 @@ pub fn transpose_tiles_i8(x: &[i8], m: usize, k: usize) -> Vec<i8> {
 
 /// M-tile block worker shared by the serial and pooled kernels: computes
 /// tiles [t0, t1) into `y`, the output chunk covering exactly the rows of
-/// those tiles. Per-element accumulation order is independent of the
-/// block split, so any partitioning is bit-exact with the full-range run.
+/// those tiles, on the given microkernel backend. Per-element
+/// accumulation order is independent of the block split AND of the
+/// backend, so any partitioning x backend is bit-exact with the
+/// full-range scalar run.
 #[allow(clippy::too_many_arguments)] // private hot-loop worker; grouping dims would add a struct for one caller pair
 fn mtile_block(
+    kern: &dyn Microkernel,
     xt: &[i8],
     w: &[i8],
     m: usize,
@@ -50,15 +56,8 @@ fn mtile_block(
         let xtile = &xt[tile * k * MT..(tile + 1) * k * MT];
         let rows = (m - tile * MT).min(MT);
         for c in 0..o {
-            let wc = &w[c * k..(c + 1) * k];
             let mut acc = [0i32; MT];
-            for (kk, wv) in wc.iter().enumerate() {
-                let wv = *wv as i32;
-                let xcol = &xtile[kk * MT..kk * MT + MT];
-                for lane in 0..MT {
-                    acc[lane] += wv * xcol[lane] as i32;
-                }
-            }
+            kern.dense_mtile_acc(xtile, &w[c * k..(c + 1) * k], &mut acc);
             for lane in 0..rows {
                 y[(tile * MT + lane - t0 * MT) * o + c] = acc[lane];
             }
@@ -66,15 +65,28 @@ fn mtile_block(
     }
 }
 
-/// M-tiled dense int8 GEMM: same inner structure as the compressed
-/// kernel (broadcast weight x MT contiguous activations) so measured
-/// sparse/dense ratios track the MAC reduction.
+/// M-tiled dense int8 GEMM on the auto-dispatched microkernel: same
+/// inner structure as the compressed kernel (one weight row against a
+/// K-major MT-wide tile) so measured sparse/dense ratios track the MAC
+/// reduction.
 pub fn gemm_i8_mtile(x: &[i8], w: &[i8], m: usize, o: usize, k: usize) -> Vec<i32> {
+    gemm_i8_mtile_with(auto_kernel(), x, w, m, o, k)
+}
+
+/// `gemm_i8_mtile` on an explicit microkernel backend.
+pub fn gemm_i8_mtile_with(
+    kern: &dyn Microkernel,
+    x: &[i8],
+    w: &[i8],
+    m: usize,
+    o: usize,
+    k: usize,
+) -> Vec<i32> {
     assert_eq!(x.len(), m * k);
     assert_eq!(w.len(), o * k);
     let xt = transpose_tiles_i8(x, m, k);
     let mut y = vec![0i32; m * o];
-    mtile_block(&xt, w, m, o, k, 0, m.div_ceil(MT), &mut y);
+    mtile_block(kern, &xt, w, m, o, k, 0, m.div_ceil(MT), &mut y);
     y
 }
 
@@ -89,8 +101,21 @@ pub fn gemm_i8_mtile_pool(
     o: usize,
     k: usize,
 ) -> Vec<i32> {
+    gemm_i8_mtile_pool_with(pool, auto_kernel(), x, w, m, o, k)
+}
+
+/// `gemm_i8_mtile_pool` on an explicit microkernel backend.
+pub fn gemm_i8_mtile_pool_with(
+    pool: &crate::util::ThreadPool,
+    kern: &dyn Microkernel,
+    x: &[i8],
+    w: &[i8],
+    m: usize,
+    o: usize,
+    k: usize,
+) -> Vec<i32> {
     if pool.is_serial() {
-        return gemm_i8_mtile(x, w, m, o, k);
+        return gemm_i8_mtile_with(kern, x, w, m, o, k);
     }
     assert_eq!(x.len(), m * k);
     assert_eq!(w.len(), o * k);
@@ -104,7 +129,7 @@ pub fn gemm_i8_mtile_pool(
     let mut y = vec![0i32; m * o];
     crate::util::pool::run_over_chunks(pool, &mut y, &lens, |i, chunk| {
         let (t0, t1) = ranges[i];
-        mtile_block(&xt, w, m, o, k, t0, t1, chunk);
+        mtile_block(kern, &xt, w, m, o, k, t0, t1, chunk);
     });
     y
 }
@@ -250,6 +275,24 @@ mod tests {
             let x: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
             let w: Vec<i8> = (0..o * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
             assert_eq!(gemm_i8_mtile(&x, &w, m, o, k), naive_i8(&x, &w, m, o, k));
+        }
+    }
+
+    #[test]
+    fn mtile_every_backend_matches_naive() {
+        let mut rng = XorShift::new(19);
+        for (m, o, k) in [(1, 3, 7), (17, 5, 33), (40, 9, 64)] {
+            let x: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let w: Vec<i8> = (0..o * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let want = naive_i8(&x, &w, m, o, k);
+            for kern in crate::stc::microkernel::available_kernels() {
+                assert_eq!(
+                    gemm_i8_mtile_with(kern, &x, &w, m, o, k),
+                    want,
+                    "{} ({m},{o},{k})",
+                    kern.name()
+                );
+            }
         }
     }
 

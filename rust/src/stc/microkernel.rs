@@ -1,0 +1,626 @@
+//! Explicit int8 microkernel backends with runtime CPU-feature dispatch.
+//!
+//! The M-tile GEMM outer loops in [`crate::stc::dense`] and
+//! [`crate::stc::compressed`] reduce every output column to three
+//! dot-product primitives (one weight row or stored-pair list against a
+//! K-major, MT-wide activation tile). This module makes those
+//! primitives an explicit [`Microkernel`] trait with three
+//! implementations:
+//!
+//! * [`ScalarKernel`] — the definitional reference: one lane at a time,
+//!   plain strided loads, no unrolling. Ground truth for bit-exactness
+//!   and the conservative fallback on every architecture.
+//! * [`BlockedKernel`] — portable unrolled kernel: the activation panel
+//!   is already repacked K-major into MT-wide tiles (by
+//!   `transpose_tiles_i8`), so each K step — including the compressed
+//!   2:4 gather, whose stored column index selects a whole MT-wide
+//!   slice — is a contiguous 16-byte load. The kernel walks 4 K steps
+//!   per iteration with the MT accumulator held in registers, which is
+//!   the shape LLVM reliably turns into wide integer FMAs.
+//! * `Avx2Kernel` (x86_64 only) — explicit `std::arch` intrinsics:
+//!   activations widen i8→i16 (`_mm256_cvtepi8_epi16`), two K steps are
+//!   interleaved into i16 pairs and multiplied-accumulated into i32
+//!   lanes with `_mm256_madd_epi16`. For i8-range operands the i16
+//!   products and pairwise i32 sums are exact (no saturation — this is
+//!   why `_mm256_maddubs_epi16`, which saturates its i16 pair sums, is
+//!   NOT used), so the AVX2 path is bit-identical to the scalar
+//!   reference.
+//!
+//! Every backend produces bit-identical i32 accumulators: integer
+//! addition is associative, each output element is reduced over the same
+//! multiset of products, and no step saturates or truncates. The
+//! conformance suite (`rust/tests/conformance.rs`) gates this for every
+//! backend × thread count × family pattern.
+//!
+//! Selection is by [`KernelChoice`] (the `kernel` knob in the serving
+//! config): `auto` resolves to AVX2 when the CPU supports it and the
+//! blocked portable kernel otherwise; requesting `avx2` on a machine
+//! without it falls back to the scalar reference (the documented non-x86
+//! fallback) rather than failing.
+
+use crate::stc::dense::MT;
+
+/// The int8 dot-product primitives behind the M-tile GEMMs and the
+/// decode GEMV. `xt` is a K-major MT-wide activation tile as produced by
+/// `transpose_tiles_i8`: `xt[kk * MT + lane]` is activation row `lane`,
+/// reduction index `kk`. All methods ACCUMULATE into their output so the
+/// caller chooses zero-init vs. running totals.
+pub trait Microkernel: Send + Sync {
+    /// Backend name as used by the `kernel` config knob and bench tables.
+    fn name(&self) -> &'static str;
+
+    /// Dense M-tile column: `acc[lane] += Σ_kk w[kk] * xt[kk*MT + lane]`
+    /// for one weight row `w` (length K) against a K-major tile `xt`
+    /// (length ≥ K*MT).
+    fn dense_mtile_acc(&self, xt: &[i8], w: &[i8], acc: &mut [i32; MT]);
+
+    /// Compressed 2:4 M-tile column:
+    /// `acc[lane] += Σ_t vals[t] * xt[cols[t]*MT + lane]` over the
+    /// stored (value, absolute-column) pairs of one output row. Exactly
+    /// K'/2 multiply-accumulates — the Sparse-Tensor-Core compute
+    /// reduction.
+    fn compressed_mtile_acc(&self, xt: &[i8], vals: &[i8], cols: &[u32], acc: &mut [i32; MT]);
+
+    /// Metadata-walking decode dot product for one compressed output
+    /// row: `Σ_win vals[2w]*x[4w+p0] + vals[2w+1]*x[4w+p1]` where
+    /// (p0, p1) are the 2-bit positions in `meta[win]`. `x` is one
+    /// lifted activation row (length K' = 4 * meta.len()).
+    fn gemv_dot(&self, x: &[i8], vals: &[i8], meta: &[u8]) -> i32;
+}
+
+// ---------------------------------------------------------------------
+// Scalar reference
+// ---------------------------------------------------------------------
+
+/// The definitional scalar reference: one output lane at a time, no
+/// unrolling. Every other backend must be bit-exact with this.
+pub struct ScalarKernel;
+
+impl Microkernel for ScalarKernel {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn dense_mtile_acc(&self, xt: &[i8], w: &[i8], acc: &mut [i32; MT]) {
+        for (lane, a) in acc.iter_mut().enumerate() {
+            let mut s = *a;
+            for (kk, &wv) in w.iter().enumerate() {
+                s += wv as i32 * xt[kk * MT + lane] as i32;
+            }
+            *a = s;
+        }
+    }
+
+    fn compressed_mtile_acc(&self, xt: &[i8], vals: &[i8], cols: &[u32], acc: &mut [i32; MT]) {
+        for (lane, a) in acc.iter_mut().enumerate() {
+            let mut s = *a;
+            for (&v, &c) in vals.iter().zip(cols.iter()) {
+                s += v as i32 * xt[c as usize * MT + lane] as i32;
+            }
+            *a = s;
+        }
+    }
+
+    fn gemv_dot(&self, x: &[i8], vals: &[i8], meta: &[u8]) -> i32 {
+        let mut acc = 0i32;
+        for (win, &mb) in meta.iter().enumerate() {
+            let base = win * 4;
+            let p0 = (mb & 3) as usize;
+            let p1 = ((mb >> 2) & 3) as usize;
+            acc += vals[2 * win] as i32 * x[base + p0] as i32;
+            acc += vals[2 * win + 1] as i32 * x[base + p1] as i32;
+        }
+        acc
+    }
+}
+
+// ---------------------------------------------------------------------
+// Portable unrolled cache-blocked kernel
+// ---------------------------------------------------------------------
+
+/// Portable unrolled kernel: 4 K steps per iteration against contiguous
+/// MT-wide tile slices, accumulator held in registers. The B-side
+/// repacking that makes this work is `transpose_tiles_i8`: because the
+/// activation panel is K-major, the compressed gather `cols[t]` lands on
+/// a contiguous 16-byte slice instead of a strided gather.
+pub struct BlockedKernel;
+
+impl Microkernel for BlockedKernel {
+    fn name(&self) -> &'static str {
+        "blocked"
+    }
+
+    fn dense_mtile_acc(&self, xt: &[i8], w: &[i8], acc: &mut [i32; MT]) {
+        let k = w.len();
+        let k4 = k - k % 4;
+        let mut kk = 0;
+        while kk < k4 {
+            let (w0, w1, w2, w3) =
+                (w[kk] as i32, w[kk + 1] as i32, w[kk + 2] as i32, w[kk + 3] as i32);
+            let x0 = &xt[kk * MT..kk * MT + MT];
+            let x1 = &xt[(kk + 1) * MT..(kk + 1) * MT + MT];
+            let x2 = &xt[(kk + 2) * MT..(kk + 2) * MT + MT];
+            let x3 = &xt[(kk + 3) * MT..(kk + 3) * MT + MT];
+            for lane in 0..MT {
+                acc[lane] += w0 * x0[lane] as i32
+                    + w1 * x1[lane] as i32
+                    + w2 * x2[lane] as i32
+                    + w3 * x3[lane] as i32;
+            }
+            kk += 4;
+        }
+        while kk < k {
+            let wv = w[kk] as i32;
+            let xcol = &xt[kk * MT..kk * MT + MT];
+            for lane in 0..MT {
+                acc[lane] += wv * xcol[lane] as i32;
+            }
+            kk += 1;
+        }
+    }
+
+    fn compressed_mtile_acc(&self, xt: &[i8], vals: &[i8], cols: &[u32], acc: &mut [i32; MT]) {
+        let half = vals.len();
+        let h4 = half - half % 4;
+        let mut t = 0;
+        while t < h4 {
+            let (v0, v1, v2, v3) = (
+                vals[t] as i32,
+                vals[t + 1] as i32,
+                vals[t + 2] as i32,
+                vals[t + 3] as i32,
+            );
+            let x0 = &xt[cols[t] as usize * MT..cols[t] as usize * MT + MT];
+            let x1 = &xt[cols[t + 1] as usize * MT..cols[t + 1] as usize * MT + MT];
+            let x2 = &xt[cols[t + 2] as usize * MT..cols[t + 2] as usize * MT + MT];
+            let x3 = &xt[cols[t + 3] as usize * MT..cols[t + 3] as usize * MT + MT];
+            for lane in 0..MT {
+                acc[lane] += v0 * x0[lane] as i32
+                    + v1 * x1[lane] as i32
+                    + v2 * x2[lane] as i32
+                    + v3 * x3[lane] as i32;
+            }
+            t += 4;
+        }
+        while t < half {
+            let v = vals[t] as i32;
+            let c = cols[t] as usize;
+            let xcol = &xt[c * MT..c * MT + MT];
+            for lane in 0..MT {
+                acc[lane] += v * xcol[lane] as i32;
+            }
+            t += 1;
+        }
+    }
+
+    fn gemv_dot(&self, x: &[i8], vals: &[i8], meta: &[u8]) -> i32 {
+        // two windows (4 stored values) per step: decode is memory-bound,
+        // so the win here is fewer loop iterations, not vector width
+        let wins = meta.len();
+        let w2 = wins - wins % 2;
+        let (mut a0, mut a1) = (0i32, 0i32);
+        let mut win = 0;
+        while win < w2 {
+            let (m0, m1) = (meta[win], meta[win + 1]);
+            let b0 = win * 4;
+            let b1 = b0 + 4;
+            a0 += vals[2 * win] as i32 * x[b0 + (m0 & 3) as usize] as i32
+                + vals[2 * win + 1] as i32 * x[b0 + ((m0 >> 2) & 3) as usize] as i32;
+            a1 += vals[2 * win + 2] as i32 * x[b1 + (m1 & 3) as usize] as i32
+                + vals[2 * win + 3] as i32 * x[b1 + ((m1 >> 2) & 3) as usize] as i32;
+            win += 2;
+        }
+        if win < wins {
+            let mb = meta[win];
+            let base = win * 4;
+            a0 += vals[2 * win] as i32 * x[base + (mb & 3) as usize] as i32
+                + vals[2 * win + 1] as i32 * x[base + ((mb >> 2) & 3) as usize] as i32;
+        }
+        a0 + a1
+    }
+}
+
+// ---------------------------------------------------------------------
+// x86_64 AVX2 kernel
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{BlockedKernel, Microkernel, MT};
+    use std::arch::x86_64::*;
+
+    /// Explicit AVX2 path: i8 activations widen to i16, two K steps are
+    /// interleaved into i16 pairs and reduced with `_mm256_madd_epi16`
+    /// (exact for i8-range operands — unlike `maddubs`, which saturates).
+    /// Only selectable when `is_x86_feature_detected!("avx2")` holds.
+    pub struct Avx2Kernel;
+
+    impl Avx2Kernel {
+        pub fn available() -> bool {
+            is_x86_feature_detected!("avx2")
+        }
+    }
+
+    /// i32 lanes of `_mm256_madd_epi16(unpacklo(A, B), wpair)` map to
+    /// these output lanes (unpack interleaves within 128-bit halves).
+    const LO_LANES: [usize; 8] = [0, 1, 2, 3, 8, 9, 10, 11];
+    const HI_LANES: [usize; 8] = [4, 5, 6, 7, 12, 13, 14, 15];
+
+    /// Pack two i8 weights into the i16-pair broadcast `madd` expects.
+    #[inline]
+    fn wpair(w0: i8, w1: i8) -> i32 {
+        ((w0 as i16 as u16 as u32) | ((w1 as i16 as u16 as u32) << 16)) as i32
+    }
+
+    /// One fused step: widen two MT-wide i8 columns, interleave into
+    /// `(x0[lane], x1[lane])` i16 pairs, multiply-accumulate against
+    /// (w0, w1) into the two i32 accumulators.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available and both pointers read 16
+    /// valid bytes.
+    #[target_feature(enable = "avx2")]
+    unsafe fn madd_pair_step(
+        x0: *const i8,
+        x1: *const i8,
+        wp: __m256i,
+        acc_lo: &mut __m256i,
+        acc_hi: &mut __m256i,
+    ) {
+        let a = _mm256_cvtepi8_epi16(_mm_loadu_si128(x0 as *const __m128i));
+        let b = _mm256_cvtepi8_epi16(_mm_loadu_si128(x1 as *const __m128i));
+        let lo = _mm256_unpacklo_epi16(a, b);
+        let hi = _mm256_unpackhi_epi16(a, b);
+        *acc_lo = _mm256_add_epi32(*acc_lo, _mm256_madd_epi16(lo, wp));
+        *acc_hi = _mm256_add_epi32(*acc_hi, _mm256_madd_epi16(hi, wp));
+    }
+
+    /// Scatter the two vector accumulators back to lane order and add
+    /// into `acc`.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    unsafe fn flush(acc_lo: __m256i, acc_hi: __m256i, acc: &mut [i32; MT]) {
+        let mut tmp = [0i32; 8];
+        _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, acc_lo);
+        for (j, &lane) in LO_LANES.iter().enumerate() {
+            acc[lane] += tmp[j];
+        }
+        _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, acc_hi);
+        for (j, &lane) in HI_LANES.iter().enumerate() {
+            acc[lane] += tmp[j];
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dense_mtile_acc_avx2(xt: &[i8], w: &[i8], acc: &mut [i32; MT]) {
+        let k = w.len();
+        let k2 = k - k % 2;
+        let mut acc_lo = _mm256_setzero_si256();
+        let mut acc_hi = _mm256_setzero_si256();
+        let xp = xt.as_ptr();
+        let mut kk = 0;
+        while kk < k2 {
+            let wp = _mm256_set1_epi32(wpair(w[kk], w[kk + 1]));
+            madd_pair_step(xp.add(kk * MT), xp.add((kk + 1) * MT), wp, &mut acc_lo, &mut acc_hi);
+            kk += 2;
+        }
+        flush(acc_lo, acc_hi, acc);
+        if kk < k {
+            let wv = w[kk] as i32;
+            let xcol = &xt[kk * MT..kk * MT + MT];
+            for lane in 0..MT {
+                acc[lane] += wv * xcol[lane] as i32;
+            }
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    unsafe fn compressed_mtile_acc_avx2(
+        xt: &[i8],
+        vals: &[i8],
+        cols: &[u32],
+        acc: &mut [i32; MT],
+    ) {
+        let half = vals.len();
+        let h2 = half - half % 2;
+        let mut acc_lo = _mm256_setzero_si256();
+        let mut acc_hi = _mm256_setzero_si256();
+        let xp = xt.as_ptr();
+        let mut t = 0;
+        while t < h2 {
+            let wp = _mm256_set1_epi32(wpair(vals[t], vals[t + 1]));
+            madd_pair_step(
+                xp.add(cols[t] as usize * MT),
+                xp.add(cols[t + 1] as usize * MT),
+                wp,
+                &mut acc_lo,
+                &mut acc_hi,
+            );
+            t += 2;
+        }
+        flush(acc_lo, acc_hi, acc);
+        if t < half {
+            let v = vals[t] as i32;
+            let c = cols[t] as usize;
+            let xcol = &xt[c * MT..c * MT + MT];
+            for lane in 0..MT {
+                acc[lane] += v * xcol[lane] as i32;
+            }
+        }
+    }
+
+    impl Microkernel for Avx2Kernel {
+        fn name(&self) -> &'static str {
+            "avx2"
+        }
+
+        fn dense_mtile_acc(&self, xt: &[i8], w: &[i8], acc: &mut [i32; MT]) {
+            // hard assert, not debug: these are safe methods and the
+            // unchecked 16-byte loads below must never read past the
+            // tile in release builds (scalar/blocked get the same guard
+            // implicitly from slice indexing)
+            assert!(xt.len() >= w.len() * MT, "tile shorter than K*MT");
+            // SAFETY: select() only hands out Avx2Kernel after runtime
+            // detection; the assert above keeps every 16-byte column
+            // load inside the tile.
+            unsafe { dense_mtile_acc_avx2(xt, w, acc) }
+        }
+
+        fn compressed_mtile_acc(
+            &self,
+            xt: &[i8],
+            vals: &[i8],
+            cols: &[u32],
+            acc: &mut [i32; MT],
+        ) {
+            assert_eq!(vals.len(), cols.len());
+            // O(half) scan of integer compares — cheap next to the
+            // MT-wide FMA work — so a hand-built Compressed24 with an
+            // out-of-range column panics like the safe backends instead
+            // of reading foreign memory
+            let kp = xt.len() / MT;
+            assert!(
+                cols.iter().all(|&c| (c as usize) < kp),
+                "stored column outside the K'-wide tile"
+            );
+            // SAFETY: detection as above; the asserts bound every
+            // cols[t]*MT + 16 load within xt.
+            unsafe { compressed_mtile_acc_avx2(xt, vals, cols, acc) }
+        }
+
+        fn gemv_dot(&self, x: &[i8], vals: &[i8], meta: &[u8]) -> i32 {
+            // the decode walk gathers 2 bytes per 4-byte window; without
+            // AVX-512 byte-gather there is no vector win, so take the
+            // unrolled portable walk (bit-exact, fastest non-SIMD form)
+            BlockedKernel.gemv_dot(x, vals, meta)
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub use avx2::Avx2Kernel;
+
+// ---------------------------------------------------------------------
+// Runtime dispatch
+// ---------------------------------------------------------------------
+
+/// The `kernel` knob of the serving config: which microkernel backend
+/// the STC GEMMs run on. All choices are bit-exact; only speed differs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelChoice {
+    /// AVX2 when the CPU supports it, else the blocked portable kernel.
+    #[default]
+    Auto,
+    /// The scalar reference (ground truth; slowest).
+    Scalar,
+    /// The unrolled portable kernel.
+    Blocked,
+    /// The explicit AVX2 kernel; falls back to scalar when unsupported.
+    Avx2,
+}
+
+impl KernelChoice {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelChoice::Auto => "auto",
+            KernelChoice::Scalar => "scalar",
+            KernelChoice::Blocked => "blocked",
+            KernelChoice::Avx2 => "avx2",
+        }
+    }
+}
+
+impl std::str::FromStr for KernelChoice {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<KernelChoice, String> {
+        match s {
+            "auto" => Ok(KernelChoice::Auto),
+            "scalar" => Ok(KernelChoice::Scalar),
+            "blocked" => Ok(KernelChoice::Blocked),
+            "avx2" => Ok(KernelChoice::Avx2),
+            _ => Err(format!(
+                "unknown kernel '{s}' (want auto|scalar|blocked|avx2)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for KernelChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+static SCALAR: ScalarKernel = ScalarKernel;
+static BLOCKED: BlockedKernel = BlockedKernel;
+#[cfg(target_arch = "x86_64")]
+static AVX2: Avx2Kernel = Avx2Kernel;
+
+/// Whether the explicit AVX2 path can run on this machine.
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        Avx2Kernel::available()
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Resolve a [`KernelChoice`] to a backend. `Auto` prefers AVX2, then
+/// the blocked portable kernel; an explicit `Avx2` request on a machine
+/// without AVX2 falls back to the scalar reference (never errors — the
+/// choice flows in from user config and every backend is bit-exact).
+pub fn select(choice: KernelChoice) -> &'static dyn Microkernel {
+    match choice {
+        KernelChoice::Scalar => &SCALAR,
+        KernelChoice::Blocked => &BLOCKED,
+        KernelChoice::Auto => {
+            #[cfg(target_arch = "x86_64")]
+            if Avx2Kernel::available() {
+                return &AVX2;
+            }
+            &BLOCKED
+        }
+        KernelChoice::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            if Avx2Kernel::available() {
+                return &AVX2;
+            }
+            &SCALAR
+        }
+    }
+}
+
+/// The default backend (the `auto` resolution) — what every kernel entry
+/// point without an explicit `_with` argument runs on.
+pub fn auto_kernel() -> &'static dyn Microkernel {
+    select(KernelChoice::Auto)
+}
+
+/// Every backend that can run on this machine (scalar and blocked
+/// always; AVX2 when detected) — the sweep list for the conformance
+/// suite and the kernel-comparison bench tables.
+pub fn available_kernels() -> Vec<&'static dyn Microkernel> {
+    let mut v: Vec<&'static dyn Microkernel> = vec![&SCALAR, &BLOCKED];
+    #[cfg(target_arch = "x86_64")]
+    if Avx2Kernel::available() {
+        v.push(&AVX2);
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::XorShift;
+
+    fn random_i8(rng: &mut XorShift, len: usize) -> Vec<i8> {
+        (0..len).map(|_| (rng.below(255) as i32 - 127) as i8).collect()
+    }
+
+    /// Random stored pairs of a 2:4 row: per window two distinct
+    /// positions, absolute columns, plus the 2-bit metadata byte.
+    fn random_pairs(rng: &mut XorShift, kp: usize) -> (Vec<i8>, Vec<u32>, Vec<u8>) {
+        let wins = kp / 4;
+        let (mut vals, mut cols, mut meta) = (Vec::new(), Vec::new(), Vec::new());
+        for w in 0..wins {
+            let mut ps = rng.choose(4, 2);
+            ps.sort_unstable();
+            for &p in &ps {
+                vals.push((rng.below(253) as i32 - 126) as i8);
+                cols.push((w * 4 + p) as u32);
+            }
+            meta.push(ps[0] as u8 | ((ps[1] as u8) << 2));
+        }
+        (vals, cols, meta)
+    }
+
+    #[test]
+    fn all_backends_match_scalar_on_every_primitive() {
+        let mut rng = XorShift::new(101);
+        let kernels = available_kernels();
+        assert!(kernels.len() >= 2);
+        for kp in [4usize, 12, 16, 36, 64, 100] {
+            // dense primitive also exercises odd K (no %4 / %2 structure)
+            for k in [kp, kp + 1, kp + 3] {
+                let xt = random_i8(&mut rng, k * MT);
+                let w = random_i8(&mut rng, k);
+                let mut want = [7i32; MT]; // nonzero start: must accumulate
+                ScalarKernel.dense_mtile_acc(&xt, &w, &mut want);
+                for kern in &kernels {
+                    let mut got = [7i32; MT];
+                    kern.dense_mtile_acc(&xt, &w, &mut got);
+                    assert_eq!(got, want, "dense {} k={k}", kern.name());
+                }
+            }
+            let xt = random_i8(&mut rng, kp * MT);
+            let (vals, cols, meta) = random_pairs(&mut rng, kp);
+            let mut want = [-3i32; MT];
+            ScalarKernel.compressed_mtile_acc(&xt, &vals, &cols, &mut want);
+            let x = random_i8(&mut rng, kp);
+            let want_dot = ScalarKernel.gemv_dot(&x, &vals, &meta);
+            for kern in &kernels {
+                let mut got = [-3i32; MT];
+                kern.compressed_mtile_acc(&xt, &vals, &cols, &mut got);
+                assert_eq!(got, want, "compressed {} kp={kp}", kern.name());
+                assert_eq!(kern.gemv_dot(&x, &vals, &meta), want_dot, "gemv {}", kern.name());
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_resolves_every_choice() {
+        assert_eq!(select(KernelChoice::Scalar).name(), "scalar");
+        assert_eq!(select(KernelChoice::Blocked).name(), "blocked");
+        let auto = select(KernelChoice::Auto).name();
+        assert!(auto == "avx2" || auto == "blocked", "{auto}");
+        if avx2_available() {
+            assert_eq!(auto, "avx2");
+            assert_eq!(select(KernelChoice::Avx2).name(), "avx2");
+        } else {
+            // documented fallback: explicit avx2 request degrades to scalar
+            assert_eq!(select(KernelChoice::Avx2).name(), "scalar");
+        }
+        let names: Vec<&str> = available_kernels().iter().map(|k| k.name()).collect();
+        assert!(names.contains(&"scalar") && names.contains(&"blocked"));
+        assert_eq!(names.contains(&"avx2"), avx2_available());
+    }
+
+    #[test]
+    fn choice_parses_and_roundtrips() {
+        for s in ["auto", "scalar", "blocked", "avx2"] {
+            let c: KernelChoice = s.parse().unwrap();
+            assert_eq!(c.as_str(), s);
+            assert_eq!(c.to_string(), s);
+        }
+        assert!("sse9".parse::<KernelChoice>().is_err());
+        assert_eq!(KernelChoice::default(), KernelChoice::Auto);
+    }
+
+    #[test]
+    fn extreme_values_stay_exact() {
+        // the saturation trap this module's madd scheme avoids: i8
+        // extremes whose i16 pair sums would saturate maddubs
+        let kernels = available_kernels();
+        let k = 32;
+        let xt = vec![-128i8; k * MT];
+        let w = vec![-128i8; k];
+        let mut want = [0i32; MT];
+        ScalarKernel.dense_mtile_acc(&xt, &w, &mut want);
+        assert!(want.iter().all(|&v| v == k as i32 * 16384));
+        for kern in &kernels {
+            let mut got = [0i32; MT];
+            kern.dense_mtile_acc(&xt, &w, &mut got);
+            assert_eq!(got, want, "{}", kern.name());
+        }
+    }
+}

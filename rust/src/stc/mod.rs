@@ -1,21 +1,59 @@
 //! Sparse-Tensor-Core simulator: dense GEMM baselines (the cuBLASLt
 //! role), the 2:4 compressed format + compressed GEMM (the cuSPARSELt
-//! role), and the end-to-end SlideSparse linear operator.
+//! role), the explicit int8 microkernel layer both run on, and the
+//! end-to-end SlideSparse linear operator.
 //!
 //! This is the hardware-substitution substrate (DESIGN.md §2): compressed
 //! execution genuinely performs half the multiply-accumulates and half
 //! the weight-byte traffic of dense, so measured speedup ratios follow
 //! the same mechanics as on real Sparse Tensor Cores.
+//!
+//! ## Layering (see docs/ARCHITECTURE.md for the full walkthrough)
+//!
+//! * [`microkernel`] — the int8 dot-product primitives (scalar
+//!   reference, unrolled portable kernel, x86_64 AVX2) behind every
+//!   M-tile GEMM, selected at runtime by [`microkernel::KernelChoice`].
+//! * [`dense`] / [`compressed`] — the outer loops: M-tile and K-inner
+//!   dense GEMMs, the `Compressed24` storage format, compressed GEMM
+//!   and the metadata-walking decode GEMV, each with a pooled variant
+//!   partitioned over contiguous output blocks.
+//! * [`slide_gemm`] — the end-to-end operator: fused quant+lift (Psi)
+//!   -> compressed 2:4 GEMM over packed weights (Phi(W)) -> dequant.
+//!
+//! ## Bit-exactness invariants this layer guarantees
+//!
+//! 1. Every microkernel backend reduces each output element over the
+//!    same multiset of exact i32 products — integer addition is
+//!    associative, so scalar, blocked and AVX2 results are identical.
+//! 2. Every pooled kernel assigns each output element to exactly one
+//!    task with the serial accumulation order, so results are identical
+//!    at any thread count.
+//! 3. For (2N-2):2N-compliant int8 weights, compressed GEMM over
+//!    (packed weights, lifted activations) equals the dense int8 GEMM
+//!    over (weights, activations) EXACTLY (paper Eq. 3 as integer
+//!    arithmetic).
+//!
+//! All three are gated by `rust/tests/conformance.rs`.
 
 pub mod compressed;
 pub mod dense;
+pub mod microkernel;
 pub mod slide_gemm;
 
 pub use compressed::{
     gemm_compressed_i8, gemm_compressed_i8_mtile, gemm_compressed_i8_mtile_pool,
-    gemv_compressed_i8, gemv_compressed_i8_batch_pool, gemv_compressed_i8_pool, Compressed24,
+    gemm_compressed_i8_mtile_pool_with, gemm_compressed_i8_mtile_with, gemv_compressed_i8,
+    gemv_compressed_i8_batch_pool, gemv_compressed_i8_batch_pool_with, gemv_compressed_i8_pool,
+    gemv_compressed_i8_with, Compressed24,
 };
-pub use dense::{gemm_f32, gemm_i8, gemm_i8_mtile, gemm_i8_mtile_pool, gemm_i8_pool};
+pub use dense::{
+    gemm_f32, gemm_i8, gemm_i8_mtile, gemm_i8_mtile_pool, gemm_i8_mtile_pool_with,
+    gemm_i8_mtile_with, gemm_i8_pool,
+};
+pub use microkernel::{
+    auto_kernel, available_kernels, avx2_available, select as select_kernel, KernelChoice,
+    Microkernel,
+};
 pub use slide_gemm::{DenseLinear, SlideLinear};
 
 /// MAC counts for the cost accounting used by benches.

@@ -12,14 +12,17 @@ use crate::quant::int8::{dequantize, quantize_per_token, quantize_weight_per_cha
 use crate::sparsity::packer::pack_matrix;
 use crate::sparsity::prune::prune_magnitude;
 use crate::stc::compressed::{
-    gemm_compressed_i8_mtile_pool, gemv_compressed_i8_batch_pool, Compressed24,
+    gemm_compressed_i8_mtile_pool_with, gemv_compressed_i8_batch_pool_with, Compressed24,
 };
-use crate::stc::dense::{gemm_i8_mtile_pool, gemm_i8_pool};
+use crate::stc::dense::{gemm_i8_mtile_pool_with, gemm_i8_pool};
+use crate::stc::microkernel::{auto_kernel, Microkernel};
 use crate::util::ThreadPool;
 
 /// A prepared SlideSparse linear layer: offline-packed + compressed
 /// weights and the fused activation kernel. Executes on `pool` (the
-/// process-serial pool unless `set_pool` installed a parallel one).
+/// process-serial pool unless `set_pool` installed a parallel one) and
+/// on `micro` (the auto-dispatched microkernel unless `set_microkernel`
+/// picked an explicit backend).
 pub struct SlideLinear {
     pub o: usize,
     pub k: usize,
@@ -28,6 +31,7 @@ pub struct SlideLinear {
     pub w_scales: Vec<f32>,
     pub kernel: FusedQuantSlide,
     pool: Arc<ThreadPool>,
+    micro: &'static dyn Microkernel,
 }
 
 impl SlideLinear {
@@ -50,6 +54,7 @@ impl SlideLinear {
             w_scales: ws,
             kernel: FusedQuantSlide::new(k, n),
             pool: ThreadPool::serial(),
+            micro: auto_kernel(),
         }
     }
 
@@ -69,6 +74,7 @@ impl SlideLinear {
             w_scales: ws,
             kernel: FusedQuantSlide::new(k, n),
             pool: ThreadPool::serial(),
+            micro: auto_kernel(),
         }
     }
 
@@ -76,6 +82,12 @@ impl SlideLinear {
     /// (bit-exact with serial execution at any thread count).
     pub fn set_pool(&mut self, pool: Arc<ThreadPool>) {
         self.pool = pool;
+    }
+
+    /// Install an explicit microkernel backend (bit-exact with the
+    /// scalar reference on every backend; only speed differs).
+    pub fn set_microkernel(&mut self, kern: &'static dyn Microkernel) {
+        self.micro = kern;
     }
 
     /// Online phase: y [m, o] = dequant(compressed_gemm(fused(x))).
@@ -87,9 +99,9 @@ impl SlideLinear {
             // small batches: metadata-walking GEMVs partitioned over
             // output rows, all rows under one fork-join (no M-tile
             // padding waste; matches the dense small-m routing)
-            gemv_compressed_i8_batch_pool(&self.pool, &xq, &self.weights, m)
+            gemv_compressed_i8_batch_pool_with(&self.pool, self.micro, &xq, &self.weights, m)
         } else {
-            gemm_compressed_i8_mtile_pool(&self.pool, &xq, &self.weights, m)
+            gemm_compressed_i8_mtile_pool_with(&self.pool, self.micro, &xq, &self.weights, m)
         };
         dequantize(&acc, m, self.o, &xs, &self.w_scales)
     }
@@ -108,17 +120,32 @@ pub struct DenseLinear {
     pub wq: Vec<i8>,
     pub w_scales: Vec<f32>,
     pool: Arc<ThreadPool>,
+    micro: &'static dyn Microkernel,
 }
 
 impl DenseLinear {
     pub fn prepare(w: &[f32], o: usize, k: usize) -> DenseLinear {
         let (wq, ws) = quantize_weight_per_channel(w, o, k);
-        DenseLinear { o, k, wq, w_scales: ws, pool: ThreadPool::serial() }
+        DenseLinear {
+            o,
+            k,
+            wq,
+            w_scales: ws,
+            pool: ThreadPool::serial(),
+            micro: auto_kernel(),
+        }
     }
 
     /// Install the worker pool the GEMM hot path partitions over.
     pub fn set_pool(&mut self, pool: Arc<ThreadPool>) {
         self.pool = pool;
+    }
+
+    /// Install an explicit microkernel backend (drives the M-tiled
+    /// prefill path; the small-m k-inner kernel is not tile-shaped and
+    /// stays on its own register-blocked loop).
+    pub fn set_microkernel(&mut self, kern: &'static dyn Microkernel) {
+        self.micro = kern;
     }
 
     pub fn forward(&self, x: &[f32], m: usize) -> Vec<f32> {
@@ -129,7 +156,7 @@ impl DenseLinear {
         let acc = if m < crate::stc::dense::MT / 2 {
             gemm_i8_pool(&self.pool, &xq, &self.wq, m, self.o, self.k)
         } else {
-            gemm_i8_mtile_pool(&self.pool, &xq, &self.wq, m, self.o, self.k)
+            gemm_i8_mtile_pool_with(&self.pool, self.micro, &xq, &self.wq, m, self.o, self.k)
         };
         dequantize(&acc, m, self.o, &xs, &self.w_scales)
     }
@@ -201,6 +228,27 @@ mod tests {
             let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
             assert_eq!(serial_s.forward(&x, m), pooled_s.forward(&x, m), "slide m={m}");
             assert_eq!(serial_d.forward(&x, m), pooled_d.forward(&x, m), "dense m={m}");
+        }
+    }
+
+    #[test]
+    fn microkernel_backends_forward_bit_exact() {
+        // every selectable backend must leave layer outputs byte-identical
+        let mut rng = XorShift::new(88);
+        let (o, k, n) = (24, 48, 4);
+        let w: Vec<f32> = (0..o * k).map(|_| rng.normal()).collect();
+        let base_s = SlideLinear::prepare(&w, o, k, n);
+        let base_d = DenseLinear::prepare(&w, o, k);
+        for kern in crate::stc::microkernel::available_kernels() {
+            let mut s = SlideLinear::prepare(&w, o, k, n);
+            let mut d = DenseLinear::prepare(&w, o, k);
+            s.set_microkernel(kern);
+            d.set_microkernel(kern);
+            for m in [1usize, 3, 17] {
+                let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+                assert_eq!(base_s.forward(&x, m), s.forward(&x, m), "{} m={m}", kern.name());
+                assert_eq!(base_d.forward(&x, m), d.forward(&x, m), "{} m={m}", kern.name());
+            }
         }
     }
 

@@ -1,9 +1,11 @@
 //! Differential conformance suite for the STC simulator (the VENOM /
 //! cuSPARSELt-style validation): every compressed execution path is
 //! checked bit-exact against the dense int8 reference, the storage
-//! format round-trips, and the pooled kernels are bit-exact with the
-//! single-threaded kernels at 1/2/4/8 threads. All integer math — exact
-//! equality throughout, no tolerances.
+//! format round-trips, the pooled kernels are bit-exact with the
+//! single-threaded kernels at 1/2/4/8 threads, and every microkernel
+//! backend (scalar reference, blocked, AVX2 when the CPU has it) is
+//! bit-exact across that whole grid. All integer math — exact equality
+//! throughout, no tolerances.
 
 use std::sync::Arc;
 
@@ -14,9 +16,11 @@ use slidesparse::sparsity::prune::prune_magnitude;
 use slidesparse::sparsity::LiftPlan;
 use slidesparse::sparsity::{pack_matrix, Pattern};
 use slidesparse::stc::{
-    gemm_compressed_i8, gemm_compressed_i8_mtile, gemm_compressed_i8_mtile_pool, gemm_i8,
-    gemm_i8_mtile, gemm_i8_mtile_pool, gemm_i8_pool, gemv_compressed_i8,
-    gemv_compressed_i8_batch_pool, gemv_compressed_i8_pool, Compressed24,
+    available_kernels, gemm_compressed_i8, gemm_compressed_i8_mtile,
+    gemm_compressed_i8_mtile_pool, gemm_compressed_i8_mtile_pool_with, gemm_i8, gemm_i8_mtile,
+    gemm_i8_mtile_pool, gemm_i8_mtile_pool_with, gemm_i8_pool, gemv_compressed_i8,
+    gemv_compressed_i8_batch_pool, gemv_compressed_i8_batch_pool_with, gemv_compressed_i8_pool,
+    Compressed24,
 };
 use slidesparse::util::prng::XorShift;
 use slidesparse::util::{prop, ThreadPool};
@@ -190,6 +194,73 @@ fn parallel_gemm_bit_exact_across_thread_counts() {
             );
         }
     });
+}
+
+// ---------------------------------------------------------------------
+// (d) every microkernel backend bit-exact with the dense int8 reference
+//     for N in {2, 3, 4, 8} at 1/2/4/8 threads
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_kernel_backend_bit_exact_across_patterns_and_threads() {
+    // The acceptance grid of the microkernel layer: for each family
+    // pattern, run the full prune -> pack -> compress pipeline, then
+    // check every (backend x thread count) execution of the M-tiled
+    // compressed GEMM, the M-tiled dense GEMM, and the decode GEMV
+    // against the single-threaded scalar dense int8 reference. Exact
+    // equality — a backend that saturates, truncates, or reorders into
+    // different results anywhere in the grid fails here.
+    let kernels = available_kernels();
+    assert!(kernels.len() >= 2, "scalar and blocked must always exist");
+    let pools: Vec<ThreadPool> =
+        [1usize, 2, 4, 8].iter().map(|t| ThreadPool::new(*t)).collect();
+    for n in FAMILY_NS {
+        prop::for_all(&format!("kernel backends == dense, N={n}"), |rng, _| {
+            let k = 2 * n * (1 + rng.below(3));
+            let o = 1 + rng.below(10);
+            let m = 1 + rng.below(24);
+            let w: Vec<f32> = (0..o * k).map(|_| rng.normal()).collect();
+            let pruned = prune_magnitude(&w, o, k, 2 * n - 2, 2 * n);
+            let (wq, _scales) = quantize_weight_per_channel(&pruned, o, k);
+            let wq_f: Vec<f32> = wq.iter().map(|v| *v as f32).collect();
+            let packed = pack_matrix(&wq_f, o, k, n).expect("pruned weights pack");
+            let packed_i8: Vec<i8> = packed.data.iter().map(|v| *v as i8).collect();
+            let c = Compressed24::from_dense(&packed_i8, o, packed.k_packed).unwrap();
+
+            let x = random_i8(rng, m * k);
+            let plan = LiftPlan::new(k, n);
+            let mut lifted = vec![0i8; m * plan.k_packed];
+            for r in 0..m {
+                plan.lift_row_into(
+                    &x[r * k..(r + 1) * k],
+                    &mut lifted[r * plan.k_packed..(r + 1) * plan.k_packed],
+                );
+            }
+
+            let reference = gemm_i8(&x, &wq, m, o, k);
+            for kern in &kernels {
+                for pool in &pools {
+                    let t = pool.threads();
+                    let name = kern.name();
+                    assert_eq!(
+                        gemm_compressed_i8_mtile_pool_with(pool, *kern, &lifted, &c, m),
+                        reference,
+                        "compressed mtile, kernel={name}, {t} threads, N={n}"
+                    );
+                    assert_eq!(
+                        gemm_i8_mtile_pool_with(pool, *kern, &x, &wq, m, o, k),
+                        reference,
+                        "dense mtile, kernel={name}, {t} threads, N={n}"
+                    );
+                    assert_eq!(
+                        gemv_compressed_i8_batch_pool_with(pool, *kern, &lifted, &c, m),
+                        reference,
+                        "batched gemv, kernel={name}, {t} threads, N={n}"
+                    );
+                }
+            }
+        });
+    }
 }
 
 #[test]
