@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""Validate the schemas of emitted BENCH_*.json files.
+
+Run by the CI bench-smoke job after executing the bench binaries in
+SLIDESPARSE_BENCH_SMOKE=1 mode, so bench JSON contracts are exercised on
+every PR instead of only at release time.
+
+Usage: validate_bench_json.py FILE [FILE...]
+Each file is matched to a schema by its basename.
+"""
+
+import json
+import sys
+
+# required keys per file, nested as {key: None | set-of-subkeys}
+SCHEMAS = {
+    "BENCH_kernel_square.json": {
+        "smoke": None,
+        "kernel_backends": {"bench", "m", "k", "o", "blocked_vs_scalar_s68", "rows"},
+        "thread_scaling": {"bench", "m", "k", "o", "dense_equiv_bytes", "rows"},
+    },
+    "BENCH_prefix_reuse.json": {
+        "smoke": None,
+        "bench": None,
+        "groups": None,
+        "per_group": None,
+        "prefix_len": None,
+        "suffix_len": None,
+        "new_tokens": None,
+        "hit_rate": None,
+        "prefill_token_reduction": None,
+        "bit_exact": None,
+        "cache_off": {"prefill_tokens", "wall_s", "gen_tok_per_s"},
+        "cache_on": {
+            "prefill_tokens",
+            "prefix_hits",
+            "prefix_misses",
+            "cached_tokens",
+            "evictions",
+            "wall_s",
+            "gen_tok_per_s",
+        },
+    },
+}
+
+
+def fail(msg: str) -> None:
+    print(f"FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def validate(path: str) -> None:
+    name = path.rsplit("/", 1)[-1]
+    schema = SCHEMAS.get(name)
+    if schema is None:
+        fail(f"{name}: no schema registered (add one to {__file__})")
+    with open(path) as f:
+        data = json.load(f)
+    for key, subkeys in schema.items():
+        if key not in data:
+            fail(f"{name}: missing key '{key}'")
+        if subkeys is not None:
+            missing = subkeys - set(data[key])
+            if missing:
+                fail(f"{name}: '{key}' missing subkeys {sorted(missing)}")
+    # semantic spot checks
+    if name == "BENCH_prefix_reuse.json":
+        if data["bit_exact"] is not True:
+            fail(f"{name}: bit_exact must be true")
+        if not 0.0 <= data["hit_rate"] <= 1.0:
+            fail(f"{name}: hit_rate {data['hit_rate']} out of range")
+        if data["prefill_token_reduction"] <= 0.0:
+            fail(f"{name}: expected a positive prefill-work reduction")
+    print(f"OK: {name}")
+
+
+def main() -> None:
+    if len(sys.argv) < 2:
+        fail("usage: validate_bench_json.py FILE [FILE...]")
+    for path in sys.argv[1:]:
+        validate(path)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,7 @@
 //! the 1024^3 workload).
 use std::collections::BTreeMap;
 
-use slidesparse::bench::harness::{thread_sweep, write_json};
+use slidesparse::bench::harness::{smoke_mode, thread_sweep, write_json};
 use slidesparse::bench::tables;
 use slidesparse::perfmodel::gpus;
 use slidesparse::quant::Precision;
@@ -15,22 +15,37 @@ use slidesparse::util::json::Json;
 
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
-    tables::kernel_square_measured(&[16, 64, 256], 480).print();
+    // SLIDESPARSE_BENCH_SMOKE=1: reduced sizes so CI exercises the
+    // binary + JSON schema on every PR (numbers not comparable)
+    let smoke = smoke_mode();
+    if smoke {
+        tables::kernel_square_measured(&[16], 120).print();
+    } else {
+        tables::kernel_square_measured(&[16, 64, 256], 480).print();
+    }
 
     // microkernel backends on the square workload (per-core effect)
-    let (kernels, kjson) = tables::kernel_square_kernels(1024, 256);
+    let (ok, m) = if smoke { (256, 32) } else { (1024, 256) };
+    let (kernels, kjson) = tables::kernel_square_kernels(ok, m);
     kernels.print();
 
     // thread scaling on the acceptance workload (1024x1024x1024, 6:8)
-    let (scaling, sjson) = tables::kernel_square_scaling(&thread_sweep(), 1024, 1024);
+    let threads = if smoke { vec![1, 2] } else { thread_sweep() };
+    let (ok, m) = if smoke { (256, 64) } else { (1024, 1024) };
+    let (scaling, sjson) = tables::kernel_square_scaling(&threads, ok, m);
     scaling.print();
 
     let mut top = BTreeMap::new();
     top.insert("kernel_backends".to_string(), kjson);
     top.insert("thread_scaling".to_string(), sjson);
+    top.insert("smoke".to_string(), Json::Bool(smoke));
     match write_json("BENCH_kernel_square.json", &Json::Obj(top)) {
         Ok(()) => println!("\nwrote BENCH_kernel_square.json"),
         Err(e) => eprintln!("could not write BENCH_kernel_square.json: {e}"),
+    }
+    if smoke {
+        println!("smoke mode: skipping the modeled GPU sweep");
+        return;
     }
 
     let ms: &[usize] = if full {

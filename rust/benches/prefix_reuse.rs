@@ -1,0 +1,32 @@
+//! Prefix-cache reuse bench: a shared-prefix serving workload run with
+//! the engine-local prefix cache off and on. Writes
+//! `BENCH_prefix_reuse.json` (hit rate, cached tokens, prefill-work
+//! reduction, wall time) so successive PRs can diff the reuse
+//! trajectory; the run itself asserts that generations are bit-exact
+//! with the cache off. `SLIDESPARSE_BENCH_SMOKE=1` shrinks the model
+//! and workload for CI.
+
+use slidesparse::bench::harness::{smoke_mode, write_json};
+use slidesparse::bench::tables;
+use slidesparse::util::json::Json;
+
+fn main() {
+    let smoke = smoke_mode();
+    // groups x rounds of (prefix + suffix) prompts; rounds after the
+    // first re-attach the prefix blocks earlier requests parked
+    let (groups, per_group, prefix_len, suffix_len, new_tokens) = if smoke {
+        (2, 3, 32, 8, 4)
+    } else {
+        (4, 6, 96, 16, 8)
+    };
+    let (table, mut json) =
+        tables::prefix_reuse_measured(smoke, groups, per_group, prefix_len, suffix_len, new_tokens);
+    table.print();
+    if let Json::Obj(map) = &mut json {
+        map.insert("smoke".to_string(), Json::Bool(smoke));
+    }
+    match write_json("BENCH_prefix_reuse.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_prefix_reuse.json"),
+        Err(e) => eprintln!("could not write BENCH_prefix_reuse.json: {e}"),
+    }
+}

@@ -139,6 +139,15 @@ pub fn thread_sweep() -> Vec<usize> {
     vec![1, 2, 4, 8]
 }
 
+/// Bench smoke mode (`SLIDESPARSE_BENCH_SMOKE=1`): bench binaries
+/// shrink their workloads so CI can exercise them — and validate their
+/// emitted `BENCH_*.json` schemas — on every PR instead of only at
+/// release time. Numbers from smoke runs are NOT comparable across
+/// machines or PRs; the JSON records `"smoke": true` for that reason.
+pub fn smoke_mode() -> bool {
+    std::env::var("SLIDESPARSE_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
 /// Write a JSON value to `path` (pretty-printed).
 pub fn write_json(path: &str, j: &Json) -> std::io::Result<()> {
     std::fs::write(path, j.to_string_pretty())

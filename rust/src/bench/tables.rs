@@ -373,12 +373,16 @@ pub fn fused_kernel_modeled(ms: &[usize], k: usize) -> Table {
 // Fig. 8 / D.4: end-to-end serving throughput (measured on the engine)
 // ---------------------------------------------------------------------
 
+/// Vocab of [`e2e_model`] (callers generating demo prompts need it
+/// without building a model first).
+pub const E2E_VOCAB: usize = 512;
+
 /// Serving-model scale for CPU E2E benches (small-real-model, DESIGN §2).
 pub fn e2e_model(backend: Backend) -> NativeModel {
     NativeModel::generate(
         BlockConfig { dim: 240, n_heads: 4, ffn: 480 },
         4,
-        512,
+        E2E_VOCAB,
         320,
         99,
         backend,
@@ -447,6 +451,161 @@ pub fn e2e_measured(decode_heavy: bool) -> Table {
         t.row(vec![pat.to_string(), format!("{tput:.0}"), sx(tput / base)]);
     }
     t
+}
+
+// ---------------------------------------------------------------------
+// Prefix-cache reuse: shared-prefix serving workload (cache off vs on)
+// ---------------------------------------------------------------------
+
+/// Measurement record of one engine run in [`prefix_reuse_measured`].
+struct PrefixRun {
+    outs: Vec<Vec<i32>>,
+    prefilled_tokens: u64,
+    cached_tokens: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    wall_s: f64,
+    gen_tok_s: f64,
+}
+
+/// Run a shared-prefix serving workload (`groups` distinct prefixes x
+/// `per_group` rounds) through the STC engine with the prefix cache off
+/// and on. Rounds run to completion before the next starts, so later
+/// rounds re-attach the blocks finished requests parked on the LRU.
+/// Returns the comparison table and a JSON record (the bench binary
+/// writes it as `BENCH_prefix_reuse.json`); panics if the two runs'
+/// generated tokens differ — the bench doubles as a bit-exactness gate.
+pub fn prefix_reuse_measured(
+    small: bool,
+    groups: usize,
+    per_group: usize,
+    prefix_len: usize,
+    suffix_len: usize,
+    new_tokens: usize,
+) -> (Table, Json) {
+    let build_model = || {
+        if small {
+            let smax = (prefix_len + suffix_len + new_tokens + 2).next_power_of_two();
+            NativeModel::generate(
+                BlockConfig { dim: 64, n_heads: 4, ffn: 96 },
+                2,
+                128,
+                smax,
+                31,
+                Backend::Slide { n: 4 },
+            )
+        } else {
+            e2e_model(Backend::Slide { n: 4 })
+        }
+    };
+    let vocab = if small { 128 } else { E2E_VOCAB };
+    let run = |prefix_cache: bool| -> PrefixRun {
+        let mut engine = Engine::new(
+            StcExecutor::new(build_model()),
+            EngineConfig {
+                kv_blocks: 4096,
+                kv_block_size: 16,
+                prefix_cache,
+                ..Default::default()
+            },
+        );
+        let mut rng = XorShift::new(7);
+        let prefixes: Vec<Vec<i32>> = (0..groups)
+            .map(|_| (0..prefix_len).map(|_| rng.below(vocab) as i32).collect())
+            .collect();
+        let t0 = std::time::Instant::now();
+        let mut outs: Vec<(u64, Vec<i32>)> = Vec::new();
+        let mut id = 0u64;
+        let mut generated = 0usize;
+        for _round in 0..per_group {
+            for pre in &prefixes {
+                let mut prompt = pre.clone();
+                prompt.extend((0..suffix_len).map(|_| rng.below(vocab) as i32));
+                engine.submit(Request::new(
+                    id,
+                    prompt,
+                    SamplingParams { max_new_tokens: new_tokens, ..Default::default() },
+                ));
+                id += 1;
+            }
+            for o in engine.run_to_completion().unwrap() {
+                generated += o.tokens.len();
+                outs.push((o.id, o.tokens));
+            }
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        outs.sort_by_key(|(id, _)| *id);
+        let m = &engine.metrics;
+        PrefixRun {
+            outs: outs.into_iter().map(|(_, t)| t).collect(),
+            prefilled_tokens: m.prefilled_tokens,
+            cached_tokens: m.prefix_cached_tokens,
+            hits: m.prefix_hits,
+            misses: m.prefix_misses,
+            evictions: m.prefix_evictions,
+            wall_s,
+            gen_tok_s: generated as f64 / wall_s,
+        }
+    };
+    let off = run(false);
+    let on = run(true);
+    assert_eq!(
+        off.outs, on.outs,
+        "prefix cache must be bit-exact (same argmax decode)"
+    );
+
+    let mut t = Table::new(
+        &format!(
+            "Prefix-cache reuse ({groups} prefixes x {per_group} rounds, \
+             {prefix_len}+{suffix_len} prompt tokens)"
+        ),
+        &["cache", "prefill tok", "hits", "misses", "cached tok", "evict", "gen tok/s"],
+    );
+    let cells = |label: &str, s: &PrefixRun| {
+        vec![
+            label.to_string(),
+            s.prefilled_tokens.to_string(),
+            s.hits.to_string(),
+            s.misses.to_string(),
+            s.cached_tokens.to_string(),
+            s.evictions.to_string(),
+            format!("{:.0}", s.gen_tok_s),
+        ]
+    };
+    t.row(cells("off", &off));
+    t.row(cells("on", &on));
+
+    let side = |s: &PrefixRun| {
+        let mut o = BTreeMap::new();
+        o.insert("prefill_tokens".to_string(), Json::Num(s.prefilled_tokens as f64));
+        o.insert("prefix_hits".to_string(), Json::Num(s.hits as f64));
+        o.insert("prefix_misses".to_string(), Json::Num(s.misses as f64));
+        o.insert("cached_tokens".to_string(), Json::Num(s.cached_tokens as f64));
+        o.insert("evictions".to_string(), Json::Num(s.evictions as f64));
+        o.insert("wall_s".to_string(), Json::Num(s.wall_s));
+        o.insert("gen_tok_per_s".to_string(), Json::Num(s.gen_tok_s));
+        Json::Obj(o)
+    };
+    let mut j = BTreeMap::new();
+    j.insert("bench".to_string(), Json::Str("prefix_reuse".to_string()));
+    j.insert("groups".to_string(), Json::Num(groups as f64));
+    j.insert("per_group".to_string(), Json::Num(per_group as f64));
+    j.insert("prefix_len".to_string(), Json::Num(prefix_len as f64));
+    j.insert("suffix_len".to_string(), Json::Num(suffix_len as f64));
+    j.insert("new_tokens".to_string(), Json::Num(new_tokens as f64));
+    j.insert("cache_off".to_string(), side(&off));
+    j.insert("cache_on".to_string(), side(&on));
+    j.insert(
+        "hit_rate".to_string(),
+        Json::Num(on.hits as f64 / (on.hits + on.misses).max(1) as f64),
+    );
+    j.insert(
+        "prefill_token_reduction".to_string(),
+        Json::Num(1.0 - on.prefilled_tokens as f64 / off.prefilled_tokens.max(1) as f64),
+    );
+    j.insert("bit_exact".to_string(), Json::Bool(true));
+    (t, Json::Obj(j))
 }
 
 /// Modeled E2E speedups across GPUs/models (D.4.1/D.4.2 rows).
@@ -763,6 +922,20 @@ mod tests {
             assert!(row.req("s68_s").as_f64().unwrap() > 0.0);
         }
         assert!(j.req("blocked_vs_scalar_s68").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn prefix_reuse_table_and_json() {
+        let (t, j) = prefix_reuse_measured(true, 2, 2, 32, 4, 2);
+        assert!(t.render().contains("gen tok/s"));
+        assert_eq!(j.req("bench").as_str(), Some("prefix_reuse"));
+        assert_eq!(j.req("bit_exact").as_bool(), Some(true));
+        // round 2 reuses round 1's parked prefixes: 2 hits, 32 tokens each
+        let on = j.req("cache_on");
+        assert!(on.req("prefix_hits").as_f64().unwrap() >= 2.0);
+        assert!(on.req("cached_tokens").as_f64().unwrap() >= 64.0);
+        let reduction = j.req("prefill_token_reduction").as_f64().unwrap();
+        assert!(reduction > 0.3, "reduction {reduction}");
     }
 
     #[test]

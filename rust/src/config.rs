@@ -6,6 +6,7 @@ use std::path::Path;
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::engine::EngineConfig;
+use crate::coordinator::router::Policy;
 use crate::coordinator::scheduler::SchedulerConfig;
 use crate::model::Backend;
 use crate::util::json::Json;
@@ -17,6 +18,9 @@ pub struct Config {
     pub sparsity: String,
     pub engine: EngineConfig,
     pub workers: usize,
+    /// multi-worker dispatch policy: "round_robin", "least_loaded",
+    /// "prefix" (sticky prefix-affinity), or "prefix:K"
+    pub routing: Policy,
     pub artifacts_dir: String,
     /// "pjrt" or "stc"
     pub executor: String,
@@ -28,6 +32,7 @@ impl Default for Config {
             sparsity: "6:8".into(),
             engine: EngineConfig::default(),
             workers: 1,
+            routing: Policy::RoundRobin,
             artifacts_dir: "artifacts".into(),
             executor: "stc".into(),
         }
@@ -60,19 +65,26 @@ impl Config {
         if let Some(v) = j.get("executor").and_then(|v| v.as_str()) {
             cfg.executor = v.to_string();
         }
-        // `threads` and `kernel` ride in EngineConfig so they reach the
-        // executor: accepted at the top level (the common case) or under
-        // "engine"
+        if let Some(v) = j.get("routing").and_then(|v| v.as_str()) {
+            cfg.routing = v.parse().map_err(|e| anyhow!("config: {e}"))?;
+        }
+        // `threads`, `kernel`, and `prefix_cache` ride in EngineConfig so
+        // they reach the executor/engine: accepted at the top level (the
+        // common case) or under "engine"
         if let Some(v) = j.get("threads").and_then(|v| v.as_usize()) {
             cfg.engine.threads = v;
         }
         if let Some(v) = j.get("kernel").and_then(|v| v.as_str()) {
             cfg.engine.kernel = v.parse().map_err(|e| anyhow!("config: {e}"))?;
         }
+        if let Some(v) = j.get("prefix_cache").and_then(|v| v.as_bool()) {
+            cfg.engine.prefix_cache = v;
+        }
         if let Some(e) = j.get("engine") {
             let mut ec = EngineConfig {
                 threads: cfg.engine.threads,
                 kernel: cfg.engine.kernel,
+                prefix_cache: cfg.engine.prefix_cache,
                 ..Default::default()
             };
             if let Some(v) = e.get("kv_blocks").and_then(|v| v.as_usize()) {
@@ -89,6 +101,9 @@ impl Config {
             }
             if let Some(v) = e.get("kernel").and_then(|v| v.as_str()) {
                 ec.kernel = v.parse().map_err(|e| anyhow!("config: {e}"))?;
+            }
+            if let Some(v) = e.get("prefix_cache").and_then(|v| v.as_bool()) {
+                ec.prefix_cache = v;
             }
             let mut sc = SchedulerConfig::default();
             if let Some(v) = e.get("max_batch").and_then(|v| v.as_usize()) {
@@ -205,11 +220,42 @@ mod tests {
     }
 
     #[test]
+    fn prefix_cache_knob_parses_at_both_levels() {
+        use crate::coordinator::router::{DEFAULT_AFFINITY_TOKENS, Policy};
+        let d = Config::default();
+        assert!(!d.engine.prefix_cache, "off by default");
+        assert_eq!(d.routing, Policy::RoundRobin);
+        let top = Config::from_json(r#"{"prefix_cache": true, "routing": "prefix"}"#).unwrap();
+        assert!(top.engine.prefix_cache);
+        assert_eq!(
+            top.routing,
+            Policy::PrefixAffinity { prefix_tokens: DEFAULT_AFFINITY_TOKENS }
+        );
+        // top-level value survives an "engine" object without the knob
+        let kept = Config::from_json(
+            r#"{"prefix_cache": true, "engine": {"kv_blocks": 32}}"#,
+        )
+        .unwrap();
+        assert!(kept.engine.prefix_cache);
+        // nested form wins when both are present
+        let nested = Config::from_json(
+            r#"{"prefix_cache": true, "engine": {"prefix_cache": false}}"#,
+        )
+        .unwrap();
+        assert!(!nested.engine.prefix_cache);
+        let k = Config::from_json(r#"{"routing": "prefix:32"}"#).unwrap();
+        assert_eq!(k.routing, Policy::PrefixAffinity { prefix_tokens: 32 });
+        let ll = Config::from_json(r#"{"routing": "least_loaded"}"#).unwrap();
+        assert_eq!(ll.routing, Policy::LeastLoaded);
+    }
+
+    #[test]
     fn bad_configs_rejected() {
         assert!(Config::from_json(r#"{"sparsity": "5:9"}"#).is_err());
         assert!(Config::from_json(r#"{"executor": "cuda"}"#).is_err());
         assert!(Config::from_json(r#"{"kernel": "sse9"}"#).is_err());
         assert!(Config::from_json(r#"{"engine": {"kernel": "gpu"}}"#).is_err());
+        assert!(Config::from_json(r#"{"routing": "hash_ring"}"#).is_err());
         assert!(Config::from_json("not json").is_err());
     }
 }

@@ -9,7 +9,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::executor::{DecodeItem, Executor, PrefillItem};
-use super::kvcache::{BlockManager, SeqId};
+use super::kvcache::{BlockId, BlockManager, SeqId};
 use super::metrics::EngineMetrics;
 use super::request::{FinishReason, Request, RequestOutput};
 use super::scheduler::{Scheduler, SchedulerConfig};
@@ -35,6 +35,12 @@ pub struct EngineConfig {
     /// `threads`: `Engine::new` installs it via `Executor::set_kernel`
     /// (a no-op for executors without the STC microkernel layer).
     pub kernel: crate::stc::KernelChoice,
+    /// share KV across requests with identical block-aligned prompt
+    /// prefixes (content-addressed block cache + saved per-block KV).
+    /// Outputs are bit-exact with the cache off — cached KV values are
+    /// exactly what a recompute would produce — so this only changes
+    /// how much prefill work runs (gated by tests/conformance.rs).
+    pub prefix_cache: bool,
 }
 
 impl Default for EngineConfig {
@@ -46,6 +52,7 @@ impl Default for EngineConfig {
             seed: 0,
             threads: 1,
             kernel: crate::stc::KernelChoice::Auto,
+            prefix_cache: false,
         }
     }
 }
@@ -58,13 +65,17 @@ pub struct Engine<E: Executor> {
     outputs: Vec<RequestOutput>,
     pub metrics: EngineMetrics,
     rng: XorShift,
+    /// saved compact KV per content-addressed cache block (prefix cache
+    /// only; dropped when the block manager evicts the block)
+    block_kv: HashMap<BlockId, (Vec<f32>, Vec<f32>)>,
 }
 
 impl<E: Executor> Engine<E> {
     pub fn new(mut executor: E, cfg: EngineConfig) -> Engine<E> {
         executor.set_kernel(cfg.kernel);
         executor.set_threads(cfg.threads);
-        let blocks = BlockManager::new(cfg.kv_blocks, cfg.kv_block_size);
+        let blocks = BlockManager::new(cfg.kv_blocks, cfg.kv_block_size)
+            .with_prefix_cache(cfg.prefix_cache);
         Engine {
             executor,
             scheduler: Scheduler::new(cfg.scheduler, blocks),
@@ -73,6 +84,7 @@ impl<E: Executor> Engine<E> {
             outputs: Vec::new(),
             metrics: EngineMetrics::new(),
             rng: XorShift::new(cfg.seed ^ 0x5EED),
+            block_kv: HashMap::new(),
         }
     }
 
@@ -99,8 +111,8 @@ impl<E: Executor> Engine<E> {
         let seq_id = self.next_seq;
         self.next_seq += 1;
         self.metrics.prompt_tokens += plen as u64;
+        self.scheduler.add_waiting(seq_id, request.prompt.clone());
         let seq = Sequence::new(seq_id, request);
-        self.scheduler.add_waiting(seq_id, plen);
         self.seqs.insert(seq_id, seq);
     }
 
@@ -145,6 +157,9 @@ impl<E: Executor> Engine<E> {
             self.metrics
                 .decode_step_time
                 .add(t0.elapsed().as_secs_f64());
+            // decode-time block growth can also evict cached blocks;
+            // keep the mirrored counter current outside prefill too
+            self.metrics.prefix_evictions = self.scheduler.blocks.prefix_stats.evictions;
             return Ok(true);
         }
         Ok(false)
@@ -157,6 +172,16 @@ impl<E: Executor> Engine<E> {
     }
 
     fn run_prefill(&mut self, ids: &[SeqId]) -> Result<()> {
+        // prefix-cache GC first: blocks the allocator evicted may already
+        // be reused for new content, so their saved KV must go before we
+        // consult `block_kv` below
+        for b in self.scheduler.blocks.drain_evictions() {
+            self.block_kv.remove(&b);
+        }
+        let prefix_on = self.scheduler.blocks.prefix_enabled();
+        let bs = self.scheduler.blocks.block_size;
+        let kv_len = self.executor.kv_len();
+
         // Borrow dance: pull sequences out of the map, build the batch
         // view, run, put back. Preempted sequences replay prompt +
         // already-generated tokens (recompute-based recovery).
@@ -172,10 +197,57 @@ impl<E: Executor> Engine<E> {
                 t
             })
             .collect();
-        let mut items: Vec<PrefillItem> = Vec::with_capacity(taken.len());
+
+        // Per-sequence compute start: the allocator granted a cached
+        // prefix (attached blocks); reuse extends only as far as we hold
+        // saved KV for a contiguous run of those blocks. (Blocks shared
+        // with a batch-mate prefilling right now have no saved KV yet —
+        // that sequence recomputes from 0, still bit-exact.)
+        let mut starts: Vec<usize> = Vec::with_capacity(taken.len());
         for (seq, toks) in taken.iter_mut().zip(token_lists.iter()) {
+            let claimed = self.scheduler.blocks.cached_prefix_len(seq.seq_id);
+            let mut start = 0;
+            if claimed > 0 {
+                let table = self.scheduler.blocks.table(seq.seq_id).expect("allocated");
+                for (i, b) in table.iter().enumerate().take(claimed / bs) {
+                    if self.block_kv.contains_key(b) {
+                        start = (i + 1) * bs;
+                    } else {
+                        break;
+                    }
+                }
+            }
+            debug_assert!(start < toks.len().max(1));
+            if start > 0 {
+                if seq.kv.k.len() < kv_len {
+                    seq.kv.k.resize(kv_len, 0.0);
+                    seq.kv.v.resize(kv_len, 0.0);
+                }
+                let table = self.scheduler.blocks.table(seq.seq_id).expect("allocated");
+                for (i, b) in table.iter().enumerate().take(start / bs) {
+                    let (ck, cv) = &self.block_kv[b];
+                    self.executor
+                        .inject_kv_range(&mut seq.kv.k, &mut seq.kv.v, i * bs, bs, ck, cv);
+                }
+            }
+            if prefix_on {
+                if start > 0 {
+                    self.metrics.prefix_hits += 1;
+                    self.metrics.prefix_cached_tokens += start as u64;
+                } else {
+                    self.metrics.prefix_misses += 1;
+                }
+            }
+            self.metrics.prefilled_tokens += (toks.len() - start) as u64;
+            starts.push(start);
+        }
+        self.metrics.prefix_evictions = self.scheduler.blocks.prefix_stats.evictions;
+
+        let mut items: Vec<PrefillItem> = Vec::with_capacity(taken.len());
+        for ((seq, toks), start) in taken.iter_mut().zip(token_lists.iter()).zip(&starts) {
             items.push(PrefillItem {
                 tokens: toks,
+                start: *start,
                 kv_k: &mut seq.kv.k,
                 kv_v: &mut seq.kv.v,
                 logits: Vec::new(),
@@ -183,6 +255,24 @@ impl<E: Executor> Engine<E> {
         }
         self.executor.prefill(&mut items)?;
         let logits: Vec<Vec<f32>> = items.into_iter().map(|i| i.logits).collect();
+
+        // harvest: save compact KV for every content-addressed block we
+        // just (re)computed, so later same-prefix requests can attach
+        if prefix_on {
+            for seq in &taken {
+                for (idx, b) in self.scheduler.blocks.registered_blocks(seq.seq_id) {
+                    if let std::collections::hash_map::Entry::Vacant(e) = self.block_kv.entry(b)
+                    {
+                        if let Some(kv) =
+                            self.executor
+                                .extract_kv_range(&seq.kv.k, &seq.kv.v, idx * bs, bs)
+                        {
+                            e.insert(kv);
+                        }
+                    }
+                }
+            }
+        }
 
         // reinsert ALL sequences before emitting: emitting one token can
         // preempt a batch-mate, which must be reachable in the map
@@ -268,12 +358,16 @@ impl<E: Executor> Engine<E> {
             let seq = self.seqs.get_mut(&victim).unwrap();
             seq.phase = Phase::Preempted;
             seq.preemptions += 1;
-            // recompute-based recovery: clear KV, replay on next prefill
+            // recompute-based recovery: clear KV, replay on next prefill.
+            // (With the prefix cache on, the victim's released prompt
+            // blocks park on the LRU, so the replay usually re-attaches
+            // them and recomputes only the tail.)
             seq.kv.k.clear();
             seq.kv.v.clear();
             seq.pos = 0;
-            let replay_len = seq.total_len();
-            self.scheduler.requeue_front(victim, replay_len);
+            let mut replay = seq.request.prompt.clone();
+            replay.extend_from_slice(&seq.output);
+            self.scheduler.requeue_front(victim, replay);
         }
         Ok(())
     }
@@ -426,6 +520,81 @@ mod tests {
             assert_eq!(out.tokens, expect, "id {}", out.id);
         }
         assert!(e.metrics.preemptions > 0, "test should exercise preemption");
+    }
+
+    #[test]
+    fn prefix_cache_reuses_released_prefix_and_stays_exact() {
+        // two requests sharing a block-aligned prefix, submitted in
+        // sequence: with the cache on, the second prefills only its
+        // uncovered suffix, and outputs match the cache-off run exactly
+        let run = |prefix_cache: bool| {
+            let cfg = EngineConfig { kv_block_size: 4, prefix_cache, ..Default::default() };
+            let mut e = Engine::new(MockExecutor::new(1000, 64), cfg);
+            e.submit(req(1, vec![1, 2, 3, 4, 5, 6], 2));
+            let o1 = e.run_to_completion().unwrap();
+            e.submit(req(2, vec![1, 2, 3, 4, 9], 2));
+            let o2 = e.run_to_completion().unwrap();
+            let toks: Vec<Vec<i32>> =
+                o1.into_iter().chain(o2).map(|o| o.tokens).collect();
+            (toks, e.metrics.prefilled_tokens, e.metrics.prefix_cached_tokens)
+        };
+        let (toks_off, prefilled_off, cached_off) = run(false);
+        let (toks_on, prefilled_on, cached_on) = run(true);
+        assert_eq!(toks_on, toks_off, "prefix cache must not change outputs");
+        assert_eq!(cached_off, 0);
+        assert_eq!(cached_on, 4, "one full block (4 tokens) served from cache");
+        assert_eq!(
+            prefilled_on + 4,
+            prefilled_off,
+            "prefill work reduced by exactly the cached prefix"
+        );
+    }
+
+    #[test]
+    fn prefix_cache_shares_live_blocks_across_requests() {
+        // the second request arrives while the first is still decoding:
+        // it attaches to the LIVE sequence's blocks (refcount sharing)
+        let cfg = EngineConfig { kv_block_size: 4, prefix_cache: true, ..Default::default() };
+        let mut e = Engine::new(MockExecutor::new(1000, 64), cfg);
+        e.submit(req(1, vec![1, 2, 3, 4, 5], 8));
+        // run prefill + one decode step so seq 1 is mid-generation
+        assert!(e.step().unwrap());
+        assert!(e.step().unwrap());
+        e.submit(req(2, vec![1, 2, 3, 4, 7], 2));
+        let mut outs = e.run_to_completion().unwrap();
+        outs.sort_by_key(|o| o.id);
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].tokens, vec![6, 7, 8, 9, 10, 11, 12, 13]);
+        assert_eq!(outs[1].tokens, vec![8, 9]);
+        assert_eq!(e.metrics.prefix_hits, 1);
+        assert_eq!(e.metrics.prefix_cached_tokens, 4);
+    }
+
+    #[test]
+    fn preemption_recovery_with_prefix_cache_is_exact() {
+        // same preemption-churn scenario as above, cache on: outputs are
+        // identical, and replays can re-attach their own parked blocks
+        let run = |prefix_cache: bool| {
+            let cfg = EngineConfig {
+                kv_blocks: 6,
+                kv_block_size: 4,
+                prefix_cache,
+                scheduler: SchedulerConfig {
+                    max_batch: 4,
+                    prefill_token_budget: 64,
+                    watermark: 1.0,
+                },
+                ..Default::default()
+            };
+            let mut e = Engine::new(MockExecutor::new(1000, 64), cfg);
+            for i in 0..3 {
+                e.submit(req(i, vec![i as i32 * 10], 12));
+            }
+            let mut outs = e.run_to_completion().unwrap();
+            outs.sort_by_key(|o| o.id);
+            outs.into_iter().map(|o| o.tokens).collect::<Vec<_>>()
+        };
+        assert_eq!(run(true), run(false));
     }
 
     #[test]

@@ -13,6 +13,11 @@ use crate::util::ThreadPool;
 /// One sequence's view of a prefill batch.
 pub struct PrefillItem<'a> {
     pub tokens: &'a [i32],
+    /// positions `0..start` are already present in the KV store (prefix
+    /// cache reuse); executors MAY skip computing them and start at
+    /// `start`. Recomputing from 0 is always a correct fallback: the
+    /// cached values are bit-identical to what a recompute produces.
+    pub start: usize,
     pub kv_k: &'a mut Vec<f32>,
     pub kv_v: &'a mut Vec<f32>,
     /// filled by the executor: logits at the last prompt position
@@ -60,6 +65,32 @@ pub trait Executor {
     /// authoritative; every backend is bit-exact, so this only changes
     /// speed.
     fn set_kernel(&mut self, _choice: KernelChoice) {}
+    /// Copy KV positions `[start, start + len)` out of a per-sequence
+    /// store into a compact buffer (layout private to the executor; the
+    /// engine treats it as opaque bytes keyed by cache block). `None`
+    /// when the executor cannot introspect its KV layout — the engine
+    /// then never reuses KV for it and prefills from position 0.
+    fn extract_kv_range(
+        &self,
+        _kv_k: &[f32],
+        _kv_v: &[f32],
+        _start: usize,
+        _len: usize,
+    ) -> Option<(Vec<f32>, Vec<f32>)> {
+        None
+    }
+    /// Splat a compact buffer produced by [`Executor::extract_kv_range`]
+    /// back into a (pre-sized) per-sequence store at the same positions.
+    fn inject_kv_range(
+        &self,
+        _kv_k: &mut [f32],
+        _kv_v: &mut [f32],
+        _start: usize,
+        _len: usize,
+        _ck: &[f32],
+        _cv: &[f32],
+    ) {
+    }
 }
 
 /// Native executor over the STC transformer (the fast path for E2E
@@ -129,7 +160,13 @@ impl Executor for StcExecutor {
                 item.kv_k.resize(model.kv_len(), 0.0);
                 item.kv_v.resize(model.kv_len(), 0.0);
             }
-            item.logits = model.forward_tokens(item.tokens, 0, item.kv_k, item.kv_v);
+            // prefix-cache partial prefill: positions < start are already
+            // in the KV store; compute only the uncovered suffix (the
+            // per-row math is identical to a from-scratch prefill, so
+            // outputs stay bit-exact)
+            let start = item.start.min(item.tokens.len().saturating_sub(1));
+            item.logits =
+                model.forward_tokens(&item.tokens[start..], start, item.kv_k, item.kv_v);
         };
         if self.pool.is_serial() || batch.len() == 1 {
             for item in batch {
@@ -181,6 +218,60 @@ impl Executor for StcExecutor {
         let kern = crate::stc::select_kernel(choice);
         self.model.set_microkernel(kern);
         self.kernel = kern;
+    }
+
+    fn extract_kv_range(
+        &self,
+        kv_k: &[f32],
+        kv_v: &[f32],
+        start: usize,
+        len: usize,
+    ) -> Option<(Vec<f32>, Vec<f32>)> {
+        // per-seq layout is [L, H, Smax, hd]: positions are contiguous
+        // within each (layer, head) panel, so a range is L*H strided runs
+        let m = &self.model;
+        let cfg = m.blocks[0].cfg;
+        let (h_n, hd, smax) = (cfg.n_heads, cfg.head_dim(), m.smax);
+        if kv_k.len() < m.kv_len() || start + len > smax {
+            return None;
+        }
+        let stride = m.kv_layer_stride();
+        let mut ck = Vec::with_capacity(m.n_layers() * h_n * len * hd);
+        let mut cv = Vec::with_capacity(m.n_layers() * h_n * len * hd);
+        for l in 0..m.n_layers() {
+            for h in 0..h_n {
+                let off = l * stride + (h * smax + start) * hd;
+                ck.extend_from_slice(&kv_k[off..off + len * hd]);
+                cv.extend_from_slice(&kv_v[off..off + len * hd]);
+            }
+        }
+        Some((ck, cv))
+    }
+
+    fn inject_kv_range(
+        &self,
+        kv_k: &mut [f32],
+        kv_v: &mut [f32],
+        start: usize,
+        len: usize,
+        ck: &[f32],
+        cv: &[f32],
+    ) {
+        let m = &self.model;
+        let cfg = m.blocks[0].cfg;
+        let (h_n, hd, smax) = (cfg.n_heads, cfg.head_dim(), m.smax);
+        assert!(start + len <= smax, "kv inject out of range");
+        assert_eq!(ck.len(), m.n_layers() * h_n * len * hd, "compact kv size");
+        let stride = m.kv_layer_stride();
+        let run = len * hd;
+        for l in 0..m.n_layers() {
+            for h in 0..h_n {
+                let src = (l * h_n + h) * run;
+                let dst = l * stride + (h * smax + start) * hd;
+                kv_k[dst..dst + run].copy_from_slice(&ck[src..src + run]);
+                kv_v[dst..dst + run].copy_from_slice(&cv[src..src + run]);
+            }
+        }
     }
 }
 
@@ -238,6 +329,31 @@ impl Executor for MockExecutor {
         Ok(())
     }
 
+    fn extract_kv_range(
+        &self,
+        kv_k: &[f32],
+        _kv_v: &[f32],
+        start: usize,
+        len: usize,
+    ) -> Option<(Vec<f32>, Vec<f32>)> {
+        // the mock KV is a single token counter; a compact range stores
+        // the counter value it implies (tokens covered through the range)
+        (!kv_k.is_empty()).then(|| (vec![(start + len) as f32], vec![0.0]))
+    }
+
+    fn inject_kv_range(
+        &self,
+        kv_k: &mut [f32],
+        kv_v: &mut [f32],
+        _start: usize,
+        _len: usize,
+        ck: &[f32],
+        cv: &[f32],
+    ) {
+        kv_k[0] = ck[0];
+        kv_v[0] = cv[0];
+    }
+
     fn decode(&mut self, batch: &mut [DecodeItem]) -> Result<()> {
         self.decode_calls += 1;
         for item in batch {
@@ -273,6 +389,7 @@ mod tests {
         let (mut k, mut v) = (Vec::new(), Vec::new());
         let mut items = vec![PrefillItem {
             tokens,
+            start: 0,
             kv_k: &mut k,
             kv_v: &mut v,
             logits: Vec::new(),
@@ -313,6 +430,53 @@ mod tests {
     }
 
     #[test]
+    fn partial_prefill_from_cached_prefix_is_bit_exact() {
+        // prefill(t0..t5) == extract prefix KV of t0..t3 from another
+        // sequence, inject it, then prefill with start=4 — the exact
+        // data path the engine's prefix cache drives
+        let mut exec = StcExecutor::new(tiny_model(Backend::Slide { n: 4 }));
+        let toks = [3i32, 11, 40, 7, 19, 23];
+        let (full_logits, full_k, full_v) = prefill_one(&mut exec, &toks);
+
+        // donor sequence holding only the shared 4-token prefix
+        let (_, donor_k, donor_v) = prefill_one(&mut exec, &toks[..4]);
+        let (ck, cv) = exec.extract_kv_range(&donor_k, &donor_v, 0, 4).unwrap();
+
+        let kv_len = exec.kv_len();
+        let (mut k, mut v) = (vec![0.0f32; kv_len], vec![0.0f32; kv_len]);
+        exec.inject_kv_range(&mut k, &mut v, 0, 4, &ck, &cv);
+        let mut items = vec![PrefillItem {
+            tokens: &toks,
+            start: 4,
+            kv_k: &mut k,
+            kv_v: &mut v,
+            logits: Vec::new(),
+        }];
+        exec.prefill(&mut items).unwrap();
+        let partial_logits = items.pop().unwrap().logits;
+        assert_eq!(partial_logits, full_logits, "logits must be bit-exact");
+        assert_eq!(k, full_k, "KV stores must be bit-exact");
+        assert_eq!(v, full_v);
+    }
+
+    #[test]
+    fn kv_range_extract_inject_roundtrips() {
+        let mut exec = StcExecutor::new(tiny_model(Backend::Dense));
+        let toks = [5i32, 9, 13, 2, 27, 31, 8, 40];
+        let (_, k, v) = prefill_one(&mut exec, &toks);
+        // round-trip an interior block-sized range through the compact form
+        let (ck, cv) = exec.extract_kv_range(&k, &v, 4, 4).unwrap();
+        let (mut k2, mut v2) = (k.clone(), v.clone());
+        // scribble over the range, then restore it
+        let zeros = vec![0.0f32; ck.len()];
+        exec.inject_kv_range(&mut k2, &mut v2, 4, 4, &zeros, &zeros);
+        assert_ne!(k2, k, "zeroing the range must change the store");
+        exec.inject_kv_range(&mut k2, &mut v2, 4, 4, &ck, &cv);
+        assert_eq!(k2, k, "inject(extract(range)) restores the store");
+        assert_eq!(v2, v);
+    }
+
+    #[test]
     fn threaded_executor_bit_exact_with_serial() {
         // same model seed, batch of prefills + a batched decode: the
         // 4-lane executor must produce byte-identical logits
@@ -330,6 +494,7 @@ mod tests {
                     .zip(kvs.iter_mut())
                     .map(|(p, (k, v))| PrefillItem {
                         tokens: p,
+                        start: 0,
                         kv_k: k,
                         kv_v: v,
                         logits: Vec::new(),
@@ -428,6 +593,7 @@ mod tests {
         let toks = [4i32, 6];
         let mut items = vec![PrefillItem {
             tokens: &toks,
+            start: 0,
             kv_k: &mut k,
             kv_v: &mut v,
             logits: Vec::new(),

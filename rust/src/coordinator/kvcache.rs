@@ -8,8 +8,36 @@
 //! the capacity authority: a sequence may only grow if its block table
 //! can (paper §4.3: scheduling/KV components are untouched by
 //! SlideSparse -- we still need them to serve at all).
+//!
+//! ## Prefix cache
+//!
+//! With `with_prefix_cache(true)` the manager additionally keeps a
+//! content-addressed index over *full* prompt blocks: each fully
+//! token-covered block is registered under a chained hash of
+//! `(block_size, tokens of every block up to and including it)`, so a
+//! new sequence whose prompt shares a block-aligned prefix with a live
+//! or recently-released sequence attaches to those blocks (refcount++)
+//! instead of allocating fresh ones. Released blocks whose refcount
+//! drops to zero park on an LRU list (still indexed) and are reclaimed
+//! — oldest first — only when the free list runs dry; evicted block ids
+//! are surfaced through [`BlockManager::drain_evictions`] so the engine
+//! can drop its saved KV copies.
+//!
+//! Matching is sound independently of hash quality: a candidate block
+//! is accepted only if its stored tokens equal the request's tokens
+//! for that block AND its recorded parent is exactly the
+//! (block, registration-generation) pair verified at the previous
+//! index. By induction the whole token prefix matches — a 64-bit hash
+//! collision (even an adversarial one) can only cause a missed reuse,
+//! never a wrong one, so reuse is bit-exact by construction.
+//! Registered blocks are always full and never appended into (appends
+//! allocate a fresh tail first; copy-on-write splits replace
+//! unregistered tails), so registered content is immutable. A
+//! preemption replay registers the full blocks of prompt + already
+//! generated tokens — content addressing is what matters, so blocks
+//! covering generated content are legitimate cache entries too.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 pub type BlockId = usize;
 pub type SeqId = u64;
@@ -18,7 +46,56 @@ pub type SeqId = u64;
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct OutOfBlocks;
 
-/// Fixed-pool block allocator with refcounts.
+/// Seed for the prefix-chain hash (also used by the router's
+/// prefix-affinity policy so both layers agree on what "same prefix"
+/// means).
+pub const PREFIX_HASH_SEED: u64 = 0x9E37_79B9_7F4A_7C15;
+
+#[inline]
+fn mix(h: u64, v: u64) -> u64 {
+    // FxHash-style mixing step (rotate + xor + odd-constant multiply)
+    (h.rotate_left(5) ^ v).wrapping_mul(0x51_7c_c1_b7_27_22_0a_95)
+}
+
+/// Chain `tokens` (and their count) into a running hash.
+pub fn token_hash(seed: u64, tokens: &[i32]) -> u64 {
+    let mut h = mix(seed, tokens.len() as u64);
+    for &t in tokens {
+        h = mix(h, t as u32 as u64);
+    }
+    h
+}
+
+/// Prefix-cache counters (engine metrics mirror these).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    /// prefix-aware allocations performed
+    pub lookups: u64,
+    /// allocations that attached at least one cached block
+    pub hits: u64,
+    /// allocations that attached none
+    pub misses: u64,
+    /// cached blocks reclaimed to satisfy new allocations
+    pub evictions: u64,
+    /// total tokens covered by attached cached blocks
+    pub cached_tokens: u64,
+}
+
+/// Registration record of a cached block: its chain hash, the exact
+/// tokens it covers, a unique registration generation, and the
+/// (block, generation) of the registration that preceded it in its
+/// chain (None for a chain's first block). Matches verify tokens AND
+/// the parent link, so hash collisions cannot alias prefixes.
+#[derive(Clone, Debug)]
+struct BlockMeta {
+    hash: u64,
+    tokens: Vec<i32>,
+    gen: u64,
+    parent: Option<(BlockId, u64)>,
+}
+
+/// Fixed-pool block allocator with refcounts and an optional
+/// content-addressed prefix cache.
 #[derive(Debug)]
 pub struct BlockManager {
     pub block_size: usize,
@@ -28,6 +105,22 @@ pub struct BlockManager {
     tables: HashMap<SeqId, Vec<BlockId>>,
     /// tokens stored per sequence (to compute block needs)
     lens: HashMap<SeqId, usize>,
+    // --- prefix cache state (inert unless `prefix_enabled`) ---
+    prefix_enabled: bool,
+    /// registration record per block (None = not content-addressed)
+    meta: Vec<Option<BlockMeta>>,
+    /// chain hash -> registered block
+    index: HashMap<u64, BlockId>,
+    /// refcount-0 registered blocks, front = oldest (eviction order)
+    lru: VecDeque<BlockId>,
+    /// cached prefix length granted to each live sequence at allocation
+    cached_lens: HashMap<SeqId, usize>,
+    /// blocks evicted from the index since the last drain
+    evicted: Vec<BlockId>,
+    /// monotone registration counter (disambiguates re-registrations of
+    /// a reused block id in parent links)
+    gen_counter: u64,
+    pub prefix_stats: PrefixStats,
 }
 
 impl BlockManager {
@@ -39,36 +132,81 @@ impl BlockManager {
             refcount: vec![0; num_blocks],
             tables: HashMap::new(),
             lens: HashMap::new(),
+            prefix_enabled: false,
+            meta: vec![None; num_blocks],
+            index: HashMap::new(),
+            lru: VecDeque::new(),
+            cached_lens: HashMap::new(),
+            evicted: Vec::new(),
+            gen_counter: 0,
+            prefix_stats: PrefixStats::default(),
         }
     }
 
+    /// Enable/disable the content-addressed prefix cache (builder form).
+    pub fn with_prefix_cache(mut self, enabled: bool) -> BlockManager {
+        self.prefix_enabled = enabled;
+        self
+    }
+
+    pub fn prefix_enabled(&self) -> bool {
+        self.prefix_enabled
+    }
+
+    /// Reclaimable blocks: truly free plus cached-but-idle (LRU).
     pub fn free_blocks(&self) -> usize {
-        self.free.len()
+        self.free.len() + self.lru.len()
+    }
+
+    /// Cached-but-idle blocks currently parked on the LRU.
+    pub fn cached_blocks(&self) -> usize {
+        self.lru.len()
     }
 
     pub fn used_blocks(&self) -> usize {
-        self.num_blocks - self.free.len()
+        self.num_blocks - self.free_blocks()
     }
 
     fn blocks_needed(&self, tokens: usize) -> usize {
         tokens.div_ceil(self.block_size)
     }
 
-    /// Can a new sequence of `tokens` be admitted?
+    /// Can a new sequence of `tokens` be admitted? (Conservative: does
+    /// not assume any prefix reuse.)
     pub fn can_allocate(&self, tokens: usize) -> bool {
-        self.blocks_needed(tokens.max(1)) <= self.free.len()
+        self.blocks_needed(tokens.max(1)) <= self.free_blocks()
     }
 
-    /// Allocate the block table for a new sequence.
+    /// Pop a reclaimable block: free list first, then evict the oldest
+    /// cached block (deregistering it and logging the eviction).
+    fn pop_reclaim(&mut self) -> Option<BlockId> {
+        if let Some(b) = self.free.pop() {
+            return Some(b);
+        }
+        let b = self.lru.pop_front()?;
+        let m = self.meta[b].take().expect("LRU block is registered");
+        self.index.remove(&m.hash);
+        self.prefix_stats.evictions += 1;
+        self.evicted.push(b);
+        Some(b)
+    }
+
+    /// Blocks evicted from the prefix index since the last call (the
+    /// engine drops its saved KV copies for these).
+    pub fn drain_evictions(&mut self) -> Vec<BlockId> {
+        std::mem::take(&mut self.evicted)
+    }
+
+    /// Allocate the block table for a new sequence (no prefix reuse).
     pub fn allocate(&mut self, seq: SeqId, tokens: usize) -> Result<(), OutOfBlocks> {
         assert!(!self.tables.contains_key(&seq), "seq {seq} already allocated");
         let need = self.blocks_needed(tokens.max(1));
-        if need > self.free.len() {
+        if need > self.free_blocks() {
             return Err(OutOfBlocks);
         }
         let mut table = Vec::with_capacity(need);
         for _ in 0..need {
-            let b = self.free.pop().unwrap();
+            let b = self.pop_reclaim().unwrap();
             self.refcount[b] = 1;
             table.push(b);
         }
@@ -77,23 +215,160 @@ impl BlockManager {
         Ok(())
     }
 
+    /// Allocate the block table for a new sequence, attaching any
+    /// cached blocks that cover a block-aligned prefix of `tokens`.
+    /// Returns the number of prefix tokens covered by attached blocks
+    /// (0 when the cache is disabled or nothing matched). A fully
+    /// cached prompt is capped one block short: the engine must still
+    /// compute at least the last token to produce logits.
+    pub fn allocate_with_prefix(
+        &mut self,
+        seq: SeqId,
+        tokens: &[i32],
+    ) -> Result<usize, OutOfBlocks> {
+        if !self.prefix_enabled {
+            self.allocate(seq, tokens.len())?;
+            return Ok(0);
+        }
+        assert!(!self.tables.contains_key(&seq), "seq {seq} already allocated");
+        let bs = self.block_size;
+        let n = tokens.len().max(1);
+        let need_total = self.blocks_needed(n);
+        // chain hashes over the full prompt blocks
+        let full_blocks = tokens.len() / bs;
+        let mut hashes = Vec::with_capacity(full_blocks);
+        let mut h = mix(PREFIX_HASH_SEED, bs as u64);
+        for i in 0..full_blocks {
+            h = token_hash(h, &tokens[i * bs..(i + 1) * bs]);
+            hashes.push(h);
+        }
+        // longest verified run of cached blocks starting at block 0: a
+        // candidate must carry our tokens for its block AND link back to
+        // the exact registration verified at the previous index, so the
+        // full token prefix matches by induction (hash quality is only a
+        // lookup aid, never a correctness input)
+        let mut matched: Vec<BlockId> = Vec::new();
+        let mut expected_parent: Option<(BlockId, u64)> = None;
+        for (i, bh) in hashes.iter().enumerate() {
+            match self.index.get(bh) {
+                Some(&b)
+                    if self.meta[b].as_ref().is_some_and(|m| {
+                        m.parent == expected_parent
+                            && m.tokens == tokens[i * bs..(i + 1) * bs]
+                    }) =>
+                {
+                    expected_parent =
+                        Some((b, self.meta[b].as_ref().expect("verified").gen));
+                    matched.push(b);
+                }
+                _ => break,
+            }
+        }
+        while matched.len() * bs >= n {
+            matched.pop();
+        }
+        self.prefix_stats.lookups += 1;
+        // capacity: matched blocks still on the LRU leave it on attach,
+        // so they are not available for the fresh allocations
+        let idle_matched = matched.iter().filter(|b| self.refcount[**b] == 0).count();
+        if need_total - matched.len() > self.free.len() + self.lru.len() - idle_matched {
+            return Err(OutOfBlocks);
+        }
+        for &b in &matched {
+            if self.refcount[b] == 0 {
+                self.lru.retain(|x| *x != b);
+            }
+            self.refcount[b] += 1;
+        }
+        let mut table = matched.clone();
+        // parent link for the next registration in OUR chain: outer None
+        // = chain not soundly extendable (a foreign block holds an
+        // intermediate hash — registering past it could mis-link);
+        // Some(None) = at the chain root; Some(Some(p)) = parent p, a
+        // registration whose content was verified or written by us.
+        let mut chain_prev: Option<Option<(BlockId, u64)>> = match matched.last() {
+            None => Some(None),
+            Some(&last) => {
+                Some(Some((last, self.meta[last].as_ref().expect("verified").gen)))
+            }
+        };
+        for i in matched.len()..need_total {
+            let b = self.pop_reclaim().expect("capacity checked");
+            self.refcount[b] = 1;
+            // register new full prompt blocks (first content wins)
+            if i < full_blocks {
+                if let Some(parent) = chain_prev {
+                    if self.index.contains_key(&hashes[i]) {
+                        // hash taken by a block we did not verify: stop
+                        // extending the chain (missed reuse only, never
+                        // a wrong link)
+                        chain_prev = None;
+                    } else {
+                        self.gen_counter += 1;
+                        self.index.insert(hashes[i], b);
+                        self.meta[b] = Some(BlockMeta {
+                            hash: hashes[i],
+                            tokens: tokens[i * bs..(i + 1) * bs].to_vec(),
+                            gen: self.gen_counter,
+                            parent,
+                        });
+                        chain_prev = Some(Some((b, self.gen_counter)));
+                    }
+                }
+            }
+            table.push(b);
+        }
+        let cached = matched.len() * bs;
+        self.tables.insert(seq, table);
+        self.lens.insert(seq, tokens.len());
+        self.cached_lens.insert(seq, cached);
+        if cached > 0 {
+            self.prefix_stats.hits += 1;
+        } else {
+            self.prefix_stats.misses += 1;
+        }
+        self.prefix_stats.cached_tokens += cached as u64;
+        Ok(cached)
+    }
+
+    /// Cached prefix length granted to `seq` at allocation time.
+    pub fn cached_prefix_len(&self, seq: SeqId) -> usize {
+        self.cached_lens.get(&seq).copied().unwrap_or(0)
+    }
+
+    /// The content-addressed (registered) blocks of a sequence's table,
+    /// as `(block index, block id)` pairs. These are exactly the blocks
+    /// whose KV is worth saving for reuse.
+    pub fn registered_blocks(&self, seq: SeqId) -> Vec<(usize, BlockId)> {
+        match self.tables.get(&seq) {
+            Some(t) => t
+                .iter()
+                .enumerate()
+                .filter(|(_, b)| self.meta[**b].is_some())
+                .map(|(i, b)| (i, *b))
+                .collect(),
+            None => Vec::new(),
+        }
+    }
+
     /// Grow a sequence by one token, allocating a block at boundaries.
     pub fn append_token(&mut self, seq: SeqId) -> Result<(), OutOfBlocks> {
         let len = *self.lens.get(&seq).expect("unknown seq");
         let need = self.blocks_needed(len + 1);
-        let table = self.tables.get_mut(&seq).unwrap();
-        debug_assert!(need >= table.len());
-        if need > table.len() {
-            let Some(b) = self.free.pop() else {
+        debug_assert!(need >= self.tables[&seq].len());
+        if need > self.tables[&seq].len() {
+            let Some(b) = self.pop_reclaim() else {
                 return Err(OutOfBlocks);
             };
             self.refcount[b] = 1;
-            table.push(b);
+            self.tables.get_mut(&seq).unwrap().push(b);
         }
-        // copy-on-write: appending into a shared tail block splits it
-        let tail = *table.last().unwrap();
+        // copy-on-write: appending into a shared tail block splits it.
+        // (Registered blocks are always full, so appends only ever land
+        // in unregistered tails — cached content is never overwritten.)
+        let tail = *self.tables[&seq].last().unwrap();
         if self.refcount[tail] > 1 {
-            let Some(nb) = self.free.pop() else {
+            let Some(nb) = self.pop_reclaim() else {
                 return Err(OutOfBlocks);
             };
             self.refcount[tail] -= 1;
@@ -115,16 +390,22 @@ impl BlockManager {
         self.lens.insert(child, len);
     }
 
-    /// Release a sequence's blocks.
+    /// Release a sequence's blocks. Registered blocks park on the LRU
+    /// (reusable by later same-prefix requests) instead of freeing.
     pub fn release(&mut self, seq: SeqId) {
         if let Some(table) = self.tables.remove(&seq) {
             for b in table {
                 self.refcount[b] -= 1;
                 if self.refcount[b] == 0 {
-                    self.free.push(b);
+                    if self.meta[b].is_some() {
+                        self.lru.push_back(b);
+                    } else {
+                        self.free.push(b);
+                    }
                 }
             }
             self.lens.remove(&seq);
+            self.cached_lens.remove(&seq);
         }
     }
 
@@ -137,17 +418,33 @@ impl BlockManager {
     }
 
     /// Fraction of the pool in use (the scheduler's watermark input).
+    /// Cached-but-idle blocks count as free: they are reclaimable.
     pub fn utilization(&self) -> f64 {
         self.used_blocks() as f64 / self.num_blocks as f64
     }
 
-    /// Internal consistency: refcounts vs free list (used by tests).
+    /// Internal consistency: refcounts vs free list vs LRU vs prefix
+    /// index (used by tests). Every block is exactly one of free,
+    /// cached-idle (LRU), or referenced — nothing leaks.
     pub fn check_invariants(&self) {
-        let free_set: std::collections::HashSet<_> = self.free.iter().collect();
+        let free_set: std::collections::HashSet<_> = self.free.iter().copied().collect();
         assert_eq!(free_set.len(), self.free.len(), "free list has duplicates");
+        let lru_set: std::collections::HashSet<_> = self.lru.iter().copied().collect();
+        assert_eq!(lru_set.len(), self.lru.len(), "LRU has duplicates");
         for (b, rc) in self.refcount.iter().enumerate() {
-            if free_set.contains(&b) {
+            let in_free = free_set.contains(&b);
+            let in_lru = lru_set.contains(&b);
+            assert!(!(in_free && in_lru), "block {b} in both free and LRU");
+            if in_free {
                 assert_eq!(*rc, 0, "free block {b} has refcount {rc}");
+                assert!(self.meta[b].is_none(), "free block {b} still registered");
+            }
+            if in_lru {
+                assert_eq!(*rc, 0, "LRU block {b} has refcount {rc}");
+                assert!(self.meta[b].is_some(), "LRU block {b} not registered");
+            }
+            if *rc == 0 {
+                assert!(in_free || in_lru, "idle block {b} leaked");
             }
         }
         let mut rc_check = vec![0u32; self.num_blocks];
@@ -157,6 +454,15 @@ impl BlockManager {
             }
         }
         assert_eq!(rc_check, self.refcount, "refcount mismatch");
+        let registered = self.meta.iter().filter(|m| m.is_some()).count();
+        assert_eq!(registered, self.index.len(), "index/meta size mismatch");
+        for (h, b) in &self.index {
+            assert_eq!(
+                self.meta[*b].as_ref().map(|m| m.hash),
+                Some(*h),
+                "index entry points at block with a different hash"
+            );
+        }
     }
 }
 
@@ -218,6 +524,104 @@ mod tests {
         bm.check_invariants();
     }
 
+    fn prompt(prefix: &[i32], tail: &[i32]) -> Vec<i32> {
+        let mut p = prefix.to_vec();
+        p.extend_from_slice(tail);
+        p
+    }
+
+    #[test]
+    fn prefix_attach_shares_live_blocks() {
+        let mut bm = BlockManager::new(8, 4).with_prefix_cache(true);
+        let pre: Vec<i32> = (0..8).collect(); // 2 full blocks
+        let c1 = bm.allocate_with_prefix(1, &prompt(&pre, &[100, 101])).unwrap();
+        assert_eq!(c1, 0, "cold cache");
+        let used = bm.used_blocks();
+        let c2 = bm.allocate_with_prefix(2, &prompt(&pre, &[200])).unwrap();
+        assert_eq!(c2, 8, "both full prefix blocks attached");
+        assert_eq!(bm.cached_prefix_len(2), 8);
+        // only the tail block is new; the two prefix blocks are shared
+        assert_eq!(bm.used_blocks(), used + 1);
+        assert_eq!(bm.table(1).unwrap()[..2], bm.table(2).unwrap()[..2]);
+        bm.check_invariants();
+    }
+
+    #[test]
+    fn prefix_attach_reuses_released_blocks() {
+        let mut bm = BlockManager::new(8, 4).with_prefix_cache(true);
+        let pre: Vec<i32> = (10..18).collect();
+        bm.allocate_with_prefix(1, &prompt(&pre, &[1])).unwrap();
+        bm.release(1);
+        assert_eq!(bm.cached_blocks(), 2, "full blocks parked on the LRU");
+        assert_eq!(bm.free_blocks(), 8, "LRU blocks are reclaimable");
+        let c = bm.allocate_with_prefix(2, &prompt(&pre, &[2, 3])).unwrap();
+        assert_eq!(c, 8);
+        assert_eq!(bm.cached_blocks(), 0, "attached blocks left the LRU");
+        assert_eq!(bm.prefix_stats.hits, 1);
+        assert_eq!(bm.prefix_stats.misses, 1);
+        bm.check_invariants();
+    }
+
+    #[test]
+    fn fully_cached_prompt_is_capped() {
+        let mut bm = BlockManager::new(8, 4).with_prefix_cache(true);
+        let pre: Vec<i32> = (0..8).collect();
+        bm.allocate_with_prefix(1, &pre).unwrap();
+        bm.release(1);
+        // identical prompt: at least the last block must be recomputed
+        let c = bm.allocate_with_prefix(2, &pre).unwrap();
+        assert_eq!(c, 4, "cap below the prompt length");
+        bm.check_invariants();
+    }
+
+    #[test]
+    fn different_content_same_shape_does_not_match() {
+        let mut bm = BlockManager::new(8, 4).with_prefix_cache(true);
+        bm.allocate_with_prefix(1, &[1, 2, 3, 4, 9]).unwrap();
+        bm.release(1);
+        let c = bm.allocate_with_prefix(2, &[5, 6, 7, 8, 9]).unwrap();
+        assert_eq!(c, 0, "different tokens must not reuse KV");
+        bm.check_invariants();
+    }
+
+    #[test]
+    fn lru_eviction_under_pressure() {
+        let mut bm = BlockManager::new(4, 4).with_prefix_cache(true);
+        // two cached single-block prompts fill half the pool, then park
+        bm.allocate_with_prefix(1, &[1, 2, 3, 4, 5]).unwrap();
+        bm.release(1);
+        bm.allocate_with_prefix(2, &[6, 7, 8, 9, 10]).unwrap();
+        bm.release(2);
+        assert_eq!(bm.cached_blocks(), 2);
+        // a 4-block allocation must reclaim both cached blocks, oldest
+        // first, and log the evictions
+        bm.allocate_with_prefix(3, &(20..34).collect::<Vec<i32>>()).unwrap();
+        assert!(bm.prefix_stats.evictions >= 1);
+        let evicted = bm.drain_evictions();
+        assert!(!evicted.is_empty());
+        assert!(bm.drain_evictions().is_empty(), "drain clears the log");
+        bm.check_invariants();
+        bm.release(3);
+        bm.check_invariants();
+    }
+
+    #[test]
+    fn dangling_chain_tail_is_never_matched() {
+        // evicting a chain's first block leaves its successor registered
+        // but unreachable through verified matching: a same-prefix
+        // request must miss (never attach the tail without its head)
+        let mut bm = BlockManager::new(4, 4).with_prefix_cache(true);
+        let pre: Vec<i32> = (0..8).collect(); // exactly 2 full blocks
+        bm.allocate_with_prefix(1, &pre).unwrap();
+        bm.release(1); // LRU: [block0, block1] (eviction order)
+        // unrelated 9-token prompt: takes both free blocks + evicts block0
+        bm.allocate_with_prefix(2, &(100..109).collect::<Vec<i32>>()).unwrap();
+        bm.release(2);
+        let c = bm.allocate_with_prefix(3, &prompt(&pre, &[9])).unwrap();
+        assert_eq!(c, 0, "chain head evicted: the dangling tail must not match");
+        bm.check_invariants();
+    }
+
     #[test]
     fn prop_no_leaks_no_double_alloc() {
         // random alloc/append/fork/release traffic keeps invariants
@@ -264,5 +668,75 @@ mod tests {
             bm.check_invariants();
             assert_eq!(bm.free_blocks(), 32, "all blocks returned");
         });
+    }
+
+    #[test]
+    fn prop_prefix_cache_no_leaks_no_double_free() {
+        // interleaved allocate/fork/prefix-attach/append/release/evict
+        // traffic keeps invariants and never leaks or double-frees
+        prop::for_all("prefix cache invariants", |rng: &mut XorShift, _| {
+            let mut bm = BlockManager::new(24, 4).with_prefix_cache(true);
+            // a small family of shared prefixes forces real matches
+            let prefixes: Vec<Vec<i32>> = (0..3)
+                .map(|g| (0..8).map(|i| (g * 100 + i) as i32).collect())
+                .collect();
+            let mut live: Vec<SeqId> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..150 {
+                match rng.below(5) {
+                    0 | 1 => {
+                        let pre = &prefixes[rng.below(prefixes.len())];
+                        let cut = rng.below(pre.len() + 1);
+                        let mut toks = pre[..cut].to_vec();
+                        for _ in 0..1 + rng.below(6) {
+                            toks.push(rng.below(1000) as i32);
+                        }
+                        if let Ok(cached) = bm.allocate_with_prefix(next_id, &toks) {
+                            assert!(cached < toks.len(), "must compute >= 1 token");
+                            assert_eq!(cached % bm.block_size, 0, "block aligned");
+                            live.push(next_id);
+                            next_id += 1;
+                        }
+                    }
+                    2 => {
+                        if !live.is_empty() {
+                            let s = live[rng.below(live.len())];
+                            let _ = bm.append_token(s);
+                        }
+                    }
+                    3 => {
+                        if !live.is_empty() && bm.free_blocks() > 0 {
+                            let s = live[rng.below(live.len())];
+                            bm.fork(s, next_id);
+                            live.push(next_id);
+                            next_id += 1;
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let s = live.swap_remove(rng.below(live.len()));
+                            bm.release(s);
+                        }
+                    }
+                }
+                bm.check_invariants();
+                let _ = bm.drain_evictions();
+            }
+            for s in live {
+                bm.release(s);
+            }
+            bm.check_invariants();
+            assert_eq!(bm.free_blocks(), 24, "all blocks reclaimable at the end");
+        });
+    }
+
+    #[test]
+    fn token_hash_chains_are_order_sensitive() {
+        let h1 = token_hash(PREFIX_HASH_SEED, &[1, 2, 3]);
+        let h2 = token_hash(PREFIX_HASH_SEED, &[3, 2, 1]);
+        assert_ne!(h1, h2);
+        assert_eq!(h1, token_hash(PREFIX_HASH_SEED, &[1, 2, 3]));
+        // chaining: same tokens under a different parent hash differ
+        assert_ne!(token_hash(h1, &[7]), token_hash(h2, &[7]));
     }
 }

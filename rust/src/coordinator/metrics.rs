@@ -14,6 +14,17 @@ pub struct EngineMetrics {
     pub prefill_steps: u64,
     pub decode_steps: u64,
     pub preemptions: u64,
+    /// prompt tokens actually computed by prefill (excludes tokens
+    /// served from the prefix cache; includes preemption replays)
+    pub prefilled_tokens: u64,
+    /// prefill batches that reused at least one cached prefix block
+    pub prefix_hits: u64,
+    /// prefill batches that found no reusable prefix (cache enabled)
+    pub prefix_misses: u64,
+    /// cached blocks evicted from the prefix index (pool pressure)
+    pub prefix_evictions: u64,
+    /// prompt tokens served from the prefix cache instead of computed
+    pub prefix_cached_tokens: u64,
     pub ttft: Summary,
     pub latency: Summary,
     pub prefill_step_time: Summary,
@@ -57,9 +68,20 @@ impl EngineMetrics {
         }
     }
 
+    /// Fraction of prefix-cache lookups that attached cached blocks.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.prefix_hits + self.prefix_misses;
+        if total > 0 {
+            self.prefix_hits as f64 / total as f64
+        } else {
+            0.0
+        }
+    }
+
     pub fn report(&self) -> String {
         format!(
             "requests={}/{} tokens={}p+{}g steps={}p+{}d preempt={} \
+             prefix={}h/{}m ({} tok cached, {} evict) \
              ttft_p50={:.1}ms lat_p50={:.1}ms gen_tput={:.0} tok/s total_tput={:.0} tok/s",
             self.requests_finished,
             self.requests_submitted,
@@ -68,6 +90,10 @@ impl EngineMetrics {
             self.prefill_steps,
             self.decode_steps,
             self.preemptions,
+            self.prefix_hits,
+            self.prefix_misses,
+            self.prefix_cached_tokens,
+            self.prefix_evictions,
             self.ttft.p50() * 1e3,
             self.latency.p50() * 1e3,
             self.decode_throughput(),
@@ -79,6 +105,16 @@ impl EngineMetrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn prefix_hit_rate_math() {
+        let mut m = EngineMetrics::new();
+        assert_eq!(m.prefix_hit_rate(), 0.0, "no lookups yet");
+        m.prefix_hits = 3;
+        m.prefix_misses = 1;
+        assert!((m.prefix_hit_rate() - 0.75).abs() < 1e-12);
+        assert!(m.report().contains("prefix=3h/1m"));
+    }
 
     #[test]
     fn throughput_accounting() {

@@ -23,6 +23,18 @@
 //! execution and every microkernel backend are bit-exact with the
 //! serial scalar reference (gated by `rust/tests/conformance.rs`); the
 //! engine's sampling state depends on neither.
+//!
+//! ## Prefix cache & routing (docs/ARCHITECTURE.md §"Prefix cache")
+//!
+//! `EngineConfig::prefix_cache` turns on a content-addressed prefix
+//! cache inside each engine's [`kvcache::BlockManager`]: requests whose
+//! prompts share a block-aligned prefix attach to the cached blocks and
+//! prefill only the uncovered suffix (`PrefillItem::start`), with
+//! released blocks parked on an LRU until pool pressure reclaims them.
+//! `Policy::PrefixAffinity` in [`router`] sticky-routes same-prefix
+//! requests to the same worker so those caches see repeat traffic.
+//! Outputs are bit-exact with the cache off — also gated by
+//! `rust/tests/conformance.rs`.
 
 pub mod batcher;
 pub mod engine;

@@ -103,6 +103,11 @@ impl Executor for PjrtExecutor {
     }
 
     fn prefill(&mut self, batch: &mut [PrefillItem]) -> Result<()> {
+        // NB: `PrefillItem::start` is ignored — the compiled (B, S)
+        // buckets take whole prompts, so this executor recomputes from
+        // position 0. That is always correct (cached prefix KV holds
+        // exactly the values a recompute produces); it just forgoes the
+        // prefix cache's compute saving.
         // pick the (B, S) bucket: B >= batch len, S >= longest prompt
         let need_s = batch.iter().map(|i| i.tokens.len()).max().unwrap_or(1);
         let need_b = batch.len();

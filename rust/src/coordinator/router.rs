@@ -1,7 +1,16 @@
 //! Multi-worker request router: shards requests across engine workers
 //! (each on its own thread, since PJRT handles are not Send) with
-//! round-robin or least-loaded policies, and merges outputs.
+//! round-robin, least-loaded, or prefix-affinity policies, and merges
+//! outputs.
+//!
+//! Prefix affinity hashes the first K prompt tokens and sticky-routes
+//! same-prefix requests to the same worker, so each worker's
+//! engine-local prefix cache actually sees repeat prefixes under
+//! multi-worker traffic. The sticky choice falls back to least-loaded
+//! when the pinned worker has died or has fallen
+//! [`STICKY_MAX_IMBALANCE`] requests behind the least-loaded worker.
 
+use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{
     atomic::{AtomicUsize, Ordering},
@@ -13,13 +22,84 @@ use anyhow::{anyhow, Result};
 
 use super::engine::{Engine, EngineConfig};
 use super::executor::Executor;
+use super::kvcache::{token_hash, PREFIX_HASH_SEED};
 use super::request::{Request, RequestOutput};
+
+/// Default prompt-prefix length (tokens) hashed by `Policy::PrefixAffinity`.
+pub const DEFAULT_AFFINITY_TOKENS: usize = 16;
+
+/// A sticky worker is abandoned (and the prefix re-pinned) once its
+/// in-flight count exceeds the least-loaded worker's by this much.
+pub const STICKY_MAX_IMBALANCE: usize = 8;
+
+/// Bound on the sticky prefix→worker map. Mostly-unique traffic would
+/// otherwise grow it one entry per distinct prefix forever; past the
+/// cap the map is reset (pins rebuild on the next repeats — losing a
+/// pin only costs a possible cache miss, never correctness).
+pub const STICKY_CAPACITY: usize = 4096;
 
 /// Dispatch policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Policy {
     RoundRobin,
     LeastLoaded,
+    /// Sticky-route requests whose first `prefix_tokens` prompt tokens
+    /// hash alike to the same worker (prefix-cache affinity), falling
+    /// back to least-loaded on imbalance or worker death.
+    PrefixAffinity { prefix_tokens: usize },
+}
+
+impl std::str::FromStr for Policy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Policy, String> {
+        match s {
+            "round_robin" | "rr" => Ok(Policy::RoundRobin),
+            "least_loaded" | "ll" => Ok(Policy::LeastLoaded),
+            "prefix" | "prefix_affinity" => {
+                Ok(Policy::PrefixAffinity { prefix_tokens: DEFAULT_AFFINITY_TOKENS })
+            }
+            other => match other.strip_prefix("prefix:").map(str::parse) {
+                Some(Ok(k)) if k > 0 => Ok(Policy::PrefixAffinity { prefix_tokens: k }),
+                _ => Err(format!(
+                    "unknown routing policy '{other}' \
+                     (want round_robin, least_loaded, prefix, or prefix:K)"
+                )),
+            },
+        }
+    }
+}
+
+impl std::fmt::Display for Policy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Policy::RoundRobin => write!(f, "round_robin"),
+            Policy::LeastLoaded => write!(f, "least_loaded"),
+            Policy::PrefixAffinity { prefix_tokens } => write!(f, "prefix:{prefix_tokens}"),
+        }
+    }
+}
+
+/// The affinity decision, extracted for direct testing: keep `sticky`
+/// while it is alive and within [`STICKY_MAX_IMBALANCE`] of the
+/// least-loaded alive worker, else re-pin to the least-loaded.
+fn choose_affinity(
+    sticky: Option<usize>,
+    loads: &[usize],
+    alive: impl Fn(usize) -> bool,
+) -> usize {
+    let mut best = 0;
+    let mut best_load = usize::MAX;
+    for (i, &l) in loads.iter().enumerate() {
+        if l < best_load && alive(i) {
+            best_load = l;
+            best = i;
+        }
+    }
+    match sticky {
+        Some(w) if alive(w) && loads[w] <= best_load.saturating_add(STICKY_MAX_IMBALANCE) => w,
+        _ => best,
+    }
 }
 
 enum Msg {
@@ -41,6 +121,10 @@ pub struct Router {
     policy: Policy,
     rr_next: usize,
     submitted: usize,
+    /// prefix hash -> pinned worker (PrefixAffinity only)
+    sticky: HashMap<u64, usize>,
+    /// requests dispatched per worker over the router's lifetime
+    dispatched: Vec<usize>,
 }
 
 impl Router {
@@ -80,15 +164,17 @@ impl Router {
                             }
                         };
                         match msg {
-                            Some(Msg::Req(r)) => {
-                                engine.submit(r);
-                                continue;
+                            Some(Msg::Req(r)) => engine.submit(r),
+                            Some(Msg::Flush) | None => {
+                                let _ = engine.step();
                             }
-                            Some(Msg::Flush) => {}
                             Some(Msg::Shutdown) => break,
-                            None => {}
                         }
-                        let _ = engine.step();
+                        // drain finished requests EVERY iteration (not
+                        // only after full engine steps), so the inflight
+                        // gauge the dispatch policies read decrements as
+                        // each request completes — including requests the
+                        // engine rejects synchronously at submit
                         for out in engine.poll_outputs() {
                             inflight2.fetch_sub(1, Ordering::SeqCst);
                             let _ = out_tx.send(out);
@@ -98,14 +184,30 @@ impl Router {
                 .expect("spawn worker");
             workers.push(Worker { tx, inflight, handle: Some(handle) });
         }
-        Router { workers, out_rx, policy, rr_next: 0, submitted: 0 }
+        Router {
+            workers,
+            out_rx,
+            policy,
+            rr_next: 0,
+            submitted: 0,
+            sticky: HashMap::new(),
+            dispatched: vec![0; n],
+        }
     }
 
-    fn pick_worker(&mut self) -> usize {
-        let alive = |w: &Worker| match &w.handle {
+    fn worker_alive(&self, w: usize) -> bool {
+        match &self.workers[w].handle {
             Some(h) => !h.is_finished(),
             None => false,
-        };
+        }
+    }
+
+    fn least_loaded(&self) -> usize {
+        // the affinity chooser with no pin IS the least-loaded-alive scan
+        choose_affinity(None, &self.loads(), |w| self.worker_alive(w))
+    }
+
+    fn pick_worker(&mut self, req: &Request) -> usize {
         match self.policy {
             Policy::RoundRobin => {
                 // skip workers whose thread has died (executor panic);
@@ -114,25 +216,41 @@ impl Router {
                 for _ in 0..self.workers.len() {
                     let w = self.rr_next % self.workers.len();
                     self.rr_next += 1;
-                    if alive(&self.workers[w]) {
+                    if self.worker_alive(w) {
                         return w;
                     }
                 }
                 self.rr_next % self.workers.len()
             }
-            Policy::LeastLoaded => {
-                let mut best = 0;
-                let mut best_load = usize::MAX;
-                for (i, w) in self.workers.iter().enumerate() {
-                    let load = w.inflight.load(Ordering::SeqCst);
-                    if load < best_load && alive(w) {
-                        best_load = load;
-                        best = i;
-                    }
+            Policy::LeastLoaded => self.least_loaded(),
+            Policy::PrefixAffinity { prefix_tokens } => {
+                let h = Self::affinity_hash(&req.prompt, prefix_tokens);
+                let loads = self.loads();
+                let chosen = choose_affinity(self.sticky.get(&h).copied(), &loads, |w| {
+                    self.worker_alive(w)
+                });
+                if !self.sticky.contains_key(&h) && self.sticky.len() >= STICKY_CAPACITY {
+                    self.sticky.clear();
                 }
-                best
+                self.sticky.insert(h, chosen);
+                chosen
             }
         }
+    }
+
+    fn affinity_hash(prompt: &[i32], prefix_tokens: usize) -> u64 {
+        let k = prefix_tokens.min(prompt.len());
+        token_hash(PREFIX_HASH_SEED, &prompt[..k])
+    }
+
+    /// The worker a prompt with this prefix is currently pinned to
+    /// (None until a request with the prefix has been dispatched, or
+    /// when the policy is not PrefixAffinity).
+    pub fn affinity_assignment(&self, prompt: &[i32]) -> Option<usize> {
+        let Policy::PrefixAffinity { prefix_tokens } = self.policy else {
+            return None;
+        };
+        self.sticky.get(&Self::affinity_hash(prompt, prefix_tokens)).copied()
     }
 
     /// Dispatch a request to a live worker. Dead workers (their channel
@@ -141,12 +259,13 @@ impl Router {
     pub fn submit(&mut self, request: Request) {
         let mut req = request;
         for _ in 0..self.workers.len() {
-            let w = self.pick_worker();
+            let w = self.pick_worker(&req);
             // increment BEFORE send so the worker cannot decrement first
             self.workers[w].inflight.fetch_add(1, Ordering::SeqCst);
             match self.workers[w].tx.send(Msg::Req(req)) {
                 Ok(()) => {
                     self.submitted += 1;
+                    self.dispatched[w] += 1;
                     let _ = self.workers[w].tx.send(Msg::Flush);
                     return;
                 }
@@ -167,6 +286,11 @@ impl Router {
             .iter()
             .map(|w| w.inflight.load(Ordering::SeqCst))
             .collect()
+    }
+
+    /// Requests dispatched to each worker over the router's lifetime.
+    pub fn dispatch_counts(&self) -> &[usize] {
+        &self.dispatched
     }
 
     /// Wait for all submitted requests to complete. A worker whose
@@ -255,9 +379,13 @@ mod tests {
     use crate::coordinator::request::SamplingParams;
 
     fn req(id: u64, start: i32) -> Request {
+        req_prompt(id, vec![start])
+    }
+
+    fn req_prompt(id: u64, prompt: Vec<i32>) -> Request {
         Request::new(
             id,
-            vec![start],
+            prompt,
             SamplingParams { max_new_tokens: 3, ..Default::default() },
         )
     }
@@ -299,6 +427,108 @@ mod tests {
         assert!(loads.iter().all(|l| *l >= 1), "loads {loads:?}");
         let outs = r.drain().unwrap();
         assert_eq!(outs.len(), 8);
+        assert_eq!(r.loads(), vec![0, 0], "gauges return to zero after drain");
+    }
+
+    #[test]
+    fn prefix_affinity_sticky_routes_groups() {
+        let mut r = Router::spawn(
+            3,
+            EngineConfig::default(),
+            Policy::PrefixAffinity { prefix_tokens: 4 },
+            |_| MockExecutor::new(10_000, 64),
+        );
+        // 3 groups x 3 requests; each group shares its first 4 tokens
+        let group_prompt = |g: i32, i: i32| vec![g, g + 1, g + 2, g + 3, 50 + i];
+        for i in 0..9 {
+            let g = (i % 3) * 100;
+            r.submit(req_prompt(i as u64, group_prompt(g, i)));
+        }
+        // every group is pinned, and all of a group's requests went to
+        // its pinned worker: the pin multiplicities explain all 9
+        let mut per_worker = vec![0usize; 3];
+        for g in [0, 100, 200] {
+            let w = r.affinity_assignment(&group_prompt(g, 999));
+            let w = w.expect("group pinned after dispatch");
+            per_worker[w] += 3;
+        }
+        assert_eq!(r.dispatch_counts().to_vec(), per_worker);
+        let outs = r.drain().unwrap();
+        assert_eq!(outs.len(), 9);
+    }
+
+    #[test]
+    fn affinity_falls_back_when_pinned_worker_dies() {
+        let mut r = Router::spawn(
+            2,
+            EngineConfig::default(),
+            Policy::PrefixAffinity { prefix_tokens: 4 },
+            |wid| FlakyExecutor { inner: MockExecutor::new(1000, 64), poisoned: wid == 0 },
+        );
+        let prompt = vec![1, 2, 3, 4, 9];
+        r.submit(req_prompt(1, prompt.clone()));
+        let pinned = r.affinity_assignment(&prompt).unwrap();
+        assert_eq!(pinned, 0, "least-loaded pin starts at worker 0");
+        let err = r.drain().expect_err("worker 0 dies on its first batch");
+        assert!(err.to_string().contains("died"), "{err}");
+        // same prefix again: the dead pin is abandoned and re-pinned to
+        // the surviving worker, and the request completes
+        r.submit(req_prompt(2, prompt.clone()));
+        assert_eq!(r.affinity_assignment(&prompt), Some(1));
+        let outs = r.drain().unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].tokens, vec![10, 11, 12]);
+    }
+
+    #[test]
+    fn affinity_abandons_overloaded_sticky_worker() {
+        // pure decision-logic test for the imbalance fallback
+        let alive = |_w: usize| true;
+        // within tolerance: keep the pin
+        assert_eq!(choose_affinity(Some(1), &[0, STICKY_MAX_IMBALANCE], alive), 1);
+        // beyond tolerance: re-pin to the least-loaded worker
+        assert_eq!(choose_affinity(Some(1), &[0, STICKY_MAX_IMBALANCE + 1], alive), 0);
+        // dead pin: re-pin even when its load looks fine
+        assert_eq!(choose_affinity(Some(0), &[0, 3], |w| w != 0), 1);
+        // no pin yet: least-loaded
+        assert_eq!(choose_affinity(None, &[5, 2, 7], alive), 1);
+    }
+
+    #[test]
+    fn policy_parses_and_roundtrips() {
+        for s in ["round_robin", "least_loaded", "prefix", "prefix:8"] {
+            let p: Policy = s.parse().unwrap();
+            let shown = p.to_string();
+            assert_eq!(shown.parse::<Policy>().unwrap(), p, "{s} -> {shown}");
+        }
+        assert_eq!(
+            "prefix".parse::<Policy>().unwrap(),
+            Policy::PrefixAffinity { prefix_tokens: DEFAULT_AFFINITY_TOKENS }
+        );
+        assert!("hash_ring".parse::<Policy>().is_err());
+        assert!("prefix:0".parse::<Policy>().is_err());
+    }
+
+    #[test]
+    fn rejected_requests_release_load_without_drain() {
+        // a synchronously rejected request must decrement the inflight
+        // gauge as soon as the worker processes it — before any drain —
+        // so least-loaded / affinity fallback see accurate counts
+        let mut r = Router::spawn(
+            1,
+            EngineConfig::default(),
+            Policy::LeastLoaded,
+            |_| MockExecutor::new(100, 16), // max prompt 15
+        );
+        r.submit(req_prompt(1, (0..30).collect())); // too long -> rejected
+        let t0 = std::time::Instant::now();
+        while r.loads()[0] != 0 {
+            assert!(t0.elapsed().as_secs() < 5, "gauge never decremented");
+            std::thread::yield_now();
+        }
+        let outs = r.drain().unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].finish, crate::coordinator::request::FinishReason::Rejected);
     }
 
     #[test]

@@ -33,10 +33,13 @@ pub struct Step {
     pub preempted: Vec<SeqId>,
 }
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 struct WaitingSeq {
     id: SeqId,
-    prompt_len: usize,
+    /// the tokens this sequence will prefill (prompt, plus any already
+    /// generated tokens when re-queued after preemption); the prefix
+    /// cache matches on their content
+    tokens: Vec<i32>,
 }
 
 /// The scheduler: sequence queues + the block-pool authority.
@@ -52,13 +55,14 @@ impl Scheduler {
         Scheduler { cfg, blocks, waiting: VecDeque::new(), running: Vec::new() }
     }
 
-    pub fn add_waiting(&mut self, id: SeqId, prompt_len: usize) {
-        self.waiting.push_back(WaitingSeq { id, prompt_len });
+    pub fn add_waiting(&mut self, id: SeqId, tokens: Vec<i32>) {
+        self.waiting.push_back(WaitingSeq { id, tokens });
     }
 
     /// Re-queue a preempted sequence at the FRONT (it already waited).
-    pub fn requeue_front(&mut self, id: SeqId, prompt_len: usize) {
-        self.waiting.push_front(WaitingSeq { id, prompt_len });
+    /// `tokens` is the full replay list (prompt + generated so far).
+    pub fn requeue_front(&mut self, id: SeqId, tokens: Vec<i32>) {
+        self.waiting.push_front(WaitingSeq { id, tokens });
     }
 
     pub fn num_waiting(&self) -> usize {
@@ -80,25 +84,28 @@ impl Scheduler {
         let mut step = Step::default();
 
         // admission: FIFO while budget + blocks + batch slots allow
+        // (block need is checked conservatively, without assuming any
+        // prefix-cache reuse)
         let mut token_budget = self.cfg.prefill_token_budget;
-        while let Some(&ws) = self.waiting.front() {
+        while let Some(ws) = self.waiting.front() {
+            let plen = ws.tokens.len();
             if self.running.len() + step.prefill.len() >= self.cfg.max_batch {
                 break;
             }
-            if ws.prompt_len > token_budget {
+            if plen > token_budget {
                 break;
             }
             if self.blocks.utilization() >= self.cfg.watermark
-                || !self.blocks.can_allocate(ws.prompt_len + 1)
+                || !self.blocks.can_allocate(plen + 1)
             {
                 break;
             }
+            let ws = self.waiting.pop_front().unwrap();
             self.blocks
-                .allocate(ws.id, ws.prompt_len)
+                .allocate_with_prefix(ws.id, &ws.tokens)
                 .expect("can_allocate checked");
-            token_budget -= ws.prompt_len;
+            token_budget -= plen;
             step.prefill.push(ws.id);
-            self.waiting.pop_front();
         }
         if !step.prefill.is_empty() {
             self.running.extend(step.prefill.iter().copied());
@@ -165,10 +172,16 @@ mod tests {
         )
     }
 
+    /// A deterministic token list of length `n` (content is irrelevant
+    /// to scheduling decisions unless the prefix cache is enabled).
+    fn toks(n: usize) -> Vec<i32> {
+        (0..n as i32).collect()
+    }
+
     #[test]
     fn prefill_takes_priority() {
         let mut s = sched(16, 16, 4);
-        s.add_waiting(1, 10);
+        s.add_waiting(1, toks(10));
         let st = s.schedule();
         assert_eq!(st.prefill, vec![1]);
         assert!(st.decode.is_empty());
@@ -181,7 +194,7 @@ mod tests {
     fn fifo_admission_respects_batch_cap() {
         let mut s = sched(64, 16, 2);
         for id in 1..=4 {
-            s.add_waiting(id, 8);
+            s.add_waiting(id, toks(8));
         }
         let st = s.schedule();
         assert_eq!(st.prefill, vec![1, 2], "cap 2");
@@ -199,8 +212,8 @@ mod tests {
             SchedulerConfig { max_batch: 8, prefill_token_budget: 20, watermark: 1.0 },
             BlockManager::new(64, 16),
         );
-        s.add_waiting(1, 15);
-        s.add_waiting(2, 15);
+        s.add_waiting(1, toks(15));
+        s.add_waiting(2, toks(15));
         let st = s.schedule();
         assert_eq!(st.prefill, vec![1], "second would exceed the budget");
     }
@@ -208,8 +221,8 @@ mod tests {
     #[test]
     fn blocks_gate_admission() {
         let mut s = sched(2, 16, 8); // only 32 token slots
-        s.add_waiting(1, 16); // needs 2 blocks (16+1 tokens)
-        s.add_waiting(2, 16);
+        s.add_waiting(1, toks(16)); // needs 2 blocks (16+1 tokens)
+        s.add_waiting(2, toks(16));
         let st = s.schedule();
         assert_eq!(st.prefill, vec![1]);
         let st = s.schedule();
@@ -220,8 +233,8 @@ mod tests {
     #[test]
     fn preemption_evicts_youngest() {
         let mut s = sched(2, 4, 8); // 8 slots
-        s.add_waiting(1, 3);
-        s.add_waiting(2, 3);
+        s.add_waiting(1, toks(3));
+        s.add_waiting(2, toks(3));
         let st = s.schedule();
         assert_eq!(st.prefill, vec![1, 2]);
         // grow seq 1 until pool is dry; seq 2 must be evicted
@@ -237,6 +250,28 @@ mod tests {
     }
 
     #[test]
+    fn prefix_cache_admission_attaches_cached_blocks() {
+        // a prefix-enabled pool lets a later same-prefix sequence admit
+        // with most of its blocks attached instead of freshly allocated
+        let mut s = Scheduler::new(
+            SchedulerConfig { max_batch: 4, prefill_token_budget: 256, watermark: 1.0 },
+            BlockManager::new(16, 4).with_prefix_cache(true),
+        );
+        let prefix: Vec<i32> = (100..108).collect(); // 2 full blocks
+        let mut p1 = prefix.clone();
+        p1.push(1);
+        s.add_waiting(1, p1);
+        assert_eq!(s.schedule().prefill, vec![1]);
+        s.finish(1); // blocks park on the LRU
+        let mut p2 = prefix.clone();
+        p2.extend([2, 3]);
+        s.add_waiting(2, p2);
+        assert_eq!(s.schedule().prefill, vec![2]);
+        assert_eq!(s.blocks.cached_prefix_len(2), 8);
+        s.blocks.check_invariants();
+    }
+
+    #[test]
     fn prop_scheduler_conservation() {
         // sequences never vanish: waiting + running + finished == submitted
         prop::for_all("scheduler conservation", |rng: &mut XorShift, _| {
@@ -248,12 +283,12 @@ mod tests {
                 match rng.below(3) {
                     0 => {
                         submitted += 1;
-                        s.add_waiting(submitted, 1 + rng.below(12));
+                        s.add_waiting(submitted, toks(1 + rng.below(12)));
                     }
                     1 => {
                         // requeue preempted
                         if let Some((id, pl)) = preempted_back.pop() {
-                            s.requeue_front(id, pl);
+                            s.requeue_front(id, toks(pl));
                         }
                         let st = s.schedule();
                         for id in st.decode {

@@ -4,6 +4,8 @@
 //! ```text
 //! slidesparse serve   [--config cfg.json] [--requests N] [--threads T]
 //!                     [--kernel auto|scalar|blocked|avx2]
+//!                     [--workers W] [--routing round_robin|least_loaded|prefix[:K]]
+//!                     [--prefix-cache]
 //! slidesparse bench   [--suite kernel|e2e|figures|all]
 //! slidesparse explore [--pattern Z:L] [--hw M:N]
 //! slidesparse pack    --o O --k K [--n N] [--threads T]  # packer demo + stats
@@ -15,7 +17,9 @@ use slidesparse::bench::tables;
 use slidesparse::config::Config;
 #[cfg(feature = "pjrt")]
 use slidesparse::coordinator::PjrtExecutor;
-use slidesparse::coordinator::{Engine, Request, RequestOutput, SamplingParams, StcExecutor};
+use slidesparse::coordinator::{
+    Engine, Request, RequestOutput, Router, SamplingParams, StcExecutor,
+};
 use slidesparse::model::Backend;
 use slidesparse::quant::Precision;
 use slidesparse::sparsity::general::Decomposition;
@@ -49,21 +53,39 @@ fn serve(args: &Args) -> Result<()> {
     if let Some(k) = args.opt("kernel") {
         cfg.engine.kernel = k.parse().map_err(|e: String| anyhow!(e))?;
     }
+    if args.flag("prefix-cache") {
+        cfg.engine.prefix_cache = true;
+    }
+    if let Some(r) = args.opt("routing") {
+        cfg.routing = r.parse().map_err(|e: String| anyhow!(e))?;
+    }
+    cfg.workers = args.opt_usize("workers", cfg.workers).max(1);
     let backend = cfg.backend()?;
     let n_requests = args.opt_usize("requests", 16);
     println!(
-        "serving with sparsity={} executor={} threads={} kernel={}",
-        cfg.sparsity, cfg.executor, cfg.engine.threads, cfg.engine.kernel
+        "serving with sparsity={} executor={} workers={} routing={} threads={} kernel={} \
+         prefix_cache={}",
+        cfg.sparsity,
+        cfg.executor,
+        cfg.workers,
+        cfg.routing,
+        cfg.engine.threads,
+        cfg.engine.kernel,
+        cfg.engine.prefix_cache
     );
 
     let (outs, report) = if cfg.executor == "pjrt" {
         serve_pjrt(&cfg, backend, n_requests)?
+    } else if cfg.workers > 1 {
+        serve_router(&cfg, backend, n_requests)?
     } else {
         let model = tables::e2e_model(backend);
         let vocab = model.vocab;
         // Engine::new installs cfg.engine.threads on the executor
         let mut engine = Engine::new(StcExecutor::new(model), cfg.engine);
-        submit_demo(&mut engine, n_requests, vocab);
+        for r in demo_requests(n_requests, vocab) {
+            engine.submit(r);
+        }
         let outs = engine.run_to_completion()?;
         (outs, engine.metrics.report())
     };
@@ -98,7 +120,9 @@ fn serve_pjrt(
     let exec = PjrtExecutor::new(std::path::Path::new(&cfg.artifacts_dir), &variant)?;
     exec.warmup()?;
     let mut engine = Engine::new(exec, cfg.engine);
-    submit_demo(&mut engine, n_requests, 512);
+    for r in demo_requests(n_requests, 512) {
+        engine.submit(r);
+    }
     let outs = engine.run_to_completion()?;
     Ok((outs, engine.metrics.report()))
 }
@@ -116,21 +140,56 @@ fn serve_pjrt(
     ))
 }
 
-fn submit_demo<E: slidesparse::coordinator::Executor>(
-    engine: &mut Engine<E>,
-    n: usize,
-    vocab: usize,
-) {
+/// Multi-worker serve: one engine per worker thread, routed by
+/// `cfg.routing`. Demo requests cycle through a few shared prompt
+/// prefixes so `--routing prefix --prefix-cache` has something to reuse.
+fn serve_router(
+    cfg: &Config,
+    backend: Backend,
+    n_requests: usize,
+) -> Result<(Vec<RequestOutput>, String)> {
+    let engine_cfg = cfg.engine;
+    let mut router: Router = Router::spawn(cfg.workers, engine_cfg, cfg.routing, move |_wid| {
+        StcExecutor::new(tables::e2e_model(backend))
+    });
+    let vocab = tables::E2E_VOCAB;
     let mut rng = XorShift::new(42);
-    for i in 0..n {
-        let plen = 8 + rng.below(24);
-        let prompt: Vec<i32> = (0..plen).map(|_| rng.below(vocab) as i32).collect();
-        engine.submit(Request::new(
+    let prefixes: Vec<Vec<i32>> = (0..4)
+        .map(|_| (0..16).map(|_| rng.below(vocab) as i32).collect())
+        .collect();
+    for i in 0..n_requests {
+        let mut prompt = prefixes[i % prefixes.len()].clone();
+        let extra = 4 + rng.below(12);
+        prompt.extend((0..extra).map(|_| rng.below(vocab) as i32));
+        router.submit(Request::new(
             i as u64,
             prompt,
             SamplingParams { max_new_tokens: 8 + rng.below(8), ..Default::default() },
         ));
     }
+    let outs = router.drain()?;
+    let report = format!(
+        "router: policy={} workers={} dispatched={:?}",
+        cfg.routing,
+        cfg.workers,
+        router.dispatch_counts()
+    );
+    Ok((outs, report))
+}
+
+fn demo_requests(n: usize, vocab: usize) -> Vec<Request> {
+    let mut rng = XorShift::new(42);
+    (0..n)
+        .map(|i| {
+            let plen = 8 + rng.below(24);
+            let prompt: Vec<i32> = (0..plen).map(|_| rng.below(vocab) as i32).collect();
+            Request::new(
+                i as u64,
+                prompt,
+                SamplingParams { max_new_tokens: 8 + rng.below(8), ..Default::default() },
+            )
+        })
+        .collect()
 }
 
 fn bench(args: &Args) -> Result<()> {

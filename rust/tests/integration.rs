@@ -132,6 +132,7 @@ fn pjrt_decode_matches_prefill_teacher_forcing() {
     let (mut k_full, mut v_full) = (Vec::new(), Vec::new());
     let mut full = vec![PrefillItem {
         tokens: &toks,
+        start: 0,
         kv_k: &mut k_full,
         kv_v: &mut v_full,
         logits: Vec::new(),
@@ -143,6 +144,7 @@ fn pjrt_decode_matches_prefill_teacher_forcing() {
     let (mut k8, mut v8) = (Vec::new(), Vec::new());
     let mut pre = vec![PrefillItem {
         tokens: &toks[..8],
+        start: 0,
         kv_k: &mut k8,
         kv_v: &mut v8,
         logits: Vec::new(),
@@ -188,6 +190,62 @@ fn stc_engine_serves_with_all_backends() {
             assert!(o.tokens.iter().all(|t| (0..128).contains(t)));
         }
     }
+}
+
+#[test]
+fn prefix_cache_reuse_reduces_prefill_and_is_bit_exact() {
+    // Acceptance: two requests with a shared block-aligned 16-token
+    // prefix on one engine. Cache on vs off: outputs bit-exact, and the
+    // second request's prefilled-token count drops by exactly the
+    // cached prefix length (asserted via engine metrics).
+    let build = || {
+        NativeModel::generate(
+            BlockConfig { dim: 64, n_heads: 4, ffn: 96 },
+            2,
+            128,
+            64,
+            42,
+            Backend::Slide { n: 4 },
+        )
+    };
+    let prefix: Vec<i32> = (0..16).map(|t| (t * 5 + 1) % 128).collect();
+    let run = |prefix_cache: bool| {
+        let mut engine = Engine::new(
+            StcExecutor::new(build()),
+            EngineConfig { prefix_cache, kv_block_size: 16, ..Default::default() },
+        );
+        let params = SamplingParams { max_new_tokens: 4, ..Default::default() };
+        let mut p1 = prefix.clone();
+        p1.extend([40, 41, 42, 43]);
+        engine.submit(Request::new(1, p1, params));
+        let o1 = engine.run_to_completion().unwrap();
+        let first = engine.metrics.prefilled_tokens;
+        let mut p2 = prefix.clone();
+        p2.extend([90, 91]);
+        engine.submit(Request::new(2, p2, params));
+        let o2 = engine.run_to_completion().unwrap();
+        (
+            o1[0].tokens.clone(),
+            o2[0].tokens.clone(),
+            first,
+            engine.metrics.prefilled_tokens - first,
+            engine.metrics.prefix_cached_tokens,
+            engine.metrics.prefix_hits,
+        )
+    };
+    let (a_off, b_off, first_off, second_off, cached_off, _) = run(false);
+    let (a_on, b_on, first_on, second_on, cached_on, hits_on) = run(true);
+    assert_eq!(a_on, a_off, "first request bit-exact");
+    assert_eq!(b_on, b_off, "second request bit-exact");
+    assert_eq!(first_on, first_off, "cold cache: same prefill work");
+    assert_eq!(cached_off, 0);
+    assert_eq!(cached_on, 16, "the full shared block served from cache");
+    assert_eq!(hits_on, 1);
+    assert_eq!(
+        second_on + 16,
+        second_off,
+        "second request's prefill reduced by the cached prefix length"
+    );
 }
 
 #[test]

@@ -1,0 +1,151 @@
+//! Compile-only stub of the `xla` PJRT bindings crate (the real crate
+//! is outside the offline crate set). It mirrors exactly the API
+//! surface `runtime::client` / `coordinator::pjrt_exec` use so that
+//! `cargo check --features pjrt` type-checks the gated code; every
+//! runtime entry point fails with a clear error instead of executing.
+//! Swap this path dependency for the real bindings to actually run
+//! PJRT artifacts (see README.md).
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// The stub's error type (API-compatible with the bindings' error in
+/// the positions the call sites use: `?` into `anyhow`, `Display`).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "xla stub: {what} needs the real `xla` bindings crate — this build \
+         only type-checks the PJRT code (see rust/xla-stub/README.md)"
+    )))
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+}
+
+/// Element types literals can hold (the subset the call sites use).
+pub trait NativeType: sealed::Sealed + Copy {}
+
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+/// A host-side tensor literal.
+#[derive(Debug, Default)]
+pub struct Literal {
+    _priv: (),
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal { _priv: () }
+    }
+
+    pub fn scalar<T: NativeType>(_v: T) -> Literal {
+        Literal { _priv: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// A parsed HLO module proto.
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// A device buffer held by an executable's output.
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with borrowed or owned literals (replicas x buffers out).
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// A PJRT client pinned to one platform.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_loudly_at_runtime() {
+        let err = PjRtClient::cpu().expect_err("stub must not pretend to run");
+        assert!(err.to_string().contains("xla stub"));
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(Literal::scalar(3i32).to_vec::<i32>().is_err());
+    }
+}
