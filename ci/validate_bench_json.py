@@ -19,6 +19,21 @@ SCHEMAS = {
         "kernel_backends": {"bench", "m", "k", "o", "blocked_vs_scalar_s68", "rows"},
         "thread_scaling": {"bench", "m", "k", "o", "dense_equiv_bytes", "rows"},
     },
+    "BENCH_kv_migration.json": {
+        "smoke": None,
+        "bench": None,
+        "groups": None,
+        "prefix_len": None,
+        "suffix_len": None,
+        "new_tokens": None,
+        "shard_bytes_total": None,
+        "serialize_gb_s": None,
+        "deserialize_gb_s": None,
+        "replayed_token_reduction": None,
+        "bit_exact": None,
+        "cold": {"prefill_tokens", "imported_blocks", "wall_s"},
+        "migrated": {"prefill_tokens", "imported_blocks", "wall_s"},
+    },
     "BENCH_prefix_reuse.json": {
         "smoke": None,
         "bench": None,
@@ -64,6 +79,18 @@ def validate(path: str) -> None:
             if missing:
                 fail(f"{name}: '{key}' missing subkeys {sorted(missing)}")
     # semantic spot checks
+    if name == "BENCH_kv_migration.json":
+        if data["bit_exact"] is not True:
+            fail(f"{name}: bit_exact must be true")
+        if not 0.0 < data["replayed_token_reduction"] <= 1.0:
+            fail(
+                f"{name}: replayed_token_reduction "
+                f"{data['replayed_token_reduction']} out of range"
+            )
+        if data["migrated"]["imported_blocks"] <= 0:
+            fail(f"{name}: migration imported no blocks")
+        if data["serialize_gb_s"] <= 0.0 or data["deserialize_gb_s"] <= 0.0:
+            fail(f"{name}: wire throughput must be positive")
     if name == "BENCH_prefix_reuse.json":
         if data["bit_exact"] is not True:
             fail(f"{name}: bit_exact must be true")

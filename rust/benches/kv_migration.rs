@@ -1,0 +1,176 @@
+//! KV migration bench: how much prefill replay a warm cross-worker
+//! handoff removes, and how fast `KvShard` wire serialization runs.
+//! Writes `BENCH_kv_migration.json` (replayed-token reduction, shard
+//! serialize/deserialize throughput) so successive PRs can diff the
+//! migration trajectory; the run asserts migrated generations are
+//! bit-exact with cold recompute. `SLIDESPARSE_BENCH_SMOKE=1` shrinks
+//! the model and workload for CI.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use slidesparse::bench::harness::{bench, smoke_mode, write_json, Table};
+use slidesparse::bench::tables;
+use slidesparse::coordinator::{
+    Engine, EngineConfig, KvShard, Request, SamplingParams, StcExecutor,
+};
+use slidesparse::model::{Backend, BlockConfig, NativeModel};
+use slidesparse::util::json::Json;
+use slidesparse::util::prng::XorShift;
+
+fn main() {
+    let smoke = smoke_mode();
+    let (groups, prefix_len, suffix_len, new_tokens) =
+        if smoke { (2usize, 32usize, 8usize, 4usize) } else { (4, 96, 16, 8) };
+    let build_model = move || {
+        if smoke {
+            let smax = (prefix_len + suffix_len + new_tokens + 2).next_power_of_two();
+            NativeModel::generate(
+                BlockConfig { dim: 64, n_heads: 4, ffn: 96 },
+                2,
+                128,
+                smax,
+                31,
+                Backend::Slide { n: 4 },
+            )
+        } else {
+            tables::e2e_model(Backend::Slide { n: 4 })
+        }
+    };
+    let vocab = if smoke { 128 } else { tables::E2E_VOCAB };
+    let cfg = EngineConfig {
+        kv_blocks: 4096,
+        kv_block_size: 16,
+        prefix_cache: true,
+        migrate_kv: true,
+        ..Default::default()
+    };
+
+    let mut rng = XorShift::new(11);
+    let prefixes: Vec<Vec<i32>> = (0..groups)
+        .map(|_| (0..prefix_len).map(|_| rng.below(vocab) as i32).collect())
+        .collect();
+    let request = |id: u64, pre: &[i32], rng: &mut XorShift| {
+        let mut prompt = pre.to_vec();
+        prompt.extend((0..suffix_len).map(|_| rng.below(vocab) as i32));
+        Request::new(
+            id,
+            prompt,
+            SamplingParams { max_new_tokens: new_tokens, ..Default::default() },
+        )
+    };
+
+    // "worker A": serve one request per prefix, harvesting exports —
+    // the state a dying/rebalanced worker would leave behind as shards
+    let mut a = Engine::new(StcExecutor::new(build_model()), cfg);
+    for (i, pre) in prefixes.iter().enumerate() {
+        a.submit(request(i as u64, pre, &mut rng));
+    }
+    a.run_to_completion().unwrap();
+    let shards: Vec<KvShard> = a.take_kv_exports().into_iter().map(|(_, s)| s).collect();
+    assert_eq!(shards.len(), groups, "one shard per distinct prefix");
+
+    // wire throughput: serialize / deserialize the whole shard set
+    let bytes_set: Vec<Vec<u8>> = shards.iter().map(KvShard::to_bytes).collect();
+    let total_bytes: usize = bytes_set.iter().map(Vec::len).sum();
+    let ser = bench(1, 0.2, 50, || {
+        for s in &shards {
+            std::hint::black_box(s.to_bytes());
+        }
+    });
+    let de = bench(1, 0.2, 50, || {
+        for b in &bytes_set {
+            std::hint::black_box(KvShard::from_bytes(b).unwrap());
+        }
+    });
+    let ser_gb_s = total_bytes as f64 / ser.mean_s / 1e9;
+    let de_gb_s = total_bytes as f64 / de.mean_s / 1e9;
+
+    // round 2 of the workload (same prefixes, fresh suffixes) lands on
+    // a cold replacement worker: once without shards (full replay),
+    // once with the shards imported first (warm handoff)
+    let round2: Vec<Request> = {
+        let mut rng = XorShift::new(17);
+        prefixes
+            .iter()
+            .enumerate()
+            .map(|(i, pre)| request(100 + i as u64, pre, &mut rng))
+            .collect()
+    };
+    let run_round2 = |imports: &[Vec<u8>]| {
+        let mut e = Engine::new(StcExecutor::new(build_model()), cfg);
+        let mut imported = 0u64;
+        for b in imports {
+            imported += e.import_kv_shard_bytes(b) as u64;
+        }
+        let t0 = Instant::now();
+        for r in &round2 {
+            e.submit(r.clone());
+        }
+        let mut outs = e.run_to_completion().unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        outs.sort_by_key(|o| o.id);
+        let toks: Vec<Vec<i32>> = outs.into_iter().map(|o| o.tokens).collect();
+        (toks, e.metrics.prefilled_tokens, imported, wall)
+    };
+    let (toks_cold, prefill_cold, _, wall_cold) = run_round2(&[]);
+    let (toks_mig, prefill_mig, imported_blocks, wall_mig) = run_round2(&bytes_set);
+    assert_eq!(
+        toks_mig, toks_cold,
+        "migrated generations must be bit-exact with cold recompute"
+    );
+    assert!(prefill_mig < prefill_cold, "migration must remove prefill work");
+    let reduction = 1.0 - prefill_mig as f64 / prefill_cold.max(1) as f64;
+
+    let mut t = Table::new(
+        &format!(
+            "KV migration ({groups} prefixes, {prefix_len}+{suffix_len} prompt tokens, \
+             block 16)"
+        ),
+        &["handoff", "prefill tok", "imported blk", "wall ms", "ser GB/s", "de GB/s"],
+    );
+    t.row(vec![
+        "cold".into(),
+        prefill_cold.to_string(),
+        "0".into(),
+        format!("{:.1}", wall_cold * 1e3),
+        "-".into(),
+        "-".into(),
+    ]);
+    t.row(vec![
+        "migrated".into(),
+        prefill_mig.to_string(),
+        imported_blocks.to_string(),
+        format!("{:.1}", wall_mig * 1e3),
+        format!("{ser_gb_s:.2}"),
+        format!("{de_gb_s:.2}"),
+    ]);
+    t.print();
+    println!("\nreplayed-token reduction: {:.1}%", reduction * 100.0);
+
+    let side = |prefill: u64, imported: u64, wall: f64| {
+        let mut o = BTreeMap::new();
+        o.insert("prefill_tokens".to_string(), Json::Num(prefill as f64));
+        o.insert("imported_blocks".to_string(), Json::Num(imported as f64));
+        o.insert("wall_s".to_string(), Json::Num(wall));
+        Json::Obj(o)
+    };
+    let mut j = BTreeMap::new();
+    j.insert("bench".to_string(), Json::Str("kv_migration".to_string()));
+    j.insert("smoke".to_string(), Json::Bool(smoke));
+    j.insert("groups".to_string(), Json::Num(groups as f64));
+    j.insert("prefix_len".to_string(), Json::Num(prefix_len as f64));
+    j.insert("suffix_len".to_string(), Json::Num(suffix_len as f64));
+    j.insert("new_tokens".to_string(), Json::Num(new_tokens as f64));
+    j.insert("shard_bytes_total".to_string(), Json::Num(total_bytes as f64));
+    j.insert("serialize_gb_s".to_string(), Json::Num(ser_gb_s));
+    j.insert("deserialize_gb_s".to_string(), Json::Num(de_gb_s));
+    j.insert("cold".to_string(), side(prefill_cold, 0, wall_cold));
+    j.insert("migrated".to_string(), side(prefill_mig, imported_blocks, wall_mig));
+    j.insert("replayed_token_reduction".to_string(), Json::Num(reduction));
+    j.insert("bit_exact".to_string(), Json::Bool(true));
+    match write_json("BENCH_kv_migration.json", &Json::Obj(j)) {
+        Ok(()) => println!("\nwrote BENCH_kv_migration.json"),
+        Err(e) => eprintln!("could not write BENCH_kv_migration.json: {e}"),
+    }
+}

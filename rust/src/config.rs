@@ -80,11 +80,19 @@ impl Config {
         if let Some(v) = j.get("prefix_cache").and_then(|v| v.as_bool()) {
             cfg.engine.prefix_cache = v;
         }
+        if let Some(v) = j.get("prefix_cache_bytes").and_then(|v| v.as_usize()) {
+            cfg.engine.prefix_cache_bytes = v;
+        }
+        if let Some(v) = j.get("migrate_kv").and_then(|v| v.as_bool()) {
+            cfg.engine.migrate_kv = v;
+        }
         if let Some(e) = j.get("engine") {
             let mut ec = EngineConfig {
                 threads: cfg.engine.threads,
                 kernel: cfg.engine.kernel,
                 prefix_cache: cfg.engine.prefix_cache,
+                prefix_cache_bytes: cfg.engine.prefix_cache_bytes,
+                migrate_kv: cfg.engine.migrate_kv,
                 ..Default::default()
             };
             if let Some(v) = e.get("kv_blocks").and_then(|v| v.as_usize()) {
@@ -104,6 +112,12 @@ impl Config {
             }
             if let Some(v) = e.get("prefix_cache").and_then(|v| v.as_bool()) {
                 ec.prefix_cache = v;
+            }
+            if let Some(v) = e.get("prefix_cache_bytes").and_then(|v| v.as_usize()) {
+                ec.prefix_cache_bytes = v;
+            }
+            if let Some(v) = e.get("migrate_kv").and_then(|v| v.as_bool()) {
+                ec.migrate_kv = v;
             }
             let mut sc = SchedulerConfig::default();
             if let Some(v) = e.get("max_batch").and_then(|v| v.as_usize()) {
@@ -247,6 +261,34 @@ mod tests {
         assert_eq!(k.routing, Policy::PrefixAffinity { prefix_tokens: 32 });
         let ll = Config::from_json(r#"{"routing": "least_loaded"}"#).unwrap();
         assert_eq!(ll.routing, Policy::LeastLoaded);
+    }
+
+    #[test]
+    fn migration_knobs_parse_at_both_levels() {
+        let d = Config::default();
+        assert!(!d.engine.migrate_kv, "off by default");
+        assert_eq!(d.engine.prefix_cache_bytes, 0, "unbounded by default");
+        let top = Config::from_json(
+            r#"{"prefix_cache": true, "migrate_kv": true, "prefix_cache_bytes": 65536}"#,
+        )
+        .unwrap();
+        assert!(top.engine.migrate_kv);
+        assert_eq!(top.engine.prefix_cache_bytes, 65536);
+        // top-level values survive an "engine" object without the knobs
+        let kept = Config::from_json(
+            r#"{"migrate_kv": true, "prefix_cache_bytes": 128, "engine": {"kv_blocks": 32}}"#,
+        )
+        .unwrap();
+        assert!(kept.engine.migrate_kv);
+        assert_eq!(kept.engine.prefix_cache_bytes, 128);
+        // nested form wins when both are present
+        let nested = Config::from_json(
+            r#"{"migrate_kv": true, "prefix_cache_bytes": 128,
+                "engine": {"migrate_kv": false, "prefix_cache_bytes": 256}}"#,
+        )
+        .unwrap();
+        assert!(!nested.engine.migrate_kv);
+        assert_eq!(nested.engine.prefix_cache_bytes, 256);
     }
 
     #[test]

@@ -9,7 +9,9 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::executor::{DecodeItem, Executor, PrefillItem};
-use super::kvcache::{BlockId, BlockManager, SeqId};
+use super::kvcache::{
+    token_hash, BlockId, BlockManager, ByteLru, KvShard, KvShardBlock, PREFIX_HASH_SEED, SeqId,
+};
 use super::metrics::EngineMetrics;
 use super::request::{FinishReason, Request, RequestOutput};
 use super::scheduler::{Scheduler, SchedulerConfig};
@@ -41,6 +43,19 @@ pub struct EngineConfig {
     /// exactly what a recompute would produce — so this only changes
     /// how much prefill work runs (gated by tests/conformance.rs).
     pub prefix_cache: bool,
+    /// byte budget for saved KV: bounds the engine's per-block saved-KV
+    /// map AND (independently) the router's migration shard buffer,
+    /// with least-recently-used entries spilled first (0 = unbounded).
+    /// A spilled block just recomputes on its next reuse — outputs are
+    /// unchanged.
+    pub prefix_cache_bytes: usize,
+    /// KV migration/handoff: export finished sequences' prefix KV as
+    /// [`KvShard`]s and accept imported shards, so the router can move
+    /// a prefix across workers without a cold prefill replay. Only
+    /// active when `prefix_cache` is also on (migration rides the
+    /// content-addressed cache); inert — and still bit-exact — without
+    /// it.
+    pub migrate_kv: bool,
 }
 
 impl Default for EngineConfig {
@@ -53,6 +68,8 @@ impl Default for EngineConfig {
             threads: 1,
             kernel: crate::stc::KernelChoice::Auto,
             prefix_cache: false,
+            prefix_cache_bytes: 0,
+            migrate_kv: false,
         }
     }
 }
@@ -66,9 +83,34 @@ pub struct Engine<E: Executor> {
     pub metrics: EngineMetrics,
     rng: XorShift,
     /// saved compact KV per content-addressed cache block (prefix cache
-    /// only; dropped when the block manager evicts the block)
-    block_kv: HashMap<BlockId, (Vec<f32>, Vec<f32>)>,
+    /// only; dropped when the block manager evicts the block, spilled
+    /// LRU-first to honor `prefix_cache_bytes`)
+    block_kv: ByteLru<BlockId, (Vec<f32>, Vec<f32>)>,
+    /// KV migration enabled (see [`EngineConfig::migrate_kv`])
+    migrate_kv: bool,
+    /// shards exported for finished sequences, awaiting pickup by the
+    /// router via [`Engine::take_kv_exports`]
+    kv_exports: Vec<(Vec<i32>, KvShard)>,
+    /// publication dedup: covered-prefix hash -> covered token count
+    /// (skip re-publishing a shard that carries nothing new). Only
+    /// sound when the router's shard buffer cannot evict — with a byte
+    /// cap (`prefix_cache_bytes > 0`) a suppressed re-publication could
+    /// outlive the buffered shard and leave later re-pins cold forever,
+    /// so dedup is disabled there and every finish republishes.
+    dedup_exports: bool,
+    exported: HashMap<u64, usize>,
 }
+
+/// Bound on the publication-dedup map (mirrors the router's sticky-map
+/// cap): mostly-unique traffic resets it; losing dedup state only costs
+/// a redundant publication, never correctness.
+const EXPORT_DEDUP_CAPACITY: usize = 4096;
+
+/// Bound on undrained published shards. The router drains exports every
+/// loop iteration, so it never sees this; an engine used directly (e.g.
+/// single-worker serve) with `migrate_kv` on must not accumulate cloned
+/// KV without bound — oldest publications drop first (newest wins).
+const KV_EXPORT_BACKLOG: usize = 64;
 
 impl<E: Executor> Engine<E> {
     pub fn new(mut executor: E, cfg: EngineConfig) -> Engine<E> {
@@ -84,7 +126,11 @@ impl<E: Executor> Engine<E> {
             outputs: Vec::new(),
             metrics: EngineMetrics::new(),
             rng: XorShift::new(cfg.seed ^ 0x5EED),
-            block_kv: HashMap::new(),
+            block_kv: ByteLru::new(cfg.prefix_cache_bytes),
+            migrate_kv: cfg.migrate_kv && cfg.prefix_cache,
+            kv_exports: Vec::new(),
+            dedup_exports: cfg.prefix_cache_bytes == 0,
+            exported: HashMap::new(),
         }
     }
 
@@ -131,6 +177,167 @@ impl<E: Executor> Engine<E> {
     /// Drain finished outputs.
     pub fn poll_outputs(&mut self) -> Vec<RequestOutput> {
         std::mem::take(&mut self.outputs)
+    }
+
+    /// Drain migration shards published for finished sequences (each
+    /// paired with the prompt it covers, so the router can key its
+    /// shard buffer by affinity hash). Empty unless `migrate_kv` is on.
+    pub fn take_kv_exports(&mut self) -> Vec<(Vec<i32>, KvShard)> {
+        std::mem::take(&mut self.kv_exports)
+    }
+
+    /// Export the saved KV covering the longest verified, contiguously
+    /// saved block-aligned prefix of `tokens` as a migration shard.
+    /// `None` when nothing is saved (cache off, spilled, or unseen
+    /// prefix) — the receiving side then recomputes, which is always
+    /// correct.
+    pub fn export_kv_shard(&self, tokens: &[i32]) -> Option<KvShard> {
+        let (chain, saved) = self.saved_prefix_chain(tokens);
+        (saved > 0).then(|| self.build_kv_shard(tokens, &chain[..saved]))
+    }
+
+    /// The verified chain for `tokens` plus how many of its blocks hold
+    /// saved KV contiguously from the root — the only run a shard can
+    /// carry (a gap, e.g. a spilled block, ends it).
+    fn saved_prefix_chain(&self, tokens: &[i32]) -> (Vec<BlockId>, usize) {
+        let chain = self.scheduler.blocks.lookup_prefix_chain(tokens);
+        let saved = chain.iter().take_while(|b| self.block_kv.contains(b)).count();
+        (chain, saved)
+    }
+
+    /// Clone the saved KV of `chain` (all blocks saved — the caller
+    /// checked) into a wire shard.
+    fn build_kv_shard(&self, tokens: &[i32], chain: &[BlockId]) -> KvShard {
+        let bs = self.scheduler.blocks.block_size;
+        let mut blocks = Vec::with_capacity(chain.len());
+        for (i, b) in chain.iter().enumerate() {
+            let (ck, cv) = self.block_kv.peek(b).expect("caller checked saved run");
+            blocks.push(KvShardBlock {
+                tokens: tokens[i * bs..(i + 1) * bs].to_vec(),
+                k: ck.clone(),
+                v: cv.clone(),
+            });
+        }
+        KvShard {
+            block_size: bs,
+            executor: self.executor.label(),
+            blocks,
+        }
+    }
+
+    /// Import a migration shard: verify it structurally (block size,
+    /// executor kind, compact-KV lengths, full blocks), register its
+    /// chain in the allocator's prefix index (parking on the LRU), and
+    /// store its compact KV so later same-prefix prefills start past
+    /// the covered tokens. A mismatched or unverifiable shard imports
+    /// nothing and the next prefill recomputes — imports can only miss,
+    /// never alias. Returns how many blocks are now backed by both a
+    /// verified registration and resident KV.
+    ///
+    /// Contract: shards must come from a replica serving the SAME model
+    /// (the router's workers share one factory, which guarantees it).
+    /// The structural checks catch executor-kind and shape mismatches,
+    /// not weight mismatches.
+    pub fn import_kv_shard(&mut self, shard: &KvShard) -> usize {
+        // GC first (as run_prefill does): a pending eviction may name a
+        // block id the import is about to re-register from the free
+        // list — draining now keeps the next prefill's GC from deleting
+        // the freshly imported KV under that reused id
+        for b in self.scheduler.blocks.drain_evictions() {
+            self.block_kv.remove(&b);
+        }
+        let bs = self.scheduler.blocks.block_size;
+        let valid = self.scheduler.blocks.prefix_enabled()
+            && shard.block_size == bs
+            && shard.executor == self.executor.label()
+            && !shard.blocks.is_empty()
+            && match self.executor.compact_kv_len(bs) {
+                Some(expect) => shard.blocks.iter().all(|b| {
+                    b.tokens.len() == bs && b.k.len() == expect && b.v.len() == expect
+                }),
+                None => false, // executor cannot inject KV: nothing to import
+            };
+        if !valid {
+            self.metrics.kv_import_rejects += 1;
+            return 0;
+        }
+        let chain: Vec<&[i32]> = shard.blocks.iter().map(|b| b.tokens.as_slice()).collect();
+        let ids = self.scheduler.blocks.import_prefix_chain(&chain);
+        // leaf-to-root, so the chain ROOT carries the freshest use-stamp:
+        // under the byte cap leaves spill before roots, and the surviving
+        // prefix stays contiguous from the root (the only shape prefill
+        // can reuse)
+        for (id, blk) in ids.iter().zip(&shard.blocks).rev() {
+            if self.block_kv.contains(id) {
+                self.block_kv.get(id); // refresh recency
+            } else {
+                let cost = (blk.k.len() + blk.v.len()) * std::mem::size_of::<f32>();
+                self.block_kv.insert(*id, (blk.k.clone(), blk.v.clone()), cost);
+            }
+        }
+        // count AFTER every insert: a later insert can evict an earlier
+        // chain block under the cap, and that block is not backed
+        let backed = ids.iter().filter(|id| self.block_kv.contains(id)).count();
+        self.metrics.kv_imported_blocks += backed as u64;
+        self.sync_kv_budget_metrics();
+        backed
+    }
+
+    /// [`Engine::import_kv_shard`] over the wire form: a truncated or
+    /// corrupted byte stream is counted as a reject and imports nothing
+    /// (graceful recompute — never a panic, never a wrong token).
+    pub fn import_kv_shard_bytes(&mut self, bytes: &[u8]) -> usize {
+        match KvShard::from_bytes(bytes) {
+            Ok(shard) => self.import_kv_shard(&shard),
+            Err(_) => {
+                self.metrics.kv_import_rejects += 1;
+                0
+            }
+        }
+    }
+
+    /// Publish a shard for a finishing sequence's prompt. When the
+    /// shard buffers are unbounded, publications are dedup'd on covered
+    /// content so steady-state repeat traffic does not flood the router
+    /// with identical shards — and the dedup decision is made from the
+    /// chain walk alone, BEFORE any KV is cloned.
+    fn publish_kv_export(&mut self, prompt: &[i32]) {
+        let bs = self.scheduler.blocks.block_size;
+        let (chain, saved) = self.saved_prefix_chain(prompt);
+        if saved == 0 {
+            return;
+        }
+        let covered = saved * bs;
+        if self.dedup_exports {
+            let h = token_hash(PREFIX_HASH_SEED, &prompt[..covered]);
+            if self.exported.get(&h) == Some(&covered) {
+                return;
+            }
+            if self.exported.len() >= EXPORT_DEDUP_CAPACITY {
+                self.exported.clear();
+            }
+            self.exported.insert(h, covered);
+        }
+        let shard = self.build_kv_shard(prompt, &chain[..saved]);
+        self.metrics.kv_exported_shards += 1;
+        self.metrics.kv_exported_blocks += shard.blocks.len() as u64;
+        if self.kv_exports.len() >= KV_EXPORT_BACKLOG {
+            // no consumer is draining (the router drains every loop
+            // iteration): drop the oldest publication, newest wins
+            self.kv_exports.remove(0);
+        }
+        self.kv_exports.push((prompt.to_vec(), shard));
+    }
+
+    /// Mirror the saved-KV budget counters into the engine metrics and
+    /// the allocator's `PrefixStats` (the shared observability surface).
+    fn sync_kv_budget_metrics(&mut self) {
+        self.metrics.kv_spilled_blocks = self.block_kv.spilled_entries;
+        self.metrics.kv_spilled_bytes = self.block_kv.spilled_bytes;
+        self.metrics.kv_resident_bytes = self.block_kv.bytes() as u64;
+        let stats = &mut self.scheduler.blocks.prefix_stats;
+        stats.spilled_blocks = self.block_kv.spilled_entries;
+        stats.spilled_bytes = self.block_kv.spilled_bytes;
     }
 
     /// One scheduling step (one prefill OR one decode batch).
@@ -210,7 +417,7 @@ impl<E: Executor> Engine<E> {
             if claimed > 0 {
                 let table = self.scheduler.blocks.table(seq.seq_id).expect("allocated");
                 for (i, b) in table.iter().enumerate().take(claimed / bs) {
-                    if self.block_kv.contains_key(b) {
+                    if self.block_kv.contains(b) {
                         start = (i + 1) * bs;
                     } else {
                         break;
@@ -224,8 +431,11 @@ impl<E: Executor> Engine<E> {
                     seq.kv.v.resize(kv_len, 0.0);
                 }
                 let table = self.scheduler.blocks.table(seq.seq_id).expect("allocated");
-                for (i, b) in table.iter().enumerate().take(start / bs) {
-                    let (ck, cv) = &self.block_kv[b];
+                // reverse order so the recency touches land leaf-to-root
+                // (root freshest); the injected ranges are disjoint, so
+                // the write order itself is irrelevant
+                for (i, b) in table.iter().enumerate().take(start / bs).rev() {
+                    let (ck, cv) = self.block_kv.get(b).expect("contiguity checked");
                     self.executor
                         .inject_kv_range(&mut seq.kv.k, &mut seq.kv.v, i * bs, bs, ck, cv);
                 }
@@ -258,20 +468,27 @@ impl<E: Executor> Engine<E> {
 
         // harvest: save compact KV for every content-addressed block we
         // just (re)computed, so later same-prefix requests can attach
+        // (inserts beyond `prefix_cache_bytes` spill older blocks first)
         if prefix_on {
             for seq in &taken {
-                for (idx, b) in self.scheduler.blocks.registered_blocks(seq.seq_id) {
-                    if let std::collections::hash_map::Entry::Vacant(e) = self.block_kv.entry(b)
+                // leaf-to-root (see import_kv_shard): the byte cap spills
+                // leaves before roots, keeping the saved run contiguous
+                let registered = self.scheduler.blocks.registered_blocks(seq.seq_id);
+                for (idx, b) in registered.into_iter().rev() {
+                    if self.block_kv.contains(&b) {
+                        // refresh recency so a chain's root never goes
+                        // stale behind its own freshly saved leaves
+                        self.block_kv.get(&b);
+                    } else if let Some((ck, cv)) =
+                        self.executor
+                            .extract_kv_range(&seq.kv.k, &seq.kv.v, idx * bs, bs)
                     {
-                        if let Some(kv) =
-                            self.executor
-                                .extract_kv_range(&seq.kv.k, &seq.kv.v, idx * bs, bs)
-                        {
-                            e.insert(kv);
-                        }
+                        let cost = (ck.len() + cv.len()) * std::mem::size_of::<f32>();
+                        self.block_kv.insert(b, (ck, cv), cost);
                     }
                 }
             }
+            self.sync_kv_budget_metrics();
         }
 
         // reinsert ALL sequences before emitting: emitting one token can
@@ -373,6 +590,12 @@ impl<E: Executor> Engine<E> {
     }
 
     fn finish_seq(&mut self, id: SeqId, finish: FinishReason) {
+        if self.migrate_kv {
+            // export BEFORE release so the chain is guaranteed resident;
+            // the router ships the shard to re-pinned workers
+            let prompt = self.seqs[&id].request.prompt.clone();
+            self.publish_kv_export(&prompt);
+        }
         self.scheduler.finish(id);
         let mut seq = self.seqs.remove(&id).unwrap();
         seq.phase = Phase::Finished;
@@ -606,6 +829,134 @@ mod tests {
         let outs = e.run_to_completion().unwrap();
         let ids: Vec<u64> = outs.iter().map(|o| o.id).collect();
         assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn shard_export_import_moves_prefix_between_engines() {
+        let cfg = EngineConfig {
+            kv_block_size: 4,
+            prefix_cache: true,
+            migrate_kv: true,
+            ..Default::default()
+        };
+        let prefix = vec![1, 2, 3, 4];
+        let mut a = Engine::new(MockExecutor::new(1000, 64), cfg);
+        let mut p1 = prefix.clone();
+        p1.extend([10, 11]);
+        a.submit(req(1, p1.clone(), 3));
+        a.run_to_completion().unwrap();
+        let exports = a.take_kv_exports();
+        assert_eq!(exports.len(), 1, "finished sequence published one shard");
+        assert_eq!(exports[0].0, p1, "keyed by the finishing prompt");
+        assert_eq!(exports[0].1.tokens_covered(), 4, "one full block");
+        assert_eq!(a.metrics.kv_exported_shards, 1);
+
+        // wire round-trip into a cold engine: the same-prefix request
+        // prefills only its suffix (zero replay for migrated blocks)
+        let mut b = Engine::new(MockExecutor::new(1000, 64), cfg);
+        let backed = b.import_kv_shard_bytes(&exports[0].1.to_bytes());
+        assert_eq!(backed, 1);
+        assert_eq!(b.metrics.kv_imported_blocks, 1);
+        let mut p2 = prefix.clone();
+        p2.extend([20, 21, 22]);
+        b.submit(req(2, p2.clone(), 3));
+        let outs = b.run_to_completion().unwrap();
+        assert_eq!(outs[0].tokens, vec![23, 24, 25]);
+        assert_eq!(b.metrics.prefix_cached_tokens, 4);
+        assert_eq!(
+            b.metrics.prefilled_tokens,
+            (p2.len() - 4) as u64,
+            "migrated blocks must not be replayed"
+        );
+    }
+
+    #[test]
+    fn migrate_without_prefix_cache_is_inert() {
+        let cfg = EngineConfig {
+            kv_block_size: 4,
+            prefix_cache: false,
+            migrate_kv: true,
+            ..Default::default()
+        };
+        let mut e = Engine::new(MockExecutor::new(1000, 64), cfg);
+        e.submit(req(1, vec![1, 2, 3, 4, 5], 2));
+        let outs = e.run_to_completion().unwrap();
+        assert_eq!(outs[0].tokens, vec![6, 7]);
+        assert!(e.take_kv_exports().is_empty(), "no cache: nothing to export");
+        assert_eq!(e.export_kv_shard(&[1, 2, 3, 4]), None);
+    }
+
+    #[test]
+    fn repeat_finishes_dedup_publications() {
+        let cfg = EngineConfig {
+            kv_block_size: 4,
+            prefix_cache: true,
+            migrate_kv: true,
+            ..Default::default()
+        };
+        let mut e = Engine::new(MockExecutor::new(1000, 64), cfg);
+        for i in 0..3 {
+            e.submit(req(i, vec![1, 2, 3, 4, 50 + i as i32], 2));
+            e.run_to_completion().unwrap();
+        }
+        // identical covered content: one publication, not three
+        assert_eq!(e.take_kv_exports().len(), 1);
+        assert_eq!(e.metrics.kv_exported_shards, 1);
+    }
+
+    #[test]
+    fn capped_engines_republish_every_finish() {
+        // with a byte cap the router's shard buffer can evict, so a
+        // dedup'd publication could outlive its buffered shard: capped
+        // engines must republish on every finish instead
+        let cfg = EngineConfig {
+            kv_block_size: 4,
+            prefix_cache: true,
+            migrate_kv: true,
+            prefix_cache_bytes: 1024,
+            ..Default::default()
+        };
+        let mut e = Engine::new(MockExecutor::new(1000, 64), cfg);
+        for i in 0..3 {
+            e.submit(req(i, vec![1, 2, 3, 4, 50 + i as i32], 2));
+            e.run_to_completion().unwrap();
+        }
+        assert_eq!(e.take_kv_exports().len(), 3, "one publication per finish");
+    }
+
+    #[test]
+    fn byte_cap_bounds_saved_kv_and_stays_exact() {
+        // the mock's compact block costs (1 + 1) * 4 = 8 bytes; a cap of
+        // 8 holds exactly one saved block, so a second distinct prefix
+        // spills the first — and generations never change
+        let run = |prefix_cache_bytes: usize| {
+            let cfg = EngineConfig {
+                kv_block_size: 4,
+                prefix_cache: true,
+                prefix_cache_bytes,
+                ..Default::default()
+            };
+            let mut e = Engine::new(MockExecutor::new(1000, 64), cfg);
+            let mut toks = Vec::new();
+            for i in 0..3i32 {
+                e.submit(req(i as u64, vec![i * 10, i * 10 + 1, i * 10 + 2, i * 10 + 3, 60], 2));
+                toks.extend(e.run_to_completion().unwrap().into_iter().map(|o| o.tokens));
+                if prefix_cache_bytes > 0 {
+                    assert!(
+                        e.metrics.kv_resident_bytes <= prefix_cache_bytes as u64,
+                        "budget exceeded: {} > {prefix_cache_bytes}",
+                        e.metrics.kv_resident_bytes
+                    );
+                }
+            }
+            (toks, e.metrics.kv_spilled_blocks, e.scheduler.blocks.prefix_stats.spilled_blocks)
+        };
+        let (toks_uncapped, spills_uncapped, _) = run(0);
+        let (toks_capped, spills_capped, stats_spills) = run(8);
+        assert_eq!(toks_capped, toks_uncapped, "the cap must not change outputs");
+        assert_eq!(spills_uncapped, 0);
+        assert!(spills_capped >= 2, "3 distinct prefixes through a 1-block budget");
+        assert_eq!(stats_spills, spills_capped, "PrefixStats mirrors the spills");
     }
 
     #[test]

@@ -65,6 +65,14 @@ pub trait Executor {
     /// authoritative; every backend is bit-exact, so this only changes
     /// speed.
     fn set_kernel(&mut self, _choice: KernelChoice) {}
+    /// Length of each compact buffer [`Executor::extract_kv_range`]
+    /// yields for a `len`-position range, or `None` when the executor
+    /// cannot introspect its KV layout. KV-shard import validates
+    /// migrated payloads against it, so a shard produced by a
+    /// differently-shaped executor is rejected instead of injected.
+    fn compact_kv_len(&self, _len: usize) -> Option<usize> {
+        None
+    }
     /// Copy KV positions `[start, start + len)` out of a per-sequence
     /// store into a compact buffer (layout private to the executor; the
     /// engine treats it as opaque bytes keyed by cache block). `None`
@@ -220,6 +228,11 @@ impl Executor for StcExecutor {
         self.kernel = kern;
     }
 
+    fn compact_kv_len(&self, len: usize) -> Option<usize> {
+        let cfg = self.model.blocks[0].cfg;
+        Some(self.model.n_layers() * cfg.n_heads * len * cfg.head_dim())
+    }
+
     fn extract_kv_range(
         &self,
         kv_k: &[f32],
@@ -327,6 +340,10 @@ impl Executor for MockExecutor {
             item.logits = self.logits_for(last + 1);
         }
         Ok(())
+    }
+
+    fn compact_kv_len(&self, _len: usize) -> Option<usize> {
+        Some(1) // the mock's compact form is its single counter cell
     }
 
     fn extract_kv_range(

@@ -36,8 +36,22 @@
 //! preemption replay registers the full blocks of prompt + already
 //! generated tokens — content addressing is what matters, so blocks
 //! covering generated content are legitimate cache entries too.
+//!
+//! ## KV migration
+//!
+//! [`KvShard`] is the wire form of a chain of cached blocks (per-block
+//! tokens + the executor's compact KV), checksummed so truncation or
+//! corruption is detected at decode time. [`BlockManager::
+//! import_prefix_chain`] registers a shard's chain under the same
+//! verified-parent-link rules as allocation — reusing registrations it
+//! can verify, drawing the rest from the FREE list only (imports never
+//! evict resident cache entries), and stopping at the first conflict —
+//! so a migrated chain can only miss, never alias. [`ByteLru`] is the
+//! byte-budgeted LRU that bounds both the engine's saved per-block KV
+//! and the router's shard buffer under the `prefix_cache_bytes` knob.
 
 use std::collections::{HashMap, VecDeque};
+use std::hash::Hash;
 
 pub type BlockId = usize;
 pub type SeqId = u64;
@@ -79,6 +93,14 @@ pub struct PrefixStats {
     pub evictions: u64,
     /// total tokens covered by attached cached blocks
     pub cached_tokens: u64,
+    /// blocks registered through [`BlockManager::import_prefix_chain`]
+    /// (KV migration) rather than local prefill
+    pub imported_blocks: u64,
+    /// saved-KV blocks spilled to stay under the `prefix_cache_bytes`
+    /// budget (mirrored from the engine's [`ByteLru`])
+    pub spilled_blocks: u64,
+    /// bytes those spilled blocks held
+    pub spilled_bytes: u64,
 }
 
 /// Registration record of a cached block: its chain hash, the exact
@@ -236,34 +258,8 @@ impl BlockManager {
         let need_total = self.blocks_needed(n);
         // chain hashes over the full prompt blocks
         let full_blocks = tokens.len() / bs;
-        let mut hashes = Vec::with_capacity(full_blocks);
-        let mut h = mix(PREFIX_HASH_SEED, bs as u64);
-        for i in 0..full_blocks {
-            h = token_hash(h, &tokens[i * bs..(i + 1) * bs]);
-            hashes.push(h);
-        }
-        // longest verified run of cached blocks starting at block 0: a
-        // candidate must carry our tokens for its block AND link back to
-        // the exact registration verified at the previous index, so the
-        // full token prefix matches by induction (hash quality is only a
-        // lookup aid, never a correctness input)
-        let mut matched: Vec<BlockId> = Vec::new();
-        let mut expected_parent: Option<(BlockId, u64)> = None;
-        for (i, bh) in hashes.iter().enumerate() {
-            match self.index.get(bh) {
-                Some(&b)
-                    if self.meta[b].as_ref().is_some_and(|m| {
-                        m.parent == expected_parent
-                            && m.tokens == tokens[i * bs..(i + 1) * bs]
-                    }) =>
-                {
-                    expected_parent =
-                        Some((b, self.meta[b].as_ref().expect("verified").gen));
-                    matched.push(b);
-                }
-                _ => break,
-            }
-        }
+        let hashes = self.chain_hashes(tokens);
+        let mut matched = self.verified_chain(tokens, &hashes);
         while matched.len() * bs >= n {
             matched.pop();
         }
@@ -329,6 +325,107 @@ impl BlockManager {
         }
         self.prefix_stats.cached_tokens += cached as u64;
         Ok(cached)
+    }
+
+    /// Longest verified run of registered blocks starting at block 0: a
+    /// candidate must carry our tokens for its block AND link back to
+    /// the exact registration verified at the previous index, so the
+    /// full token prefix matches by induction (hash quality is only a
+    /// lookup aid, never a correctness input). `hashes[i]` is the chain
+    /// hash through full block `i` of `tokens`.
+    fn verified_chain(&self, tokens: &[i32], hashes: &[u64]) -> Vec<BlockId> {
+        let bs = self.block_size;
+        let mut matched: Vec<BlockId> = Vec::new();
+        let mut expected_parent: Option<(BlockId, u64)> = None;
+        for (i, bh) in hashes.iter().enumerate() {
+            match self.index.get(bh) {
+                Some(&b)
+                    if self.meta[b].as_ref().is_some_and(|m| {
+                        m.parent == expected_parent
+                            && m.tokens == tokens[i * bs..(i + 1) * bs]
+                    }) =>
+                {
+                    expected_parent =
+                        Some((b, self.meta[b].as_ref().expect("verified").gen));
+                    matched.push(b);
+                }
+                _ => break,
+            }
+        }
+        matched
+    }
+
+    /// Chain hashes over the full blocks of `tokens` (`hashes[i]` covers
+    /// blocks `0..=i`).
+    fn chain_hashes(&self, tokens: &[i32]) -> Vec<u64> {
+        let bs = self.block_size;
+        let full_blocks = tokens.len() / bs;
+        let mut hashes = Vec::with_capacity(full_blocks);
+        let mut h = mix(PREFIX_HASH_SEED, bs as u64);
+        for i in 0..full_blocks {
+            h = token_hash(h, &tokens[i * bs..(i + 1) * bs]);
+            hashes.push(h);
+        }
+        hashes
+    }
+
+    /// Read-only verified chain lookup: the registered blocks covering
+    /// the longest block-aligned prefix of `tokens` (the matching phase
+    /// of [`BlockManager::allocate_with_prefix`] without allocating).
+    /// KV export walks this to decide what a migration shard can carry.
+    pub fn lookup_prefix_chain(&self, tokens: &[i32]) -> Vec<BlockId> {
+        if !self.prefix_enabled {
+            return Vec::new();
+        }
+        let hashes = self.chain_hashes(tokens);
+        self.verified_chain(tokens, &hashes)
+    }
+
+    /// Register an imported chain of full blocks (KV migration). Walks
+    /// the chain through the existing index — reusing registrations it
+    /// can verify under the same tokens-plus-parent-link rules as
+    /// allocation — and registers the remainder from the FREE list only
+    /// (imports never evict resident cache entries), parking new blocks
+    /// on the LRU with refcount 0. Stops at the first conflict (foreign
+    /// hash occupant, token mismatch) or when the free list runs dry,
+    /// returning the block ids of the verified prefix that IS
+    /// registered: an import can only fall short, never alias.
+    pub fn import_prefix_chain(&mut self, blocks: &[&[i32]]) -> Vec<BlockId> {
+        if !self.prefix_enabled || blocks.iter().any(|t| t.len() != self.block_size) {
+            return Vec::new();
+        }
+        let mut h = mix(PREFIX_HASH_SEED, self.block_size as u64);
+        let mut expected_parent: Option<(BlockId, u64)> = None;
+        let mut out = Vec::with_capacity(blocks.len());
+        for toks in blocks {
+            h = token_hash(h, toks);
+            if let Some(&b) = self.index.get(&h) {
+                let verified = self.meta[b]
+                    .as_ref()
+                    .is_some_and(|m| m.parent == expected_parent && m.tokens == **toks);
+                if !verified {
+                    break;
+                }
+                expected_parent = Some((b, self.meta[b].as_ref().expect("verified").gen));
+                out.push(b);
+            } else {
+                let Some(b) = self.free.pop() else { break };
+                debug_assert_eq!(self.refcount[b], 0);
+                self.gen_counter += 1;
+                self.meta[b] = Some(BlockMeta {
+                    hash: h,
+                    tokens: toks.to_vec(),
+                    gen: self.gen_counter,
+                    parent: expected_parent,
+                });
+                self.index.insert(h, b);
+                self.lru.push_back(b);
+                self.prefix_stats.imported_blocks += 1;
+                expected_parent = Some((b, self.gen_counter));
+                out.push(b);
+            }
+        }
+        out
     }
 
     /// Cached prefix length granted to `seq` at allocation time.
@@ -463,6 +560,329 @@ impl BlockManager {
                 "index entry points at block with a different hash"
             );
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Byte-budgeted LRU (the `prefix_cache_bytes` enforcement point)
+// ---------------------------------------------------------------------
+
+/// A byte-budgeted LRU map: every entry carries a caller-supplied byte
+/// cost, and inserts evict least-recently-used entries until the total
+/// cost fits the budget (`cap = 0` means unbounded). Backs the engine's
+/// saved per-block KV (`BlockId -> compact KV`) and the router's
+/// migration shard buffer (`prefix hash -> shard bytes`), so the single
+/// `prefix_cache_bytes` knob bounds each saved-KV structure. Dropping
+/// an entry is always safe for callers: a missing saved-KV block just
+/// downgrades the next reuse to recompute.
+///
+/// Recency is a monotonic use-stamp per entry, so touches (`get`,
+/// `insert`, `remove`) are O(1); only an over-budget insert pays an
+/// O(n) min-stamp scan per eviction — the hot prefill path touches
+/// blocks every step, while evictions only happen under cap pressure.
+#[derive(Debug)]
+struct LruEntry<V> {
+    v: V,
+    cost: usize,
+    stamp: u64,
+}
+
+#[derive(Debug)]
+pub struct ByteLru<K: Hash + Eq + Copy, V> {
+    cap: usize,
+    map: HashMap<K, LruEntry<V>>,
+    /// monotonic use counter (higher stamp = more recently used)
+    clock: u64,
+    bytes: usize,
+    /// entries evicted (spilled) to stay under the cap
+    pub spilled_entries: u64,
+    /// bytes those spilled entries held
+    pub spilled_bytes: u64,
+}
+
+impl<K: Hash + Eq + Copy, V> ByteLru<K, V> {
+    /// `cap` in bytes; 0 = unbounded.
+    pub fn new(cap: usize) -> ByteLru<K, V> {
+        ByteLru {
+            cap,
+            map: HashMap::new(),
+            clock: 0,
+            bytes: 0,
+            spilled_entries: 0,
+            spilled_bytes: 0,
+        }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Total byte cost of resident entries.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn contains(&self, k: &K) -> bool {
+        self.map.contains_key(k)
+    }
+
+    /// Look up without touching recency (read-only walkers like KV
+    /// export use this so inspection does not distort eviction order).
+    pub fn peek(&self, k: &K) -> Option<&V> {
+        self.map.get(k).map(|e| &e.v)
+    }
+
+    /// Look up and mark recently used.
+    pub fn get(&mut self, k: &K) -> Option<&V> {
+        self.clock += 1;
+        let clock = self.clock;
+        self.map.get_mut(k).map(|e| {
+            e.stamp = clock;
+            &e.v
+        })
+    }
+
+    /// Insert (replacing any previous entry for `k`), then evict
+    /// least-recently-used entries until the budget holds. An entry
+    /// whose own cost exceeds the whole budget is refused outright
+    /// (counted as a spill) — WITHOUT disturbing any existing entry for
+    /// `k`: a still-valid older value beats holding nothing. Returns
+    /// the evicted keys.
+    pub fn insert(&mut self, k: K, v: V, cost: usize) -> Vec<K> {
+        if self.cap > 0 && cost > self.cap {
+            self.spilled_entries += 1;
+            self.spilled_bytes += cost as u64;
+            return Vec::new();
+        }
+        if let Some(old) = self.map.remove(&k) {
+            self.bytes -= old.cost;
+        }
+        self.clock += 1;
+        self.map.insert(k, LruEntry { v, cost, stamp: self.clock });
+        self.bytes += cost;
+        let mut evicted = Vec::new();
+        while self.cap > 0 && self.bytes > self.cap {
+            let victim = *self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .expect("over-budget LRU is non-empty")
+                .0;
+            let e = self.map.remove(&victim).expect("victim is resident");
+            self.bytes -= e.cost;
+            self.spilled_entries += 1;
+            self.spilled_bytes += e.cost as u64;
+            evicted.push(victim);
+        }
+        evicted
+    }
+
+    /// Drop an entry (external invalidation, e.g. the allocator evicted
+    /// the block). Not counted as a spill.
+    pub fn remove(&mut self, k: &K) -> Option<V> {
+        let e = self.map.remove(k)?;
+        self.bytes -= e.cost;
+        Some(e.v)
+    }
+
+    /// Internal consistency (used by the property tests): byte
+    /// accounting is exact, use-stamps are unique (a total recency
+    /// order exists), and the budget holds.
+    pub fn check_invariants(&self) {
+        let mut total = 0usize;
+        let mut stamps = std::collections::HashSet::new();
+        for e in self.map.values() {
+            total += e.cost;
+            assert!(e.stamp <= self.clock, "stamp from the future");
+            assert!(stamps.insert(e.stamp), "duplicate use-stamp");
+        }
+        assert_eq!(total, self.bytes, "byte accounting drifted");
+        if self.cap > 0 {
+            assert!(self.bytes <= self.cap, "budget exceeded: {} > {}", self.bytes, self.cap);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// KvShard: the migration wire format
+// ---------------------------------------------------------------------
+
+/// One migrated cache block: the tokens it covers (verified on import)
+/// and the executor's compact KV for those positions.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KvShardBlock {
+    pub tokens: Vec<i32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+/// The wire form of a chain of cached blocks — what a worker ships so
+/// another worker can serve the same prefix without recomputing it.
+/// `blocks[0]` is the chain root; the chain hashes and parent links are
+/// NOT carried — importers re-derive both from the tokens, so a shard
+/// cannot smuggle a mislinked chain. [`KvShard::to_bytes`] /
+/// [`KvShard::from_bytes`] add a checksum so truncation or corruption
+/// in transit is detected at decode time (the importer then recomputes
+/// instead — never trusts a damaged shard).
+#[derive(Clone, Debug, PartialEq)]
+pub struct KvShard {
+    /// block size of the exporting allocator (must match the importer's)
+    pub block_size: usize,
+    /// exporting executor's label (KV layouts are executor-private)
+    pub executor: String,
+    pub blocks: Vec<KvShardBlock>,
+}
+
+/// Why a shard failed to decode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardDecodeError(pub &'static str);
+
+impl std::fmt::Display for ShardDecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "kv shard decode: {}", self.0)
+    }
+}
+
+impl std::error::Error for ShardDecodeError {}
+
+const SHARD_MAGIC: u32 = 0x4B56_5348; // "KVSH"
+const SHARD_VERSION: u16 = 1;
+
+fn shard_checksum(bytes: &[u8]) -> u64 {
+    // FNV-1a 64: cheap, order-sensitive, and plenty to catch the
+    // truncation/bit-rot class of faults (not a cryptographic MAC)
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+struct ShardCursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ShardCursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ShardDecodeError> {
+        if self.bytes.len() - self.pos < n {
+            return Err(ShardDecodeError("truncated"));
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16, ShardDecodeError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, ShardDecodeError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// A length field, bounds-checked against the bytes actually
+    /// remaining so corrupt counts cannot trigger huge allocations.
+    fn len_of(&mut self, elem_bytes: usize) -> Result<usize, ShardDecodeError> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(elem_bytes) > self.bytes.len() - self.pos {
+            return Err(ShardDecodeError("length field exceeds payload"));
+        }
+        Ok(n)
+    }
+}
+
+impl KvShard {
+    /// Tokens covered by the shard's blocks.
+    pub fn tokens_covered(&self) -> usize {
+        self.blocks.iter().map(|b| b.tokens.len()).sum()
+    }
+
+    /// Serialize: little-endian fields, trailing FNV-1a checksum.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend(SHARD_MAGIC.to_le_bytes());
+        out.extend(SHARD_VERSION.to_le_bytes());
+        out.extend((self.block_size as u32).to_le_bytes());
+        out.extend((self.executor.len() as u16).to_le_bytes());
+        out.extend(self.executor.as_bytes());
+        out.extend((self.blocks.len() as u32).to_le_bytes());
+        for b in &self.blocks {
+            out.extend((b.tokens.len() as u32).to_le_bytes());
+            for t in &b.tokens {
+                out.extend(t.to_le_bytes());
+            }
+            out.extend((b.k.len() as u32).to_le_bytes());
+            for f in &b.k {
+                out.extend(f.to_bits().to_le_bytes());
+            }
+            out.extend((b.v.len() as u32).to_le_bytes());
+            for f in &b.v {
+                out.extend(f.to_bits().to_le_bytes());
+            }
+        }
+        let sum = shard_checksum(&out);
+        out.extend(sum.to_le_bytes());
+        out
+    }
+
+    /// Decode and verify. Any structural damage — truncation, a flipped
+    /// bit, an oversized length field — returns an error; it never
+    /// panics and never yields a partially-decoded shard.
+    pub fn from_bytes(bytes: &[u8]) -> Result<KvShard, ShardDecodeError> {
+        if bytes.len() < 8 {
+            return Err(ShardDecodeError("truncated"));
+        }
+        let (payload, sum_bytes) = bytes.split_at(bytes.len() - 8);
+        let sum = u64::from_le_bytes(sum_bytes.try_into().unwrap());
+        if shard_checksum(payload) != sum {
+            return Err(ShardDecodeError("checksum mismatch"));
+        }
+        let mut c = ShardCursor { bytes: payload, pos: 0 };
+        if c.u32()? != SHARD_MAGIC {
+            return Err(ShardDecodeError("bad magic"));
+        }
+        if c.u16()? != SHARD_VERSION {
+            return Err(ShardDecodeError("unknown version"));
+        }
+        let block_size = c.u32()? as usize;
+        let exec_len = c.u16()? as usize;
+        let executor = std::str::from_utf8(c.take(exec_len)?)
+            .map_err(|_| ShardDecodeError("executor label not utf-8"))?
+            .to_string();
+        let n_blocks = c.len_of(12)?; // each block is >= 3 length fields
+        let mut blocks = Vec::with_capacity(n_blocks);
+        for _ in 0..n_blocks {
+            let nt = c.len_of(4)?;
+            let mut tokens = Vec::with_capacity(nt);
+            for _ in 0..nt {
+                tokens.push(i32::from_le_bytes(c.take(4)?.try_into().unwrap()));
+            }
+            let nk = c.len_of(4)?;
+            let mut k = Vec::with_capacity(nk);
+            for _ in 0..nk {
+                k.push(f32::from_bits(c.u32()?));
+            }
+            let nv = c.len_of(4)?;
+            let mut v = Vec::with_capacity(nv);
+            for _ in 0..nv {
+                v.push(f32::from_bits(c.u32()?));
+            }
+            blocks.push(KvShardBlock { tokens, k, v });
+        }
+        if c.pos != payload.len() {
+            return Err(ShardDecodeError("trailing bytes"));
+        }
+        Ok(KvShard { block_size, executor, blocks })
     }
 }
 
@@ -738,5 +1158,317 @@ mod tests {
         assert_eq!(h1, token_hash(PREFIX_HASH_SEED, &[1, 2, 3]));
         // chaining: same tokens under a different parent hash differ
         assert_ne!(token_hash(h1, &[7]), token_hash(h2, &[7]));
+    }
+
+    // --- KV migration: chain import / lookup ---
+
+    #[test]
+    fn import_chain_registers_and_later_allocation_attaches() {
+        let mut bm = BlockManager::new(8, 4).with_prefix_cache(true);
+        let pre: Vec<i32> = (0..8).collect();
+        let chain = [&pre[..4], &pre[4..8]];
+        let ids = bm.import_prefix_chain(&chain);
+        assert_eq!(ids.len(), 2, "both blocks registered");
+        assert_eq!(bm.cached_blocks(), 2, "imported blocks park on the LRU");
+        assert_eq!(bm.prefix_stats.imported_blocks, 2);
+        assert_eq!(bm.lookup_prefix_chain(&pre), ids);
+        bm.check_invariants();
+        // a same-prefix allocation attaches the imported blocks
+        let mut prompt = pre.clone();
+        prompt.push(99);
+        let cached = bm.allocate_with_prefix(1, &prompt).unwrap();
+        assert_eq!(cached, 8, "imported chain served the full prefix");
+        assert_eq!(&bm.table(1).unwrap()[..2], ids.as_slice());
+        bm.check_invariants();
+        bm.release(1);
+        bm.check_invariants();
+    }
+
+    #[test]
+    fn import_chain_is_idempotent_and_extends_existing_chains() {
+        let mut bm = BlockManager::new(8, 4).with_prefix_cache(true);
+        let pre: Vec<i32> = (0..12).collect();
+        let ids1 = bm.import_prefix_chain(&[&pre[..4]]);
+        assert_eq!(ids1.len(), 1);
+        // re-import with an extension: block 0 is reused, not duplicated
+        let ids2 = bm.import_prefix_chain(&[&pre[..4], &pre[4..8], &pre[8..12]]);
+        assert_eq!(ids2.len(), 3);
+        assert_eq!(ids2[0], ids1[0], "existing registration reused");
+        assert_eq!(bm.cached_blocks(), 3);
+        assert_eq!(bm.prefix_stats.imported_blocks, 3, "only new blocks counted");
+        bm.check_invariants();
+    }
+
+    #[test]
+    fn import_chain_rejects_partial_blocks_and_stops_on_conflict() {
+        let mut bm = BlockManager::new(8, 4).with_prefix_cache(true);
+        // partial (non-full) block: nothing registered
+        assert!(bm.import_prefix_chain(&[&[1, 2, 3]]).is_empty());
+        // conflicting tokens under an occupied slot: a locally computed
+        // chain exists; an import of a DIFFERENT chain whose first block
+        // matches but second differs stops after the verified prefix
+        let pre: Vec<i32> = (0..8).collect();
+        bm.allocate_with_prefix(1, &{
+            let mut p = pre.clone();
+            p.push(50);
+            p
+        })
+        .unwrap();
+        let other: Vec<i32> = vec![0, 1, 2, 3, 9, 9, 9, 9];
+        let ids = bm.import_prefix_chain(&[&other[..4], &other[4..8]]);
+        assert_eq!(ids.len(), 2, "first reused, divergent second freshly registered");
+        assert_ne!(
+            ids[1],
+            bm.table(1).unwrap()[1],
+            "divergent block must not alias the resident chain"
+        );
+        bm.check_invariants();
+        bm.release(1);
+        bm.check_invariants();
+    }
+
+    #[test]
+    fn import_chain_never_evicts_residents() {
+        // pool: 2 blocks, both held live — an import finds no free block
+        // and registers nothing (it must not reclaim cached or live KV)
+        let mut bm = BlockManager::new(2, 4).with_prefix_cache(true);
+        bm.allocate_with_prefix(1, &(0..8).collect::<Vec<i32>>()).unwrap();
+        let imported = bm.import_prefix_chain(&[&[90, 91, 92, 93]]);
+        assert!(imported.is_empty(), "no free blocks: import must fall short");
+        assert_eq!(bm.prefix_stats.evictions, 0);
+        bm.check_invariants();
+        bm.release(1);
+        bm.check_invariants();
+    }
+
+    // --- ByteLru: byte-budget enforcement against a model oracle ---
+
+    #[test]
+    fn byte_lru_basic_budget_and_recency() {
+        let mut lru: ByteLru<u64, ()> = ByteLru::new(100);
+        assert!(lru.insert(1, (), 40).is_empty());
+        assert!(lru.insert(2, (), 40).is_empty());
+        // touch 1 so 2 becomes the eviction victim
+        assert!(lru.get(&1).is_some());
+        let evicted = lru.insert(3, (), 40);
+        assert_eq!(evicted, vec![2], "least-recently-used spills first");
+        assert_eq!(lru.bytes(), 80);
+        assert_eq!(lru.spilled_entries, 1);
+        assert_eq!(lru.spilled_bytes, 40);
+        // an entry bigger than the whole budget is refused outright
+        assert!(lru.insert(4, (), 101).is_empty());
+        assert!(!lru.contains(&4));
+        assert_eq!(lru.spilled_entries, 2);
+        // ... and a refused REPLACEMENT keeps the resident entry: a
+        // still-valid older value beats holding nothing
+        assert!(lru.insert(1, (), 101).is_empty());
+        assert!(lru.contains(&1), "oversize replacement must not destroy the old entry");
+        assert_eq!(lru.bytes(), 80);
+        // replacement updates the byte accounting
+        assert!(lru.insert(1, (), 10).is_empty());
+        assert_eq!(lru.bytes(), 50);
+        lru.check_invariants();
+    }
+
+    #[test]
+    fn prop_byte_lru_matches_model_oracle() {
+        // randomized insert/get/remove traffic vs a straight-line model:
+        // identical membership, byte totals, spill counters, and victims
+        prop::for_all("byte-lru vs oracle", |rng: &mut XorShift, _| {
+            let cap = [0usize, 64, 256, 1024][rng.below(4)];
+            let mut lru: ByteLru<u64, u32> = ByteLru::new(cap);
+            // oracle: (key, value, cost) in recency order + counters
+            let mut model: Vec<(u64, u32, usize)> = Vec::new();
+            let (mut spills, mut spill_bytes) = (0u64, 0u64);
+            for step in 0..200 {
+                let k = rng.below(16) as u64;
+                match rng.below(4) {
+                    0 | 1 => {
+                        let cost = 1 + rng.below(200);
+                        let val = step as u32;
+                        let evicted = lru.insert(k, val, cost);
+                        let mut expect_evicted = Vec::new();
+                        if cap > 0 && cost > cap {
+                            // refused outright; an existing entry for k
+                            // must survive untouched
+                            spills += 1;
+                            spill_bytes += cost as u64;
+                        } else {
+                            model.retain(|(mk, _, _)| *mk != k);
+                            model.push((k, val, cost));
+                            while cap > 0
+                                && model.iter().map(|(_, _, c)| c).sum::<usize>() > cap
+                            {
+                                let (vk, _, vc) = model.remove(0);
+                                spills += 1;
+                                spill_bytes += vc as u64;
+                                expect_evicted.push(vk);
+                            }
+                        }
+                        assert_eq!(evicted, expect_evicted, "eviction order/victims");
+                    }
+                    2 => {
+                        let got = lru.get(&k).copied();
+                        let want = model.iter().find(|(mk, _, _)| *mk == k).map(|(_, v, _)| *v);
+                        assert_eq!(got, want);
+                        if let Some(idx) = model.iter().position(|(mk, _, _)| *mk == k) {
+                            let e = model.remove(idx);
+                            model.push(e); // oracle recency touch
+                        }
+                    }
+                    _ => {
+                        let got = lru.remove(&k).is_some();
+                        let had = model.iter().any(|(mk, _, _)| *mk == k);
+                        assert_eq!(got, had);
+                        model.retain(|(mk, _, _)| *mk != k);
+                    }
+                }
+                lru.check_invariants();
+                assert_eq!(lru.len(), model.len());
+                assert_eq!(lru.bytes(), model.iter().map(|(_, _, c)| c).sum::<usize>());
+                assert_eq!(lru.spilled_entries, spills);
+                assert_eq!(lru.spilled_bytes, spill_bytes);
+                for (mk, mv, _) in &model {
+                    assert_eq!(lru.peek(mk), Some(mv), "membership diverged");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_migration_traffic_keeps_invariants_and_budget() {
+        // interleaved allocate/release/append/import/save/evict traffic:
+        // allocator invariants hold, the saved-KV budget is never
+        // exceeded, and eviction/spill counters stay consistent with
+        // what actually happened
+        prop::for_all("migration traffic invariants", |rng: &mut XorShift, _| {
+            let cap = [0usize, 128][rng.below(2)];
+            let mut bm = BlockManager::new(24, 4).with_prefix_cache(true);
+            let mut saved: ByteLru<BlockId, u8> = ByteLru::new(cap);
+            const SAVE_COST: usize = 32;
+            let prefixes: Vec<Vec<i32>> = (0..3)
+                .map(|g| (0..12).map(|i| (g * 100 + i) as i32).collect())
+                .collect();
+            let mut live: Vec<SeqId> = Vec::new();
+            let mut next_id = 0u64;
+            let mut drained_evictions = 0u64;
+            for _ in 0..120 {
+                match rng.below(6) {
+                    0 | 1 => {
+                        let pre = &prefixes[rng.below(prefixes.len())];
+                        let cut = rng.below(pre.len() + 1);
+                        let mut toks = pre[..cut].to_vec();
+                        for _ in 0..1 + rng.below(5) {
+                            toks.push(rng.below(1000) as i32);
+                        }
+                        if let Ok(_cached) = bm.allocate_with_prefix(next_id, &toks) {
+                            live.push(next_id);
+                            next_id += 1;
+                        }
+                    }
+                    2 => {
+                        // import a random full-block chain
+                        let pre = &prefixes[rng.below(prefixes.len())];
+                        let nblocks = 1 + rng.below(pre.len() / 4);
+                        let chain: Vec<&[i32]> =
+                            (0..nblocks).map(|i| &pre[i * 4..(i + 1) * 4]).collect();
+                        for b in bm.import_prefix_chain(&chain) {
+                            if !saved.contains(&b) {
+                                saved.insert(b, 0, SAVE_COST);
+                            }
+                        }
+                    }
+                    3 => {
+                        // harvest: save KV for a live sequence's blocks
+                        if let Some(&s) = live.first() {
+                            for (_, b) in bm.registered_blocks(s) {
+                                if !saved.contains(&b) {
+                                    saved.insert(b, 0, SAVE_COST);
+                                }
+                            }
+                        }
+                    }
+                    4 => {
+                        if !live.is_empty() {
+                            let s = live[rng.below(live.len())];
+                            let _ = bm.append_token(s);
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let s = live.swap_remove(rng.below(live.len()));
+                            bm.release(s);
+                        }
+                    }
+                }
+                // allocator evictions invalidate saved KV (the engine's
+                // run_prefill GC) — counters must line up exactly
+                for b in bm.drain_evictions() {
+                    drained_evictions += 1;
+                    saved.remove(&b);
+                }
+                assert_eq!(
+                    bm.prefix_stats.evictions, drained_evictions,
+                    "every eviction is surfaced exactly once"
+                );
+                bm.check_invariants();
+                saved.check_invariants();
+                if cap > 0 {
+                    assert!(saved.bytes() <= cap, "saved-KV budget exceeded");
+                }
+            }
+            for s in live {
+                bm.release(s);
+            }
+            bm.check_invariants();
+            assert_eq!(bm.free_blocks(), 24, "all blocks reclaimable at the end");
+        });
+    }
+
+    // --- KvShard wire format ---
+
+    fn demo_shard() -> KvShard {
+        KvShard {
+            block_size: 4,
+            executor: "stc-native".into(),
+            blocks: (0..2)
+                .map(|b| KvShardBlock {
+                    tokens: (b * 4..b * 4 + 4).collect(),
+                    k: (0..8).map(|i| (b * 8 + i) as f32 * 0.5).collect(),
+                    v: (0..8).map(|i| -((b * 8 + i) as f32)).collect(),
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn shard_roundtrips_through_bytes() {
+        let s = demo_shard();
+        assert_eq!(s.tokens_covered(), 8);
+        let bytes = s.to_bytes();
+        let back = KvShard::from_bytes(&bytes).unwrap();
+        assert_eq!(back, s, "decode(encode(shard)) is identity");
+    }
+
+    #[test]
+    fn shard_decode_survives_any_truncation_or_bitflip() {
+        let bytes = demo_shard().to_bytes();
+        // every proper prefix must fail cleanly (no panic, no partial shard)
+        for cut in 0..bytes.len() {
+            assert!(
+                KvShard::from_bytes(&bytes[..cut]).is_err(),
+                "truncation at {cut} must be detected"
+            );
+        }
+        // any single flipped bit trips the checksum
+        for pos in [0usize, 7, bytes.len() / 2, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x40;
+            assert!(KvShard::from_bytes(&bad).is_err(), "bit flip at {pos}");
+        }
+        // appended garbage is also rejected
+        let mut extended = bytes.clone();
+        extended.push(0);
+        assert!(KvShard::from_bytes(&extended).is_err());
     }
 }

@@ -25,6 +25,21 @@ pub struct EngineMetrics {
     pub prefix_evictions: u64,
     /// prompt tokens served from the prefix cache instead of computed
     pub prefix_cached_tokens: u64,
+    /// migration shards published after finished sequences (migrate_kv)
+    pub kv_exported_shards: u64,
+    /// cache blocks those shards carried
+    pub kv_exported_blocks: u64,
+    /// migrated blocks imported with verified tokens AND resident KV
+    pub kv_imported_blocks: u64,
+    /// shard imports rejected (corrupt, truncated, or mismatched —
+    /// every reject downgrades to recompute, never a wrong answer)
+    pub kv_import_rejects: u64,
+    /// saved-KV blocks spilled to honor `prefix_cache_bytes`
+    pub kv_spilled_blocks: u64,
+    /// bytes those spilled blocks held
+    pub kv_spilled_bytes: u64,
+    /// resident saved-KV bytes right now (gauge, not a counter)
+    pub kv_resident_bytes: u64,
     pub ttft: Summary,
     pub latency: Summary,
     pub prefill_step_time: Summary,
@@ -82,6 +97,7 @@ impl EngineMetrics {
         format!(
             "requests={}/{} tokens={}p+{}g steps={}p+{}d preempt={} \
              prefix={}h/{}m ({} tok cached, {} evict) \
+             kv={}exp/{}imp/{}rej ({} spill, {} B resident) \
              ttft_p50={:.1}ms lat_p50={:.1}ms gen_tput={:.0} tok/s total_tput={:.0} tok/s",
             self.requests_finished,
             self.requests_submitted,
@@ -94,12 +110,50 @@ impl EngineMetrics {
             self.prefix_misses,
             self.prefix_cached_tokens,
             self.prefix_evictions,
+            self.kv_exported_shards,
+            self.kv_imported_blocks,
+            self.kv_import_rejects,
+            self.kv_spilled_blocks,
+            self.kv_resident_bytes,
             self.ttft.p50() * 1e3,
             self.latency.p50() * 1e3,
             self.decode_throughput(),
             self.total_throughput(),
         )
     }
+
+    /// Copyable KV-flow snapshot: what the router's per-worker stats
+    /// channel ships so migration tests (and operators) can assert
+    /// zero-replay and budget behavior across worker threads.
+    pub fn kv_flow(&self) -> KvFlowStats {
+        KvFlowStats {
+            requests_finished: self.requests_finished,
+            prefilled_tokens: self.prefilled_tokens,
+            prefix_cached_tokens: self.prefix_cached_tokens,
+            kv_exported_shards: self.kv_exported_shards,
+            kv_imported_blocks: self.kv_imported_blocks,
+            kv_import_rejects: self.kv_import_rejects,
+            kv_spilled_blocks: self.kv_spilled_blocks,
+            kv_resident_bytes: self.kv_resident_bytes,
+        }
+    }
+}
+
+/// Snapshot of one engine's KV-flow counters (see
+/// [`EngineMetrics::kv_flow`]); `Router::kv_stats` collects one per
+/// live worker.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KvFlowStats {
+    pub requests_finished: u64,
+    /// prompt tokens actually computed by prefill (replays included)
+    pub prefilled_tokens: u64,
+    /// prompt tokens served from cached/migrated KV instead
+    pub prefix_cached_tokens: u64,
+    pub kv_exported_shards: u64,
+    pub kv_imported_blocks: u64,
+    pub kv_import_rejects: u64,
+    pub kv_spilled_blocks: u64,
+    pub kv_resident_bytes: u64,
 }
 
 #[cfg(test)]
@@ -114,6 +168,23 @@ mod tests {
         m.prefix_misses = 1;
         assert!((m.prefix_hit_rate() - 0.75).abs() < 1e-12);
         assert!(m.report().contains("prefix=3h/1m"));
+    }
+
+    #[test]
+    fn kv_flow_snapshot_mirrors_counters() {
+        let mut m = EngineMetrics::new();
+        m.prefilled_tokens = 12;
+        m.prefix_cached_tokens = 32;
+        m.kv_exported_shards = 2;
+        m.kv_imported_blocks = 4;
+        m.kv_import_rejects = 1;
+        m.kv_spilled_blocks = 3;
+        m.kv_resident_bytes = 256;
+        let s = m.kv_flow();
+        assert_eq!(s.prefilled_tokens, 12);
+        assert_eq!(s.kv_imported_blocks, 4);
+        assert_eq!(s.kv_import_rejects, 1);
+        assert!(m.report().contains("kv=2exp/4imp/1rej (3 spill, 256 B resident)"));
     }
 
     #[test]

@@ -35,6 +35,22 @@
 //! requests to the same worker so those caches see repeat traffic.
 //! Outputs are bit-exact with the cache off — also gated by
 //! `rust/tests/conformance.rs`.
+//!
+//! ## KV migration (docs/ARCHITECTURE.md §"KV migration")
+//!
+//! `EngineConfig::migrate_kv` adds cross-worker handoff on top of the
+//! cache: engines export finished prefixes as checksummed
+//! [`kvcache::KvShard`]s, the router buffers the newest shard per
+//! affinity hash, and a re-pin (worker death or imbalance) ships the
+//! shard to the new worker ahead of the request — so the prefix serves
+//! warm instead of replaying a cold prefill. Imports re-verify every
+//! block's tokens and chain links before registering, so a corrupt or
+//! mismatched shard downgrades to recompute, never aliases.
+//! `EngineConfig::prefix_cache_bytes` byte-bounds the saved-KV map and
+//! the router's shard buffer (LRU spill, surfaced in `PrefixStats` and
+//! `EngineMetrics`). Gated by `rust/tests/migration.rs` (fault
+//! injection) and the migration-equivalence sweep in
+//! `rust/tests/conformance.rs`.
 
 pub mod batcher;
 pub mod engine;
@@ -50,7 +66,8 @@ pub mod sequence;
 
 pub use engine::{Engine, EngineConfig};
 pub use executor::{Executor, MockExecutor, StcExecutor};
-pub use kvcache::BlockManager;
+pub use kvcache::{BlockManager, ByteLru, KvShard, KvShardBlock};
+pub use metrics::KvFlowStats;
 #[cfg(feature = "pjrt")]
 pub use pjrt_exec::PjrtExecutor;
 pub use request::{FinishReason, Request, RequestOutput, SamplingParams};

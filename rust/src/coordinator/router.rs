@@ -9,6 +9,20 @@
 //! multi-worker traffic. The sticky choice falls back to least-loaded
 //! when the pinned worker has died or has fallen
 //! [`STICKY_MAX_IMBALANCE`] requests behind the least-loaded worker.
+//!
+//! ## KV migration
+//!
+//! With `EngineConfig::migrate_kv` on, workers publish a
+//! [`KvShard`](super::kvcache::KvShard) (serialized, checksummed) for
+//! each finishing prefix; the router
+//! parks the newest shard per affinity hash in a byte-budgeted buffer
+//! (`prefix_cache_bytes`). When the affinity policy RE-PINS a prefix —
+//! its worker died or fell too far behind — the router ships the
+//! buffered shard to the new worker ahead of the request, so the re-pin
+//! is a warm handoff instead of a cold prefill replay. A worker that
+//! dies with a shard in flight just loses the handoff: the request is
+//! re-routed by the normal fallback and recomputes — correctness never
+//! depends on a migration landing.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -22,7 +36,8 @@ use anyhow::{anyhow, Result};
 
 use super::engine::{Engine, EngineConfig};
 use super::executor::Executor;
-use super::kvcache::{token_hash, PREFIX_HASH_SEED};
+use super::kvcache::{token_hash, ByteLru, PREFIX_HASH_SEED};
+use super::metrics::KvFlowStats;
 use super::request::{Request, RequestOutput};
 
 /// Default prompt-prefix length (tokens) hashed by `Policy::PrefixAffinity`.
@@ -104,6 +119,11 @@ fn choose_affinity(
 
 enum Msg {
     Req(Request),
+    /// serialized `KvShard` for the worker's engine to import before
+    /// the requests that follow it on the channel (warm handoff)
+    ImportKv(Vec<u8>),
+    /// snapshot the worker engine's KV-flow counters
+    Stats(Sender<KvFlowStats>),
     Flush,
     Shutdown,
 }
@@ -125,6 +145,15 @@ pub struct Router {
     sticky: HashMap<u64, usize>,
     /// requests dispatched per worker over the router's lifetime
     dispatched: Vec<usize>,
+    /// ship buffered shards to re-pinned workers (EngineConfig::migrate_kv)
+    migrate: bool,
+    /// shards the workers publish for finished prefixes
+    shard_rx: Receiver<(Vec<i32>, Vec<u8>)>,
+    /// newest serialized shard per affinity hash, byte-budgeted by
+    /// `EngineConfig::prefix_cache_bytes` (the "migration buffer")
+    shards: ByteLru<u64, Vec<u8>>,
+    /// warm handoffs shipped (ImportKv messages accepted by a worker)
+    migrations: u64,
 }
 
 impl Router {
@@ -136,6 +165,7 @@ impl Router {
         F: Fn(usize) -> E + Send + Sync + 'static,
     {
         let (out_tx, out_rx) = channel::<RequestOutput>();
+        let (shard_tx, shard_rx) = channel::<(Vec<i32>, Vec<u8>)>();
         let factory = Arc::new(factory);
         let mut workers = Vec::with_capacity(n);
         for wid in 0..n {
@@ -143,6 +173,7 @@ impl Router {
             let inflight = Arc::new(AtomicUsize::new(0));
             let inflight2 = inflight.clone();
             let out_tx = out_tx.clone();
+            let shard_tx = shard_tx.clone();
             let factory = factory.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("worker-{wid}"))
@@ -165,10 +196,26 @@ impl Router {
                         };
                         match msg {
                             Some(Msg::Req(r)) => engine.submit(r),
+                            Some(Msg::ImportKv(bytes)) => {
+                                // corrupt/mismatched shards import 0
+                                // blocks and the prefill recomputes —
+                                // a failed handoff is never fatal
+                                let _ = engine.import_kv_shard_bytes(&bytes);
+                            }
+                            Some(Msg::Stats(reply)) => {
+                                let _ = reply.send(engine.metrics.kv_flow());
+                            }
                             Some(Msg::Flush) | None => {
                                 let _ = engine.step();
                             }
                             Some(Msg::Shutdown) => break,
+                        }
+                        // publish migration shards BEFORE outputs: by the
+                        // time the router observes a finished request,
+                        // its shard is already queued, so a re-pin right
+                        // after a drain can always find it
+                        for (prompt, shard) in engine.take_kv_exports() {
+                            let _ = shard_tx.send((prompt, shard.to_bytes()));
                         }
                         // drain finished requests EVERY iteration (not
                         // only after full engine steps), so the inflight
@@ -192,6 +239,10 @@ impl Router {
             submitted: 0,
             sticky: HashMap::new(),
             dispatched: vec![0; n],
+            migrate: cfg.migrate_kv,
+            shard_rx,
+            shards: ByteLru::new(cfg.prefix_cache_bytes),
+            migrations: 0,
         }
     }
 
@@ -207,7 +258,11 @@ impl Router {
         choose_affinity(None, &self.loads(), |w| self.worker_alive(w))
     }
 
-    fn pick_worker(&mut self, req: &Request) -> usize {
+    /// Choose a worker; for an affinity RE-PIN (new pin, dead pin, or
+    /// imbalance fallback) with migration on, also return the buffered
+    /// shard to ship ahead of the request so the new worker serves the
+    /// prefix warm.
+    fn pick_worker(&mut self, req: &Request) -> (usize, Option<Vec<u8>>) {
         match self.policy {
             Policy::RoundRobin => {
                 // skip workers whose thread has died (executor panic);
@@ -217,24 +272,48 @@ impl Router {
                     let w = self.rr_next % self.workers.len();
                     self.rr_next += 1;
                     if self.worker_alive(w) {
-                        return w;
+                        return (w, None);
                     }
                 }
-                self.rr_next % self.workers.len()
+                (self.rr_next % self.workers.len(), None)
             }
-            Policy::LeastLoaded => self.least_loaded(),
+            Policy::LeastLoaded => (self.least_loaded(), None),
             Policy::PrefixAffinity { prefix_tokens } => {
                 let h = Self::affinity_hash(&req.prompt, prefix_tokens);
                 let loads = self.loads();
-                let chosen = choose_affinity(self.sticky.get(&h).copied(), &loads, |w| {
-                    self.worker_alive(w)
-                });
-                if !self.sticky.contains_key(&h) && self.sticky.len() >= STICKY_CAPACITY {
+                let prev = self.sticky.get(&h).copied();
+                let chosen = choose_affinity(prev, &loads, |w| self.worker_alive(w));
+                if prev.is_none() && self.sticky.len() >= STICKY_CAPACITY {
                     self.sticky.clear();
                 }
                 self.sticky.insert(h, chosen);
-                chosen
+                // a handoff is only worth shipping when the pin moved:
+                // the previously pinned worker already holds the KV
+                let handoff = if self.migrate && prev != Some(chosen) {
+                    self.shards.get(&h).cloned()
+                } else {
+                    None
+                };
+                (chosen, handoff)
             }
+        }
+    }
+
+    /// Absorb worker-published shards into the byte-budgeted buffer
+    /// (newest shard per affinity hash wins).
+    fn pump_shards(&mut self) {
+        while let Ok((prompt, bytes)) = self.shard_rx.try_recv() {
+            let Policy::PrefixAffinity { prefix_tokens } = self.policy else {
+                // without affinity routing there is no stable prefix ->
+                // worker keying to hand shards back out under
+                continue;
+            };
+            if !self.migrate {
+                continue;
+            }
+            let h = Self::affinity_hash(&prompt, prefix_tokens);
+            let cost = bytes.len();
+            self.shards.insert(h, bytes, cost);
         }
     }
 
@@ -257,9 +336,19 @@ impl Router {
     /// is gone with the thread) are routed around; panics only when no
     /// worker can accept work at all.
     pub fn submit(&mut self, request: Request) {
+        self.pump_shards();
         let mut req = request;
         for _ in 0..self.workers.len() {
-            let w = self.pick_worker(&req);
+            let (w, handoff) = self.pick_worker(&req);
+            if let Some(bytes) = handoff {
+                // warm handoff ahead of the request (same FIFO channel,
+                // so the import lands before admission). A send into a
+                // just-died worker fails here AND on the Req below —
+                // the retry loop then falls back with a cold replay.
+                if self.workers[w].tx.send(Msg::ImportKv(bytes)).is_ok() {
+                    self.migrations += 1;
+                }
+            }
             // increment BEFORE send so the worker cannot decrement first
             self.workers[w].inflight.fetch_add(1, Ordering::SeqCst);
             match self.workers[w].tx.send(Msg::Req(req)) {
@@ -273,6 +362,14 @@ impl Router {
                     // worker died between liveness check and send
                     self.workers[w].inflight.fetch_sub(1, Ordering::SeqCst);
                     let Msg::Req(r) = m else { unreachable!() };
+                    // drop the dead pin so the retry (and later
+                    // repeats) re-evaluate cleanly
+                    if let Policy::PrefixAffinity { prefix_tokens } = self.policy {
+                        let h = Self::affinity_hash(&r.prompt, prefix_tokens);
+                        if self.sticky.get(&h) == Some(&w) {
+                            self.sticky.remove(&h);
+                        }
+                    }
                     req = r;
                 }
             }
@@ -293,6 +390,34 @@ impl Router {
         &self.dispatched
     }
 
+    /// Warm handoffs shipped so far (ImportKv messages a worker accepted).
+    pub fn kv_migrations(&self) -> u64 {
+        self.migrations
+    }
+
+    /// Migration shard buffer occupancy: `(shards, bytes)`. Bounded by
+    /// `EngineConfig::prefix_cache_bytes` (0 = unbounded).
+    pub fn shard_buffer(&self) -> (usize, usize) {
+        (self.shards.len(), self.shards.bytes())
+    }
+
+    /// Per-worker KV-flow snapshots (`None` for dead workers): a
+    /// request/reply round-trip through each worker's message channel,
+    /// so the counters reflect the engine state at reply time.
+    pub fn kv_stats(&self) -> Vec<Option<KvFlowStats>> {
+        use std::time::Duration;
+        self.workers
+            .iter()
+            .map(|w| {
+                let (tx, rx) = channel();
+                if w.tx.send(Msg::Stats(tx)).is_err() {
+                    return None;
+                }
+                rx.recv_timeout(Duration::from_secs(10)).ok()
+            })
+            .collect()
+    }
+
     /// Wait for all submitted requests to complete. A worker whose
     /// engine loop died (an executor panic unwinds the worker thread)
     /// can never deliver its inflight requests, so instead of blocking
@@ -308,6 +433,7 @@ impl Router {
         let mut outs = Vec::with_capacity(self.submitted);
         let mut lost = 0usize;
         while outs.len() + lost < self.submitted {
+            self.pump_shards();
             match self.out_rx.recv_timeout(Duration::from_millis(20)) {
                 Ok(o) => outs.push(o),
                 Err(RecvTimeoutError::Timeout) => {
@@ -321,6 +447,7 @@ impl Router {
                 }
             }
         }
+        self.pump_shards();
         self.submitted = 0;
         if lost > 0 {
             // the lost counts belong to this (now failed) batch; zero
@@ -589,6 +716,72 @@ mod tests {
         fn label(&self) -> String {
             "flaky".into()
         }
+    }
+
+    #[test]
+    fn kv_stats_snapshots_live_workers() {
+        let mut r = Router::spawn(
+            2,
+            EngineConfig::default(),
+            Policy::RoundRobin,
+            |_| MockExecutor::new(10_000, 64),
+        );
+        for i in 0..6 {
+            r.submit(req(i, i as i32 * 10));
+        }
+        r.drain().unwrap();
+        let stats = r.kv_stats();
+        assert_eq!(stats.len(), 2);
+        let finished: u64 = stats.iter().map(|s| s.expect("alive").requests_finished).sum();
+        assert_eq!(finished, 6);
+    }
+
+    #[test]
+    fn migration_requires_affinity_policy() {
+        // migrate_kv + round-robin: workers publish shards, but with no
+        // stable prefix->worker keying the router drops them — traffic
+        // still completes and no handoffs are counted
+        let cfg = EngineConfig {
+            prefix_cache: true,
+            migrate_kv: true,
+            kv_block_size: 4,
+            ..Default::default()
+        };
+        let mut r = Router::spawn(2, cfg, Policy::RoundRobin, |_| {
+            MockExecutor::new(10_000, 64)
+        });
+        for i in 0..6 {
+            r.submit(req_prompt(i, vec![1, 2, 3, 4, 50 + i as i32]));
+        }
+        assert_eq!(r.drain().unwrap().len(), 6);
+        assert_eq!(r.kv_migrations(), 0);
+        assert_eq!(r.shard_buffer(), (0, 0));
+    }
+
+    #[test]
+    fn affinity_publishes_shards_into_bounded_buffer() {
+        let cfg = EngineConfig {
+            prefix_cache: true,
+            migrate_kv: true,
+            kv_block_size: 4,
+            ..Default::default()
+        };
+        let mut r = Router::spawn(
+            2,
+            cfg,
+            Policy::PrefixAffinity { prefix_tokens: 4 },
+            |_| MockExecutor::new(10_000, 64),
+        );
+        for g in 0..3 {
+            let base = g * 100;
+            r.submit(req_prompt(g as u64, vec![base, base + 1, base + 2, base + 3, 7]));
+        }
+        assert_eq!(r.drain().unwrap().len(), 3);
+        let (shards, bytes) = r.shard_buffer();
+        assert_eq!(shards, 3, "one shard per distinct prefix");
+        assert!(bytes > 0);
+        // no pin moved, so nothing was handed off
+        assert_eq!(r.kv_migrations(), 0);
     }
 
     #[test]

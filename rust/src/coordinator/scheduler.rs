@@ -272,6 +272,28 @@ mod tests {
     }
 
     #[test]
+    fn admission_attaches_imported_chain() {
+        // KV migration lands as LRU-parked registrations in the block
+        // manager; the scheduler's normal prefix-aware admission must
+        // pick them up with no migration-specific code of its own
+        let mut s = Scheduler::new(
+            SchedulerConfig { max_batch: 4, prefill_token_budget: 256, watermark: 1.0 },
+            BlockManager::new(16, 4).with_prefix_cache(true),
+        );
+        let pre: Vec<i32> = (200..208).collect();
+        let imported = s.blocks.import_prefix_chain(&[&pre[..4], &pre[4..8]]);
+        assert_eq!(imported.len(), 2);
+        let mut prompt = pre.clone();
+        prompt.push(7);
+        s.add_waiting(1, prompt);
+        assert_eq!(s.schedule().prefill, vec![1]);
+        assert_eq!(s.blocks.cached_prefix_len(1), 8, "migrated blocks attached");
+        assert_eq!(&s.blocks.table(1).unwrap()[..2], imported.as_slice());
+        s.finish(1);
+        s.blocks.check_invariants();
+    }
+
+    #[test]
     fn prop_scheduler_conservation() {
         // sequences never vanish: waiting + running + finished == submitted
         prop::for_all("scheduler conservation", |rng: &mut XorShift, _| {

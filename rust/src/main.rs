@@ -5,7 +5,7 @@
 //! slidesparse serve   [--config cfg.json] [--requests N] [--threads T]
 //!                     [--kernel auto|scalar|blocked|avx2]
 //!                     [--workers W] [--routing round_robin|least_loaded|prefix[:K]]
-//!                     [--prefix-cache]
+//!                     [--prefix-cache] [--prefix-cache-bytes B] [--migrate-kv]
 //! slidesparse bench   [--suite kernel|e2e|figures|all]
 //! slidesparse explore [--pattern Z:L] [--hw M:N]
 //! slidesparse pack    --o O --k K [--n N] [--threads T]  # packer demo + stats
@@ -56,6 +56,13 @@ fn serve(args: &Args) -> Result<()> {
     if args.flag("prefix-cache") {
         cfg.engine.prefix_cache = true;
     }
+    cfg.engine.prefix_cache_bytes =
+        args.opt_usize("prefix-cache-bytes", cfg.engine.prefix_cache_bytes);
+    if args.flag("migrate-kv") {
+        // migration rides the content-addressed cache; the flag implies it
+        cfg.engine.migrate_kv = true;
+        cfg.engine.prefix_cache = true;
+    }
     if let Some(r) = args.opt("routing") {
         cfg.routing = r.parse().map_err(|e: String| anyhow!(e))?;
     }
@@ -64,14 +71,16 @@ fn serve(args: &Args) -> Result<()> {
     let n_requests = args.opt_usize("requests", 16);
     println!(
         "serving with sparsity={} executor={} workers={} routing={} threads={} kernel={} \
-         prefix_cache={}",
+         prefix_cache={} prefix_cache_bytes={} migrate_kv={}",
         cfg.sparsity,
         cfg.executor,
         cfg.workers,
         cfg.routing,
         cfg.engine.threads,
         cfg.engine.kernel,
-        cfg.engine.prefix_cache
+        cfg.engine.prefix_cache,
+        cfg.engine.prefix_cache_bytes,
+        cfg.engine.migrate_kv
     );
 
     let (outs, report) = if cfg.executor == "pjrt" {
@@ -168,11 +177,16 @@ fn serve_router(
         ));
     }
     let outs = router.drain()?;
+    let (shards, shard_bytes) = router.shard_buffer();
     let report = format!(
-        "router: policy={} workers={} dispatched={:?}",
+        "router: policy={} workers={} dispatched={:?} kv_migrations={} \
+         shard_buffer={}x/{}B",
         cfg.routing,
         cfg.workers,
-        router.dispatch_counts()
+        router.dispatch_counts(),
+        router.kv_migrations(),
+        shards,
+        shard_bytes
     );
     Ok((outs, report))
 }

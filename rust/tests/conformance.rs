@@ -359,6 +359,99 @@ fn prefix_cache_generations_bit_exact_across_backends_and_threads() {
     }
 }
 
+// ---------------------------------------------------------------------
+// (f) KV migration: migrated generations == non-migrated (bit-exact)
+//     across kernel backends x 1/2/4/8 threads x prefix-cache on/off
+// ---------------------------------------------------------------------
+
+#[test]
+fn migrated_generations_bit_exact_across_backends_threads_and_cache() {
+    // Engine A serves a request, exports its prefix KV as a wire shard;
+    // a cold engine B (same model) imports the shard and serves a
+    // second same-prefix request. B's generation must be byte-identical
+    // to the uninterrupted single-engine run — the dense-int8-anchored
+    // backends all route through the same engine math, so any KV the
+    // migration injects wrongly would break exact equality. With the
+    // prefix cache ON the import must also eliminate the covered
+    // prefill work entirely; with it OFF migration must be inert (B
+    // recomputes) and STILL bit-exact.
+    let prefix: Vec<i32> = (0..16).map(|t| (t * 7 + 3) % 128).collect();
+    let p1 = {
+        let mut p = prefix.clone();
+        p.extend([9, 17, 25]);
+        p
+    };
+    let p2 = {
+        let mut p = prefix.clone();
+        p.extend([40, 41, 42]);
+        p
+    };
+    let params = SamplingParams { max_new_tokens: 6, ..Default::default() };
+    for backend in [Backend::Dense, Backend::Slide { n: 4 }, Backend::Native24] {
+        let model = || {
+            NativeModel::generate(
+                BlockConfig { dim: 48, n_heads: 2, ffn: 64 },
+                2,
+                128,
+                96,
+                23,
+                backend,
+            )
+        };
+        for threads in [1usize, 2, 4, 8] {
+            // uninterrupted baseline: one engine, no cache, no migration
+            let base_cfg = EngineConfig { threads, kv_block_size: 8, ..Default::default() };
+            let mut base = Engine::new(StcExecutor::new(model()), base_cfg);
+            base.submit(Request::new(1, p1.clone(), params));
+            let b1 = base.run_to_completion().unwrap()[0].tokens.clone();
+            base.submit(Request::new(2, p2.clone(), params));
+            let b2 = base.run_to_completion().unwrap()[0].tokens.clone();
+
+            for prefix_cache in [false, true] {
+                let cfg = EngineConfig {
+                    threads,
+                    kv_block_size: 8,
+                    prefix_cache,
+                    migrate_kv: true,
+                    ..Default::default()
+                };
+                let mut a = Engine::new(StcExecutor::new(model()), cfg);
+                a.submit(Request::new(1, p1.clone(), params));
+                let a1 = a.run_to_completion().unwrap()[0].tokens.clone();
+                assert_eq!(a1, b1, "{backend:?} t={threads} cache={prefix_cache}: req1");
+                let exports = a.take_kv_exports();
+
+                let mut b = Engine::new(StcExecutor::new(model()), cfg);
+                let mut backed = 0;
+                for (_, shard) in &exports {
+                    backed += b.import_kv_shard_bytes(&shard.to_bytes());
+                }
+                b.submit(Request::new(2, p2.clone(), params));
+                let m2 = b.run_to_completion().unwrap()[0].tokens.clone();
+                assert_eq!(
+                    m2, b2,
+                    "{backend:?} t={threads} cache={prefix_cache}: migrated \
+                     generation must be bit-exact with the non-migrated run"
+                );
+                if prefix_cache {
+                    assert_eq!(backed, 2, "two full 8-token blocks migrated");
+                    assert_eq!(
+                        b.metrics.prefilled_tokens,
+                        (p2.len() - 16) as u64,
+                        "{backend:?} t={threads}: zero replayed prefill \
+                         tokens for migrated blocks"
+                    );
+                    assert_eq!(b.metrics.prefix_cached_tokens, 16);
+                } else {
+                    assert!(exports.is_empty(), "no cache: nothing to export");
+                    assert_eq!(backed, 0, "no cache: migration must be inert");
+                    assert_eq!(b.metrics.prefilled_tokens, p2.len() as u64);
+                }
+            }
+        }
+    }
+}
+
 #[test]
 fn pooled_layer_forward_bit_exact_for_all_backends() {
     // the serving-layer view of (c): Linear::forward under a pool equals

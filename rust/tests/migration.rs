@@ -1,0 +1,474 @@
+//! Fault-injection + migration-equivalence suite for the cross-worker
+//! KV handoff subsystem: kill workers mid-generation, migrate their
+//! prefixes, and require (a) continued generations byte-identical to an
+//! uninterrupted single-worker run, (b) ZERO replayed prefill tokens
+//! for migrated blocks (asserted via `prefilled_tokens`), and (c)
+//! graceful recompute — never a panic, never a wrong token — when a
+//! shard arrives truncated, corrupted, or mismatched.
+
+use slidesparse::coordinator::executor::{DecodeItem, Executor, PrefillItem};
+use slidesparse::coordinator::{
+    Engine, EngineConfig, KvShard, MockExecutor, Policy, Request, Router, SamplingParams,
+    StcExecutor,
+};
+use slidesparse::model::{Backend, BlockConfig, NativeModel};
+use slidesparse::stc::KernelChoice;
+
+/// Executor wrapper that panics (unwinding its worker thread) once its
+/// decode-call count exceeds `die_after_decodes` — a deterministic way
+/// to kill a worker mid-generation. Everything else, including the KV
+/// introspection surface migration depends on, forwards to the inner
+/// executor; `label()` forwards too, so shards produced behind the
+/// wrapper import cleanly into plain replicas.
+struct ChaosExecutor<E: Executor> {
+    inner: E,
+    decode_calls: usize,
+    die_after_decodes: usize,
+}
+
+impl<E: Executor> ChaosExecutor<E> {
+    fn new(inner: E, die_after_decodes: usize) -> ChaosExecutor<E> {
+        ChaosExecutor { inner, decode_calls: 0, die_after_decodes }
+    }
+}
+
+impl<E: Executor> Executor for ChaosExecutor<E> {
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+
+    fn max_prompt(&self) -> usize {
+        self.inner.max_prompt()
+    }
+
+    fn smax(&self) -> usize {
+        self.inner.smax()
+    }
+
+    fn kv_len(&self) -> usize {
+        self.inner.kv_len()
+    }
+
+    fn decode_buckets(&self) -> Vec<usize> {
+        self.inner.decode_buckets()
+    }
+
+    fn max_prefill_batch(&self) -> usize {
+        self.inner.max_prefill_batch()
+    }
+
+    fn prefill(&mut self, batch: &mut [PrefillItem]) -> anyhow::Result<()> {
+        self.inner.prefill(batch)
+    }
+
+    fn decode(&mut self, batch: &mut [DecodeItem]) -> anyhow::Result<()> {
+        self.decode_calls += 1;
+        assert!(
+            self.decode_calls <= self.die_after_decodes,
+            "injected chaos fault: worker dies mid-generation"
+        );
+        self.inner.decode(batch)
+    }
+
+    fn label(&self) -> String {
+        self.inner.label()
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        self.inner.set_threads(threads);
+    }
+
+    fn set_kernel(&mut self, choice: KernelChoice) {
+        self.inner.set_kernel(choice);
+    }
+
+    fn compact_kv_len(&self, len: usize) -> Option<usize> {
+        self.inner.compact_kv_len(len)
+    }
+
+    fn extract_kv_range(
+        &self,
+        kv_k: &[f32],
+        kv_v: &[f32],
+        start: usize,
+        len: usize,
+    ) -> Option<(Vec<f32>, Vec<f32>)> {
+        self.inner.extract_kv_range(kv_k, kv_v, start, len)
+    }
+
+    fn inject_kv_range(
+        &self,
+        kv_k: &mut [f32],
+        kv_v: &mut [f32],
+        start: usize,
+        len: usize,
+        ck: &[f32],
+        cv: &[f32],
+    ) {
+        self.inner.inject_kv_range(kv_k, kv_v, start, len, ck, cv);
+    }
+}
+
+fn migrate_cfg(kv_block_size: usize) -> EngineConfig {
+    EngineConfig {
+        kv_block_size,
+        prefix_cache: true,
+        migrate_kv: true,
+        ..Default::default()
+    }
+}
+
+fn req(id: u64, prompt: Vec<i32>, max_new: usize) -> Request {
+    Request::new(
+        id,
+        prompt,
+        SamplingParams { max_new_tokens: max_new, ..Default::default() },
+    )
+}
+
+// ---------------------------------------------------------------------
+// Worker death mid-generation -> warm handoff, zero replayed prefill
+// ---------------------------------------------------------------------
+
+#[test]
+fn worker_death_mid_generation_migrates_without_replaying_prefix() {
+    let prefix = vec![1, 2, 3, 4];
+    let p1 = {
+        let mut p = prefix.clone();
+        p.extend([10, 11]);
+        p
+    };
+    let p2 = {
+        let mut p = prefix.clone();
+        p.push(20);
+        p
+    };
+
+    // uninterrupted baseline: one healthy worker serves both requests
+    let mut base = Router::spawn(
+        1,
+        migrate_cfg(4),
+        Policy::PrefixAffinity { prefix_tokens: 4 },
+        |_| MockExecutor::new(1000, 64),
+    );
+    base.submit(req(1, p1.clone(), 3));
+    base.drain().unwrap();
+    base.submit(req(2, p2.clone(), 8));
+    let base_outs = base.drain().unwrap();
+    assert_eq!(base_outs.len(), 1);
+    let uninterrupted = base_outs[0].tokens.clone();
+
+    // chaos run: worker 0 completes request 1 (2 decode calls), then is
+    // killed mid-generation on request 2 (its 5th decode call)
+    let mut r = Router::spawn(
+        2,
+        migrate_cfg(4),
+        Policy::PrefixAffinity { prefix_tokens: 4 },
+        |wid| {
+            let die_after = if wid == 0 { 4 } else { usize::MAX };
+            ChaosExecutor::new(MockExecutor::new(1000, 64), die_after)
+        },
+    );
+    r.submit(req(1, p1.clone(), 3));
+    assert_eq!(r.drain().unwrap().len(), 1, "request 1 completes on worker 0");
+    assert_eq!(r.affinity_assignment(&p2), Some(0), "prefix pinned to worker 0");
+
+    r.submit(req(2, p2.clone(), 8));
+    let err = r.drain().expect_err("worker 0 dies mid-generation");
+    assert!(err.to_string().contains("died"), "{err}");
+    assert_eq!(r.loads(), vec![0, 0], "dead worker's inflight gauge is zeroed");
+
+    // the re-routed same-prefix request migrates instead of replaying
+    r.submit(req(3, p2.clone(), 8));
+    assert_eq!(r.affinity_assignment(&p2), Some(1), "re-pinned to the survivor");
+    assert_eq!(r.kv_migrations(), 1, "one warm handoff shipped");
+    let outs = r.drain().unwrap();
+    assert_eq!(outs.len(), 1);
+    assert_eq!(
+        outs[0].tokens, uninterrupted,
+        "continued generation must be byte-identical to the uninterrupted run"
+    );
+
+    // acceptance: zero replayed prefill tokens for the migrated block
+    let stats = r.kv_stats();
+    assert!(stats[0].is_none(), "worker 0 is dead");
+    let w1 = stats[1].expect("worker 1 alive");
+    assert_eq!(w1.kv_imported_blocks, 1);
+    assert_eq!(w1.prefix_cached_tokens, 4, "the full migrated block served from KV");
+    assert_eq!(
+        w1.prefilled_tokens,
+        (p2.len() - 4) as u64,
+        "only the uncovered suffix was prefilled — zero replay for migrated blocks"
+    );
+}
+
+#[test]
+fn stc_worker_death_migration_is_byte_identical_end_to_end() {
+    // the same chaos scenario through the real STC executor: migrated KV
+    // feeds real attention math, so byte-identity is a genuine check
+    let model = || {
+        NativeModel::generate(
+            BlockConfig { dim: 48, n_heads: 2, ffn: 64 },
+            2,
+            128,
+            96,
+            23,
+            Backend::Slide { n: 4 },
+        )
+    };
+    let prefix: Vec<i32> = (0..16).map(|t| (t * 7 + 3) % 128).collect();
+    let p1 = {
+        let mut p = prefix.clone();
+        p.extend([9, 17, 25, 33]);
+        p
+    };
+    let p2 = {
+        let mut p = prefix.clone();
+        p.extend([40, 41, 42, 43]);
+        p
+    };
+
+    let mut base = Router::spawn(
+        1,
+        migrate_cfg(8),
+        Policy::PrefixAffinity { prefix_tokens: 16 },
+        move |_| StcExecutor::new(model()),
+    );
+    base.submit(req(1, p1.clone(), 3));
+    base.drain().unwrap();
+    base.submit(req(2, p2.clone(), 6));
+    let uninterrupted = base.drain().unwrap()[0].tokens.clone();
+
+    let mut r = Router::spawn(
+        2,
+        migrate_cfg(8),
+        Policy::PrefixAffinity { prefix_tokens: 16 },
+        move |wid| {
+            let die_after = if wid == 0 { 4 } else { usize::MAX };
+            ChaosExecutor::new(StcExecutor::new(model()), die_after)
+        },
+    );
+    r.submit(req(1, p1.clone(), 3));
+    assert_eq!(r.drain().unwrap().len(), 1);
+    r.submit(req(2, p2.clone(), 6));
+    r.drain().expect_err("worker 0 dies mid-generation");
+
+    r.submit(req(3, p2.clone(), 6));
+    let outs = r.drain().unwrap();
+    assert_eq!(r.kv_migrations(), 1);
+    assert_eq!(outs[0].tokens, uninterrupted, "migrated generation bit-exact");
+
+    let w1 = r.kv_stats()[1].expect("survivor alive");
+    assert_eq!(w1.kv_imported_blocks, 2, "two 8-token blocks migrated");
+    assert_eq!(w1.prefix_cached_tokens, 16);
+    assert_eq!(
+        w1.prefilled_tokens,
+        (p2.len() - 16) as u64,
+        "zero replayed prefill tokens for migrated blocks"
+    );
+}
+
+#[test]
+fn death_during_handoff_falls_back_again_and_clears_the_pin() {
+    // worker 0 dies mid-generation; the handoff target (worker 1)
+    // accepts the shard but dies on its first decode — the router must
+    // fall back AGAIN to the last survivor, keep every gauge sane, and
+    // still serve the prefix warm from the buffered shard
+    let prefix = vec![1, 2, 3, 4];
+    let prompt = |suffix: i32| {
+        let mut p = prefix.clone();
+        p.push(suffix);
+        p
+    };
+    let mut r = Router::spawn(
+        3,
+        migrate_cfg(4),
+        Policy::PrefixAffinity { prefix_tokens: 4 },
+        |wid| {
+            let die_after = match wid {
+                0 => 2,          // survives request 1 exactly, dies on the next decode
+                1 => 0,          // dies on its very first decode call
+                _ => usize::MAX, // healthy
+            };
+            ChaosExecutor::new(MockExecutor::new(1000, 64), die_after)
+        },
+    );
+
+    r.submit(req(1, prompt(10), 3)); // worker 0 completes, publishes its shard
+    assert_eq!(r.drain().unwrap().len(), 1);
+
+    r.submit(req(2, prompt(20), 3)); // worker 0 dies mid-generation
+    r.drain().expect_err("worker 0 died");
+    assert_eq!(r.loads(), vec![0, 0, 0]);
+
+    r.submit(req(3, prompt(30), 3)); // handoff to worker 1... which dies too
+    assert_eq!(r.kv_migrations(), 1);
+    r.drain().expect_err("worker 1 died with the shard just imported");
+    assert_eq!(r.loads(), vec![0, 0, 0], "gauges still decrement through both deaths");
+
+    r.submit(req(4, prompt(40), 3)); // second fallback: worker 2, still warm
+    assert_eq!(r.affinity_assignment(&prompt(99)), Some(2), "pin moved to the survivor");
+    assert_eq!(r.kv_migrations(), 2, "the buffered shard was shipped again");
+    let outs = r.drain().unwrap();
+    assert_eq!(outs[0].tokens, vec![41, 42, 43]);
+
+    let stats = r.kv_stats();
+    assert!(stats[0].is_none() && stats[1].is_none());
+    let w2 = stats[2].expect("last survivor alive");
+    assert_eq!(w2.kv_imported_blocks, 1);
+    assert_eq!(
+        w2.prefilled_tokens, 1,
+        "even after two deaths the prefix migrated instead of replaying"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Corrupt / truncated / mismatched shards -> graceful recompute
+// ---------------------------------------------------------------------
+
+/// Export one shard (and its wire bytes) from a mock engine that served
+/// `prefix + [10, 11]`.
+fn exported_shard(prefix: &[i32]) -> (KvShard, Vec<u8>) {
+    let mut a = Engine::new(MockExecutor::new(1000, 64), migrate_cfg(4));
+    let mut p1 = prefix.to_vec();
+    p1.extend([10, 11]);
+    a.submit(req(1, p1, 3));
+    a.run_to_completion().unwrap();
+    let mut exports = a.take_kv_exports();
+    assert_eq!(exports.len(), 1);
+    let (_, shard) = exports.pop().unwrap();
+    let bytes = shard.to_bytes();
+    (shard, bytes)
+}
+
+/// Serve `prefix + [20]` on a fresh engine that first attempts the
+/// given imports; returns (tokens, prefilled_tokens, import_rejects).
+fn serve_after_imports(prefix: &[i32], imports: &[&[u8]]) -> (Vec<i32>, u64, u64) {
+    let mut e = Engine::new(MockExecutor::new(1000, 64), migrate_cfg(4));
+    for bytes in imports {
+        e.import_kv_shard_bytes(bytes);
+    }
+    let mut p2 = prefix.to_vec();
+    p2.push(20);
+    e.submit(req(2, p2, 2));
+    let outs = e.run_to_completion().unwrap();
+    (
+        outs[0].tokens.clone(),
+        e.metrics.prefilled_tokens,
+        e.metrics.kv_import_rejects,
+    )
+}
+
+#[test]
+fn truncated_or_corrupted_shard_recomputes_gracefully() {
+    let prefix = vec![1, 2, 3, 4];
+    let (_, bytes) = exported_shard(&prefix);
+
+    // sanity: the intact shard imports and removes the prefix replay
+    let (toks, prefilled, rejects) = serve_after_imports(&prefix, &[&bytes[..]]);
+    assert_eq!(toks, vec![21, 22]);
+    assert_eq!(prefilled, 1, "only the suffix computed");
+    assert_eq!(rejects, 0);
+
+    // every truncation of the wire bytes: no panic, no import, right
+    // tokens, full (correct) recompute
+    for cut in [0, 1, 8, bytes.len() / 2, bytes.len() - 1] {
+        let (toks, prefilled, rejects) = serve_after_imports(&prefix, &[&bytes[..cut]]);
+        assert_eq!(toks, vec![21, 22], "truncation at {cut} must not change tokens");
+        assert_eq!(prefilled, 5, "truncation at {cut} falls back to full prefill");
+        assert_eq!(rejects, 1);
+    }
+
+    // a flipped bit anywhere trips the checksum
+    for pos in [4usize, bytes.len() / 3, bytes.len() - 2] {
+        let mut bad = bytes.clone();
+        bad[pos] ^= 0x10;
+        let (toks, prefilled, rejects) = serve_after_imports(&prefix, &[&bad[..]]);
+        assert_eq!(toks, vec![21, 22], "bit flip at {pos} must not change tokens");
+        assert_eq!(prefilled, 5);
+        assert_eq!(rejects, 1);
+    }
+}
+
+#[test]
+fn mismatched_shard_fields_are_rejected_never_aliased() {
+    let prefix = vec![1, 2, 3, 4];
+    let (shard, _) = exported_shard(&prefix);
+
+    let cases: Vec<(&str, KvShard)> = vec![
+        ("wrong block size", {
+            let mut s = shard.clone();
+            s.block_size += 1;
+            s
+        }),
+        ("wrong executor kind", {
+            let mut s = shard.clone();
+            s.executor = "other-executor".into();
+            s
+        }),
+        ("partial token block", {
+            let mut s = shard.clone();
+            s.blocks[0].tokens.pop();
+            s
+        }),
+        ("wrong compact KV length", {
+            let mut s = shard.clone();
+            s.blocks[0].k.push(0.0);
+            s
+        }),
+        ("empty shard", {
+            let mut s = shard.clone();
+            s.blocks.clear();
+            s
+        }),
+    ];
+    for (what, bad) in cases {
+        let (toks, prefilled, rejects) = serve_after_imports(&prefix, &[&bad.to_bytes()[..]]);
+        assert_eq!(toks, vec![21, 22], "{what}: tokens unchanged");
+        assert_eq!(prefilled, 5, "{what}: full recompute, no partial import");
+        assert_eq!(rejects, 1, "{what}: counted as a reject");
+    }
+
+    // different tokens with valid structure: imports as a DIFFERENT
+    // chain — the original prefix must miss it entirely (never alias)
+    let mut other = shard.clone();
+    other.blocks[0].tokens = vec![7, 7, 7, 7];
+    let (toks, prefilled, rejects) = serve_after_imports(&prefix, &[&other.to_bytes()[..]]);
+    assert_eq!(toks, vec![21, 22]);
+    assert_eq!(prefilled, 5, "foreign content must not cover our prefix");
+    assert_eq!(rejects, 0, "structurally valid import, it just doesn't match");
+}
+
+#[test]
+fn import_under_tiny_byte_cap_spills_leaves_and_keeps_partial_reuse() {
+    // a 2-block shard into an engine whose budget holds one mock block
+    // (8 bytes): the LEAF spills — the chain root keeps the freshest
+    // use-stamp — so the surviving KV is still a contiguous root-run
+    // and the next prefill reuses the first block instead of nothing
+    let prefix: Vec<i32> = (0..8).collect();
+    let mut a = Engine::new(MockExecutor::new(1000, 64), migrate_cfg(4));
+    let mut p1 = prefix.clone();
+    p1.push(10);
+    a.submit(req(1, p1, 2));
+    a.run_to_completion().unwrap();
+    let (_, shard) = a.take_kv_exports().pop().unwrap();
+    assert_eq!(shard.blocks.len(), 2);
+
+    let cfg = EngineConfig { prefix_cache_bytes: 8, ..migrate_cfg(4) };
+    let mut b = Engine::new(MockExecutor::new(1000, 64), cfg);
+    let backed = b.import_kv_shard(&shard);
+    assert_eq!(backed, 1, "only the root fits the budget — and only it counts");
+    assert_eq!(b.metrics.kv_imported_blocks, 1);
+    assert!(b.metrics.kv_resident_bytes <= 8, "budget holds through import");
+    assert!(b.metrics.kv_spilled_blocks >= 1, "the overflow block spilled");
+    let mut p2 = prefix.clone();
+    p2.push(20);
+    b.submit(req(2, p2.clone(), 2));
+    let outs = b.run_to_completion().unwrap();
+    assert_eq!(outs[0].tokens, vec![21, 22]);
+    assert_eq!(
+        b.metrics.prefilled_tokens,
+        (p2.len() - 4) as u64,
+        "the resident root block still serves: only the tail recomputes"
+    );
+}
