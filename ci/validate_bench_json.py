@@ -18,6 +18,21 @@ SCHEMAS = {
         "smoke": None,
         "kernel_backends": {"bench", "m", "k", "o", "blocked_vs_scalar_s68", "rows"},
         "thread_scaling": {"bench", "m", "k", "o", "dense_equiv_bytes", "rows"},
+        "decode_gemv": {
+            "bench",
+            "m",
+            "k",
+            "o",
+            "rowmajor_s",
+            "panel_s",
+            "panel_x_rowmajor",
+        },
+        "tuner": {"bench", "version", "cpu", "rows", "winners"},
+    },
+    "tune_table.json": {
+        "version": None,
+        "cpu": None,
+        "entries": None,
     },
     "BENCH_kv_migration.json": {
         "smoke": None,
@@ -79,6 +94,28 @@ def validate(path: str) -> None:
             if missing:
                 fail(f"{name}: '{key}' missing subkeys {sorted(missing)}")
     # semantic spot checks
+    if name == "BENCH_kernel_square.json":
+        # bit-exactness is asserted inside the bench; here we check the
+        # ratio is a sane measurement (a hard >= 1.0 gate would flake on
+        # loaded CI runners)
+        if data["decode_gemv"]["panel_x_rowmajor"] <= 0.0:
+            fail(f"{name}: decode_gemv ratio must be positive")
+        names = {r["kernel"] for r in data["kernel_backends"]["rows"]}
+        if not {"scalar", "blocked"} <= names:
+            fail(f"{name}: kernel_backends missing scalar/blocked rows ({names})")
+        if not data["tuner"]["winners"]:
+            fail(f"{name}: tuner swept no winners")
+        for w in data["tuner"]["winners"]:
+            if not {"class", "kernel", "threads"} <= set(w):
+                fail(f"{name}: tuner winner missing fields: {w}")
+    if name == "tune_table.json":
+        if not data["entries"]:
+            fail(f"{name}: no tuned entries")
+        for cls, e in data["entries"].items():
+            if "kernel" not in e or "threads" not in e:
+                fail(f"{name}: entry '{cls}' missing kernel/threads")
+            if e["threads"] < 1:
+                fail(f"{name}: entry '{cls}' has threads < 1")
     if name == "BENCH_kv_migration.json":
         if data["bit_exact"] is not True:
             fail(f"{name}: bit_exact must be true")

@@ -1,16 +1,18 @@
 //! Paper Fig. 6 + Appendix D.3.1: square-kernel speedup tables.
 //! Measured rows: the CPU STC simulator. Modeled rows: the six-GPU
-//! perfmodel across precisions. Two sweeps feed
+//! perfmodel across precisions. Four sweeps feed
 //! `BENCH_kernel_square.json` so future PRs get a perf trajectory:
-//! microkernel backends (scalar/blocked/avx2 x {dense, 2:4, 6:8},
-//! single-threaded) and thread scaling (threads x {dense, 2:4, 6:8} on
-//! the 1024^3 workload).
+//! microkernel backends (scalar/blocked/avx2/vnni/neon x {dense, 2:4,
+//! 6:8}, single-threaded), thread scaling (threads x {dense, 2:4, 6:8}
+//! on the 1024^3 workload), the decode-GEMV B-panel-repack comparison,
+//! and the autotuner sweep (which also writes `tune_table.json`).
 use std::collections::BTreeMap;
 
 use slidesparse::bench::harness::{smoke_mode, thread_sweep, write_json};
 use slidesparse::bench::tables;
 use slidesparse::perfmodel::gpus;
 use slidesparse::quant::Precision;
+use slidesparse::stc::autotune;
 use slidesparse::util::json::Json;
 
 fn main() {
@@ -35,9 +37,30 @@ fn main() {
     let (scaling, sjson) = tables::kernel_square_scaling(&threads, ok, m);
     scaling.print();
 
+    // decode-GEMV layout comparison (row-major vs B-panel repack, m=1)
+    let (dk, dn) = if smoke { (256, 256) } else { (1024, 1024) };
+    let (decode, djson) = tables::kernel_square_decode_gemv(dk, dn);
+    decode.print();
+
+    // autotuner sweep over the decode + prefill shape classes of the
+    // same workload; the table also lands in tune_table.json so CI can
+    // validate the persisted schema
+    let tune_shapes = [(1, dk, dn), (32, dk, dn)];
+    let tune_iters = if smoke { 2 } else { 5 };
+    let (tune_table, tune_rows) = autotune::tune(&tune_shapes, &threads, tune_iters);
+    match tune_table.save(autotune::TABLE_PATH) {
+        Ok(()) => println!("wrote {}", autotune::TABLE_PATH),
+        Err(e) => eprintln!("could not write {}: {e}", autotune::TABLE_PATH),
+    }
+    for (class, e) in &tune_table.entries {
+        println!("tuner winner {class}: kernel={} threads={}", e.kernel, e.threads);
+    }
+
     let mut top = BTreeMap::new();
     top.insert("kernel_backends".to_string(), kjson);
     top.insert("thread_scaling".to_string(), sjson);
+    top.insert("decode_gemv".to_string(), djson);
+    top.insert("tuner".to_string(), autotune::tuner_json(&tune_table, &tune_rows));
     top.insert("smoke".to_string(), Json::Bool(smoke));
     match write_json("BENCH_kernel_square.json", &Json::Obj(top)) {
         Ok(()) => println!("\nwrote BENCH_kernel_square.json"),

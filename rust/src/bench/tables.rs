@@ -227,6 +227,49 @@ pub fn kernel_square_kernels(ok: usize, m: usize) -> (Table, Json) {
     (t, Json::Obj(j))
 }
 
+/// Decode-GEMV layout comparison: the m=1 dense path before and after
+/// the column-blocked B-panel repack. `rowmajor_s` times the
+/// kernel-agnostic K-inner GEMV the decode branch used to run;
+/// `panel_s` streams the repacked weight panels through the blocked
+/// microkernel (16 contiguous output columns per tile call). Outputs
+/// are asserted bit-identical; the JSON records the speed ratio for the
+/// perf trajectory (merged into `BENCH_kernel_square.json`).
+pub fn kernel_square_decode_gemv(k: usize, o: usize) -> (Table, Json) {
+    use crate::stc::{gemm_i8, gemm_i8_panels_with, pack_b_panels, select_kernel, KernelChoice};
+    let mut t = Table::new(
+        &format!("Decode GEMV layout (STC, INT8, m=1, K={k}, O={o}, blocked kernel)"),
+        &["layout", "time (ms)", "x row-major"],
+    );
+    let mut rng = XorShift::new(29);
+    let x: Vec<i8> = (0..k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+    let w: Vec<i8> = (0..o * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+    let wp = pack_b_panels(&w, o, k);
+    let kern = select_kernel(KernelChoice::Blocked);
+    assert_eq!(
+        gemm_i8_panels_with(kern, &x, &wp, 1, o, k),
+        gemm_i8(&x, &w, 1, o, k),
+        "layouts must agree bit-exactly"
+    );
+    let rowmajor = bench(1, 0.2, 4, || {
+        std::hint::black_box(gemm_i8(&x, &w, 1, o, k));
+    });
+    let panel = bench(1, 0.2, 4, || {
+        std::hint::black_box(gemm_i8_panels_with(kern, &x, &wp, 1, o, k));
+    });
+    let ratio = rowmajor.min_s / panel.min_s;
+    t.row(vec!["row-major".into(), format!("{:.3}", rowmajor.min_s * 1e3), sx(1.0)]);
+    t.row(vec!["b-panel".into(), format!("{:.3}", panel.min_s * 1e3), sx(ratio)]);
+    let mut j = BTreeMap::new();
+    j.insert("bench".to_string(), Json::Str("kernel_square_decode_gemv".to_string()));
+    j.insert("m".to_string(), Json::Num(1.0));
+    j.insert("k".to_string(), Json::Num(k as f64));
+    j.insert("o".to_string(), Json::Num(o as f64));
+    j.insert("rowmajor_s".to_string(), Json::Num(rowmajor.min_s));
+    j.insert("panel_s".to_string(), Json::Num(panel.min_s));
+    j.insert("panel_x_rowmajor".to_string(), Json::Num(ratio));
+    (t, Json::Obj(j))
+}
+
 // ---------------------------------------------------------------------
 // Appendix D.3.2: model-shape kernel speedups
 // ---------------------------------------------------------------------
@@ -922,6 +965,16 @@ mod tests {
             assert!(row.req("s68_s").as_f64().unwrap() > 0.0);
         }
         assert!(j.req("blocked_vs_scalar_s68").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn decode_gemv_table_and_json() {
+        let (t, j) = kernel_square_decode_gemv(96, 64);
+        assert!(t.render().contains("b-panel"));
+        assert_eq!(j.req("bench").as_str(), Some("kernel_square_decode_gemv"));
+        assert!(j.req("rowmajor_s").as_f64().unwrap() > 0.0);
+        assert!(j.req("panel_s").as_f64().unwrap() > 0.0);
+        assert!(j.req("panel_x_rowmajor").as_f64().unwrap() > 0.0);
     }
 
     #[test]

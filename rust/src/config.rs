@@ -231,6 +231,12 @@ mod tests {
         let nested =
             Config::from_json(r#"{"kernel": "scalar", "engine": {"kernel": "avx2"}}"#).unwrap();
         assert_eq!(nested.engine.kernel, KernelChoice::Avx2);
+        // the ISA-specific backends parse at both levels too (selection
+        // falls back to scalar at dispatch time when unavailable)
+        let vnni = Config::from_json(r#"{"kernel": "vnni"}"#).unwrap();
+        assert_eq!(vnni.engine.kernel, KernelChoice::Vnni);
+        let neon = Config::from_json(r#"{"engine": {"kernel": "neon"}}"#).unwrap();
+        assert_eq!(neon.engine.kernel, KernelChoice::Neon);
     }
 
     #[test]

@@ -33,7 +33,7 @@ pub struct EngineConfig {
     /// built (a no-op for executors without a pooled hot path).
     pub threads: usize,
     /// microkernel backend for the executor's int8 GEMMs
-    /// (auto/scalar/blocked/avx2; all bit-exact). Authoritative like
+    /// (auto/scalar/blocked/avx2/vnni/neon; all bit-exact). Authoritative like
     /// `threads`: `Engine::new` installs it via `Executor::set_kernel`
     /// (a no-op for executors without the STC microkernel layer).
     pub kernel: crate::stc::KernelChoice,
@@ -116,6 +116,8 @@ impl<E: Executor> Engine<E> {
     pub fn new(mut executor: E, cfg: EngineConfig) -> Engine<E> {
         executor.set_kernel(cfg.kernel);
         executor.set_threads(cfg.threads);
+        let mut metrics = EngineMetrics::new();
+        metrics.kernel = executor.kernel_label();
         let blocks = BlockManager::new(cfg.kv_blocks, cfg.kv_block_size)
             .with_prefix_cache(cfg.prefix_cache);
         Engine {
@@ -124,7 +126,7 @@ impl<E: Executor> Engine<E> {
             seqs: HashMap::new(),
             next_seq: 1,
             outputs: Vec::new(),
-            metrics: EngineMetrics::new(),
+            metrics,
             rng: XorShift::new(cfg.seed ^ 0x5EED),
             block_kv: ByteLru::new(cfg.prefix_cache_bytes),
             migrate_kv: cfg.migrate_kv && cfg.prefix_cache,

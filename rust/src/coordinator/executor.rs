@@ -65,6 +65,11 @@ pub trait Executor {
     /// authoritative; every backend is bit-exact, so this only changes
     /// speed.
     fn set_kernel(&mut self, _choice: KernelChoice) {}
+    /// Resolved microkernel backend name for logs/metrics (empty for
+    /// executors without the STC microkernel layer).
+    fn kernel_label(&self) -> String {
+        String::new()
+    }
     /// Length of each compact buffer [`Executor::extract_kv_range`]
     /// yields for a `len`-position range, or `None` when the executor
     /// cannot introspect its KV layout. KV-shard import validates
@@ -137,6 +142,41 @@ impl StcExecutor {
     /// Name of the microkernel backend the model's GEMMs run on.
     pub fn kernel_name(&self) -> &'static str {
         self.kernel.name()
+    }
+
+    /// Install tuned per-shape-class winners from a [`TuneTable`]
+    /// (`stc::autotune`). The prefill-class winner sets the global
+    /// kernel and the pool width (the pool is shared, so the decode
+    /// branch runs at the prefill winner's width); the decode-class
+    /// winner then overrides the small-m decode branch's kernel only.
+    /// Returns the applied `(class, kernel, threads)` rows for the
+    /// startup log and `metrics`. Classes the table never swept fall
+    /// back to the existing dispatch — nothing is installed for them.
+    pub fn apply_tune(
+        &mut self,
+        table: &crate::stc::TuneTable,
+    ) -> Vec<(String, String, usize)> {
+        use crate::stc::autotune::shape_class;
+        let d = self.model.dim;
+        let mut applied = Vec::new();
+        // representative shapes over the model dim: decode is the m=1
+        // GEMV, prefill a full M-tile batch (same classes `serve --tune`
+        // sweeps). Prefill first — set_kernel resets both branches.
+        if let Some(t) = table.decision(32, d, d) {
+            Executor::set_kernel(self, t.kernel);
+            Executor::set_threads(self, t.threads);
+            applied.push((
+                shape_class(32, d, d),
+                self.kernel.name().to_string(),
+                t.threads,
+            ));
+        }
+        if let Some(t) = table.decision(1, d, d) {
+            let kern = crate::stc::select_kernel(t.kernel);
+            self.model.set_decode_microkernel(kern);
+            applied.push((shape_class(1, d, d), kern.name().to_string(), t.threads));
+        }
+        applied
     }
 }
 
@@ -226,6 +266,10 @@ impl Executor for StcExecutor {
         let kern = crate::stc::select_kernel(choice);
         self.model.set_microkernel(kern);
         self.kernel = kern;
+    }
+
+    fn kernel_label(&self) -> String {
+        self.kernel.name().to_string()
     }
 
     fn compact_kv_len(&self, len: usize) -> Option<usize> {
@@ -585,8 +629,45 @@ mod tests {
         assert_eq!(blocked_name, "blocked");
         assert_eq!(scalar_toks, blocked_toks);
         let (auto_name, auto_toks) = run(KernelChoice::Auto);
-        assert!(auto_name == "avx2" || auto_name == "blocked", "{auto_name}");
+        assert!(
+            ["vnni", "avx2", "neon", "blocked"].contains(&auto_name.as_str()),
+            "{auto_name}"
+        );
         assert_eq!(auto_toks, scalar_toks);
+    }
+
+    #[test]
+    fn apply_tune_installs_winners_and_stays_bit_exact() {
+        use crate::stc::autotune::shape_class;
+        use crate::stc::{TuneEntry, TuneTable};
+        let mut exec = StcExecutor::new(tiny_model(Backend::Slide { n: 4 }));
+        let toks = [3i32, 11, 40, 7];
+        let (base, _, _) = prefill_one(&mut exec, &toks);
+        let d = exec.model.dim;
+        let mut table = TuneTable::new();
+        table.entries.insert(
+            shape_class(1, d, d),
+            crate::stc::TuneEntry { kernel: "scalar".into(), threads: 1, secs: 0.1 },
+        );
+        table.entries.insert(
+            shape_class(32, d, d),
+            TuneEntry { kernel: "blocked".into(), threads: 2, secs: 0.2 },
+        );
+        let applied = exec.apply_tune(&table);
+        assert_eq!(applied.len(), 2);
+        assert_eq!(exec.kernel_name(), "blocked", "prefill winner installed");
+        assert_eq!(exec.threads(), 2, "pool follows the prefill winner");
+        assert!(applied
+            .iter()
+            .any(|(c, k, t)| c.starts_with("prefill") && k == "blocked" && *t == 2));
+        assert!(applied
+            .iter()
+            .any(|(c, k, t)| c.starts_with("decode") && k == "scalar" && *t == 1));
+        // tuning only redirects dispatch; outputs are bit-exact
+        let (tuned, _, _) = prefill_one(&mut exec, &toks);
+        assert_eq!(tuned, base);
+        // a table with no matching classes installs nothing
+        assert!(exec.apply_tune(&TuneTable::new()).is_empty());
     }
 
     #[test]

@@ -40,6 +40,12 @@ pub struct EngineMetrics {
     pub kv_spilled_bytes: u64,
     /// resident saved-KV bytes right now (gauge, not a counter)
     pub kv_resident_bytes: u64,
+    /// resolved microkernel backend the executor's GEMMs run on (empty
+    /// for executors without the STC microkernel layer)
+    pub kernel: String,
+    /// autotuned per-shape-class installs as (class, kernel, threads)
+    /// rows (empty unless `serve --tune` applied a tune table)
+    pub tuned: Vec<(String, String, usize)>,
     pub ttft: Summary,
     pub latency: Summary,
     pub prefill_step_time: Summary,
@@ -94,7 +100,7 @@ impl EngineMetrics {
     }
 
     pub fn report(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={}/{} tokens={}p+{}g steps={}p+{}d preempt={} \
              prefix={}h/{}m ({} tok cached, {} evict) \
              kv={}exp/{}imp/{}rej ({} spill, {} B resident) \
@@ -119,7 +125,14 @@ impl EngineMetrics {
             self.latency.p50() * 1e3,
             self.decode_throughput(),
             self.total_throughput(),
-        )
+        );
+        if !self.kernel.is_empty() {
+            s.push_str(&format!(" kernel={}", self.kernel));
+        }
+        for (class, kern, threads) in &self.tuned {
+            s.push_str(&format!(" tuned[{class}]={kern}@{threads}t"));
+        }
+        s
     }
 
     /// Copyable KV-flow snapshot: what the router's per-worker stats
@@ -185,6 +198,19 @@ mod tests {
         assert_eq!(s.kv_imported_blocks, 4);
         assert_eq!(s.kv_import_rejects, 1);
         assert!(m.report().contains("kv=2exp/4imp/1rej (3 spill, 256 B resident)"));
+    }
+
+    #[test]
+    fn kernel_and_tuned_rows_surface_in_report() {
+        let mut m = EngineMetrics::new();
+        assert!(!m.report().contains("kernel="), "empty label stays silent");
+        m.kernel = "vnni".into();
+        m.tuned.push(("decode:k512:o512".into(), "scalar".into(), 1));
+        m.tuned.push(("prefill:k512:o512".into(), "vnni".into(), 4));
+        let r = m.report();
+        assert!(r.contains("kernel=vnni"), "{r}");
+        assert!(r.contains("tuned[decode:k512:o512]=scalar@1t"), "{r}");
+        assert!(r.contains("tuned[prefill:k512:o512]=vnni@4t"), "{r}");
     }
 
     #[test]

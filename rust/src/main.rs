@@ -3,7 +3,7 @@
 //!
 //! ```text
 //! slidesparse serve   [--config cfg.json] [--requests N] [--threads T]
-//!                     [--kernel auto|scalar|blocked|avx2]
+//!                     [--kernel auto|scalar|blocked|avx2|vnni|neon] [--tune]
 //!                     [--workers W] [--routing round_robin|least_loaded|prefix[:K]]
 //!                     [--prefix-cache] [--prefix-cache-bytes B] [--migrate-kv]
 //! slidesparse bench   [--suite kernel|e2e|figures|all]
@@ -71,13 +71,14 @@ fn serve(args: &Args) -> Result<()> {
     let n_requests = args.opt_usize("requests", 16);
     println!(
         "serving with sparsity={} executor={} workers={} routing={} threads={} kernel={} \
-         prefix_cache={} prefix_cache_bytes={} migrate_kv={}",
+         (resolved: {}) prefix_cache={} prefix_cache_bytes={} migrate_kv={}",
         cfg.sparsity,
         cfg.executor,
         cfg.workers,
         cfg.routing,
         cfg.engine.threads,
         cfg.engine.kernel,
+        slidesparse::stc::select_kernel(cfg.engine.kernel).name(),
         cfg.engine.prefix_cache,
         cfg.engine.prefix_cache_bytes,
         cfg.engine.migrate_kv
@@ -90,8 +91,18 @@ fn serve(args: &Args) -> Result<()> {
     } else {
         let model = tables::e2e_model(backend);
         let vocab = model.vocab;
+        let dim = model.dim;
         // Engine::new installs cfg.engine.threads on the executor
         let mut engine = Engine::new(StcExecutor::new(model), cfg.engine);
+        if args.flag("tune") {
+            let table = load_or_tune(dim, cfg.engine.threads);
+            let applied = engine.executor.apply_tune(&table);
+            for (class, kern, threads) in &applied {
+                println!("  tuned {class}: kernel={kern} threads={threads}");
+            }
+            engine.metrics.kernel = engine.executor.kernel_label();
+            engine.metrics.tuned = applied;
+        }
         for r in demo_requests(n_requests, vocab) {
             engine.submit(r);
         }
@@ -189,6 +200,40 @@ fn serve_router(
         shard_bytes
     );
     Ok((outs, report))
+}
+
+/// `serve --tune`: reuse the cached tune table when it is valid for
+/// this build + CPU, otherwise sweep the serving shape classes (decode
+/// GEMV and a prefill M-tile batch over the model dim) and cache the
+/// result. A rejected table's reason is logged — never silently used.
+fn load_or_tune(dim: usize, threads_hint: usize) -> slidesparse::stc::TuneTable {
+    use slidesparse::stc::autotune::{self, TABLE_PATH};
+    use slidesparse::stc::TuneTable;
+    match TuneTable::load(TABLE_PATH) {
+        Ok(t) => {
+            println!("tune: loaded {TABLE_PATH} ({} classes)", t.entries.len());
+            t
+        }
+        Err(why) => {
+            println!("tune: re-tuning ({why})");
+            let shapes = [(1, dim, dim), (32, dim, dim)];
+            let mut threads = vec![1, 2, 4];
+            if threads_hint > 1 {
+                threads.push(threads_hint);
+            }
+            threads.sort_unstable();
+            threads.dedup();
+            let (table, _rows) = autotune::tune(&shapes, &threads, 3);
+            match table.save(TABLE_PATH) {
+                Ok(()) => println!(
+                    "tune: saved {} classes to {TABLE_PATH}",
+                    table.entries.len()
+                ),
+                Err(e) => println!("tune: could not save {TABLE_PATH}: {e}"),
+            }
+            table
+        }
+    }
 }
 
 fn demo_requests(n: usize, vocab: usize) -> Vec<Request> {

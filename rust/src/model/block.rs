@@ -68,6 +68,15 @@ impl Block {
         self.w2.set_microkernel(kern);
     }
 
+    /// Install a backend for the small-m decode branch of every linear
+    /// in this block (the autotuner's per-shape-class hook).
+    pub fn set_decode_microkernel(&mut self, kern: &'static dyn crate::stc::Microkernel) {
+        self.wqkv.set_decode_microkernel(kern);
+        self.wo.set_decode_microkernel(kern);
+        self.w13.set_decode_microkernel(kern);
+        self.w2.set_decode_microkernel(kern);
+    }
+
     /// Forward `s` new rows starting at context position `start`,
     /// reading/writing this block's KV cache slices (`kc`/`vc`, each
     /// [n_heads, smax, head_dim] row-major).
@@ -220,6 +229,15 @@ impl NativeModel {
     pub fn set_microkernel(&mut self, kern: &'static dyn crate::stc::Microkernel) {
         for b in &mut self.blocks {
             b.set_microkernel(kern);
+        }
+    }
+
+    /// Install a backend for the small-m decode branch of every linear
+    /// in the model, leaving the prefill kernel untouched. Bit-exact on
+    /// every backend; only wall time changes.
+    pub fn set_decode_microkernel(&mut self, kern: &'static dyn crate::stc::Microkernel) {
+        for b in &mut self.blocks {
+            b.set_decode_microkernel(kern);
         }
     }
 

@@ -118,6 +118,15 @@ impl Linear {
         }
     }
 
+    /// Install a backend for the small-m decode branch only (the
+    /// autotuner's per-shape-class hook; bit-exact like every backend).
+    pub fn set_decode_microkernel(&mut self, kern: &'static dyn crate::stc::Microkernel) {
+        match &mut self.inner {
+            Inner::Dense(l) => l.set_decode_microkernel(kern),
+            Inner::Slide(l) => l.set_decode_microkernel(kern),
+        }
+    }
+
     /// Serve: y [m, o] from x [m, k].
     pub fn forward(&self, x: &[f32], m: usize) -> Vec<f32> {
         assert_eq!(x.len(), m * self.k);

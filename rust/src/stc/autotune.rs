@@ -1,0 +1,441 @@
+//! Measured (rather than assumed) kernel dispatch: sweep the available
+//! microkernel backends × thread counts per (m, k, o) shape class,
+//! record the winner per class, persist the result to a versioned
+//! `tune_table.json` keyed by the CPU signature, and install winners on
+//! the executor's layers (`StcExecutor::apply_tune`).
+//!
+//! The sweep-to-table method follows the `code_tables_study` idiom
+//! (SNIPPETS.md): enumerate the real candidate space, time every cell
+//! on the machine that will serve, and make dispatch a lookup into the
+//! measured table instead of a hardcoded preference. The hardcoded
+//! order (`KernelChoice::Auto`) remains the zero-cost default; the
+//! tuner refines it per shape class when asked (`serve --tune`).
+//!
+//! Lifecycle:
+//! 1. `serve --tune` first tries [`TuneTable::load`]; a missing,
+//!    unparsable, stale-version, or foreign-CPU table is rejected with
+//!    a logged reason.
+//! 2. On rejection, [`tune`] sweeps the engine's shape classes and the
+//!    fresh table is saved back to [`TABLE_PATH`].
+//! 3. Winners are installed per routing branch (decode vs prefill) via
+//!    `StcExecutor::apply_tune`, and surfaced in the startup log and
+//!    `metrics` so serve logs correlate with bench tables.
+//!
+//! Every candidate is bit-exact with every other (the microkernel
+//! invariant), so tuning can never change outputs — only wall time.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::stc::dense::{gemm_i8_mtile_pool_with, gemm_i8_panels_pool_with, pack_b_panels, MT};
+use crate::stc::microkernel::{available_kernels, KernelChoice};
+use crate::util::json::{obj, Json};
+use crate::util::prng::XorShift;
+use crate::util::ThreadPool;
+
+/// Schema version of the persisted table; bump on layout change so
+/// stale tables from older builds are rejected and re-tuned.
+pub const TABLE_VERSION: u32 = 1;
+
+/// Default cache path (CWD-relative, next to the BENCH_*.json
+/// artifacts).
+pub const TABLE_PATH: &str = "tune_table.json";
+
+/// CPU identity key: arch + kernel-reported brand (when /proc/cpuinfo
+/// exposes one) + detected ISA features. A table tuned on one machine
+/// must never install winners on another.
+pub fn cpu_signature() -> String {
+    let mut feats: Vec<&str> = Vec::new();
+    if crate::stc::microkernel::avx2_available() {
+        feats.push("avx2");
+    }
+    if crate::stc::microkernel::vnni_available() {
+        feats.push("vnni");
+    }
+    if crate::stc::microkernel::neon_available() {
+        feats.push("neon");
+    }
+    let brand = std::fs::read_to_string("/proc/cpuinfo")
+        .ok()
+        .and_then(|s| {
+            s.lines().find_map(|l| {
+                let (key, val) = l.split_once(':')?;
+                if key.trim() == "model name" {
+                    Some(val.trim().to_string())
+                } else {
+                    None
+                }
+            })
+        })
+        .unwrap_or_else(|| "unknown-cpu".to_string());
+    format!("{}|{}|{}", std::env::consts::ARCH, brand, feats.join("+"))
+}
+
+/// Bucket a runtime (m, k, o) GEMM shape into a tuning class: the
+/// routing regime (decode vs prefill, the same MT/2 threshold the
+/// layers use) plus power-of-two size buckets for k and o.
+pub fn shape_class(m: usize, k: usize, o: usize) -> String {
+    let mode = if m < MT / 2 { "decode" } else { "prefill" };
+    format!("{mode}:k{}:o{}", bucket(k), bucket(o))
+}
+
+fn bucket(v: usize) -> usize {
+    v.max(1).next_power_of_two()
+}
+
+/// The measured winner for one shape class.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuneEntry {
+    pub kernel: String,
+    pub threads: usize,
+    pub secs: f64,
+}
+
+/// A per-shape-class decision the executor can install.
+#[derive(Clone, Copy, Debug)]
+pub struct TuneDecision {
+    pub kernel: KernelChoice,
+    pub threads: usize,
+}
+
+/// The persisted per-shape winner table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuneTable {
+    pub version: u32,
+    pub cpu: String,
+    pub entries: BTreeMap<String, TuneEntry>,
+}
+
+impl TuneTable {
+    pub fn new() -> TuneTable {
+        TuneTable {
+            version: TABLE_VERSION,
+            cpu: cpu_signature(),
+            entries: BTreeMap::new(),
+        }
+    }
+
+    /// Reject tables from another schema version or another CPU — the
+    /// caller re-tunes instead of installing foreign winners.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.version != TABLE_VERSION {
+            return Err(format!(
+                "stale tune table (version {} != {})",
+                self.version, TABLE_VERSION
+            ));
+        }
+        let sig = cpu_signature();
+        if self.cpu != sig {
+            return Err(format!(
+                "foreign-CPU tune table ('{}' != '{sig}')",
+                self.cpu
+            ));
+        }
+        Ok(())
+    }
+
+    /// The tuned decision for a runtime shape, if its class was swept.
+    pub fn decision(&self, m: usize, k: usize, o: usize) -> Option<TuneDecision> {
+        let e = self.entries.get(&shape_class(m, k, o))?;
+        let kernel = e.kernel.parse().ok()?;
+        Some(TuneDecision { kernel, threads: e.threads.max(1) })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let entries: BTreeMap<String, Json> = self
+            .entries
+            .iter()
+            .map(|(class, e)| {
+                (
+                    class.clone(),
+                    obj(vec![
+                        ("kernel", Json::Str(e.kernel.clone())),
+                        ("threads", Json::Num(e.threads as f64)),
+                        ("secs", Json::Num(e.secs)),
+                    ]),
+                )
+            })
+            .collect();
+        obj(vec![
+            ("version", Json::Num(self.version as f64)),
+            ("cpu", Json::Str(self.cpu.clone())),
+            ("entries", Json::Obj(entries)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TuneTable, String> {
+        let version =
+            j.get("version").and_then(Json::as_usize).ok_or("missing version")? as u32;
+        let cpu = j
+            .get("cpu")
+            .and_then(Json::as_str)
+            .ok_or("missing cpu")?
+            .to_string();
+        let mut entries = BTreeMap::new();
+        match j.get("entries") {
+            Some(Json::Obj(m)) => {
+                for (class, e) in m {
+                    let kernel = e
+                        .get("kernel")
+                        .and_then(Json::as_str)
+                        .ok_or("entry missing kernel")?
+                        .to_string();
+                    let threads = e
+                        .get("threads")
+                        .and_then(Json::as_usize)
+                        .ok_or("entry missing threads")?;
+                    let secs = e.get("secs").and_then(Json::as_f64).unwrap_or(0.0);
+                    entries.insert(class.clone(), TuneEntry { kernel, threads, secs });
+                }
+            }
+            _ => return Err("missing entries".to_string()),
+        }
+        Ok(TuneTable { version, cpu, entries })
+    }
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+    }
+
+    /// Load and validate; `Err` explains why the table was rejected
+    /// (missing, unparsable, stale version, foreign CPU) so callers can
+    /// log the reason and re-tune.
+    pub fn load(path: &str) -> Result<TuneTable, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| format!("parse {path}: {e}"))?;
+        let t = TuneTable::from_json(&j)?;
+        t.validate()?;
+        Ok(t)
+    }
+}
+
+impl Default for TuneTable {
+    fn default() -> TuneTable {
+        TuneTable::new()
+    }
+}
+
+/// One measured sweep cell (kept alongside the winners so any cell's
+/// regression is visible in bench-artifact diffs).
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub class: String,
+    pub m: usize,
+    pub k: usize,
+    pub o: usize,
+    pub kernel: &'static str,
+    pub threads: usize,
+    pub secs: f64,
+}
+
+/// Sweep kernel × thread count over the given shapes on synthetic int8
+/// data, routed exactly as the layers route (decode shapes take the
+/// panel-repacked GEMV, prefill shapes the M-tiled GEMM), and record
+/// the per-class winner. `iters` bounds per-cell timing (min-of-iters);
+/// small values are fine — the point is a stable ordering on this
+/// machine, not a publication-grade measurement. All candidates are
+/// bit-exact, so a noisy pick costs time, never correctness.
+pub fn tune(
+    shapes: &[(usize, usize, usize)],
+    threads: &[usize],
+    iters: usize,
+) -> (TuneTable, Vec<SweepRow>) {
+    let mut table = TuneTable::new();
+    let mut rows = Vec::new();
+    let mut rng = XorShift::new(0x7A11);
+    let pools: Vec<(usize, Arc<ThreadPool>)> = threads
+        .iter()
+        .map(|&t| {
+            let pool = if t <= 1 { ThreadPool::serial() } else { Arc::new(ThreadPool::new(t)) };
+            (t.max(1), pool)
+        })
+        .collect();
+    for &(m, k, o) in shapes {
+        let class = shape_class(m, k, o);
+        let x: Vec<i8> =
+            (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let w: Vec<i8> =
+            (0..o * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let wp = pack_b_panels(&w, o, k);
+        let decode = m < MT / 2;
+        for kern in available_kernels() {
+            for (t, pool) in &pools {
+                let secs = measure(iters, || {
+                    if decode {
+                        std::hint::black_box(gemm_i8_panels_pool_with(
+                            pool, kern, &x, &wp, m, o, k,
+                        ));
+                    } else {
+                        std::hint::black_box(gemm_i8_mtile_pool_with(
+                            pool, kern, &x, &w, m, o, k,
+                        ));
+                    }
+                });
+                rows.push(SweepRow {
+                    class: class.clone(),
+                    m,
+                    k,
+                    o,
+                    kernel: kern.name(),
+                    threads: *t,
+                    secs,
+                });
+                let better = match table.entries.get(&class) {
+                    Some(e) => secs < e.secs,
+                    None => true,
+                };
+                if better {
+                    table.entries.insert(
+                        class.clone(),
+                        TuneEntry { kernel: kern.name().to_string(), threads: *t, secs },
+                    );
+                }
+            }
+        }
+    }
+    (table, rows)
+}
+
+fn measure(iters: usize, mut f: impl FnMut()) -> f64 {
+    f(); // warm caches and pool wakeups before timing
+    let mut best = f64::INFINITY;
+    for _ in 0..iters.max(1) {
+        let t0 = std::time::Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// The `tuner` section merged into `BENCH_kernel_square.json`: every
+/// swept cell plus the per-class winners.
+pub fn tuner_json(table: &TuneTable, rows: &[SweepRow]) -> Json {
+    let rows_json: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("class", Json::Str(r.class.clone())),
+                ("m", Json::Num(r.m as f64)),
+                ("k", Json::Num(r.k as f64)),
+                ("o", Json::Num(r.o as f64)),
+                ("kernel", Json::Str(r.kernel.to_string())),
+                ("threads", Json::Num(r.threads as f64)),
+                ("secs", Json::Num(r.secs)),
+            ])
+        })
+        .collect();
+    let winners: Vec<Json> = table
+        .entries
+        .iter()
+        .map(|(class, e)| {
+            obj(vec![
+                ("class", Json::Str(class.clone())),
+                ("kernel", Json::Str(e.kernel.clone())),
+                ("threads", Json::Num(e.threads as f64)),
+                ("secs", Json::Num(e.secs)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("bench", Json::Str("autotune".into())),
+        ("version", Json::Num(table.version as f64)),
+        ("cpu", Json::Str(table.cpu.clone())),
+        ("rows", Json::Arr(rows_json)),
+        ("winners", Json::Arr(winners)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_table() -> (TuneTable, Vec<SweepRow>) {
+        tune(&[(1, 32, 24), (16, 32, 24)], &[1, 2], 1)
+    }
+
+    #[test]
+    fn sweep_covers_every_class_and_roundtrips() {
+        let (table, rows) = tiny_table();
+        assert_eq!(table.entries.len(), 2);
+        let names: Vec<&str> = available_kernels().iter().map(|k| k.name()).collect();
+        assert_eq!(rows.len(), 2 * names.len() * 2);
+        for e in table.entries.values() {
+            assert!(names.contains(&e.kernel.as_str()), "{}", e.kernel);
+            assert!(e.threads == 1 || e.threads == 2);
+            assert!(e.secs.is_finite() && e.secs >= 0.0);
+        }
+        // write -> load -> identical table and dispatch decisions
+        let back =
+            TuneTable::from_json(&Json::parse(&table.to_json().to_string_pretty()).unwrap())
+                .unwrap();
+        assert_eq!(back, table);
+        back.validate().unwrap();
+        for &(m, k, o) in &[(1usize, 32usize, 24usize), (16, 32, 24)] {
+            let a = table.decision(m, k, o).unwrap();
+            let b = back.decision(m, k, o).unwrap();
+            assert_eq!(a.kernel, b.kernel);
+            assert_eq!(a.threads, b.threads);
+        }
+        // a same-bucket shape resolves to the same class
+        assert!(table.decision(2, 30, 20).is_some());
+        // an unswept class has no decision (caller falls back to auto)
+        assert!(table.decision(1, 4096, 4096).is_none());
+    }
+
+    #[test]
+    fn stale_and_foreign_tables_rejected() {
+        let mut table = TuneTable::new();
+        table.entries.insert(
+            "decode:k32:o32".into(),
+            TuneEntry { kernel: "blocked".into(), threads: 1, secs: 0.1 },
+        );
+        table.validate().unwrap();
+        table.version = TABLE_VERSION + 1;
+        assert!(table.validate().unwrap_err().contains("stale"));
+        table.version = TABLE_VERSION;
+        table.cpu = "z80|some-other-machine|avx9000".into();
+        assert!(table.validate().unwrap_err().contains("foreign"));
+    }
+
+    #[test]
+    fn save_load_rejects_missing_garbage_and_accepts_own() {
+        let path = std::env::temp_dir()
+            .join(format!("slidesparse_tune_test_{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(TuneTable::load(&path).is_err()); // missing
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(TuneTable::load(&path).is_err()); // garbage
+        let mut table = TuneTable::new();
+        table.entries.insert(
+            "prefill:k64:o64".into(),
+            TuneEntry { kernel: "scalar".into(), threads: 4, secs: 0.5 },
+        );
+        table.save(&path).unwrap();
+        let loaded = TuneTable::load(&path).unwrap();
+        assert_eq!(loaded, table);
+        // a stale on-disk table is rejected by load, not silently used
+        let mut stale = table.clone();
+        stale.version = TABLE_VERSION + 7;
+        std::fs::write(&path, stale.to_json().to_string_pretty()).unwrap();
+        assert!(TuneTable::load(&path).unwrap_err().contains("stale"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn shape_class_buckets_follow_routing() {
+        assert_eq!(shape_class(1, 256, 256), "decode:k256:o256");
+        assert_eq!(shape_class(7, 200, 200), "decode:k256:o256");
+        assert_eq!(shape_class(8, 256, 256), "prefill:k256:o256");
+        assert_eq!(shape_class(64, 1000, 100), "prefill:k1024:o128");
+    }
+
+    #[test]
+    fn signature_names_this_machine() {
+        let sig = cpu_signature();
+        assert!(sig.starts_with(std::env::consts::ARCH));
+        // feature list must agree with runtime detection
+        assert_eq!(sig.contains("vnni"), crate::stc::microkernel::vnni_available());
+    }
+}

@@ -173,6 +173,118 @@ fn row_cols_block(xr: &[i8], w: &[i8], k: usize, c0: usize, yr: &mut [i32]) {
     }
 }
 
+/// Column-blocked B-panel repack for the decode GEMV: relay the dense
+/// weight matrix [o, k] row-major into K-major MT-wide panels — panel p
+/// holds weight rows [p*MT, p*MT+MT) as
+/// `wp[p*k*MT + kk*MT + lane] = w[(p*MT + lane)*k + kk]` (zero-padded
+/// tail rows). Done once at pack/load time; each K step of the GEMV then
+/// streams one contiguous 16-byte slice instead of striding `k` bytes
+/// between weight rows — and because a panel has exactly the tile shape
+/// the [`Microkernel`] primitives expect, the small-m decode path runs
+/// on the installed backend (the activation row rides in the "weight
+/// row" slot).
+pub fn pack_b_panels(w: &[i8], o: usize, k: usize) -> Vec<i8> {
+    // same relayout as the activation-side tiling, applied to B once
+    transpose_tiles_i8(w, o, k)
+}
+
+/// Panel block worker shared by the serial and pooled panel kernels: one
+/// activation row `xr` against B-panels [p0, p1), writing the output
+/// slice covering exactly those panels' columns. Each call to
+/// `dense_mtile_acc` yields MT output columns; per-element accumulation
+/// is ascending-K, independent of the split and of the backend, so any
+/// partitioning × backend is bit-exact with the row-major K-inner run.
+fn row_panels_block(
+    kern: &dyn Microkernel,
+    xr: &[i8],
+    wp: &[i8],
+    k: usize,
+    o: usize,
+    p0: usize,
+    p1: usize,
+    yr: &mut [i32],
+) {
+    for p in p0..p1 {
+        let panel = &wp[p * k * MT..(p + 1) * k * MT];
+        let mut acc = [0i32; MT];
+        kern.dense_mtile_acc(panel, xr, &mut acc);
+        let c0 = p * MT;
+        let cols = (o - c0).min(MT);
+        for lane in 0..cols {
+            yr[c0 + lane - p0 * MT] = acc[lane];
+        }
+    }
+}
+
+/// Panel-repacked dense int8 GEMM for small m (the decode path) on an
+/// explicit microkernel backend: one activation row at a time against
+/// the B-panels from [`pack_b_panels`]. Bit-exact with [`gemm_i8`].
+pub fn gemm_i8_panels_with(
+    kern: &dyn Microkernel,
+    x: &[i8],
+    wp: &[i8],
+    m: usize,
+    o: usize,
+    k: usize,
+) -> Vec<i32> {
+    assert_eq!(x.len(), m * k);
+    let panels = o.div_ceil(MT);
+    assert_eq!(wp.len(), panels * k * MT);
+    let mut y = vec![0i32; m * o];
+    for r in 0..m {
+        row_panels_block(
+            kern,
+            &x[r * k..(r + 1) * k],
+            wp,
+            k,
+            o,
+            0,
+            panels,
+            &mut y[r * o..(r + 1) * o],
+        );
+    }
+    y
+}
+
+/// Pooled panel-repacked dense GEMM for small m: every (row,
+/// panel-block) pair becomes one task, so even an m=1 GEMV partitions
+/// over output panels. Bit-exact with `gemm_i8` / `gemm_i8_panels_with`
+/// at any thread count. This is the `_with` variant of the decode
+/// K-inner path: unlike [`gemm_i8_pool`], it honors the installed
+/// microkernel backend.
+pub fn gemm_i8_panels_pool_with(
+    pool: &crate::util::ThreadPool,
+    kern: &dyn Microkernel,
+    x: &[i8],
+    wp: &[i8],
+    m: usize,
+    o: usize,
+    k: usize,
+) -> Vec<i32> {
+    if pool.is_serial() {
+        return gemm_i8_panels_with(kern, x, wp, m, o, k);
+    }
+    assert_eq!(x.len(), m * k);
+    let panels = o.div_ceil(MT);
+    assert_eq!(wp.len(), panels * k * MT);
+    let ranges = crate::util::pool::partition(panels, pool.threads());
+    let nr = ranges.len();
+    // row-major (row, panel-block) grid: chunks of row r are consecutive
+    let lens: Vec<usize> = (0..m * nr)
+        .map(|i| {
+            let (p0, p1) = ranges[i % nr];
+            (p1 * MT).min(o) - p0 * MT
+        })
+        .collect();
+    let mut y = vec![0i32; m * o];
+    crate::util::pool::run_over_chunks(pool, &mut y, &lens, |i, chunk| {
+        let r = i / nr;
+        let (p0, p1) = ranges[i % nr];
+        row_panels_block(kern, &x[r * k..(r + 1) * k], wp, k, o, p0, p1, chunk);
+    });
+    y
+}
+
 /// y[m,o] = sum_k x[m,k] * w[o,k]  -- int8 inputs, int32 accumulation.
 /// Row-major x [m,k], w [o,k]; output [m,o].
 pub fn gemm_i8(x: &[i8], w: &[i8], m: usize, o: usize, k: usize) -> Vec<i32> {
@@ -185,9 +297,12 @@ pub fn gemm_i8(x: &[i8], w: &[i8], m: usize, o: usize, k: usize) -> Vec<i32> {
     y
 }
 
-/// Pooled k-inner dense int8 GEMM for small m (the decode path): every
-/// (row, output-column block) pair becomes one task, so even an m=1 GEMV
-/// partitions over output rows. Bit-exact with `gemm_i8`.
+/// Pooled k-inner dense int8 GEMM for small m: every (row,
+/// output-column block) pair becomes one task, so even an m=1 GEMV
+/// partitions over output rows. Bit-exact with `gemm_i8`. This is the
+/// kernel-agnostic row-major baseline (and the comparator the benches
+/// measure the panel repack against); the serving decode path uses
+/// [`gemm_i8_panels_pool_with`], which honors the installed backend.
 pub fn gemm_i8_pool(
     pool: &crate::util::ThreadPool,
     x: &[i8],
@@ -334,6 +449,55 @@ mod tests {
                 gemm_i8_mtile(&x, &w, m, o, k)
             );
             assert_eq!(gemm_i8_pool(&pool, &x, &w, m, o, k), gemm_i8(&x, &w, m, o, k));
+        }
+    }
+
+    #[test]
+    fn prop_panel_gemv_matches_rowmajor() {
+        // the panel-repack round-trip guarantee, on the scalar backend
+        // only so the property also holds under Miri: repacking B into
+        // K-major MT-wide panels and reducing with the microkernel
+        // primitive is bit-exact with the row-major K-inner GEMV
+        use crate::stc::microkernel::ScalarKernel;
+        crate::util::prop::for_all("panel gemv == row-major gemv", |rng: &mut XorShift, _case| {
+            let m = 1 + rng.below(7); // the small-m decode regime
+            let k = 1 + rng.below(40);
+            let o = 1 + rng.below(40);
+            let x: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let w: Vec<i8> = (0..o * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let wp = pack_b_panels(&w, o, k);
+            assert_eq!(
+                gemm_i8_panels_with(&ScalarKernel, &x, &wp, m, o, k),
+                gemm_i8(&x, &w, m, o, k),
+                "({m},{o},{k})"
+            );
+        });
+    }
+
+    #[test]
+    fn panel_every_backend_and_pool_matches_rowmajor() {
+        use crate::util::ThreadPool;
+        let mut rng = XorShift::new(31);
+        let pool = ThreadPool::new(4);
+        for (m, o, k) in [(1, 9, 16), (3, 33, 48), (7, 64, 33)] {
+            let x: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let w: Vec<i8> = (0..o * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let wp = pack_b_panels(&w, o, k);
+            let want = gemm_i8(&x, &w, m, o, k);
+            for kern in crate::stc::microkernel::available_kernels() {
+                assert_eq!(
+                    gemm_i8_panels_with(kern, &x, &wp, m, o, k),
+                    want,
+                    "serial {} ({m},{o},{k})",
+                    kern.name()
+                );
+                assert_eq!(
+                    gemm_i8_panels_pool_with(&pool, kern, &x, &wp, m, o, k),
+                    want,
+                    "pooled {} ({m},{o},{k})",
+                    kern.name()
+                );
+            }
         }
     }
 

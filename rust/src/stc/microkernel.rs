@@ -25,6 +25,17 @@
 //!   why `_mm256_maddubs_epi16`, which saturates its i16 pair sums, is
 //!   NOT used), so the AVX2 path is bit-identical to the scalar
 //!   reference.
+//! * `VnniKernel` (x86_64 only) — AVX-512 VNNI: `vpdpbusd`
+//!   (`_mm512_dpbusd_epi32`) reduces four K steps per i32 lane in one
+//!   instruction. The instruction multiplies UNSIGNED bytes against
+//!   signed bytes, so activations are biased by +128 and the known
+//!   surplus `128 · Σw` is subtracted at flush time — the signed×signed
+//!   correction, exact in i32, keeping the path bit-identical to scalar.
+//! * `NeonKernel` (aarch64 only) — core NEON: per K step one contiguous
+//!   16-byte tile row is multiplied by a broadcast weight with the
+//!   widening `vmull_s8` and widen-accumulated into i32x4 registers; no
+//!   i16 pair is summed before widening (two full-range products would
+//!   overflow i16), so the path is exact on every aarch64 core.
 //!
 //! Every backend produces bit-identical i32 accumulators: integer
 //! addition is associative, each output element is reduced over the same
@@ -33,10 +44,11 @@
 //! backend × thread count × family pattern.
 //!
 //! Selection is by [`KernelChoice`] (the `kernel` knob in the serving
-//! config): `auto` resolves to AVX2 when the CPU supports it and the
-//! blocked portable kernel otherwise; requesting `avx2` on a machine
-//! without it falls back to the scalar reference (the documented non-x86
-//! fallback) rather than failing.
+//! config): `auto` resolves to the widest available dot product in the
+//! documented order **vnni > avx2 > neon > blocked**; requesting a
+//! specific SIMD backend on a machine without it falls back to the
+//! scalar reference rather than failing. Measured (rather than assumed)
+//! per-shape selection lives in [`crate::stc::autotune`].
 
 use crate::stc::dense::MT;
 
@@ -410,6 +422,383 @@ mod avx2 {
 pub use avx2::Avx2Kernel;
 
 // ---------------------------------------------------------------------
+// x86_64 AVX-512 VNNI kernel
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod vnni {
+    use super::{BlockedKernel, Microkernel, MT};
+    use std::arch::x86_64::*;
+
+    /// AVX-512 VNNI path: `vpdpbusd` (`_mm512_dpbusd_epi32`) reduces a
+    /// byte quad per i32 lane in one instruction, so four K steps of the
+    /// MT-wide tile collapse into one multiply-accumulate. `vpdpbusd`
+    /// multiplies UNSIGNED bytes from its first operand against signed
+    /// bytes from its second; signed activations are therefore biased by
+    /// +128 (xor 0x80) before the dot product and the accumulated
+    /// surplus `128 · Σw` is subtracted at flush time. Both the biased
+    /// per-quad i16 sums (|(x+128)·w| ≤ 255·128 < 2^15) and the i32
+    /// correction are exact, so the backend stays bit-identical to the
+    /// scalar reference. Only selectable when
+    /// `is_x86_feature_detected!("avx512f") && ("avx512vnni")` holds.
+    pub struct VnniKernel;
+
+    impl VnniKernel {
+        pub fn available() -> bool {
+            // Miri interprets rather than executes vector intrinsics:
+            // report the backend unavailable under it (same policy as
+            // the AVX2 backend) so dispatch and the sweeps skip SIMD
+            !cfg!(miri)
+                && is_x86_feature_detected!("avx512f")
+                && is_x86_feature_detected!("avx512vnni")
+        }
+    }
+
+    /// Pack four i8 weights into the byte quad `vpdpbusd` multiplies
+    /// against each activation quad (little-endian within the i32 lane).
+    #[inline]
+    fn wquad(w0: i8, w1: i8, w2: i8, w3: i8) -> i32 {
+        i32::from_le_bytes([w0 as u8, w1 as u8, w2 as u8, w3 as u8])
+    }
+
+    /// Load four MT-wide tile rows and byte-transpose them so i32 lane
+    /// `l` holds the quad `(r0[l], r1[l], r2[l], r3[l])` — the operand
+    /// shape `vpdpbusd` reduces in one step.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX-512F is available and each pointer reads
+    /// 16 valid bytes.
+    #[target_feature(enable = "avx512f")]
+    unsafe fn interleave4(
+        r0: *const i8,
+        r1: *const i8,
+        r2: *const i8,
+        r3: *const i8,
+    ) -> __m512i {
+        let a = _mm_loadu_si128(r0 as *const __m128i);
+        let b = _mm_loadu_si128(r1 as *const __m128i);
+        let c = _mm_loadu_si128(r2 as *const __m128i);
+        let d = _mm_loadu_si128(r3 as *const __m128i);
+        let ab_lo = _mm_unpacklo_epi8(a, b);
+        let ab_hi = _mm_unpackhi_epi8(a, b);
+        let cd_lo = _mm_unpacklo_epi8(c, d);
+        let cd_hi = _mm_unpackhi_epi8(c, d);
+        let q0 = _mm_unpacklo_epi16(ab_lo, cd_lo); // lanes 0..3
+        let q1 = _mm_unpackhi_epi16(ab_lo, cd_lo); // lanes 4..7
+        let q2 = _mm_unpacklo_epi16(ab_hi, cd_hi); // lanes 8..11
+        let q3 = _mm_unpackhi_epi16(ab_hi, cd_hi); // lanes 12..15
+        let v = _mm512_castsi128_si512(q0);
+        let v = _mm512_inserti32x4::<1>(v, q1);
+        let v = _mm512_inserti32x4::<2>(v, q2);
+        _mm512_inserti32x4::<3>(v, q3)
+    }
+
+    /// Scatter the vector accumulator back to lane order, subtract the
+    /// +128 bias surplus, and add into `acc`.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX-512F is available.
+    #[target_feature(enable = "avx512f")]
+    unsafe fn flush_biased(vacc: __m512i, wsum: i32, acc: &mut [i32; MT]) {
+        let mut tmp = [0i32; MT];
+        let tp = tmp.as_mut_ptr();
+        _mm_storeu_si128(tp as *mut __m128i, _mm512_extracti32x4_epi32::<0>(vacc));
+        _mm_storeu_si128(tp.add(4) as *mut __m128i, _mm512_extracti32x4_epi32::<1>(vacc));
+        _mm_storeu_si128(tp.add(8) as *mut __m128i, _mm512_extracti32x4_epi32::<2>(vacc));
+        _mm_storeu_si128(tp.add(12) as *mut __m128i, _mm512_extracti32x4_epi32::<3>(vacc));
+        let bias = wsum.wrapping_mul(128);
+        for lane in 0..MT {
+            // wrapping: the biased partial sums may transiently exceed
+            // i32 range even when the true (corrected) total fits; the
+            // correction is exact in wrap-around arithmetic
+            acc[lane] = acc[lane].wrapping_add(tmp[lane].wrapping_sub(bias));
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX-512F + AVX-512 VNNI are available and
+    /// `xt` holds at least `w.len() * MT` bytes.
+    #[target_feature(enable = "avx512f,avx512vnni")]
+    unsafe fn dense_mtile_acc_vnni(xt: &[i8], w: &[i8], acc: &mut [i32; MT]) {
+        let k = w.len();
+        let k4 = k - k % 4;
+        let sign = _mm512_set1_epi8(-128); // 0x80: i8 -> biased u8
+        let mut vacc = _mm512_setzero_si512();
+        let mut wsum = 0i32;
+        let xp = xt.as_ptr();
+        let mut kk = 0;
+        while kk < k4 {
+            let quad = interleave4(
+                xp.add(kk * MT),
+                xp.add((kk + 1) * MT),
+                xp.add((kk + 2) * MT),
+                xp.add((kk + 3) * MT),
+            );
+            let biased = _mm512_xor_si512(quad, sign);
+            let wq = _mm512_set1_epi32(wquad(w[kk], w[kk + 1], w[kk + 2], w[kk + 3]));
+            vacc = _mm512_dpbusd_epi32(vacc, biased, wq);
+            wsum += w[kk] as i32 + w[kk + 1] as i32 + w[kk + 2] as i32 + w[kk + 3] as i32;
+            kk += 4;
+        }
+        flush_biased(vacc, wsum, acc);
+        while kk < k {
+            let wv = w[kk] as i32;
+            let xcol = &xt[kk * MT..kk * MT + MT];
+            for lane in 0..MT {
+                acc[lane] += wv * xcol[lane] as i32;
+            }
+            kk += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX-512F + AVX-512 VNNI are available and
+    /// every `cols[t] * MT + MT` stays within `xt`.
+    #[target_feature(enable = "avx512f,avx512vnni")]
+    unsafe fn compressed_mtile_acc_vnni(
+        xt: &[i8],
+        vals: &[i8],
+        cols: &[u32],
+        acc: &mut [i32; MT],
+    ) {
+        let half = vals.len();
+        let h4 = half - half % 4;
+        let sign = _mm512_set1_epi8(-128);
+        let mut vacc = _mm512_setzero_si512();
+        let mut wsum = 0i32;
+        let xp = xt.as_ptr();
+        let mut t = 0;
+        while t < h4 {
+            let quad = interleave4(
+                xp.add(cols[t] as usize * MT),
+                xp.add(cols[t + 1] as usize * MT),
+                xp.add(cols[t + 2] as usize * MT),
+                xp.add(cols[t + 3] as usize * MT),
+            );
+            let biased = _mm512_xor_si512(quad, sign);
+            let wq = _mm512_set1_epi32(wquad(vals[t], vals[t + 1], vals[t + 2], vals[t + 3]));
+            vacc = _mm512_dpbusd_epi32(vacc, biased, wq);
+            wsum += vals[t] as i32 + vals[t + 1] as i32 + vals[t + 2] as i32 + vals[t + 3] as i32;
+            t += 4;
+        }
+        flush_biased(vacc, wsum, acc);
+        while t < half {
+            let v = vals[t] as i32;
+            let c = cols[t] as usize;
+            let xcol = &xt[c * MT..c * MT + MT];
+            for lane in 0..MT {
+                acc[lane] += v * xcol[lane] as i32;
+            }
+            t += 1;
+        }
+    }
+
+    impl Microkernel for VnniKernel {
+        fn name(&self) -> &'static str {
+            "vnni"
+        }
+
+        fn dense_mtile_acc(&self, xt: &[i8], w: &[i8], acc: &mut [i32; MT]) {
+            // hard assert, not debug: same guard as the AVX2 backend —
+            // the unchecked 16-byte loads must never read past the tile
+            assert!(xt.len() >= w.len() * MT, "tile shorter than K*MT");
+            // SAFETY: select() only hands out VnniKernel after runtime
+            // detection; the assert above keeps every 16-byte column
+            // load inside the tile.
+            unsafe { dense_mtile_acc_vnni(xt, w, acc) }
+        }
+
+        fn compressed_mtile_acc(
+            &self,
+            xt: &[i8],
+            vals: &[i8],
+            cols: &[u32],
+            acc: &mut [i32; MT],
+        ) {
+            assert_eq!(vals.len(), cols.len());
+            let kp = xt.len() / MT;
+            assert!(
+                cols.iter().all(|&c| (c as usize) < kp),
+                "stored column outside the K'-wide tile"
+            );
+            // SAFETY: detection as above; the asserts bound every
+            // cols[t]*MT + 16 load within xt.
+            unsafe { compressed_mtile_acc_vnni(xt, vals, cols, acc) }
+        }
+
+        fn gemv_dot(&self, x: &[i8], vals: &[i8], meta: &[u8]) -> i32 {
+            // the decode walk gathers 2 bytes per 4-byte window; even
+            // with VNNI there is no contiguous quad to feed vpdpbusd,
+            // so take the unrolled portable walk (bit-exact)
+            BlockedKernel.gemv_dot(x, vals, meta)
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub use vnni::VnniKernel;
+
+// ---------------------------------------------------------------------
+// aarch64 NEON kernel
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{BlockedKernel, Microkernel, MT};
+    use std::arch::aarch64::*;
+
+    /// Core-NEON path: each K step multiplies one contiguous 16-byte
+    /// tile row against a broadcast weight with the widening `vmull_s8`
+    /// (i8×i8 → exact i16 products) and widen-accumulates into four
+    /// i32x4 registers with `vaddw_s16`. No i16 pair is ever summed
+    /// before widening — two full-range products (16384 + 16384) would
+    /// already overflow i16 — so the path is bit-identical to the scalar
+    /// reference. (`sdot` would reduce a byte quad per lane in one step
+    /// but needs the optional dotprod extension; this baseline runs on
+    /// every aarch64 core, where NEON/ASIMD is architectural.)
+    pub struct NeonKernel;
+
+    impl NeonKernel {
+        pub fn available() -> bool {
+            // NEON is baseline on aarch64; only Miri opts out (it
+            // interprets rather than executes vector intrinsics)
+            !cfg!(miri)
+        }
+    }
+
+    /// One K step: widen-multiply 16 activation bytes by the broadcast
+    /// weight and accumulate into the four lane-ordered i32x4 registers.
+    ///
+    /// # Safety
+    /// Caller must ensure `row` points at 16 valid bytes.
+    #[target_feature(enable = "neon")]
+    unsafe fn mla_row(
+        row: *const i8,
+        wv: int8x8_t,
+        a0: &mut int32x4_t,
+        a1: &mut int32x4_t,
+        a2: &mut int32x4_t,
+        a3: &mut int32x4_t,
+    ) {
+        let x = vld1q_s8(row);
+        let lo = vmull_s8(vget_low_s8(x), wv); // lanes 0..7, exact i16
+        let hi = vmull_s8(vget_high_s8(x), wv); // lanes 8..15
+        *a0 = vaddw_s16(*a0, vget_low_s16(lo));
+        *a1 = vaddw_s16(*a1, vget_high_s16(lo));
+        *a2 = vaddw_s16(*a2, vget_low_s16(hi));
+        *a3 = vaddw_s16(*a3, vget_high_s16(hi));
+    }
+
+    /// Store the four lane-ordered vector accumulators and add into
+    /// `acc`.
+    ///
+    /// # Safety
+    /// Plain stores into a stack array; caller must be on a NEON core.
+    #[target_feature(enable = "neon")]
+    unsafe fn flush(
+        a0: int32x4_t,
+        a1: int32x4_t,
+        a2: int32x4_t,
+        a3: int32x4_t,
+        acc: &mut [i32; MT],
+    ) {
+        let mut tmp = [0i32; MT];
+        let tp = tmp.as_mut_ptr();
+        vst1q_s32(tp, a0);
+        vst1q_s32(tp.add(4), a1);
+        vst1q_s32(tp.add(8), a2);
+        vst1q_s32(tp.add(12), a3);
+        for lane in 0..MT {
+            acc[lane] += tmp[lane];
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure `xt` holds at least `w.len() * MT` bytes.
+    #[target_feature(enable = "neon")]
+    unsafe fn dense_mtile_acc_neon(xt: &[i8], w: &[i8], acc: &mut [i32; MT]) {
+        let mut a0 = vdupq_n_s32(0);
+        let mut a1 = vdupq_n_s32(0);
+        let mut a2 = vdupq_n_s32(0);
+        let mut a3 = vdupq_n_s32(0);
+        let xp = xt.as_ptr();
+        for (kk, &wv) in w.iter().enumerate() {
+            mla_row(xp.add(kk * MT), vdup_n_s8(wv), &mut a0, &mut a1, &mut a2, &mut a3);
+        }
+        flush(a0, a1, a2, a3, acc);
+    }
+
+    /// # Safety
+    /// Caller must ensure every `cols[t] * MT + MT` stays within `xt`.
+    #[target_feature(enable = "neon")]
+    unsafe fn compressed_mtile_acc_neon(
+        xt: &[i8],
+        vals: &[i8],
+        cols: &[u32],
+        acc: &mut [i32; MT],
+    ) {
+        let mut a0 = vdupq_n_s32(0);
+        let mut a1 = vdupq_n_s32(0);
+        let mut a2 = vdupq_n_s32(0);
+        let mut a3 = vdupq_n_s32(0);
+        let xp = xt.as_ptr();
+        for (t, &v) in vals.iter().enumerate() {
+            mla_row(
+                xp.add(cols[t] as usize * MT),
+                vdup_n_s8(v),
+                &mut a0,
+                &mut a1,
+                &mut a2,
+                &mut a3,
+            );
+        }
+        flush(a0, a1, a2, a3, acc);
+    }
+
+    impl Microkernel for NeonKernel {
+        fn name(&self) -> &'static str {
+            "neon"
+        }
+
+        fn dense_mtile_acc(&self, xt: &[i8], w: &[i8], acc: &mut [i32; MT]) {
+            // hard assert, not debug: same guard as the x86 SIMD
+            // backends — unchecked 16-byte loads must stay in the tile
+            assert!(xt.len() >= w.len() * MT, "tile shorter than K*MT");
+            // SAFETY: NEON is architectural on aarch64; the assert
+            // bounds every 16-byte column load within the tile.
+            unsafe { dense_mtile_acc_neon(xt, w, acc) }
+        }
+
+        fn compressed_mtile_acc(
+            &self,
+            xt: &[i8],
+            vals: &[i8],
+            cols: &[u32],
+            acc: &mut [i32; MT],
+        ) {
+            assert_eq!(vals.len(), cols.len());
+            let kp = xt.len() / MT;
+            assert!(
+                cols.iter().all(|&c| (c as usize) < kp),
+                "stored column outside the K'-wide tile"
+            );
+            // SAFETY: as above; the asserts bound every cols[t]*MT + 16
+            // load within xt.
+            unsafe { compressed_mtile_acc_neon(xt, vals, cols, acc) }
+        }
+
+        fn gemv_dot(&self, x: &[i8], vals: &[i8], meta: &[u8]) -> i32 {
+            // 2-of-4 byte gathers have no contiguous vector shape; take
+            // the unrolled portable walk (bit-exact, memory-bound path)
+            BlockedKernel.gemv_dot(x, vals, meta)
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+pub use neon::NeonKernel;
+
+// ---------------------------------------------------------------------
 // Runtime dispatch
 // ---------------------------------------------------------------------
 
@@ -417,7 +806,8 @@ pub use avx2::Avx2Kernel;
 /// the STC GEMMs run on. All choices are bit-exact; only speed differs.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum KernelChoice {
-    /// AVX2 when the CPU supports it, else the blocked portable kernel.
+    /// Best available backend, in the documented preference order
+    /// vnni > avx2 > neon > blocked (widest dot product first).
     #[default]
     Auto,
     /// The scalar reference (ground truth; slowest).
@@ -426,6 +816,10 @@ pub enum KernelChoice {
     Blocked,
     /// The explicit AVX2 kernel; falls back to scalar when unsupported.
     Avx2,
+    /// The AVX-512 VNNI kernel; falls back to scalar when unsupported.
+    Vnni,
+    /// The aarch64 NEON kernel; falls back to scalar when unsupported.
+    Neon,
 }
 
 impl KernelChoice {
@@ -435,6 +829,8 @@ impl KernelChoice {
             KernelChoice::Scalar => "scalar",
             KernelChoice::Blocked => "blocked",
             KernelChoice::Avx2 => "avx2",
+            KernelChoice::Vnni => "vnni",
+            KernelChoice::Neon => "neon",
         }
     }
 }
@@ -448,8 +844,10 @@ impl std::str::FromStr for KernelChoice {
             "scalar" => Ok(KernelChoice::Scalar),
             "blocked" => Ok(KernelChoice::Blocked),
             "avx2" => Ok(KernelChoice::Avx2),
+            "vnni" => Ok(KernelChoice::Vnni),
+            "neon" => Ok(KernelChoice::Neon),
             _ => Err(format!(
-                "unknown kernel '{s}' (want auto|scalar|blocked|avx2)"
+                "unknown kernel '{s}' (want auto|scalar|blocked|avx2|vnni|neon)"
             )),
         }
     }
@@ -465,6 +863,10 @@ static SCALAR: ScalarKernel = ScalarKernel;
 static BLOCKED: BlockedKernel = BlockedKernel;
 #[cfg(target_arch = "x86_64")]
 static AVX2: Avx2Kernel = Avx2Kernel;
+#[cfg(target_arch = "x86_64")]
+static VNNI: VnniKernel = VnniKernel;
+#[cfg(target_arch = "aarch64")]
+static NEON: NeonKernel = NeonKernel;
 
 /// Whether the explicit AVX2 path can run on this machine.
 pub fn avx2_available() -> bool {
@@ -478,18 +880,52 @@ pub fn avx2_available() -> bool {
     }
 }
 
-/// Resolve a [`KernelChoice`] to a backend. `Auto` prefers AVX2, then
-/// the blocked portable kernel; an explicit `Avx2` request on a machine
-/// without AVX2 falls back to the scalar reference (never errors — the
-/// choice flows in from user config and every backend is bit-exact).
+/// Whether the AVX-512 VNNI path can run on this machine.
+pub fn vnni_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        VnniKernel::available()
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Whether the aarch64 NEON path can run on this machine.
+pub fn neon_available() -> bool {
+    #[cfg(target_arch = "aarch64")]
+    {
+        NeonKernel::available()
+    }
+    #[cfg(not(target_arch = "aarch64"))]
+    {
+        false
+    }
+}
+
+/// Resolve a [`KernelChoice`] to a backend. `Auto` prefers the widest
+/// available dot product (vnni > avx2 > neon > blocked); an explicit
+/// SIMD request on a machine without the ISA falls back to the scalar
+/// reference (never errors — the choice flows in from user config and
+/// every backend is bit-exact).
 pub fn select(choice: KernelChoice) -> &'static dyn Microkernel {
     match choice {
         KernelChoice::Scalar => &SCALAR,
         KernelChoice::Blocked => &BLOCKED,
         KernelChoice::Auto => {
             #[cfg(target_arch = "x86_64")]
-            if Avx2Kernel::available() {
-                return &AVX2;
+            {
+                if VnniKernel::available() {
+                    return &VNNI;
+                }
+                if Avx2Kernel::available() {
+                    return &AVX2;
+                }
+            }
+            #[cfg(target_arch = "aarch64")]
+            if NeonKernel::available() {
+                return &NEON;
             }
             &BLOCKED
         }
@@ -497,6 +933,20 @@ pub fn select(choice: KernelChoice) -> &'static dyn Microkernel {
             #[cfg(target_arch = "x86_64")]
             if Avx2Kernel::available() {
                 return &AVX2;
+            }
+            &SCALAR
+        }
+        KernelChoice::Vnni => {
+            #[cfg(target_arch = "x86_64")]
+            if VnniKernel::available() {
+                return &VNNI;
+            }
+            &SCALAR
+        }
+        KernelChoice::Neon => {
+            #[cfg(target_arch = "aarch64")]
+            if NeonKernel::available() {
+                return &NEON;
             }
             &SCALAR
         }
@@ -510,13 +960,23 @@ pub fn auto_kernel() -> &'static dyn Microkernel {
 }
 
 /// Every backend that can run on this machine (scalar and blocked
-/// always; AVX2 when detected) — the sweep list for the conformance
-/// suite and the kernel-comparison bench tables.
+/// always; AVX2/VNNI/NEON when detected) — the sweep list for the
+/// conformance suite, the autotuner, and the kernel-comparison bench
+/// tables.
 pub fn available_kernels() -> Vec<&'static dyn Microkernel> {
     let mut v: Vec<&'static dyn Microkernel> = vec![&SCALAR, &BLOCKED];
     #[cfg(target_arch = "x86_64")]
-    if Avx2Kernel::available() {
-        v.push(&AVX2);
+    {
+        if Avx2Kernel::available() {
+            v.push(&AVX2);
+        }
+        if VnniKernel::available() {
+            v.push(&VNNI);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    if NeonKernel::available() {
+        v.push(&NEON);
     }
     v
 }
@@ -585,22 +1045,42 @@ mod tests {
         assert_eq!(select(KernelChoice::Scalar).name(), "scalar");
         assert_eq!(select(KernelChoice::Blocked).name(), "blocked");
         let auto = select(KernelChoice::Auto).name();
-        assert!(auto == "avx2" || auto == "blocked", "{auto}");
+        assert!(
+            ["vnni", "avx2", "neon", "blocked"].contains(&auto),
+            "{auto}"
+        );
+        // documented auto preference order: vnni > avx2 > neon > blocked
+        if vnni_available() {
+            assert_eq!(auto, "vnni");
+            assert_eq!(select(KernelChoice::Vnni).name(), "vnni");
+        } else {
+            // documented fallback: explicit SIMD request degrades to scalar
+            assert_eq!(select(KernelChoice::Vnni).name(), "scalar");
+            if avx2_available() {
+                assert_eq!(auto, "avx2");
+            }
+        }
         if avx2_available() {
-            assert_eq!(auto, "avx2");
             assert_eq!(select(KernelChoice::Avx2).name(), "avx2");
         } else {
-            // documented fallback: explicit avx2 request degrades to scalar
             assert_eq!(select(KernelChoice::Avx2).name(), "scalar");
+        }
+        if neon_available() {
+            assert_eq!(auto, "neon");
+            assert_eq!(select(KernelChoice::Neon).name(), "neon");
+        } else {
+            assert_eq!(select(KernelChoice::Neon).name(), "scalar");
         }
         let names: Vec<&str> = available_kernels().iter().map(|k| k.name()).collect();
         assert!(names.contains(&"scalar") && names.contains(&"blocked"));
         assert_eq!(names.contains(&"avx2"), avx2_available());
+        assert_eq!(names.contains(&"vnni"), vnni_available());
+        assert_eq!(names.contains(&"neon"), neon_available());
     }
 
     #[test]
     fn choice_parses_and_roundtrips() {
-        for s in ["auto", "scalar", "blocked", "avx2"] {
+        for s in ["auto", "scalar", "blocked", "avx2", "vnni", "neon"] {
             let c: KernelChoice = s.parse().unwrap();
             assert_eq!(c.as_str(), s);
             assert_eq!(c.to_string(), s);
@@ -611,19 +1091,28 @@ mod tests {
 
     #[test]
     fn extreme_values_stay_exact() {
-        // the saturation trap this module's madd scheme avoids: i8
-        // extremes whose i16 pair sums would saturate maddubs
+        // the saturation trap the madd scheme avoids (i8 extremes whose
+        // i16 pair sums would saturate maddubs) and the bias trap the
+        // VNNI signed correction must survive: saturated-positive and
+        // saturated-negative weights against extreme activations
         let kernels = available_kernels();
         let k = 32;
-        let xt = vec![-128i8; k * MT];
-        let w = vec![-128i8; k];
-        let mut want = [0i32; MT];
-        ScalarKernel.dense_mtile_acc(&xt, &w, &mut want);
-        assert!(want.iter().all(|&v| v == k as i32 * 16384));
-        for kern in &kernels {
-            let mut got = [0i32; MT];
-            kern.dense_mtile_acc(&xt, &w, &mut got);
-            assert_eq!(got, want, "{}", kern.name());
+        for (xv, wv, per) in [
+            (-128i8, -128i8, 16384i32), // (-128)^2: maddubs saturation trap
+            (-128, 127, -16256),        // biased activation is 0 under +128
+            (127, -128, -16256),        // biased 255 * -128: i16 min region
+            (127, 127, 16129),
+        ] {
+            let xt = vec![xv; k * MT];
+            let w = vec![wv; k];
+            let mut want = [0i32; MT];
+            ScalarKernel.dense_mtile_acc(&xt, &w, &mut want);
+            assert!(want.iter().all(|&v| v == k as i32 * per));
+            for kern in &kernels {
+                let mut got = [0i32; MT];
+                kern.dense_mtile_acc(&xt, &w, &mut got);
+                assert_eq!(got, want, "{} x={xv} w={wv}", kern.name());
+            }
         }
     }
 }

@@ -11,20 +11,26 @@
 //! ## Layering (see docs/ARCHITECTURE.md for the full walkthrough)
 //!
 //! * [`microkernel`] — the int8 dot-product primitives (scalar
-//!   reference, unrolled portable kernel, x86_64 AVX2) behind every
-//!   M-tile GEMM, selected at runtime by [`microkernel::KernelChoice`].
+//!   reference, unrolled portable kernel, x86_64 AVX2 and AVX-512 VNNI,
+//!   aarch64 NEON) behind every M-tile GEMM, selected at runtime by
+//!   [`microkernel::KernelChoice`].
 //! * [`dense`] / [`compressed`] — the outer loops: M-tile and K-inner
-//!   dense GEMMs, the `Compressed24` storage format, compressed GEMM
+//!   dense GEMMs (including the column-blocked B-panel repack for the
+//!   decode GEMV), the `Compressed24` storage format, compressed GEMM
 //!   and the metadata-walking decode GEMV, each with a pooled variant
 //!   partitioned over contiguous output blocks.
 //! * [`slide_gemm`] — the end-to-end operator: fused quant+lift (Psi)
 //!   -> compressed 2:4 GEMM over packed weights (Phi(W)) -> dequant.
+//! * [`autotune`] — measured per-shape-class dispatch: sweeps backends
+//!   × thread counts, persists winners to a versioned, CPU-keyed
+//!   `tune_table.json`.
 //!
 //! ## Bit-exactness invariants this layer guarantees
 //!
 //! 1. Every microkernel backend reduces each output element over the
 //!    same multiset of exact i32 products — integer addition is
-//!    associative, so scalar, blocked and AVX2 results are identical.
+//!    associative, so scalar, blocked, AVX2, VNNI (after its +128 bias
+//!    correction) and NEON results are identical.
 //! 2. Every pooled kernel assigns each output element to exactly one
 //!    task with the serial accumulation order, so results are identical
 //!    at any thread count.
@@ -35,11 +41,13 @@
 //!
 //! All three are gated by `rust/tests/conformance.rs`.
 
+pub mod autotune;
 pub mod compressed;
 pub mod dense;
 pub mod microkernel;
 pub mod slide_gemm;
 
+pub use autotune::{TuneDecision, TuneEntry, TuneTable};
 pub use compressed::{
     gemm_compressed_i8, gemm_compressed_i8_mtile, gemm_compressed_i8_mtile_pool,
     gemm_compressed_i8_mtile_pool_with, gemm_compressed_i8_mtile_with, gemv_compressed_i8,
@@ -48,11 +56,12 @@ pub use compressed::{
 };
 pub use dense::{
     gemm_f32, gemm_i8, gemm_i8_mtile, gemm_i8_mtile_pool, gemm_i8_mtile_pool_with,
-    gemm_i8_mtile_with, gemm_i8_pool,
+    gemm_i8_mtile_with, gemm_i8_panels_pool_with, gemm_i8_panels_with, gemm_i8_pool,
+    pack_b_panels,
 };
 pub use microkernel::{
-    auto_kernel, available_kernels, avx2_available, select as select_kernel, KernelChoice,
-    Microkernel,
+    auto_kernel, available_kernels, avx2_available, neon_available, select as select_kernel,
+    vnni_available, KernelChoice, Microkernel,
 };
 pub use slide_gemm::{DenseLinear, SlideLinear};
 

@@ -14,7 +14,7 @@ use crate::sparsity::prune::prune_magnitude;
 use crate::stc::compressed::{
     gemm_compressed_i8_mtile_pool_with, gemv_compressed_i8_batch_pool_with, Compressed24,
 };
-use crate::stc::dense::{gemm_i8_mtile_pool_with, gemm_i8_pool};
+use crate::stc::dense::{gemm_i8_mtile_pool_with, gemm_i8_panels_pool_with, pack_b_panels};
 use crate::stc::microkernel::{auto_kernel, Microkernel};
 use crate::util::ThreadPool;
 
@@ -32,6 +32,7 @@ pub struct SlideLinear {
     pub kernel: FusedQuantSlide,
     pool: Arc<ThreadPool>,
     micro: &'static dyn Microkernel,
+    micro_decode: &'static dyn Microkernel,
 }
 
 impl SlideLinear {
@@ -55,6 +56,7 @@ impl SlideLinear {
             kernel: FusedQuantSlide::new(k, n),
             pool: ThreadPool::serial(),
             micro: auto_kernel(),
+            micro_decode: auto_kernel(),
         }
     }
 
@@ -75,6 +77,7 @@ impl SlideLinear {
             kernel: FusedQuantSlide::new(k, n),
             pool: ThreadPool::serial(),
             micro: auto_kernel(),
+            micro_decode: auto_kernel(),
         }
     }
 
@@ -84,10 +87,19 @@ impl SlideLinear {
         self.pool = pool;
     }
 
-    /// Install an explicit microkernel backend (bit-exact with the
-    /// scalar reference on every backend; only speed differs).
+    /// Install an explicit microkernel backend on BOTH routing branches
+    /// (bit-exact with the scalar reference on every backend; only speed
+    /// differs).
     pub fn set_microkernel(&mut self, kern: &'static dyn Microkernel) {
         self.micro = kern;
+        self.micro_decode = kern;
+    }
+
+    /// Install a backend for the small-m decode branch only — the
+    /// autotuner's per-shape-class hook (decode and prefill winners can
+    /// differ).
+    pub fn set_decode_microkernel(&mut self, kern: &'static dyn Microkernel) {
+        self.micro_decode = kern;
     }
 
     /// Online phase: y [m, o] = dequant(compressed_gemm(fused(x))).
@@ -99,7 +111,13 @@ impl SlideLinear {
             // small batches: metadata-walking GEMVs partitioned over
             // output rows, all rows under one fork-join (no M-tile
             // padding waste; matches the dense small-m routing)
-            gemv_compressed_i8_batch_pool_with(&self.pool, self.micro, &xq, &self.weights, m)
+            gemv_compressed_i8_batch_pool_with(
+                &self.pool,
+                self.micro_decode,
+                &xq,
+                &self.weights,
+                m,
+            )
         } else {
             gemm_compressed_i8_mtile_pool_with(&self.pool, self.micro, &xq, &self.weights, m)
         };
@@ -118,21 +136,30 @@ pub struct DenseLinear {
     pub o: usize,
     pub k: usize,
     pub wq: Vec<i8>,
+    /// Column-blocked B-panel relayout of `wq` (see
+    /// [`crate::stc::dense::pack_b_panels`]), built once at prepare time
+    /// so the decode GEMV streams K-major panels instead of striding
+    /// weight rows.
+    pub wpan: Vec<i8>,
     pub w_scales: Vec<f32>,
     pool: Arc<ThreadPool>,
     micro: &'static dyn Microkernel,
+    micro_decode: &'static dyn Microkernel,
 }
 
 impl DenseLinear {
     pub fn prepare(w: &[f32], o: usize, k: usize) -> DenseLinear {
         let (wq, ws) = quantize_weight_per_channel(w, o, k);
+        let wpan = pack_b_panels(&wq, o, k);
         DenseLinear {
             o,
             k,
             wq,
+            wpan,
             w_scales: ws,
             pool: ThreadPool::serial(),
             micro: auto_kernel(),
+            micro_decode: auto_kernel(),
         }
     }
 
@@ -141,26 +168,45 @@ impl DenseLinear {
         self.pool = pool;
     }
 
-    /// Install an explicit microkernel backend (drives the M-tiled
-    /// prefill path; the small-m k-inner kernel is not tile-shaped and
-    /// stays on its own register-blocked loop).
+    /// Install an explicit microkernel backend on BOTH routing branches.
+    /// The small-m decode GEMV honors it too: the panel-repacked
+    /// K-inner path feeds the backend's tile primitive directly.
     pub fn set_microkernel(&mut self, kern: &'static dyn Microkernel) {
         self.micro = kern;
+        self.micro_decode = kern;
+    }
+
+    /// Install a backend for the small-m decode branch only — the
+    /// autotuner's per-shape-class hook.
+    pub fn set_decode_microkernel(&mut self, kern: &'static dyn Microkernel) {
+        self.micro_decode = kern;
     }
 
     pub fn forward(&self, x: &[f32], m: usize) -> Vec<f32> {
         let (xq, xs) = quantize_per_token(x, m, self.k);
-        // small batches: the k-inner blocked kernel partitioned over
-        // output columns (no M-tile padding waste); larger batches: the
-        // M-tiled kernel partitioned over row blocks
+        // small batches: the panel-repacked K-inner GEMV partitioned
+        // over output panels (no M-tile padding waste, honors the
+        // installed backend); larger batches: the M-tiled kernel
+        // partitioned over row blocks
         let acc = if m < crate::stc::dense::MT / 2 {
-            gemm_i8_pool(&self.pool, &xq, &self.wq, m, self.o, self.k)
+            gemm_i8_panels_pool_with(
+                &self.pool,
+                self.micro_decode,
+                &xq,
+                &self.wpan,
+                m,
+                self.o,
+                self.k,
+            )
         } else {
             gemm_i8_mtile_pool_with(&self.pool, self.micro, &xq, &self.wq, m, self.o, self.k)
         };
         dequantize(&acc, m, self.o, &xs, &self.w_scales)
     }
 
+    /// Serving weight footprint (quantized weights + scales). The
+    /// B-panel copy is a deliberate space-for-time trade on the decode
+    /// path and is not counted as model weight storage.
     pub fn weight_bytes(&self) -> usize {
         self.wq.len() + self.w_scales.len() * 4
     }
@@ -249,6 +295,98 @@ mod tests {
                 assert_eq!(base_s.forward(&x, m), s.forward(&x, m), "{} m={m}", kern.name());
                 assert_eq!(base_d.forward(&x, m), d.forward(&x, m), "{} m={m}", kern.name());
             }
+        }
+    }
+
+    #[test]
+    fn decode_path_exercises_installed_backend() {
+        // regression gate for the bug where the small-m dense branch ran
+        // a fixed register-blocked loop and silently ignored
+        // set_microkernel: install a counting wrapper backend and check
+        // the decode forward actually calls into it
+        use crate::stc::Microkernel;
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        struct CountingKernel {
+            dense_calls: AtomicUsize,
+            gemv_calls: AtomicUsize,
+        }
+
+        impl Microkernel for CountingKernel {
+            fn name(&self) -> &'static str {
+                "counting"
+            }
+            fn dense_mtile_acc(&self, xt: &[i8], w: &[i8], acc: &mut [i32; 16]) {
+                self.dense_calls.fetch_add(1, Ordering::Relaxed);
+                crate::stc::microkernel::ScalarKernel.dense_mtile_acc(xt, w, acc);
+            }
+            fn compressed_mtile_acc(
+                &self,
+                xt: &[i8],
+                vals: &[i8],
+                cols: &[u32],
+                acc: &mut [i32; 16],
+            ) {
+                crate::stc::microkernel::ScalarKernel.compressed_mtile_acc(xt, vals, cols, acc);
+            }
+            fn gemv_dot(&self, x: &[i8], vals: &[i8], meta: &[u8]) -> i32 {
+                self.gemv_calls.fetch_add(1, Ordering::Relaxed);
+                crate::stc::microkernel::ScalarKernel.gemv_dot(x, vals, meta)
+            }
+        }
+
+        let counting: &'static CountingKernel = Box::leak(Box::new(CountingKernel {
+            dense_calls: AtomicUsize::new(0),
+            gemv_calls: AtomicUsize::new(0),
+        }));
+
+        let mut rng = XorShift::new(99);
+        let (o, k, n, m) = (24, 48, 4, 1);
+        let w: Vec<f32> = (0..o * k).map(|_| rng.normal()).collect();
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+
+        let mut d = DenseLinear::prepare(&w, o, k);
+        let want_d = d.forward(&x, m);
+        d.set_microkernel(counting);
+        let got_d = d.forward(&x, m);
+        assert_eq!(got_d, want_d);
+        assert!(
+            counting.dense_calls.load(Ordering::Relaxed) > 0,
+            "dense decode branch never called the installed backend"
+        );
+
+        let mut s = SlideLinear::prepare(&w, o, k, n);
+        let want_s = s.forward(&x, m);
+        s.set_microkernel(counting);
+        let got_s = s.forward(&x, m);
+        assert_eq!(got_s, want_s);
+        assert!(
+            counting.gemv_calls.load(Ordering::Relaxed) > 0,
+            "slide decode branch never called the installed backend"
+        );
+    }
+
+    #[test]
+    fn decode_backend_installs_independently() {
+        // the autotuner installs per-shape-class winners: a decode-only
+        // override must change the decode branch and leave outputs exact
+        let mut rng = XorShift::new(123);
+        let (o, k, n) = (24, 48, 4);
+        let w: Vec<f32> = (0..o * k).map(|_| rng.normal()).collect();
+        let mut d = DenseLinear::prepare(&w, o, k);
+        let mut s = SlideLinear::prepare(&w, o, k, n);
+        d.set_decode_microkernel(crate::stc::select_kernel(
+            crate::stc::KernelChoice::Scalar,
+        ));
+        s.set_decode_microkernel(crate::stc::select_kernel(
+            crate::stc::KernelChoice::Scalar,
+        ));
+        let base_d = DenseLinear::prepare(&w, o, k);
+        let base_s = SlideLinear::prepare(&w, o, k, n);
+        for m in [1usize, 3, 17] {
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            assert_eq!(base_d.forward(&x, m), d.forward(&x, m), "dense m={m}");
+            assert_eq!(base_s.forward(&x, m), s.forward(&x, m), "slide m={m}");
         }
     }
 

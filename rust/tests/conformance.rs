@@ -3,8 +3,9 @@
 //! checked bit-exact against the dense int8 reference, the storage
 //! format round-trips, the pooled kernels are bit-exact with the
 //! single-threaded kernels at 1/2/4/8 threads, and every microkernel
-//! backend (scalar reference, blocked, AVX2 when the CPU has it) is
-//! bit-exact across that whole grid. All integer math — exact equality
+//! backend (scalar reference, blocked, AVX2/AVX-512-VNNI and NEON when
+//! the CPU has them) is bit-exact across that whole grid — including
+//! the panel-repacked decode GEMV. All integer math — exact equality
 //! throughout, no tolerances.
 
 use std::sync::Arc;
@@ -18,9 +19,9 @@ use slidesparse::sparsity::{pack_matrix, Pattern};
 use slidesparse::stc::{
     available_kernels, gemm_compressed_i8, gemm_compressed_i8_mtile,
     gemm_compressed_i8_mtile_pool, gemm_compressed_i8_mtile_pool_with, gemm_i8, gemm_i8_mtile,
-    gemm_i8_mtile_pool, gemm_i8_mtile_pool_with, gemm_i8_pool, gemv_compressed_i8,
-    gemv_compressed_i8_batch_pool, gemv_compressed_i8_batch_pool_with, gemv_compressed_i8_pool,
-    Compressed24,
+    gemm_i8_mtile_pool, gemm_i8_mtile_pool_with, gemm_i8_panels_pool_with, gemm_i8_pool,
+    gemv_compressed_i8, gemv_compressed_i8_batch_pool, gemv_compressed_i8_batch_pool_with,
+    gemv_compressed_i8_pool, pack_b_panels, Compressed24,
 };
 use slidesparse::util::prng::XorShift;
 use slidesparse::util::{prop, ThreadPool};
@@ -238,6 +239,7 @@ fn every_kernel_backend_bit_exact_across_patterns_and_threads() {
             }
 
             let reference = gemm_i8(&x, &wq, m, o, k);
+            let wpan = pack_b_panels(&wq, o, k);
             for kern in &kernels {
                 for pool in &pools {
                     let t = pool.threads();
@@ -251,6 +253,11 @@ fn every_kernel_backend_bit_exact_across_patterns_and_threads() {
                         gemm_i8_mtile_pool_with(pool, *kern, &x, &wq, m, o, k),
                         reference,
                         "dense mtile, kernel={name}, {t} threads, N={n}"
+                    );
+                    assert_eq!(
+                        gemm_i8_panels_pool_with(pool, *kern, &x, &wpan, m, o, k),
+                        reference,
+                        "panel-repacked gemv, kernel={name}, {t} threads, N={n}"
                     );
                     assert_eq!(
                         gemv_compressed_i8_batch_pool_with(pool, *kern, &lifted, &c, m),
