@@ -71,6 +71,50 @@ SCHEMAS = {
             "gen_tok_per_s",
         },
     },
+    "BENCH_serving_slo.json": {
+        "smoke": None,
+        "bench": None,
+        "schema_version": None,
+        "studies": None,
+    },
+}
+
+# required keys of each entry in BENCH_serving_slo.json's "studies" list
+STUDY_KEYS = {
+    "name",
+    "seed",
+    "arrival",
+    "requests",
+    "workers",
+    "routing",
+    "sparsity",
+    "submitted",
+    "accepted",
+    "shed",
+    "completed",
+    "deadline_missed",
+    "shed_rate",
+    "deadline_miss_rate",
+    "prompt_tokens",
+    "generated_tokens",
+    "preemptions",
+    "prefix_cached_tokens",
+    "stream_checksum",
+    "wall",
+}
+
+STUDY_WALL_KEYS = {
+    "ttft_p50_ms",
+    "ttft_p95_ms",
+    "ttft_p99_ms",
+    "itl_p50_ms",
+    "itl_p95_ms",
+    "itl_p99_ms",
+    "latency_p50_ms",
+    "latency_p95_ms",
+    "latency_p99_ms",
+    "gen_tok_per_s",
+    "wall_s",
 }
 
 
@@ -128,6 +172,44 @@ def validate(path: str) -> None:
             fail(f"{name}: migration imported no blocks")
         if data["serialize_gb_s"] <= 0.0 or data["deserialize_gb_s"] <= 0.0:
             fail(f"{name}: wire throughput must be positive")
+    if name == "BENCH_serving_slo.json":
+        if data["bench"] != "serving_slo":
+            fail(f"{name}: bench must be 'serving_slo'")
+        if not data["studies"]:
+            fail(f"{name}: no studies recorded")
+        for s in data["studies"]:
+            label = s.get("name", "<unnamed>")
+            missing = STUDY_KEYS - set(s)
+            if missing:
+                fail(f"{name}: study '{label}' missing keys {sorted(missing)}")
+            missing_wall = STUDY_WALL_KEYS - set(s["wall"])
+            if missing_wall:
+                fail(
+                    f"{name}: study '{label}' wall missing keys "
+                    f"{sorted(missing_wall)}"
+                )
+            for rate_key in ("shed_rate", "deadline_miss_rate"):
+                if not 0.0 <= s[rate_key] <= 1.0:
+                    fail(f"{name}: study '{label}' {rate_key} out of [0, 1]")
+            if s["accepted"] + s["shed"] != s["submitted"]:
+                fail(
+                    f"{name}: study '{label}' accepted+shed != submitted "
+                    f"({s['accepted']}+{s['shed']} != {s['submitted']})"
+                )
+            if s["completed"] != s["accepted"]:
+                fail(
+                    f"{name}: study '{label}' completed != accepted "
+                    f"(a session leaked or was double-counted)"
+                )
+            cs = s["stream_checksum"]
+            if not (
+                isinstance(cs, str)
+                and len(cs) == 16
+                and all(c in "0123456789abcdef" for c in cs)
+            ):
+                fail(f"{name}: study '{label}' stream_checksum not 16-hex: {cs!r}")
+            if s["wall"]["wall_s"] <= 0.0:
+                fail(f"{name}: study '{label}' wall_s must be positive")
     if name == "BENCH_prefix_reuse.json":
         if data["bit_exact"] is not True:
             fail(f"{name}: bit_exact must be true")

@@ -52,6 +52,13 @@ impl Config {
 
     pub fn from_json(text: &str) -> Result<Config> {
         let j = Json::parse(text).map_err(|e| anyhow!("config: {e}"))?;
+        Self::from_value(&j)
+    }
+
+    /// Build a config from an already-parsed JSON value. Split out of
+    /// `from_json` so embedded configs (e.g. the `serve` object inside a
+    /// traffic-study file, `crate::study`) share one parser.
+    pub fn from_value(j: &Json) -> Result<Config> {
         let mut cfg = Config::default();
         if let Some(v) = j.get("sparsity").and_then(|v| v.as_str()) {
             cfg.sparsity = v.to_string();
@@ -86,6 +93,9 @@ impl Config {
         if let Some(v) = j.get("migrate_kv").and_then(|v| v.as_bool()) {
             cfg.engine.migrate_kv = v;
         }
+        if let Some(v) = j.get("stream_events").and_then(|v| v.as_bool()) {
+            cfg.engine.stream_events = v;
+        }
         if let Some(e) = j.get("engine") {
             let mut ec = EngineConfig {
                 threads: cfg.engine.threads,
@@ -93,6 +103,7 @@ impl Config {
                 prefix_cache: cfg.engine.prefix_cache,
                 prefix_cache_bytes: cfg.engine.prefix_cache_bytes,
                 migrate_kv: cfg.engine.migrate_kv,
+                stream_events: cfg.engine.stream_events,
                 ..Default::default()
             };
             if let Some(v) = e.get("kv_blocks").and_then(|v| v.as_usize()) {
@@ -118,6 +129,9 @@ impl Config {
             }
             if let Some(v) = e.get("migrate_kv").and_then(|v| v.as_bool()) {
                 ec.migrate_kv = v;
+            }
+            if let Some(v) = e.get("stream_events").and_then(|v| v.as_bool()) {
+                ec.stream_events = v;
             }
             let mut sc = SchedulerConfig::default();
             if let Some(v) = e.get("max_batch").and_then(|v| v.as_usize()) {
@@ -295,6 +309,25 @@ mod tests {
         .unwrap();
         assert!(!nested.engine.migrate_kv);
         assert_eq!(nested.engine.prefix_cache_bytes, 256);
+    }
+
+    #[test]
+    fn stream_events_knob_parses_at_both_levels() {
+        assert!(!Config::default().engine.stream_events, "off by default");
+        let top = Config::from_json(r#"{"stream_events": true}"#).unwrap();
+        assert!(top.engine.stream_events);
+        // top-level value survives an "engine" object without the knob
+        let kept = Config::from_json(
+            r#"{"stream_events": true, "engine": {"kv_blocks": 32}}"#,
+        )
+        .unwrap();
+        assert!(kept.engine.stream_events);
+        // nested form wins when both are present
+        let nested = Config::from_json(
+            r#"{"stream_events": true, "engine": {"stream_events": false}}"#,
+        )
+        .unwrap();
+        assert!(!nested.engine.stream_events);
     }
 
     #[test]

@@ -13,7 +13,7 @@ use super::kvcache::{
     token_hash, BlockId, BlockManager, ByteLru, KvShard, KvShardBlock, PREFIX_HASH_SEED, SeqId,
 };
 use super::metrics::EngineMetrics;
-use super::request::{FinishReason, Request, RequestOutput};
+use super::request::{FinishReason, Request, RequestOutput, StreamEvent};
 use super::scheduler::{Scheduler, SchedulerConfig};
 use super::sequence::{Phase, Sequence};
 use crate::util::prng::XorShift;
@@ -56,6 +56,11 @@ pub struct EngineConfig {
     /// content-addressed cache); inert — and still bit-exact — without
     /// it.
     pub migrate_kv: bool,
+    /// emit per-token [`StreamEvent`]s as sequences decode (buffered on
+    /// the engine until drained via `poll_stream_events`, or pushed into
+    /// a channel the router installs). Off by default: streaming is an
+    /// observation channel and never changes scheduling or outputs.
+    pub stream_events: bool,
 }
 
 impl Default for EngineConfig {
@@ -70,7 +75,35 @@ impl Default for EngineConfig {
             prefix_cache: false,
             prefix_cache_bytes: 0,
             migrate_kv: false,
+            stream_events: false,
         }
+    }
+}
+
+/// Where per-token [`StreamEvent`]s go. `Buffer` is the direct-engine
+/// mode (callers drain via `poll_stream_events`); `Channel` is the
+/// router mode (worker threads push into one shared mpsc sender).
+enum StreamSink {
+    Off,
+    Buffer(Vec<StreamEvent>),
+    Channel(std::sync::mpsc::Sender<StreamEvent>),
+}
+
+impl StreamSink {
+    fn push(&mut self, ev: StreamEvent) {
+        match self {
+            StreamSink::Off => {}
+            StreamSink::Buffer(buf) => buf.push(ev),
+            // a dropped receiver just means nobody is listening anymore;
+            // generation itself must never fail because of it
+            StreamSink::Channel(tx) => {
+                let _ = tx.send(ev);
+            }
+        }
+    }
+
+    fn is_on(&self) -> bool {
+        !matches!(self, StreamSink::Off)
     }
 }
 
@@ -99,6 +132,8 @@ pub struct Engine<E: Executor> {
     /// so dedup is disabled there and every finish republishes.
     dedup_exports: bool,
     exported: HashMap<u64, usize>,
+    /// per-token event sink (see [`EngineConfig::stream_events`])
+    stream: StreamSink,
 }
 
 /// Bound on the publication-dedup map (mirrors the router's sticky-map
@@ -114,10 +149,17 @@ const KV_EXPORT_BACKLOG: usize = 64;
 
 impl<E: Executor> Engine<E> {
     pub fn new(mut executor: E, cfg: EngineConfig) -> Engine<E> {
-        executor.set_kernel(cfg.kernel);
-        executor.set_threads(cfg.threads);
+        // A pre-tuned executor (the router's `--tune` factory applies the
+        // table before handing it over) keeps its tuned kernel/threads;
+        // otherwise the config knobs are authoritative as before.
+        let tuned = executor.tuned_summary();
+        if tuned.is_empty() {
+            executor.set_kernel(cfg.kernel);
+            executor.set_threads(cfg.threads);
+        }
         let mut metrics = EngineMetrics::new();
         metrics.kernel = executor.kernel_label();
+        metrics.tuned = tuned;
         let blocks = BlockManager::new(cfg.kv_blocks, cfg.kv_block_size)
             .with_prefix_cache(cfg.prefix_cache);
         Engine {
@@ -133,7 +175,51 @@ impl<E: Executor> Engine<E> {
             kv_exports: Vec::new(),
             dedup_exports: cfg.prefix_cache_bytes == 0,
             exported: HashMap::new(),
+            stream: if cfg.stream_events {
+                StreamSink::Buffer(Vec::new())
+            } else {
+                StreamSink::Off
+            },
         }
+    }
+
+    /// Turn on buffered streaming (no-op if a sink is already installed).
+    /// Callers then drain per-token events via [`Engine::poll_stream_events`].
+    pub fn enable_stream_buffer(&mut self) {
+        if !self.stream.is_on() {
+            self.stream = StreamSink::Buffer(Vec::new());
+        }
+    }
+
+    /// Route stream events into `tx` instead of the internal buffer (the
+    /// router installs one shared sender per worker fleet). Any events
+    /// already buffered are forwarded first so none are lost.
+    pub fn set_stream_sink(&mut self, tx: std::sync::mpsc::Sender<StreamEvent>) {
+        if let StreamSink::Buffer(buf) = &mut self.stream {
+            for ev in buf.drain(..) {
+                let _ = tx.send(ev);
+            }
+        }
+        self.stream = StreamSink::Channel(tx);
+    }
+
+    /// Drain buffered stream events (empty in `Off`/`Channel` modes).
+    pub fn poll_stream_events(&mut self) -> Vec<StreamEvent> {
+        match &mut self.stream {
+            StreamSink::Buffer(buf) => std::mem::take(buf),
+            _ => Vec::new(),
+        }
+    }
+
+    /// Free KV blocks in the pool right now (cached blocks count as
+    /// free: they are reclaimable on demand).
+    pub fn kv_free_blocks(&self) -> usize {
+        self.scheduler.blocks.free_blocks() + self.scheduler.blocks.cached_blocks()
+    }
+
+    /// KV blocks pinned by live (unfinished) sequences.
+    pub fn kv_used_blocks(&self) -> usize {
+        self.scheduler.blocks.used_blocks()
     }
 
     /// Submit a request; rejects prompts the executor cannot hold.
@@ -146,14 +232,16 @@ impl<E: Executor> Engine<E> {
             || plen + request.params.max_new_tokens > self.executor.smax()
         {
             self.metrics.requests_rejected += 1;
-            self.outputs.push(RequestOutput {
+            let out = RequestOutput {
                 id: request.id,
                 prompt_len: plen,
                 tokens: vec![],
                 finish: FinishReason::Rejected,
                 ttft: 0.0,
                 latency: 0.0,
-            });
+            };
+            self.stream.push(StreamEvent::Finished { id: out.id, output: out.clone() });
+            self.outputs.push(out);
             return;
         }
         let seq_id = self.next_seq;
@@ -499,9 +587,6 @@ impl<E: Executor> Engine<E> {
         for ((mut seq, toks), lg) in taken.into_iter().zip(token_lists).zip(logits) {
             seq.pos = toks.len();
             seq.phase = Phase::Decoding;
-            if seq.first_token_at.is_none() {
-                seq.first_token_at = Some(Instant::now());
-            }
             let id = seq.seq_id;
             self.seqs.insert(id, seq);
             emits.push((id, lg));
@@ -558,6 +643,22 @@ impl<E: Executor> Engine<E> {
             sample_softmax(logits, temp, &mut self.rng) as i32
         };
         seq.output.push(tok);
+        // true per-token timestamps: TTFT is the instant the first token
+        // is actually sampled (not merely prefilled), and each gap feeds
+        // the inter-token-latency summary
+        let now = Instant::now();
+        if seq.first_token_at.is_none() {
+            seq.first_token_at = Some(now);
+        }
+        if let Some(prev) = seq.last_token_at {
+            self.metrics.itl.add(now.duration_since(prev).as_secs_f64());
+        }
+        seq.last_token_at = Some(now);
+        self.stream.push(StreamEvent::Token {
+            id: seq.request.id,
+            index: seq.output.len() - 1,
+            token: tok,
+        });
         self.metrics.generated_tokens += 1;
 
         if seq.should_stop() {
@@ -610,14 +711,56 @@ impl<E: Executor> Engine<E> {
         self.metrics.requests_finished += 1;
         self.metrics.ttft.add(ttft);
         self.metrics.latency.add(latency);
-        self.outputs.push(RequestOutput {
+        let out = RequestOutput {
             id: seq.request.id,
             prompt_len: seq.request.prompt.len(),
             tokens: seq.output,
             finish,
             ttft,
             latency,
-        });
+        };
+        self.stream.push(StreamEvent::Finished { id: out.id, output: out.clone() });
+        self.outputs.push(out);
+    }
+
+    /// Cancel a live request by its request id (deadline expiry, client
+    /// disconnect): the sequence finishes immediately with `finish`, its
+    /// KV blocks return to the pool, and a terminal output/event is
+    /// emitted with whatever tokens were already generated. Returns
+    /// false when no live sequence carries that request id (already
+    /// finished — the normal race, not an error).
+    pub fn cancel_request(&mut self, rid: super::request::RequestId, finish: FinishReason) -> bool {
+        let sid = match self.seqs.iter().find(|(_, s)| s.request.id == rid) {
+            Some((sid, _)) => *sid,
+            None => return false,
+        };
+        self.scheduler.finish(sid);
+        let mut seq = self.seqs.remove(&sid).unwrap();
+        seq.phase = Phase::Finished;
+        let now = Instant::now();
+        let ttft = seq
+            .first_token_at
+            .map(|t| t.duration_since(seq.request.arrival).as_secs_f64())
+            .unwrap_or(0.0);
+        let latency = now.duration_since(seq.request.arrival).as_secs_f64();
+        self.metrics.requests_finished += 1;
+        if finish == FinishReason::DeadlineExceeded {
+            self.metrics.deadline_missed += 1;
+        }
+        // cancelled requests stay out of the ttft/latency summaries: a
+        // deadline miss truncated at 250ms would otherwise read as a
+        // "fast" request and drag the served-percentiles down
+        let out = RequestOutput {
+            id: rid,
+            prompt_len: seq.request.prompt.len(),
+            tokens: seq.output,
+            finish,
+            ttft,
+            latency,
+        };
+        self.stream.push(StreamEvent::Finished { id: rid, output: out.clone() });
+        self.outputs.push(out);
+        true
     }
 }
 
@@ -959,6 +1102,144 @@ mod tests {
         assert_eq!(spills_uncapped, 0);
         assert!(spills_capped >= 2, "3 distinct prefixes through a 1-block budget");
         assert_eq!(stats_spills, spills_capped, "PrefixStats mirrors the spills");
+    }
+
+    #[test]
+    fn oversized_prompt_admits_and_completes() {
+        // regression (scheduler head-of-line deadlock): a prompt longer
+        // than the whole prefill token budget — but under max_prompt —
+        // used to spin has_work() forever without ever being admitted
+        let cfg = EngineConfig {
+            scheduler: SchedulerConfig {
+                max_batch: 4,
+                prefill_token_budget: 8,
+                watermark: 1.0,
+            },
+            ..Default::default()
+        };
+        let mut e = Engine::new(MockExecutor::new(1000, 64), cfg);
+        e.submit(req(1, (100..120).collect(), 3)); // 20 tokens > budget 8
+        e.submit(req(2, vec![7], 2));
+        let mut outs = e.run_to_completion().unwrap();
+        outs.sort_by_key(|o| o.id);
+        assert_eq!(outs.len(), 2, "both requests complete");
+        assert_eq!(outs[0].tokens, vec![120, 121, 122]);
+        assert_eq!(outs[0].finish, FinishReason::MaxTokens);
+        assert_eq!(outs[1].tokens, vec![8, 9]);
+    }
+
+    #[test]
+    fn stream_events_mirror_outputs_exactly() {
+        let cfg = EngineConfig { stream_events: true, ..Default::default() };
+        let mut e = Engine::new(MockExecutor::new(1000, 64), cfg);
+        e.submit(req(1, vec![10], 4));
+        e.submit(req(2, vec![50], 3));
+        let outs = e.run_to_completion().unwrap();
+        let events = e.poll_stream_events();
+        // rebuild each request's token list from its Token events
+        let mut streamed: HashMap<u64, Vec<i32>> = HashMap::new();
+        let mut finished: HashMap<u64, Vec<i32>> = HashMap::new();
+        for ev in events {
+            match ev {
+                StreamEvent::Token { id, index, token } => {
+                    let v = streamed.entry(id).or_default();
+                    assert_eq!(v.len(), index, "token indices arrive in order");
+                    v.push(token);
+                }
+                StreamEvent::Finished { id, output } => {
+                    finished.insert(id, output.tokens);
+                }
+            }
+        }
+        for out in &outs {
+            assert_eq!(streamed[&out.id], out.tokens, "id {}", out.id);
+            assert_eq!(finished[&out.id], out.tokens, "id {}", out.id);
+        }
+        assert!(e.poll_stream_events().is_empty(), "drained");
+    }
+
+    #[test]
+    fn streaming_is_consistent_under_preemption() {
+        // preempted sequences discard their in-flight token and replay;
+        // the streamed sequence must still equal the final output exactly
+        let cfg = EngineConfig {
+            kv_blocks: 6,
+            kv_block_size: 4,
+            stream_events: true,
+            scheduler: SchedulerConfig {
+                max_batch: 4,
+                prefill_token_budget: 64,
+                watermark: 1.0,
+            },
+            ..Default::default()
+        };
+        let mut e = Engine::new(MockExecutor::new(1000, 64), cfg);
+        for i in 0..3 {
+            e.submit(req(i, vec![i as i32 * 10], 12));
+        }
+        let outs = e.run_to_completion().unwrap();
+        assert!(e.metrics.preemptions > 0, "must exercise preemption");
+        let mut streamed: HashMap<u64, Vec<i32>> = HashMap::new();
+        for ev in e.poll_stream_events() {
+            if let StreamEvent::Token { id, index, token } = ev {
+                let v = streamed.entry(id).or_default();
+                // a replayed token overwrites its slot with the same value
+                if index < v.len() {
+                    assert_eq!(v[index], token, "replay must be bit-exact");
+                } else {
+                    assert_eq!(v.len(), index);
+                    v.push(token);
+                }
+            }
+        }
+        for out in &outs {
+            assert_eq!(streamed[&out.id], out.tokens, "id {}", out.id);
+        }
+    }
+
+    #[test]
+    fn cancel_releases_kv_blocks_and_reports_deadline() {
+        let cfg = EngineConfig { stream_events: true, ..Default::default() };
+        let mut e = Engine::new(MockExecutor::new(1000, 64), cfg);
+        let free0 = e.kv_free_blocks();
+        e.submit(req(1, vec![1, 2, 3], 30));
+        // prefill + a couple of decode steps so blocks are held
+        for _ in 0..3 {
+            assert!(e.step().unwrap());
+        }
+        assert!(e.kv_used_blocks() > 0);
+        assert!(e.cancel_request(1, FinishReason::DeadlineExceeded));
+        assert_eq!(e.kv_used_blocks(), 0, "cancel returns blocks to the pool");
+        assert_eq!(e.kv_free_blocks(), free0);
+        assert!(!e.has_work(), "nothing left to schedule");
+        let outs = e.poll_outputs();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].finish, FinishReason::DeadlineExceeded);
+        assert!(!outs[0].tokens.is_empty(), "partial tokens surface");
+        assert_eq!(e.metrics.deadline_missed, 1);
+        assert!(
+            !e.cancel_request(1, FinishReason::DeadlineExceeded),
+            "double-cancel is a no-op"
+        );
+        // the terminal event also streamed
+        assert!(e
+            .poll_stream_events()
+            .iter()
+            .any(|ev| matches!(ev, StreamEvent::Finished { id: 1, .. })));
+    }
+
+    #[test]
+    fn cancel_waiting_request_clears_queue() {
+        // deadline fires before the request is ever admitted: the
+        // waiting-queue entry must go too, or has_work() spins forever
+        let mut e = engine(100, 64);
+        e.submit(req(1, vec![1, 2], 4));
+        assert!(e.has_work());
+        assert!(e.cancel_request(1, FinishReason::DeadlineExceeded));
+        assert!(!e.has_work());
+        let outs = e.poll_outputs();
+        assert_eq!(outs[0].finish, FinishReason::DeadlineExceeded);
+        assert!(outs[0].tokens.is_empty());
     }
 
     #[test]

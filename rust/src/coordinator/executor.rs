@@ -70,6 +70,13 @@ pub trait Executor {
     fn kernel_label(&self) -> String {
         String::new()
     }
+    /// Autotuned `(class, kernel, threads)` rows applied to this
+    /// executor (empty unless a tune table was installed). `Engine::new`
+    /// copies this into `metrics.tuned`, so tune application survives
+    /// any construction path — including the router's per-worker factory.
+    fn tuned_summary(&self) -> Vec<(String, String, usize)> {
+        Vec::new()
+    }
     /// Length of each compact buffer [`Executor::extract_kv_range`]
     /// yields for a `len`-position range, or `None` when the executor
     /// cannot introspect its KV layout. KV-shard import validates
@@ -115,6 +122,8 @@ pub struct StcExecutor {
     pub model: crate::model::NativeModel,
     pool: Arc<ThreadPool>,
     kernel: &'static dyn Microkernel,
+    /// tune rows installed by [`StcExecutor::apply_tune`]
+    tuned: Vec<(String, String, usize)>,
 }
 
 impl StcExecutor {
@@ -130,6 +139,7 @@ impl StcExecutor {
             model,
             pool: ThreadPool::serial(),
             kernel: crate::stc::auto_kernel(),
+            tuned: Vec::new(),
         };
         Executor::set_threads(&mut exec, threads);
         exec
@@ -176,6 +186,7 @@ impl StcExecutor {
             self.model.set_decode_microkernel(kern);
             applied.push((shape_class(1, d, d), kern.name().to_string(), t.threads));
         }
+        self.tuned = applied.clone();
         applied
     }
 }
@@ -270,6 +281,10 @@ impl Executor for StcExecutor {
 
     fn kernel_label(&self) -> String {
         self.kernel.name().to_string()
+    }
+
+    fn tuned_summary(&self) -> Vec<(String, String, usize)> {
+        self.tuned.clone()
     }
 
     fn compact_kv_len(&self, len: usize) -> Option<usize> {

@@ -1,0 +1,577 @@
+//! Online serving front-end: wraps an [`Engine`] or [`Router`] behind a
+//! session API with incremental token streaming, admission control
+//! (queue-depth shedding with a `Rejected` fast-path), per-request
+//! deadlines (`FinishReason::DeadlineExceeded` — expired requests
+//! release their KV blocks instead of riding out the decode), and
+//! backpressure (a blocking-or-shed submit policy).
+//!
+//! The front-end is the piece production traffic talks to: callers
+//! submit [`Request`]s, observe [`StreamEvent`]s as tokens decode, and
+//! collect terminal [`RequestOutput`]s. Scheduling decisions (shed,
+//! deadline expiry) are made on the front-end's [`Clock`], which can be
+//! virtual — the traffic-study harness (`crate::study`) replays
+//! deterministic arrival processes on a virtual clock so shed and
+//! deadline-miss counts are bit-reproducible, while wall-clock latency
+//! percentiles are recorded separately.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::engine::Engine;
+use super::executor::Executor;
+use super::request::{
+    FinishReason, Request, RequestId, RequestOutput, StreamEvent,
+};
+use super::router::Router;
+
+/// What the front-end needs from a serving backend. Implemented by
+/// [`Engine`] (single worker, caller-driven steps) and [`Router`]
+/// (multi-worker, threads drive themselves).
+pub trait ServeBackend {
+    fn submit(&mut self, request: Request);
+    /// Cancel a live request (no-op if already finished). The terminal
+    /// output flows back through [`ServeBackend::poll_events`].
+    fn cancel(&mut self, rid: RequestId, finish: FinishReason) -> bool;
+    /// Drive the backend one increment; `Ok(false)` when idle.
+    fn step(&mut self) -> Result<bool>;
+    /// Drain pending stream events. Backends without token streaming
+    /// enabled degrade gracefully: they emit only `Finished` events.
+    fn poll_events(&mut self) -> Vec<StreamEvent>;
+    /// Requests admitted but not yet finished (the shedding signal).
+    fn queue_depth(&self) -> usize;
+    /// Ask the backend to emit per-token events if it can (no-op where
+    /// streaming is fixed at construction, e.g. a spawned [`Router`]).
+    fn enable_streaming(&mut self) {}
+}
+
+impl<E: Executor> ServeBackend for Engine<E> {
+    fn submit(&mut self, request: Request) {
+        Engine::submit(self, request);
+    }
+
+    fn cancel(&mut self, rid: RequestId, finish: FinishReason) -> bool {
+        self.cancel_request(rid, finish)
+    }
+
+    fn step(&mut self) -> Result<bool> {
+        Engine::step(self)
+    }
+
+    fn poll_events(&mut self) -> Vec<StreamEvent> {
+        let evs = self.poll_stream_events();
+        if !evs.is_empty() {
+            // every output already has a Finished event in `evs`
+            // (engine pushes both at the same instant); drop the
+            // duplicate outputs so they don't accumulate
+            let _ = self.poll_outputs();
+            return evs;
+        }
+        self.poll_outputs()
+            .into_iter()
+            .map(|o| StreamEvent::Finished { id: o.id, output: o })
+            .collect()
+    }
+
+    fn queue_depth(&self) -> usize {
+        self.num_waiting() + self.num_running()
+    }
+
+    fn enable_streaming(&mut self) {
+        self.enable_stream_buffer();
+    }
+}
+
+impl ServeBackend for Router {
+    fn submit(&mut self, request: Request) {
+        Router::submit(self, request);
+    }
+
+    fn cancel(&mut self, rid: RequestId, finish: FinishReason) -> bool {
+        Router::cancel(self, rid, finish) > 0
+    }
+
+    fn step(&mut self) -> Result<bool> {
+        // worker threads drive themselves; stepping is just yielding the
+        // front-end thread so they can run
+        std::thread::yield_now();
+        Ok(self.pending() > 0)
+    }
+
+    fn poll_events(&mut self) -> Vec<StreamEvent> {
+        // outputs first: a worker pushes a request's Finished event
+        // before its output (same thread), so any output observed here
+        // already has its event visible to the poll below
+        let outs = self.poll_outputs();
+        if self.streaming() {
+            return self.poll_stream_events();
+        }
+        outs.into_iter()
+            .map(|o| StreamEvent::Finished { id: o.id, output: o })
+            .collect()
+    }
+
+    fn queue_depth(&self) -> usize {
+        self.pending()
+    }
+}
+
+/// The front-end's time source. Admission/deadline decisions read this
+/// clock, so a virtual clock makes them deterministic under replay; the
+/// wall clock is what live serving uses.
+#[derive(Clone, Copy, Debug)]
+pub enum Clock {
+    /// real time since construction
+    Wall(Instant),
+    /// simulated seconds, advanced explicitly by the driver
+    Virtual(f64),
+}
+
+impl Clock {
+    pub fn wall() -> Clock {
+        Clock::Wall(Instant::now())
+    }
+
+    /// A virtual clock starting at t=0 (`virtual` is a reserved word).
+    pub fn simulated() -> Clock {
+        Clock::Virtual(0.0)
+    }
+
+    /// Seconds since the clock's origin.
+    pub fn now(&self) -> f64 {
+        match self {
+            Clock::Wall(t0) => t0.elapsed().as_secs_f64(),
+            Clock::Virtual(t) => *t,
+        }
+    }
+
+    /// Advance a virtual clock by `dt` seconds (no-op on a wall clock).
+    pub fn advance(&mut self, dt: f64) {
+        if let Clock::Virtual(t) = self {
+            *t += dt;
+        }
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, Clock::Virtual(_))
+    }
+}
+
+/// What `submit` does when the front-end is at capacity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitPolicy {
+    /// reject immediately with a `Rejected` fast-path output that never
+    /// touches the scheduler
+    Shed,
+    /// drive the backend until capacity frees, then admit
+    Block,
+}
+
+impl std::str::FromStr for SubmitPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<SubmitPolicy, String> {
+        match s {
+            "shed" => Ok(SubmitPolicy::Shed),
+            "block" => Ok(SubmitPolicy::Block),
+            other => Err(format!("unknown submit policy '{other}' (want shed or block)")),
+        }
+    }
+}
+
+/// Admission-control and deadline knobs (all off/unlimited by default).
+#[derive(Clone, Copy, Debug)]
+pub struct FrontendConfig {
+    /// shed/block once the backend's queue depth reaches this (0 = off)
+    pub max_queue: usize,
+    /// shed/block once this many sessions are live (0 = off)
+    pub max_inflight: usize,
+    pub submit: SubmitPolicy,
+    /// deadline (seconds since submission) applied to requests that
+    /// don't carry their own `SamplingParams::deadline`
+    pub default_deadline: Option<f64>,
+}
+
+impl Default for FrontendConfig {
+    fn default() -> Self {
+        Self {
+            max_queue: 0,
+            max_inflight: 0,
+            submit: SubmitPolicy::Shed,
+            default_deadline: None,
+        }
+    }
+}
+
+/// What `submit` did with a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitOutcome {
+    Accepted,
+    /// rejected at admission; a `Rejected` output was synthesized
+    /// without touching the backend
+    Shed,
+}
+
+/// Front-end counters (deterministic under a virtual clock).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FrontendStats {
+    pub submitted: u64,
+    pub accepted: u64,
+    /// rejected at admission (never reached the scheduler)
+    pub shed: u64,
+    /// finished with `FinishReason::DeadlineExceeded`
+    pub deadline_missed: u64,
+    /// terminal outputs observed (includes deadline misses, excludes
+    /// front-end sheds)
+    pub completed: u64,
+}
+
+/// One live request's front-end state.
+struct Session {
+    /// tokens observed so far via `StreamEvent::Token`
+    tokens: Vec<i32>,
+    /// absolute front-end-clock expiry, if any
+    deadline_at: Option<f64>,
+    /// cancel already sent (avoid re-sending while the terminal event
+    /// is in flight)
+    cancelled: bool,
+}
+
+/// The session front-end over a [`ServeBackend`].
+pub struct Frontend<B: ServeBackend> {
+    pub backend: B,
+    pub cfg: FrontendConfig,
+    pub clock: Clock,
+    pub stats: FrontendStats,
+    sessions: HashMap<RequestId, Session>,
+    finished: Vec<RequestOutput>,
+    events: Vec<StreamEvent>,
+}
+
+/// `Frontend::run_to_completion` errors after this long with live
+/// sessions but no backend progress or events (a dead router worker
+/// would otherwise hang the caller forever).
+const STALL_TIMEOUT_S: f64 = 10.0;
+
+impl<B: ServeBackend> Frontend<B> {
+    pub fn new(mut backend: B, cfg: FrontendConfig) -> Frontend<B> {
+        backend.enable_streaming();
+        Frontend {
+            backend,
+            cfg,
+            clock: Clock::wall(),
+            stats: FrontendStats::default(),
+            sessions: HashMap::new(),
+            finished: Vec::new(),
+            events: Vec::new(),
+        }
+    }
+
+    /// Same, on a virtual clock (deterministic shed/deadline decisions).
+    pub fn with_virtual_clock(backend: B, cfg: FrontendConfig) -> Frontend<B> {
+        let mut fe = Frontend::new(backend, cfg);
+        fe.clock = Clock::simulated();
+        fe
+    }
+
+    pub fn live_sessions(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Tokens streamed so far for a live session (None once finished —
+    /// the terminal `RequestOutput` carries the full list).
+    pub fn session_tokens(&self, rid: RequestId) -> Option<&[i32]> {
+        self.sessions.get(&rid).map(|s| s.tokens.as_slice())
+    }
+
+    fn over_capacity(&self) -> bool {
+        (self.cfg.max_inflight > 0 && self.sessions.len() >= self.cfg.max_inflight)
+            || (self.cfg.max_queue > 0 && self.backend.queue_depth() >= self.cfg.max_queue)
+    }
+
+    /// Submit a request through admission control. `Shed` outcomes
+    /// synthesize a `Rejected` output immediately; the request never
+    /// reaches the backend's scheduler.
+    pub fn submit(&mut self, request: Request) -> Result<SubmitOutcome> {
+        self.stats.submitted += 1;
+        if self.over_capacity() {
+            match self.cfg.submit {
+                SubmitPolicy::Shed => {
+                    self.stats.shed += 1;
+                    let out = RequestOutput {
+                        id: request.id,
+                        prompt_len: request.prompt.len(),
+                        tokens: vec![],
+                        finish: FinishReason::Rejected,
+                        ttft: 0.0,
+                        latency: 0.0,
+                    };
+                    self.events
+                        .push(StreamEvent::Finished { id: out.id, output: out.clone() });
+                    self.finished.push(out);
+                    return Ok(SubmitOutcome::Shed);
+                }
+                SubmitPolicy::Block => {
+                    // backpressure: drive the backend until capacity
+                    // frees. On a virtual clock an idle-but-full backend
+                    // can only free capacity through deadline expiry, so
+                    // advance time toward the nearest deadline.
+                    while self.over_capacity() {
+                        let progressed = self.tick()?;
+                        if !progressed {
+                            if self.sessions.is_empty() {
+                                // over-capacity with nothing live can
+                                // never free: admit rather than livelock
+                                break;
+                            }
+                            match self.next_deadline() {
+                                Some(at) if self.clock.is_virtual() => {
+                                    let dt = at - self.clock.now();
+                                    self.clock.advance(dt.max(1e-6));
+                                }
+                                _ => std::thread::yield_now(),
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        self.stats.accepted += 1;
+        let deadline = request.params.deadline.or(self.cfg.default_deadline);
+        self.sessions.insert(
+            request.id,
+            Session {
+                tokens: Vec::new(),
+                deadline_at: deadline.map(|d| self.clock.now() + d),
+                cancelled: false,
+            },
+        );
+        self.backend.submit(request);
+        Ok(SubmitOutcome::Accepted)
+    }
+
+    /// Earliest pending deadline among live sessions.
+    fn next_deadline(&self) -> Option<f64> {
+        self.sessions
+            .values()
+            .filter(|s| !s.cancelled)
+            .filter_map(|s| s.deadline_at)
+            .fold(None, |acc, d| Some(acc.map_or(d, |a: f64| a.min(d))))
+    }
+
+    /// Cancel every live session whose deadline has passed.
+    fn expire_deadlines(&mut self) {
+        let now = self.clock.now();
+        let mut expired: Vec<RequestId> = self
+            .sessions
+            .iter()
+            .filter(|(_, s)| !s.cancelled && s.deadline_at.map_or(false, |d| d <= now))
+            .map(|(id, _)| *id)
+            .collect();
+        // HashMap iteration order is arbitrary; sort so the cancel order
+        // (and thus any replay) is deterministic
+        expired.sort_unstable();
+        for rid in expired {
+            self.backend.cancel(rid, FinishReason::DeadlineExceeded);
+            self.sessions.get_mut(&rid).expect("live session").cancelled = true;
+        }
+    }
+
+    /// Absorb backend events into session state and the event log.
+    fn pump_events(&mut self) -> usize {
+        let evs = self.backend.poll_events();
+        let n = evs.len();
+        for ev in evs {
+            match &ev {
+                StreamEvent::Token { id, index, token } => {
+                    if let Some(s) = self.sessions.get_mut(id) {
+                        if *index < s.tokens.len() {
+                            s.tokens[*index] = *token; // replayed slot
+                        } else {
+                            s.tokens.push(*token);
+                        }
+                    }
+                }
+                StreamEvent::Finished { id, output } => {
+                    if self.sessions.remove(id).is_some() {
+                        self.stats.completed += 1;
+                        if output.finish == FinishReason::DeadlineExceeded {
+                            self.stats.deadline_missed += 1;
+                        }
+                        self.finished.push(output.clone());
+                    }
+                }
+            }
+            self.events.push(ev);
+        }
+        n
+    }
+
+    /// One front-end iteration: expire deadlines, drive the backend,
+    /// absorb events. Returns whether anything happened.
+    pub fn tick(&mut self) -> Result<bool> {
+        self.expire_deadlines();
+        let progressed = self.backend.step()?;
+        let events = self.pump_events();
+        Ok(progressed || events > 0)
+    }
+
+    /// Drain terminal outputs observed so far (sheds included).
+    pub fn poll_finished(&mut self) -> Vec<RequestOutput> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// Drain the stream-event log (tokens + finishes, in arrival order).
+    pub fn poll_events(&mut self) -> Vec<StreamEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// Tick until every live session finishes; returns all outputs
+    /// drained (including earlier sheds). Errors if the backend stalls
+    /// with live sessions (e.g. a dead router worker).
+    pub fn run_to_completion(&mut self) -> Result<Vec<RequestOutput>> {
+        let mut last_progress = Instant::now();
+        while !self.sessions.is_empty() {
+            if self.tick()? {
+                last_progress = Instant::now();
+            } else {
+                // idle backend but live sessions: only a deadline can
+                // unblock a virtual clock — jump to the nearest one
+                if let (true, Some(at)) = (self.clock.is_virtual(), self.next_deadline()) {
+                    let dt = at - self.clock.now();
+                    self.clock.advance(dt.max(1e-6));
+                    last_progress = Instant::now();
+                } else if last_progress.elapsed().as_secs_f64() > STALL_TIMEOUT_S {
+                    return Err(anyhow!(
+                        "frontend stalled with {} live session(s)",
+                        self.sessions.len()
+                    ));
+                }
+            }
+        }
+        Ok(self.poll_finished())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::EngineConfig;
+    use crate::coordinator::executor::MockExecutor;
+    use crate::coordinator::request::SamplingParams;
+
+    fn req(id: u64, prompt: Vec<i32>, max_new: usize) -> Request {
+        Request::new(
+            id,
+            prompt,
+            SamplingParams { max_new_tokens: max_new, ..Default::default() },
+        )
+    }
+
+    fn engine() -> Engine<MockExecutor> {
+        Engine::new(MockExecutor::new(10_000, 64), EngineConfig::default())
+    }
+
+    #[test]
+    fn sheds_above_max_inflight_without_touching_scheduler() {
+        let cfg = FrontendConfig { max_inflight: 2, ..Default::default() };
+        let mut fe = Frontend::new(engine(), cfg);
+        assert_eq!(fe.submit(req(1, vec![10], 4)).unwrap(), SubmitOutcome::Accepted);
+        assert_eq!(fe.submit(req(2, vec![20], 4)).unwrap(), SubmitOutcome::Accepted);
+        assert_eq!(fe.submit(req(3, vec![30], 4)).unwrap(), SubmitOutcome::Shed);
+        assert_eq!(fe.stats.shed, 1);
+        // the shed request never reached the engine
+        assert_eq!(fe.backend.metrics.requests_submitted, 2);
+        let mut outs = fe.run_to_completion().unwrap();
+        outs.sort_by_key(|o| o.id);
+        assert_eq!(outs.len(), 3, "shed output still surfaces to the caller");
+        assert_eq!(outs[0].tokens, vec![11, 12, 13, 14]);
+        assert_eq!(outs[1].tokens, vec![21, 22, 23, 24]);
+        assert_eq!(outs[2].id, 3);
+        assert_eq!(outs[2].finish, FinishReason::Rejected);
+        assert_eq!(fe.stats.completed, 2);
+    }
+
+    #[test]
+    fn block_policy_waits_for_capacity() {
+        let cfg = FrontendConfig {
+            max_inflight: 1,
+            submit: SubmitPolicy::Block,
+            ..Default::default()
+        };
+        let mut fe = Frontend::new(engine(), cfg);
+        assert_eq!(fe.submit(req(1, vec![10], 2)).unwrap(), SubmitOutcome::Accepted);
+        // blocks until request 1 finishes, then admits
+        assert_eq!(fe.submit(req(2, vec![20], 2)).unwrap(), SubmitOutcome::Accepted);
+        assert_eq!(fe.stats.shed, 0);
+        let mut outs = fe.run_to_completion().unwrap();
+        outs.sort_by_key(|o| o.id);
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].tokens, vec![11, 12]);
+        assert_eq!(outs[1].tokens, vec![21, 22]);
+    }
+
+    #[test]
+    fn virtual_deadline_cancels_and_counts() {
+        let cfg = FrontendConfig { default_deadline: Some(0.5), ..Default::default() };
+        let mut fe = Frontend::with_virtual_clock(engine(), cfg);
+        fe.submit(req(1, vec![10], 50)).unwrap();
+        // a few ticks of progress, then virtual time passes the deadline
+        for _ in 0..3 {
+            fe.tick().unwrap();
+        }
+        fe.clock.advance(1.0);
+        let outs = fe.run_to_completion().unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].finish, FinishReason::DeadlineExceeded);
+        assert!(!outs[0].tokens.is_empty(), "partial progress surfaces");
+        assert_eq!(fe.stats.deadline_missed, 1);
+        assert_eq!(fe.backend.kv_used_blocks(), 0, "expired request freed its KV");
+    }
+
+    #[test]
+    fn per_request_deadline_overrides_default() {
+        let mut fe = Frontend::with_virtual_clock(engine(), FrontendConfig::default());
+        let mut r = req(1, vec![10], 50);
+        r.params.deadline = Some(0.25);
+        fe.submit(r).unwrap();
+        fe.submit(req(2, vec![20], 4)).unwrap(); // no deadline
+        fe.tick().unwrap();
+        fe.clock.advance(1.0);
+        let mut outs = fe.run_to_completion().unwrap();
+        outs.sort_by_key(|o| o.id);
+        assert_eq!(outs[0].finish, FinishReason::DeadlineExceeded);
+        assert_eq!(outs[1].finish, FinishReason::MaxTokens);
+        assert_eq!(fe.stats.deadline_missed, 1);
+    }
+
+    #[test]
+    fn streamed_tokens_match_terminal_output() {
+        let mut fe = Frontend::new(engine(), FrontendConfig::default());
+        fe.submit(req(1, vec![10], 5)).unwrap();
+        let outs = fe.run_to_completion().unwrap();
+        let tokens: Vec<i32> = fe
+            .poll_events()
+            .into_iter()
+            .filter_map(|ev| match ev {
+                StreamEvent::Token { id: 1, token, .. } => Some(token),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(tokens, outs[0].tokens);
+        assert_eq!(tokens, vec![11, 12, 13, 14, 15]);
+    }
+
+    #[test]
+    fn max_queue_sheds_on_backend_depth() {
+        // max_queue reads the backend's queue depth (waiting + running),
+        // independent of the session count
+        let cfg = FrontendConfig { max_queue: 1, ..Default::default() };
+        let mut fe = Frontend::new(engine(), cfg);
+        assert_eq!(fe.submit(req(1, vec![10], 2)).unwrap(), SubmitOutcome::Accepted);
+        assert_eq!(fe.submit(req(2, vec![20], 2)).unwrap(), SubmitOutcome::Shed);
+        let outs = fe.run_to_completion().unwrap();
+        assert_eq!(outs.len(), 2);
+    }
+}

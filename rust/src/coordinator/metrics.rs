@@ -9,6 +9,9 @@ pub struct EngineMetrics {
     pub requests_submitted: u64,
     pub requests_finished: u64,
     pub requests_rejected: u64,
+    /// requests finished with `FinishReason::DeadlineExceeded` (their KV
+    /// blocks were released back to the pool instead of decoding on)
+    pub deadline_missed: u64,
     pub prompt_tokens: u64,
     pub generated_tokens: u64,
     pub prefill_steps: u64,
@@ -48,6 +51,9 @@ pub struct EngineMetrics {
     pub tuned: Vec<(String, String, usize)>,
     pub ttft: Summary,
     pub latency: Summary,
+    /// per-token inter-token latency gaps (wall seconds between
+    /// consecutive emitted tokens of the same sequence)
+    pub itl: Summary,
     pub prefill_step_time: Summary,
     pub decode_step_time: Summary,
     started: Option<Instant>,
@@ -101,12 +107,13 @@ impl EngineMetrics {
 
     pub fn report(&self) -> String {
         let mut s = format!(
-            "requests={}/{} tokens={}p+{}g steps={}p+{}d preempt={} \
+            "requests={}/{} deadline_miss={} tokens={}p+{}g steps={}p+{}d preempt={} \
              prefix={}h/{}m ({} tok cached, {} evict) \
              kv={}exp/{}imp/{}rej ({} spill, {} B resident) \
-             ttft_p50={:.1}ms lat_p50={:.1}ms gen_tput={:.0} tok/s total_tput={:.0} tok/s",
+             ttft_p50={:.1}ms itl_p50={:.1}ms lat_p50={:.1}ms gen_tput={:.0} tok/s total_tput={:.0} tok/s",
             self.requests_finished,
             self.requests_submitted,
+            self.deadline_missed,
             self.prompt_tokens,
             self.generated_tokens,
             self.prefill_steps,
@@ -122,6 +129,7 @@ impl EngineMetrics {
             self.kv_spilled_blocks,
             self.kv_resident_bytes,
             self.ttft.p50() * 1e3,
+            self.itl.p50() * 1e3,
             self.latency.p50() * 1e3,
             self.decode_throughput(),
             self.total_throughput(),
@@ -148,6 +156,7 @@ impl EngineMetrics {
             kv_import_rejects: self.kv_import_rejects,
             kv_spilled_blocks: self.kv_spilled_blocks,
             kv_resident_bytes: self.kv_resident_bytes,
+            tuned_classes: self.tuned.len() as u64,
         }
     }
 }
@@ -167,6 +176,9 @@ pub struct KvFlowStats {
     pub kv_import_rejects: u64,
     pub kv_spilled_blocks: u64,
     pub kv_resident_bytes: u64,
+    /// autotuned shape-class installs on this worker's executor (0 when
+    /// the tune table was never applied — pins the router `--tune` path)
+    pub tuned_classes: u64,
 }
 
 #[cfg(test)]

@@ -55,6 +55,7 @@
 pub mod batcher;
 pub mod engine;
 pub mod executor;
+pub mod frontend;
 pub mod kvcache;
 pub mod metrics;
 #[cfg(feature = "pjrt")]
@@ -66,10 +67,13 @@ pub mod sequence;
 
 pub use engine::{Engine, EngineConfig};
 pub use executor::{Executor, MockExecutor, StcExecutor};
+pub use frontend::{
+    Clock, Frontend, FrontendConfig, FrontendStats, ServeBackend, SubmitOutcome, SubmitPolicy,
+};
 pub use kvcache::{BlockManager, ByteLru, KvShard, KvShardBlock};
 pub use metrics::KvFlowStats;
 #[cfg(feature = "pjrt")]
 pub use pjrt_exec::PjrtExecutor;
-pub use request::{FinishReason, Request, RequestOutput, SamplingParams};
+pub use request::{FinishReason, Request, RequestOutput, SamplingParams, StreamEvent};
 pub use router::{Policy, Router};
 pub use scheduler::{Scheduler, SchedulerConfig};

@@ -12,11 +12,14 @@ pub struct SamplingParams {
     pub temperature: f32,
     /// stop generation when this token is produced (e.g. an EOS id)
     pub stop_token: Option<i32>,
+    /// SLO deadline in seconds since arrival; expired requests finish with
+    /// `FinishReason::DeadlineExceeded` and release their KV blocks.
+    pub deadline: Option<f64>,
 }
 
 impl Default for SamplingParams {
     fn default() -> Self {
-        Self { max_new_tokens: 16, temperature: 0.0, stop_token: None }
+        Self { max_new_tokens: 16, temperature: 0.0, stop_token: None, deadline: None }
     }
 }
 
@@ -42,6 +45,21 @@ pub enum FinishReason {
     StopToken,
     /// The engine rejected the request (e.g. prompt too long).
     Rejected,
+    /// The request's SLO deadline expired before it finished; its KV blocks
+    /// were released instead of riding out the decode.
+    DeadlineExceeded,
+}
+
+/// Incremental event emitted by a streaming engine: callers observe tokens
+/// as they decode instead of waiting for the terminal [`RequestOutput`].
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    /// One freshly decoded token. `index` is its position in the output
+    /// sequence (0 = first generated token).
+    Token { id: RequestId, index: usize, token: i32 },
+    /// The request finished; carries the same output the non-streaming path
+    /// returns from `poll_outputs`.
+    Finished { id: RequestId, output: RequestOutput },
 }
 
 /// Terminal output for one request.

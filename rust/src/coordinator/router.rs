@@ -38,7 +38,7 @@ use super::engine::{Engine, EngineConfig};
 use super::executor::Executor;
 use super::kvcache::{token_hash, ByteLru, PREFIX_HASH_SEED};
 use super::metrics::KvFlowStats;
-use super::request::{Request, RequestOutput};
+use super::request::{FinishReason, Request, RequestId, RequestOutput, StreamEvent};
 
 /// Default prompt-prefix length (tokens) hashed by `Policy::PrefixAffinity`.
 pub const DEFAULT_AFFINITY_TOKENS: usize = 16;
@@ -95,10 +95,11 @@ impl std::fmt::Display for Policy {
     }
 }
 
-/// The affinity decision, extracted for direct testing: keep `sticky`
-/// while it is alive and within [`STICKY_MAX_IMBALANCE`] of the
+/// The affinity decision, extracted for direct testing (and reused by
+/// the study harness's deterministic single-thread replica): keep
+/// `sticky` while it is alive and within [`STICKY_MAX_IMBALANCE`] of the
 /// least-loaded alive worker, else re-pin to the least-loaded.
-fn choose_affinity(
+pub(crate) fn choose_affinity(
     sticky: Option<usize>,
     loads: &[usize],
     alive: impl Fn(usize) -> bool,
@@ -122,6 +123,9 @@ enum Msg {
     /// serialized `KvShard` for the worker's engine to import before
     /// the requests that follow it on the channel (warm handoff)
     ImportKv(Vec<u8>),
+    /// cancel a live request (deadline expiry / client disconnect);
+    /// broadcast to every worker — engines without the id ignore it
+    Cancel(RequestId, FinishReason),
     /// snapshot the worker engine's KV-flow counters
     Stats(Sender<KvFlowStats>),
     Flush,
@@ -152,8 +156,14 @@ pub struct Router {
     /// newest serialized shard per affinity hash, byte-budgeted by
     /// `EngineConfig::prefix_cache_bytes` (the "migration buffer")
     shards: ByteLru<u64, Vec<u8>>,
-    /// warm handoffs shipped (ImportKv messages accepted by a worker)
+    /// warm handoffs shipped (ImportKv + its paired request both landed)
     migrations: u64,
+    /// per-token events forwarded from every worker's engine
+    /// (`EngineConfig::stream_events`); the channel exists but stays
+    /// silent when streaming is off
+    event_rx: Receiver<StreamEvent>,
+    /// streaming enabled on the worker engines
+    streaming: bool,
 }
 
 impl Router {
@@ -166,6 +176,7 @@ impl Router {
     {
         let (out_tx, out_rx) = channel::<RequestOutput>();
         let (shard_tx, shard_rx) = channel::<(Vec<i32>, Vec<u8>)>();
+        let (event_tx, event_rx) = channel::<StreamEvent>();
         let factory = Arc::new(factory);
         let mut workers = Vec::with_capacity(n);
         for wid in 0..n {
@@ -174,11 +185,18 @@ impl Router {
             let inflight2 = inflight.clone();
             let out_tx = out_tx.clone();
             let shard_tx = shard_tx.clone();
+            let event_tx = event_tx.clone();
             let factory = factory.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("worker-{wid}"))
                 .spawn(move || {
                     let mut engine = Engine::new(factory(wid), cfg);
+                    if cfg.stream_events {
+                        // all workers share one event channel; events
+                        // interleave across workers but stay in-order
+                        // per request (a request lives on one worker)
+                        engine.set_stream_sink(event_tx);
+                    }
                     loop {
                         // drain pending messages without blocking while
                         // the engine has work; block when idle
@@ -201,6 +219,13 @@ impl Router {
                                 // blocks and the prefill recomputes —
                                 // a failed handoff is never fatal
                                 let _ = engine.import_kv_shard_bytes(&bytes);
+                            }
+                            Some(Msg::Cancel(rid, finish)) => {
+                                // only the owning worker has the id; the
+                                // rest no-op. The cancel output flows out
+                                // through the normal poll below, so the
+                                // inflight gauge decrements exactly once.
+                                let _ = engine.cancel_request(rid, finish);
                             }
                             Some(Msg::Stats(reply)) => {
                                 let _ = reply.send(engine.metrics.kv_flow());
@@ -243,7 +268,53 @@ impl Router {
             shard_rx,
             shards: ByteLru::new(cfg.prefix_cache_bytes),
             migrations: 0,
+            event_rx,
+            streaming: cfg.stream_events,
         }
+    }
+
+    /// Whether worker engines publish per-token stream events.
+    pub fn streaming(&self) -> bool {
+        self.streaming
+    }
+
+    /// Requests submitted whose outputs have not yet been collected
+    /// (by `drain` or `poll_outputs`).
+    pub fn pending(&self) -> usize {
+        self.submitted
+    }
+
+    /// Non-blocking drain of per-token stream events from all workers.
+    /// Events interleave across workers but are in-order per request.
+    pub fn poll_stream_events(&mut self) -> Vec<StreamEvent> {
+        let mut evs = Vec::new();
+        while let Ok(ev) = self.event_rx.try_recv() {
+            evs.push(ev);
+        }
+        evs
+    }
+
+    /// Non-blocking drain of finished outputs (the incremental
+    /// counterpart of [`Router::drain`] for online serving: the
+    /// front-end polls between scheduling ticks instead of blocking).
+    pub fn poll_outputs(&mut self) -> Vec<RequestOutput> {
+        self.pump_shards();
+        let mut outs = Vec::new();
+        while let Ok(o) = self.out_rx.try_recv() {
+            outs.push(o);
+        }
+        self.submitted = self.submitted.saturating_sub(outs.len());
+        outs
+    }
+
+    /// Cancel a live request everywhere (deadline expiry / disconnect).
+    /// Broadcast: the owning worker emits the terminal output, all
+    /// others no-op. Returns how many workers accepted the message.
+    pub fn cancel(&mut self, rid: RequestId, finish: FinishReason) -> usize {
+        self.workers
+            .iter()
+            .filter(|w| w.tx.send(Msg::Cancel(rid, finish)).is_ok())
+            .count()
     }
 
     fn worker_alive(&self, w: usize) -> bool {
@@ -340,19 +411,25 @@ impl Router {
         let mut req = request;
         for _ in 0..self.workers.len() {
             let (w, handoff) = self.pick_worker(&req);
-            if let Some(bytes) = handoff {
-                // warm handoff ahead of the request (same FIFO channel,
-                // so the import lands before admission). A send into a
-                // just-died worker fails here AND on the Req below —
-                // the retry loop then falls back with a cold replay.
-                if self.workers[w].tx.send(Msg::ImportKv(bytes)).is_ok() {
-                    self.migrations += 1;
-                }
-            }
+            // warm handoff ahead of the request (same FIFO channel, so
+            // the import lands before admission). A send into a
+            // just-died worker fails here AND on the Req below — the
+            // retry loop then falls back with a cold replay. The
+            // handoff is COUNTED only once its paired request also
+            // lands: an ImportKv accepted milliseconds before the
+            // worker dies is a handoff nobody consumed, and counting it
+            // used to overstate kv_migrations on every death-fallback.
+            let shipped = match handoff {
+                Some(bytes) => self.workers[w].tx.send(Msg::ImportKv(bytes)).is_ok(),
+                None => false,
+            };
             // increment BEFORE send so the worker cannot decrement first
             self.workers[w].inflight.fetch_add(1, Ordering::SeqCst);
             match self.workers[w].tx.send(Msg::Req(req)) {
                 Ok(()) => {
+                    if shipped {
+                        self.migrations += 1;
+                    }
                     self.submitted += 1;
                     self.dispatched[w] += 1;
                     let _ = self.workers[w].tx.send(Msg::Flush);
@@ -586,9 +663,18 @@ mod tests {
 
     #[test]
     fn affinity_falls_back_when_pinned_worker_dies() {
+        // migration on: the death-fallback must also pin kv_migrations
+        // at zero — worker 0 dies before publishing any shard, so the
+        // re-pin has nothing to hand off and nothing may be counted
+        let cfg = EngineConfig {
+            prefix_cache: true,
+            migrate_kv: true,
+            kv_block_size: 4,
+            ..Default::default()
+        };
         let mut r = Router::spawn(
             2,
-            EngineConfig::default(),
+            cfg,
             Policy::PrefixAffinity { prefix_tokens: 4 },
             |wid| FlakyExecutor { inner: MockExecutor::new(1000, 64), poisoned: wid == 0 },
         );
@@ -598,6 +684,7 @@ mod tests {
         assert_eq!(pinned, 0, "least-loaded pin starts at worker 0");
         let err = r.drain().expect_err("worker 0 dies on its first batch");
         assert!(err.to_string().contains("died"), "{err}");
+        assert_eq!(r.kv_migrations(), 0);
         // same prefix again: the dead pin is abandoned and re-pinned to
         // the surviving worker, and the request completes
         r.submit(req_prompt(2, prompt.clone()));
@@ -605,6 +692,129 @@ mod tests {
         let outs = r.drain().unwrap();
         assert_eq!(outs.len(), 1);
         assert_eq!(outs[0].tokens, vec![10, 11, 12]);
+        assert_eq!(r.kv_migrations(), 0, "no shard existed: no handoff counted");
+    }
+
+    /// Executor that panics on its SECOND prefill when `poisoned`: the
+    /// worker finishes one request (publishing its migration shard),
+    /// then dies on the next — the warm-handoff death scenario.
+    struct DiesAfterOne {
+        inner: MockExecutor,
+        poisoned: bool,
+    }
+
+    impl crate::coordinator::executor::Executor for DiesAfterOne {
+        fn vocab(&self) -> usize {
+            self.inner.vocab
+        }
+
+        fn max_prompt(&self) -> usize {
+            self.inner.smax - 1
+        }
+
+        fn smax(&self) -> usize {
+            self.inner.smax
+        }
+
+        fn kv_len(&self) -> usize {
+            1
+        }
+
+        fn decode_buckets(&self) -> Vec<usize> {
+            vec![usize::MAX]
+        }
+
+        fn prefill(
+            &mut self,
+            batch: &mut [crate::coordinator::executor::PrefillItem],
+        ) -> Result<()> {
+            assert!(
+                !(self.poisoned && self.inner.prefill_calls >= 1),
+                "injected executor fault"
+            );
+            self.inner.prefill(batch)
+        }
+
+        fn decode(
+            &mut self,
+            batch: &mut [crate::coordinator::executor::DecodeItem],
+        ) -> Result<()> {
+            self.inner.decode(batch)
+        }
+
+        fn label(&self) -> String {
+            self.inner.label()
+        }
+
+        fn compact_kv_len(&self, len: usize) -> Option<usize> {
+            self.inner.compact_kv_len(len)
+        }
+
+        fn extract_kv_range(
+            &self,
+            kv_k: &[f32],
+            kv_v: &[f32],
+            start: usize,
+            len: usize,
+        ) -> Option<(Vec<f32>, Vec<f32>)> {
+            self.inner.extract_kv_range(kv_k, kv_v, start, len)
+        }
+
+        fn inject_kv_range(
+            &self,
+            kv_k: &mut [f32],
+            kv_v: &mut [f32],
+            start: usize,
+            len: usize,
+            ck: &[f32],
+            cv: &[f32],
+        ) {
+            self.inner.inject_kv_range(kv_k, kv_v, start, len, ck, cv)
+        }
+    }
+
+    #[test]
+    fn warm_handoff_counts_only_consumed_migrations() {
+        // regression (kv_migrations miscount): the counter must mean
+        // "ImportKv AND its paired request both landed". One consumed
+        // handoff == exactly one migration, and the receiving worker's
+        // import counters corroborate it.
+        let cfg = EngineConfig {
+            prefix_cache: true,
+            migrate_kv: true,
+            kv_block_size: 4,
+            ..Default::default()
+        };
+        let mut r = Router::spawn(
+            2,
+            cfg,
+            Policy::PrefixAffinity { prefix_tokens: 4 },
+            |wid| DiesAfterOne { inner: MockExecutor::new(10_000, 64), poisoned: wid == 0 },
+        );
+        let prompt = |i: i32| vec![1, 2, 3, 4, 50 + i];
+        // request 1: pins the prefix to worker 0, completes, publishes
+        // its shard into the router's buffer
+        r.submit(req_prompt(1, prompt(0)));
+        assert_eq!(r.drain().unwrap().len(), 1);
+        assert_eq!(r.kv_migrations(), 0, "pin never moved");
+        // request 2: worker 0 dies mid-batch (no handoff was shipped,
+        // so nothing may be counted for the lost batch either)
+        r.submit(req_prompt(2, prompt(1)));
+        let _ = r.drain().expect_err("worker 0 dies on its second prefill");
+        assert_eq!(r.kv_migrations(), 0, "a lost batch is not a migration");
+        // request 3: the re-pin to worker 1 ships the buffered shard
+        // ahead of the request — one consumed handoff, one count
+        r.submit(req_prompt(3, prompt(2)));
+        let outs = r.drain().unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].tokens, vec![53, 54, 55]);
+        assert_eq!(r.affinity_assignment(&prompt(9)), Some(1));
+        assert_eq!(r.kv_migrations(), 1, "exactly the consumed handoff");
+        let stats = r.kv_stats();
+        assert!(stats[0].is_none(), "dead worker has no stats");
+        let s1 = stats[1].expect("worker 1 alive");
+        assert_eq!(s1.kv_imported_blocks, 1, "the counted handoff was imported");
+        assert_eq!(s1.prefix_cached_tokens, 4, "and served the prefix warm");
     }
 
     #[test]
@@ -734,6 +944,160 @@ mod tests {
         assert_eq!(stats.len(), 2);
         let finished: u64 = stats.iter().map(|s| s.expect("alive").requests_finished).sum();
         assert_eq!(finished, 6);
+    }
+
+    #[test]
+    fn router_streams_tokens_matching_outputs() {
+        let cfg = EngineConfig { stream_events: true, ..Default::default() };
+        let mut r = Router::spawn(2, cfg, Policy::RoundRobin, |_| {
+            MockExecutor::new(10_000, 64)
+        });
+        assert!(r.streaming());
+        for i in 0..6 {
+            r.submit(req(i, i as i32 * 10));
+        }
+        let mut outs = r.drain().unwrap();
+        // workers push a request's events before its output, so by the
+        // time drain returned every event is already in the channel
+        let mut streamed: HashMap<u64, Vec<i32>> = HashMap::new();
+        let mut finished = 0;
+        for ev in r.poll_stream_events() {
+            match ev {
+                StreamEvent::Token { id, index, token } => {
+                    let v = streamed.entry(id).or_default();
+                    assert_eq!(v.len(), index, "per-request events stay ordered");
+                    v.push(token);
+                }
+                StreamEvent::Finished { .. } => finished += 1,
+            }
+        }
+        assert_eq!(finished, 6);
+        outs.sort_by_key(|o| o.id);
+        for out in &outs {
+            assert_eq!(streamed[&out.id], out.tokens, "id {}", out.id);
+        }
+    }
+
+    /// Executor whose prefill blocks until the shared gate opens —
+    /// holds a worker mid-step so a Cancel is guaranteed to land before
+    /// any decode.
+    struct GatedExecutor {
+        inner: MockExecutor,
+        gate: Arc<AtomicUsize>,
+    }
+
+    impl crate::coordinator::executor::Executor for GatedExecutor {
+        fn vocab(&self) -> usize {
+            self.inner.vocab
+        }
+
+        fn max_prompt(&self) -> usize {
+            self.inner.smax - 1
+        }
+
+        fn smax(&self) -> usize {
+            self.inner.smax
+        }
+
+        fn kv_len(&self) -> usize {
+            1
+        }
+
+        fn decode_buckets(&self) -> Vec<usize> {
+            vec![usize::MAX]
+        }
+
+        fn prefill(
+            &mut self,
+            batch: &mut [crate::coordinator::executor::PrefillItem],
+        ) -> Result<()> {
+            while self.gate.load(Ordering::SeqCst) == 0 {
+                std::thread::yield_now();
+            }
+            self.inner.prefill(batch)
+        }
+
+        fn decode(
+            &mut self,
+            batch: &mut [crate::coordinator::executor::DecodeItem],
+        ) -> Result<()> {
+            self.inner.decode(batch)
+        }
+
+        fn label(&self) -> String {
+            "gated".into()
+        }
+    }
+
+    #[test]
+    fn cancel_over_router_reports_deadline_exceeded() {
+        let gate = Arc::new(AtomicUsize::new(0));
+        let g2 = gate.clone();
+        let mut r = Router::spawn(1, EngineConfig::default(), Policy::RoundRobin, move |_| {
+            GatedExecutor { inner: MockExecutor::new(1000, 64), gate: g2.clone() }
+        });
+        r.submit(req_prompt(1, vec![5]));
+        // the Cancel queues behind Req+Flush on the worker's FIFO; the
+        // gate holds the worker inside its first prefill until the
+        // cancel is already waiting, so exactly one token is emitted
+        assert_eq!(r.cancel(1, FinishReason::DeadlineExceeded), 1);
+        gate.store(1, Ordering::SeqCst);
+        let outs = r.drain().unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].finish, FinishReason::DeadlineExceeded);
+        assert_eq!(outs[0].tokens, vec![6], "the prefill token surfaced");
+        assert_eq!(r.loads(), vec![0], "cancel releases the inflight gauge");
+        // cancelling an unknown id is accepted and a no-op everywhere
+        assert_eq!(r.cancel(99, FinishReason::DeadlineExceeded), 1);
+        assert!(r.drain().unwrap().is_empty());
+    }
+
+    #[test]
+    fn tuned_factory_applies_table_on_every_worker() {
+        // regression (`--tune` ignored under --workers > 1): a factory
+        // that applies the tune table must survive Engine::new with the
+        // tuned kernel/threads intact, observable per worker via the
+        // kv-stats tuned_classes counter
+        use crate::coordinator::executor::StcExecutor;
+        use crate::model::{Backend, BlockConfig, NativeModel};
+        use crate::stc::autotune::shape_class;
+        use crate::stc::{TuneEntry, TuneTable};
+        let model = || {
+            NativeModel::generate(
+                BlockConfig { dim: 32, n_heads: 2, ffn: 48 },
+                2,
+                64,
+                32,
+                9,
+                Backend::Dense,
+            )
+        };
+        let mut table = TuneTable::new();
+        table.entries.insert(
+            shape_class(1, 32, 32),
+            TuneEntry { kernel: "scalar".into(), threads: 1, secs: 0.1 },
+        );
+        table.entries.insert(
+            shape_class(32, 32, 32),
+            TuneEntry { kernel: "blocked".into(), threads: 2, secs: 0.2 },
+        );
+        let table = Arc::new(table);
+        let mut r =
+            Router::spawn(2, EngineConfig::default(), Policy::RoundRobin, move |_wid| {
+                let mut exec = StcExecutor::new(model());
+                let applied = exec.apply_tune(&table);
+                assert_eq!(applied.len(), 2);
+                exec
+            });
+        for i in 0..4 {
+            r.submit(req_prompt(i, vec![3, 7]));
+        }
+        assert_eq!(r.drain().unwrap().len(), 4);
+        for s in r.kv_stats() {
+            let s = s.expect("alive");
+            assert_eq!(s.tuned_classes, 2, "tune table applied on this worker");
+            assert_eq!(s.requests_finished, 2);
+        }
     }
 
     #[test]

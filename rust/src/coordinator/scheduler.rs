@@ -93,7 +93,17 @@ impl Scheduler {
                 break;
             }
             if plen > token_budget {
-                break;
+                // An over-budget head (longer than the whole per-step
+                // budget) would otherwise block the FIFO forever: it can
+                // never fit, nothing behind it can be admitted, and
+                // `has_work()` keeps the engine spinning. Admit it ALONE
+                // when this step has no other prefill and nothing is
+                // running-after-admission that it would starve.
+                let solo = step.prefill.is_empty()
+                    && plen > self.cfg.prefill_token_budget;
+                if !solo {
+                    break;
+                }
             }
             if self.blocks.utilization() >= self.cfg.watermark
                 || !self.blocks.can_allocate(plen + 1)
@@ -104,8 +114,11 @@ impl Scheduler {
             self.blocks
                 .allocate_with_prefix(ws.id, &ws.tokens)
                 .expect("can_allocate checked");
-            token_budget -= plen;
+            token_budget = token_budget.saturating_sub(plen);
             step.prefill.push(ws.id);
+            if plen > self.cfg.prefill_token_budget {
+                break; // solo admission: never co-batch an oversized prefill
+            }
         }
         if !step.prefill.is_empty() {
             self.running.extend(step.prefill.iter().copied());
@@ -153,9 +166,13 @@ impl Scheduler {
         self.blocks.release(id);
     }
 
-    /// Sequence finished: release blocks and drop from running.
+    /// Sequence finished (or was cancelled): release blocks and drop it
+    /// from whichever queue holds it. Cancelling a still-waiting
+    /// sequence (e.g. a deadline firing pre-admission) must remove it
+    /// here too, or `has_work()` would spin on a ghost entry.
     pub fn finish(&mut self, id: SeqId) {
         self.running.retain(|r| *r != id);
+        self.waiting.retain(|w| w.id != id);
         self.blocks.release(id);
     }
 }
@@ -216,6 +233,48 @@ mod tests {
         s.add_waiting(2, toks(15));
         let st = s.schedule();
         assert_eq!(st.prefill, vec![1], "second would exceed the budget");
+    }
+
+    #[test]
+    fn over_budget_head_admits_alone_not_deadlocks() {
+        // regression: a waiting sequence longer than the whole prefill
+        // token budget used to block the FIFO forever (head-of-line
+        // deadlock with has_work() spinning)
+        let mut s = Scheduler::new(
+            SchedulerConfig { max_batch: 8, prefill_token_budget: 20, watermark: 1.0 },
+            BlockManager::new(64, 16),
+        );
+        s.add_waiting(1, toks(50)); // > budget, well under pool capacity
+        s.add_waiting(2, toks(8));
+        let st = s.schedule();
+        assert_eq!(st.prefill, vec![1], "oversized head admitted solo");
+        let st = s.schedule();
+        assert_eq!(st.prefill, vec![2], "queue unblocked behind it");
+    }
+
+    #[test]
+    fn over_budget_seq_never_cobatched() {
+        let mut s = Scheduler::new(
+            SchedulerConfig { max_batch: 8, prefill_token_budget: 20, watermark: 1.0 },
+            BlockManager::new(64, 16),
+        );
+        s.add_waiting(1, toks(8));
+        s.add_waiting(2, toks(50));
+        let st = s.schedule();
+        assert_eq!(st.prefill, vec![1], "normal head admits; oversized waits");
+        let st = s.schedule();
+        assert_eq!(st.prefill, vec![2], "oversized admits alone next step");
+    }
+
+    #[test]
+    fn finish_removes_waiting_entries() {
+        // cancellation path: finishing a never-admitted sequence must
+        // clear it from the waiting queue so has_work() goes idle
+        let mut s = sched(16, 16, 4);
+        s.add_waiting(1, toks(8));
+        assert!(s.has_work());
+        s.finish(1);
+        assert!(!s.has_work(), "cancelled waiting seq still queued");
     }
 
     #[test]

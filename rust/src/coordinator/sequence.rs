@@ -37,6 +37,8 @@ pub struct Sequence {
     pub pos: usize,
     pub kv: KvStore,
     pub first_token_at: Option<Instant>,
+    /// wall timestamp of the most recent emitted token (inter-token latency)
+    pub last_token_at: Option<Instant>,
     /// number of times this sequence was preempted (fairness metric)
     pub preemptions: usize,
 }
@@ -51,6 +53,7 @@ impl Sequence {
             pos: 0,
             kv: KvStore::default(),
             first_token_at: None,
+            last_token_at: None,
             preemptions: 0,
         }
     }

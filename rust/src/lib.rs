@@ -28,4 +28,5 @@ pub mod quant;
 pub mod runtime;
 pub mod sparsity;
 pub mod stc;
+pub mod study;
 pub mod util;

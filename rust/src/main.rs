@@ -6,10 +6,18 @@
 //!                     [--kernel auto|scalar|blocked|avx2|vnni|neon] [--tune]
 //!                     [--workers W] [--routing round_robin|least_loaded|prefix[:K]]
 //!                     [--prefix-cache] [--prefix-cache-bytes B] [--migrate-kv]
+//!                     [--stream]
+//! slidesparse study   --config study.json[,more.json...] [--out BENCH_serving_slo.json]
 //! slidesparse bench   [--suite kernel|e2e|figures|all]
 //! slidesparse explore [--pattern Z:L] [--hw M:N]
 //! slidesparse pack    --o O --k K [--n N] [--threads T]  # packer demo + stats
 //! ```
+//!
+//! `study` replays a declarative traffic study (arrival process +
+//! workload mix + admission knobs, see `studies/*.json`) against a
+//! simulated cluster and writes SLO percentiles/shed rates to a
+//! schema-validated JSON report. `SLIDESPARSE_BENCH_SMOKE=1` caps each
+//! study at 24 requests for CI smoke runs.
 
 use anyhow::{anyhow, Result};
 
@@ -31,12 +39,13 @@ fn main() -> Result<()> {
     let args = Args::parse();
     match args.subcommand.as_deref() {
         Some("serve") => serve(&args),
+        Some("study") => study_cmd(&args),
         Some("bench") => bench(&args),
         Some("explore") => explore(&args),
         Some("pack") => pack(&args),
         _ => {
             eprintln!(
-                "usage: slidesparse <serve|bench|explore|pack> [options]\n\
+                "usage: slidesparse <serve|study|bench|explore|pack> [options]\n\
                  see rust/src/main.rs for per-command flags"
             );
             Ok(())
@@ -63,6 +72,9 @@ fn serve(args: &Args) -> Result<()> {
         cfg.engine.migrate_kv = true;
         cfg.engine.prefix_cache = true;
     }
+    if args.flag("stream") {
+        cfg.engine.stream_events = true;
+    }
     if let Some(r) = args.opt("routing") {
         cfg.routing = r.parse().map_err(|e: String| anyhow!(e))?;
     }
@@ -87,7 +99,7 @@ fn serve(args: &Args) -> Result<()> {
     let (outs, report) = if cfg.executor == "pjrt" {
         serve_pjrt(&cfg, backend, n_requests)?
     } else if cfg.workers > 1 {
-        serve_router(&cfg, backend, n_requests)?
+        serve_router(&cfg, backend, n_requests, args.flag("tune"))?
     } else {
         let model = tables::e2e_model(backend);
         let vocab = model.vocab;
@@ -163,14 +175,32 @@ fn serve_pjrt(
 /// Multi-worker serve: one engine per worker thread, routed by
 /// `cfg.routing`. Demo requests cycle through a few shared prompt
 /// prefixes so `--routing prefix --prefix-cache` has something to reuse.
+///
+/// `--tune` is applied inside the per-worker executor factory: every
+/// worker's executor gets the tune table before its engine spawns
+/// (`Engine::new` preserves a pre-tuned executor's kernel/threads), so
+/// tuning is not silently dropped when `--workers > 1`.
 fn serve_router(
     cfg: &Config,
     backend: Backend,
     n_requests: usize,
+    tune: bool,
 ) -> Result<(Vec<RequestOutput>, String)> {
     let engine_cfg = cfg.engine;
-    let mut router: Router = Router::spawn(cfg.workers, engine_cfg, cfg.routing, move |_wid| {
-        StcExecutor::new(tables::e2e_model(backend))
+    let tune_table = if tune {
+        Some(load_or_tune(tables::e2e_model(backend).dim, cfg.engine.threads))
+    } else {
+        None
+    };
+    let mut router: Router = Router::spawn(cfg.workers, engine_cfg, cfg.routing, move |wid| {
+        let mut exec = StcExecutor::new(tables::e2e_model(backend));
+        if let Some(table) = &tune_table {
+            let applied = exec.apply_tune(table);
+            for (class, kern, threads) in &applied {
+                println!("  worker {wid} tuned {class}: kernel={kern} threads={threads}");
+            }
+        }
+        exec
     });
     let vocab = tables::E2E_VOCAB;
     let mut rng = XorShift::new(42);
@@ -188,16 +218,22 @@ fn serve_router(
         ));
     }
     let outs = router.drain()?;
+    let streamed = if cfg.engine.stream_events {
+        format!(" stream_events={}", router.poll_stream_events().len())
+    } else {
+        String::new()
+    };
     let (shards, shard_bytes) = router.shard_buffer();
     let report = format!(
         "router: policy={} workers={} dispatched={:?} kv_migrations={} \
-         shard_buffer={}x/{}B",
+         shard_buffer={}x/{}B{}",
         cfg.routing,
         cfg.workers,
         router.dispatch_counts(),
         router.kv_migrations(),
         shards,
-        shard_bytes
+        shard_bytes,
+        streamed
     );
     Ok((outs, report))
 }
@@ -249,6 +285,65 @@ fn demo_requests(n: usize, vocab: usize) -> Vec<Request> {
             )
         })
         .collect()
+}
+
+/// `slidesparse study --config a.json[,b.json...]`: replay each traffic
+/// study and write one schema'd `BENCH_serving_slo.json`. Deterministic
+/// fields (counts, rates, `stream_checksum`) depend only on each study's
+/// seed; wall-clock percentiles ride under each entry's `"wall"` object.
+fn study_cmd(args: &Args) -> Result<()> {
+    use slidesparse::bench::harness::Table;
+    use slidesparse::study::StudyConfig;
+    use slidesparse::util::json::{obj, Json};
+
+    let configs = args
+        .opt("config")
+        .ok_or_else(|| anyhow!("study: --config <file[,file...]> required"))?;
+    let out_path = args.opt_str("out", "BENCH_serving_slo.json");
+    let smoke = std::env::var("SLIDESPARSE_BENCH_SMOKE").as_deref() == Ok("1");
+    let mut table = Table::new(
+        "Serving SLO traffic studies",
+        &[
+            "study", "reqs", "shed%", "miss%", "ttft_p50", "ttft_p99", "itl_p50",
+            "gen tok/s", "checksum",
+        ],
+    );
+    let mut entries = Vec::new();
+    for path in configs.split(',').filter(|p| !p.is_empty()) {
+        let mut cfg = StudyConfig::from_file(std::path::Path::new(path))?;
+        if smoke {
+            cfg.requests = cfg.requests.min(24);
+        }
+        println!(
+            "study {}: {} requests, seed={} workers={} routing={}",
+            cfg.name, cfg.requests, cfg.seed, cfg.serve.workers, cfg.serve.routing
+        );
+        let out = slidesparse::study::run(&cfg)?;
+        let f = |k: &str| out.entry.req(k).as_f64().unwrap_or(0.0);
+        let w = |k: &str| out.entry.req("wall").req(k).as_f64().unwrap_or(0.0);
+        table.row(vec![
+            cfg.name.clone(),
+            format!("{}", cfg.requests),
+            format!("{:.1}", f("shed_rate") * 100.0),
+            format!("{:.1}", f("deadline_miss_rate") * 100.0),
+            format!("{:.2}ms", w("ttft_p50_ms")),
+            format!("{:.2}ms", w("ttft_p99_ms")),
+            format!("{:.2}ms", w("itl_p50_ms")),
+            format!("{:.0}", w("gen_tok_per_s")),
+            out.entry.req("stream_checksum").as_str().unwrap_or("?").to_string(),
+        ]);
+        entries.push(out.entry);
+    }
+    table.print();
+    let doc = obj(vec![
+        ("bench", Json::Str("serving_slo".into())),
+        ("schema_version", Json::Num(1.0)),
+        ("smoke", Json::Bool(smoke)),
+        ("studies", Json::Arr(entries)),
+    ]);
+    std::fs::write(out_path, doc.to_string_pretty() + "\n")?;
+    println!("wrote {out_path}");
+    Ok(())
 }
 
 fn bench(args: &Args) -> Result<()> {

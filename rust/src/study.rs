@@ -1,0 +1,723 @@
+//! Declarative traffic studies: replay a synthetic arrival process
+//! against a simulated worker cluster behind the serving [`Frontend`]
+//! and report SLO metrics (TTFT / inter-token latency percentiles,
+//! shed and deadline-miss rates, throughput).
+//!
+//! A study file declares the arrival process (Poisson / bursty on-off /
+//! diurnal sinusoid), the workload mix (prompt/output length ranges and
+//! an agent-swarm shared-prefix fraction), front-end admission knobs,
+//! and a full `serve` config for the cluster underneath. Everything
+//! that influences *decisions* — arrivals, lengths, shedding, deadline
+//! expiry, routing — runs on a deterministic PRNG and a virtual clock,
+//! so a fixed seed reproduces identical counts and token streams
+//! (pinned by `stream_checksum`); wall-clock latency percentiles are
+//! measured on the real clock and reported separately under `"wall"`.
+//!
+//! The cluster is a single-threaded replica of the router: one
+//! [`Engine`] per worker, stepped round-robin once per tick, dispatched
+//! with the same policy logic ([`choose_affinity`] + the prefix token
+//! hash) the threaded [`crate::coordinator::Router`] uses. Single
+//! threading is what makes the replay deterministic — the threaded
+//! router's interleavings are exercised by the conformance and router
+//! tests instead.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Config;
+use crate::coordinator::engine::Engine;
+use crate::coordinator::executor::StcExecutor;
+use crate::coordinator::frontend::{
+    Frontend, FrontendConfig, ServeBackend, SubmitPolicy,
+};
+use crate::coordinator::kvcache::{token_hash, PREFIX_HASH_SEED};
+use crate::coordinator::request::{
+    FinishReason, Request, RequestId, RequestOutput, SamplingParams, StreamEvent,
+};
+use crate::coordinator::router::{choose_affinity, Policy};
+use crate::model::{Backend, BlockConfig, NativeModel};
+use crate::util::json::{obj, Json};
+use crate::util::prng::XorShift;
+use crate::util::stats::Summary;
+
+/// Serving-model scale for traffic studies: small enough that a
+/// multi-hundred-request study finishes in CI, large enough to exercise
+/// real prefill/decode GEMMs on the configured sparsity backend.
+pub const STUDY_VOCAB: usize = 128;
+
+fn study_model(backend: Backend) -> NativeModel {
+    NativeModel::generate(
+        BlockConfig { dim: 48, n_heads: 2, ffn: 96 },
+        2,
+        STUDY_VOCAB,
+        256,
+        23,
+        backend,
+    )
+}
+
+// ---------------------------------------------------------------------
+// Study configuration
+// ---------------------------------------------------------------------
+
+/// Request arrival process, replayed on the virtual clock.
+#[derive(Clone, Debug)]
+pub enum Arrival {
+    /// exponential inter-arrivals at a fixed rate
+    Poisson { rate_rps: f64 },
+    /// on-off: bursts of `burst` requests at `rate_rps`, separated by
+    /// `idle_s` of silence
+    Bursty { rate_rps: f64, burst: usize, idle_s: f64 },
+    /// sinusoidal rate between `base_rps` and `peak_rps` over `period_s`
+    Diurnal { base_rps: f64, peak_rps: f64, period_s: f64 },
+}
+
+fn expo(rng: &mut XorShift) -> f64 {
+    -(1.0 - rng.next_f64()).ln()
+}
+
+impl Arrival {
+    /// Deterministic arrival timestamps (virtual seconds) for n requests.
+    pub fn times(&self, n: usize, rng: &mut XorShift) -> Vec<f64> {
+        let mut t = 0.0;
+        let mut out = Vec::with_capacity(n);
+        match self {
+            Arrival::Poisson { rate_rps } => {
+                for _ in 0..n {
+                    t += expo(rng) / rate_rps.max(1e-9);
+                    out.push(t);
+                }
+            }
+            Arrival::Bursty { rate_rps, burst, idle_s } => {
+                let mut in_burst = 0usize;
+                for _ in 0..n {
+                    if *burst > 0 && in_burst == *burst {
+                        t += idle_s;
+                        in_burst = 0;
+                    }
+                    t += expo(rng) / rate_rps.max(1e-9);
+                    in_burst += 1;
+                    out.push(t);
+                }
+            }
+            Arrival::Diurnal { base_rps, peak_rps, period_s } => {
+                for _ in 0..n {
+                    let phase = (t / period_s.max(1e-9)) * std::f64::consts::TAU;
+                    let rate = base_rps + (peak_rps - base_rps) * 0.5 * (1.0 - phase.cos());
+                    t += expo(rng) / rate.max(1e-9);
+                    out.push(t);
+                }
+            }
+        }
+        out
+    }
+
+    fn from_value(j: Option<&Json>) -> Result<Arrival> {
+        let Some(j) = j else {
+            return Ok(Arrival::Poisson { rate_rps: 100.0 });
+        };
+        let f = |key: &str, dflt: f64| j.get(key).and_then(|v| v.as_f64()).unwrap_or(dflt);
+        match j.get("process").and_then(|v| v.as_str()).unwrap_or("poisson") {
+            "poisson" => Ok(Arrival::Poisson { rate_rps: f("rate_rps", 100.0) }),
+            "bursty" => Ok(Arrival::Bursty {
+                rate_rps: f("rate_rps", 200.0),
+                burst: j.get("burst").and_then(|v| v.as_usize()).unwrap_or(8),
+                idle_s: f("idle_s", 0.1),
+            }),
+            "diurnal" => Ok(Arrival::Diurnal {
+                base_rps: f("base_rps", 50.0),
+                peak_rps: f("peak_rps", 200.0),
+                period_s: f("period_s", 1.0),
+            }),
+            other => Err(anyhow!("study: unknown arrival process '{other}'")),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match self {
+            Arrival::Poisson { .. } => "poisson",
+            Arrival::Bursty { .. } => "bursty",
+            Arrival::Diurnal { .. } => "diurnal",
+        }
+    }
+}
+
+/// Workload mix: prompt/output length ranges plus an agent-swarm
+/// shared-prefix component (a fraction of requests draw their prompt
+/// head from a small set of per-group prefixes, the shape prefix
+/// caching and affinity routing exist for).
+#[derive(Clone, Debug)]
+pub struct Workload {
+    /// inclusive [lo, hi] prompt length in tokens
+    pub prompt_tokens: (usize, usize),
+    /// inclusive [lo, hi] generated-token budget
+    pub output_tokens: (usize, usize),
+    /// number of distinct shared prefixes (0 = no sharing)
+    pub prefix_groups: usize,
+    /// tokens per shared prefix
+    pub prefix_tokens: usize,
+    /// fraction of requests that start with a shared prefix
+    pub prefix_fraction: f64,
+}
+
+impl Default for Workload {
+    fn default() -> Self {
+        Self {
+            prompt_tokens: (8, 32),
+            output_tokens: (4, 12),
+            prefix_groups: 0,
+            prefix_tokens: 16,
+            prefix_fraction: 0.0,
+        }
+    }
+}
+
+impl Workload {
+    fn from_value(j: Option<&Json>) -> Result<Workload> {
+        let mut w = Workload::default();
+        let Some(j) = j else { return Ok(w) };
+        if let Some(r) = j.get("prompt_tokens") {
+            w.prompt_tokens = parse_range(r, "prompt_tokens")?;
+        }
+        if let Some(r) = j.get("output_tokens") {
+            w.output_tokens = parse_range(r, "output_tokens")?;
+        }
+        if let Some(s) = j.get("shared_prefix") {
+            w.prefix_groups = s.get("groups").and_then(|v| v.as_usize()).unwrap_or(4);
+            w.prefix_tokens = s.get("prefix_tokens").and_then(|v| v.as_usize()).unwrap_or(16);
+            w.prefix_fraction =
+                s.get("fraction").and_then(|v| v.as_f64()).unwrap_or(0.5).clamp(0.0, 1.0);
+        }
+        Ok(w)
+    }
+}
+
+fn parse_range(j: &Json, what: &str) -> Result<(usize, usize)> {
+    let v = j.usize_arr();
+    if v.len() != 2 || v[0] > v[1] || v[0] == 0 {
+        return Err(anyhow!("study: {what} wants [lo, hi] with 0 < lo <= hi"));
+    }
+    Ok((v[0], v[1]))
+}
+
+fn frontend_from_value(j: Option<&Json>) -> Result<FrontendConfig> {
+    let mut fc = FrontendConfig::default();
+    let Some(j) = j else { return Ok(fc) };
+    if let Some(v) = j.get("max_queue").and_then(|v| v.as_usize()) {
+        fc.max_queue = v;
+    }
+    if let Some(v) = j.get("max_inflight").and_then(|v| v.as_usize()) {
+        fc.max_inflight = v;
+    }
+    if let Some(v) = j.get("policy").and_then(|v| v.as_str()) {
+        fc.submit = v.parse::<SubmitPolicy>().map_err(|e| anyhow!("study: {e}"))?;
+    }
+    if let Some(v) = j.get("deadline_s").and_then(|v| v.as_f64()) {
+        if v > 0.0 {
+            fc.default_deadline = Some(v);
+        }
+    }
+    Ok(fc)
+}
+
+/// One parsed study file.
+#[derive(Clone, Debug)]
+pub struct StudyConfig {
+    pub name: String,
+    pub seed: u64,
+    pub requests: usize,
+    /// virtual seconds per front-end tick (one engine step per worker)
+    pub tick_s: f64,
+    pub arrival: Arrival,
+    pub workload: Workload,
+    pub frontend: FrontendConfig,
+    pub serve: Config,
+}
+
+impl StudyConfig {
+    pub fn from_file(path: &Path) -> Result<StudyConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("study: read {}: {e}", path.display()))?;
+        Self::from_json(&text)
+    }
+
+    pub fn from_json(text: &str) -> Result<StudyConfig> {
+        let j = Json::parse(text).map_err(|e| anyhow!("study: {e}"))?;
+        let serve = match j.get("serve") {
+            Some(s) => Config::from_value(s)?,
+            None => Config::default(),
+        };
+        let cfg = StudyConfig {
+            name: j
+                .get("name")
+                .and_then(|v| v.as_str())
+                .unwrap_or("unnamed")
+                .to_string(),
+            seed: j.get("seed").and_then(|v| v.as_i64()).unwrap_or(42) as u64,
+            requests: j.get("requests").and_then(|v| v.as_usize()).unwrap_or(64),
+            tick_s: j.get("tick_s").and_then(|v| v.as_f64()).unwrap_or(0.005),
+            arrival: Arrival::from_value(j.get("arrival"))?,
+            workload: Workload::from_value(j.get("workload"))?,
+            frontend: frontend_from_value(j.get("frontend"))?,
+            serve,
+        };
+        if cfg.requests == 0 {
+            return Err(anyhow!("study: requests must be > 0"));
+        }
+        if cfg.tick_s <= 0.0 {
+            return Err(anyhow!("study: tick_s must be > 0"));
+        }
+        let (_, phi) = cfg.workload.prompt_tokens;
+        let (_, ohi) = cfg.workload.output_tokens;
+        let longest = phi.max(cfg.workload.prefix_tokens) + ohi;
+        if longest > 256 {
+            return Err(anyhow!(
+                "study: prompt+output can reach {longest} tokens; the study model caps at 256"
+            ));
+        }
+        Ok(cfg)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Simulated cluster: the router's policy logic over in-process engines
+// ---------------------------------------------------------------------
+
+/// One [`Engine`] per worker, stepped round-robin by the front-end —
+/// the threaded router's dispatch policies without its threads, so a
+/// study replays identically for a fixed seed.
+pub struct SimCluster {
+    engines: Vec<Engine<StcExecutor>>,
+    policy: Policy,
+    sticky: HashMap<u64, usize>,
+    rr: usize,
+    dispatched: Vec<u64>,
+}
+
+impl SimCluster {
+    pub fn new(serve: &Config) -> Result<SimCluster> {
+        let backend = serve.backend()?;
+        let workers = serve.workers.max(1);
+        let engines = (0..workers)
+            .map(|_| Engine::new(StcExecutor::new(study_model(backend)), serve.engine))
+            .collect();
+        Ok(SimCluster {
+            engines,
+            policy: serve.routing,
+            sticky: HashMap::new(),
+            rr: 0,
+            dispatched: vec![0; workers],
+        })
+    }
+
+    fn loads(&self) -> Vec<usize> {
+        self.engines
+            .iter()
+            .map(|e| e.num_waiting() + e.num_running())
+            .collect()
+    }
+
+    fn route(&mut self, prompt: &[i32]) -> usize {
+        match self.policy {
+            Policy::RoundRobin => {
+                let w = self.rr % self.engines.len();
+                self.rr += 1;
+                w
+            }
+            Policy::LeastLoaded => choose_affinity(None, &self.loads(), |_| true),
+            Policy::PrefixAffinity { prefix_tokens } => {
+                let k = prefix_tokens.min(prompt.len());
+                let h = token_hash(PREFIX_HASH_SEED, &prompt[..k]);
+                let prev = self.sticky.get(&h).copied();
+                let w = choose_affinity(prev, &self.loads(), |_| true);
+                self.sticky.insert(h, w);
+                w
+            }
+        }
+    }
+
+    pub fn dispatch_counts(&self) -> &[u64] {
+        &self.dispatched
+    }
+
+    /// Merge per-worker engine metrics into study-level aggregates:
+    /// (ttft, itl, latency) summaries plus deterministic counters.
+    fn aggregate(&self) -> (Summary, Summary, Summary, StudyCounters) {
+        let mut ttft = Summary::new();
+        let mut itl = Summary::new();
+        let mut latency = Summary::new();
+        let mut c = StudyCounters::default();
+        for e in &self.engines {
+            ttft.merge(&e.metrics.ttft);
+            itl.merge(&e.metrics.itl);
+            latency.merge(&e.metrics.latency);
+            c.prompt_tokens += e.metrics.prompt_tokens;
+            c.generated_tokens += e.metrics.generated_tokens;
+            c.preemptions += e.metrics.preemptions;
+            c.prefix_cached_tokens += e.metrics.prefix_cached_tokens;
+        }
+        (ttft, itl, latency, c)
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct StudyCounters {
+    prompt_tokens: u64,
+    generated_tokens: u64,
+    preemptions: u64,
+    prefix_cached_tokens: u64,
+}
+
+impl ServeBackend for SimCluster {
+    fn submit(&mut self, request: Request) {
+        let w = self.route(&request.prompt);
+        self.dispatched[w] += 1;
+        self.engines[w].submit(request);
+    }
+
+    fn cancel(&mut self, rid: RequestId, finish: FinishReason) -> bool {
+        self.engines.iter_mut().any(|e| e.cancel_request(rid, finish))
+    }
+
+    fn step(&mut self) -> Result<bool> {
+        let mut progressed = false;
+        for e in &mut self.engines {
+            progressed |= e.step()?;
+        }
+        Ok(progressed)
+    }
+
+    fn poll_events(&mut self) -> Vec<StreamEvent> {
+        let mut evs = Vec::new();
+        for e in &mut self.engines {
+            evs.extend(ServeBackend::poll_events(e));
+        }
+        evs
+    }
+
+    fn queue_depth(&self) -> usize {
+        self.loads().iter().sum()
+    }
+
+    fn enable_streaming(&mut self) {
+        for e in &mut self.engines {
+            e.enable_stream_buffer();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Workload generation
+// ---------------------------------------------------------------------
+
+fn gen_requests(cfg: &StudyConfig, rng: &mut XorShift) -> Vec<Request> {
+    let w = &cfg.workload;
+    let prefixes: Vec<Vec<i32>> = (0..w.prefix_groups)
+        .map(|_| {
+            (0..w.prefix_tokens)
+                .map(|_| rng.below(STUDY_VOCAB) as i32)
+                .collect()
+        })
+        .collect();
+    (0..cfg.requests)
+        .map(|i| {
+            let shared = !prefixes.is_empty() && rng.next_f64() < w.prefix_fraction;
+            let mut prompt: Vec<i32> = if shared {
+                prefixes[rng.below(prefixes.len())].clone()
+            } else {
+                Vec::new()
+            };
+            let (plo, phi) = w.prompt_tokens;
+            let target = plo + rng.below(phi - plo + 1);
+            while prompt.len() < target {
+                prompt.push(rng.below(STUDY_VOCAB) as i32);
+            }
+            let (olo, ohi) = w.output_tokens;
+            let max_new = olo + rng.below(ohi - olo + 1);
+            Request::new(
+                i as u64,
+                prompt,
+                SamplingParams { max_new_tokens: max_new, ..Default::default() },
+            )
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Replay + report
+// ---------------------------------------------------------------------
+
+/// Chained hash over the terminal outputs in id order (tokens + finish
+/// reason). Identical across runs for a fixed seed — the determinism
+/// pin for `BENCH_serving_slo.json`.
+pub fn stream_checksum(outs: &[RequestOutput]) -> u64 {
+    let mut sorted: Vec<&RequestOutput> = outs.iter().collect();
+    sorted.sort_by_key(|o| o.id);
+    let mut h = PREFIX_HASH_SEED;
+    for o in sorted {
+        let code = match o.finish {
+            FinishReason::MaxTokens => 0,
+            FinishReason::StopToken => 1,
+            FinishReason::Rejected => 2,
+            FinishReason::DeadlineExceeded => 3,
+        };
+        h = token_hash(h, &[o.id as i32, code]);
+        h = token_hash(h, &o.tokens);
+    }
+    h
+}
+
+/// Outcome of one study replay: the schema'd JSON entry for
+/// `BENCH_serving_slo.json` plus the raw outputs for callers that want
+/// to inspect them.
+pub struct StudyOutcome {
+    pub entry: Json,
+    pub outputs: Vec<RequestOutput>,
+}
+
+/// Replay a study to completion. Deterministic fields in the returned
+/// entry depend only on the config (fixed seed ⇒ identical values);
+/// everything measured on the real clock lives under `"wall"`.
+pub fn run(cfg: &StudyConfig) -> Result<StudyOutcome> {
+    let cluster = SimCluster::new(&cfg.serve)?;
+    let mut fe = Frontend::with_virtual_clock(cluster, cfg.frontend);
+    let mut rng = XorShift::new(cfg.seed);
+    let arrivals = cfg.arrival.times(cfg.requests, &mut rng);
+    let requests = gen_requests(cfg, &mut rng);
+
+    let t0 = Instant::now();
+    let mut next = 0usize;
+    while next < requests.len() || fe.live_sessions() > 0 {
+        while next < requests.len() && arrivals[next] <= fe.clock.now() {
+            fe.submit(requests[next].clone())?;
+            next += 1;
+        }
+        fe.tick()?;
+        fe.clock.advance(cfg.tick_s);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let outputs = fe.poll_finished();
+    let stats = fe.stats;
+    let (ttft, itl, latency, counters) = fe.backend.aggregate();
+    let ms = |v: f64| Json::Num((v * 1e3 * 1e3).round() / 1e3); // ms, 3 decimals
+    let rate = |num: u64| {
+        if stats.submitted == 0 {
+            Json::Num(0.0)
+        } else {
+            Json::Num(num as f64 / stats.submitted as f64)
+        }
+    };
+    let wall = obj(vec![
+        ("ttft_p50_ms", ms(ttft.p50())),
+        ("ttft_p95_ms", ms(ttft.p95())),
+        ("ttft_p99_ms", ms(ttft.p99())),
+        ("itl_p50_ms", ms(itl.p50())),
+        ("itl_p95_ms", ms(itl.p95())),
+        ("itl_p99_ms", ms(itl.p99())),
+        ("latency_p50_ms", ms(latency.p50())),
+        ("latency_p95_ms", ms(latency.p95())),
+        ("latency_p99_ms", ms(latency.p99())),
+        (
+            "gen_tok_per_s",
+            Json::Num(if wall_s > 0.0 {
+                counters.generated_tokens as f64 / wall_s
+            } else {
+                0.0
+            }),
+        ),
+        ("wall_s", Json::Num(wall_s)),
+    ]);
+    let entry = obj(vec![
+        ("name", Json::Str(cfg.name.clone())),
+        ("seed", Json::Num(cfg.seed as f64)),
+        ("arrival", Json::Str(cfg.arrival.name().to_string())),
+        ("requests", Json::Num(cfg.requests as f64)),
+        ("workers", Json::Num(cfg.serve.workers as f64)),
+        ("routing", Json::Str(format!("{}", cfg.serve.routing))),
+        ("sparsity", Json::Str(cfg.serve.sparsity.clone())),
+        ("submitted", Json::Num(stats.submitted as f64)),
+        ("accepted", Json::Num(stats.accepted as f64)),
+        ("shed", Json::Num(stats.shed as f64)),
+        ("completed", Json::Num(stats.completed as f64)),
+        ("deadline_missed", Json::Num(stats.deadline_missed as f64)),
+        ("shed_rate", rate(stats.shed)),
+        ("deadline_miss_rate", rate(stats.deadline_missed)),
+        ("prompt_tokens", Json::Num(counters.prompt_tokens as f64)),
+        ("generated_tokens", Json::Num(counters.generated_tokens as f64)),
+        ("preemptions", Json::Num(counters.preemptions as f64)),
+        (
+            "prefix_cached_tokens",
+            Json::Num(counters.prefix_cached_tokens as f64),
+        ),
+        (
+            "stream_checksum",
+            Json::Str(format!("{:016x}", stream_checksum(&outputs))),
+        ),
+        ("wall", wall),
+    ]);
+    Ok(StudyOutcome { entry, outputs })
+}
+
+/// The deterministic view of a study entry: everything except the
+/// wall-clock sub-object. Two runs of the same config must agree on
+/// this exactly.
+pub fn deterministic_view(entry: &Json) -> Json {
+    match entry {
+        Json::Obj(m) => {
+            let mut m = m.clone();
+            m.remove("wall");
+            Json::Obj(m)
+        }
+        other => other.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_cfg(extra: &str) -> StudyConfig {
+        let text = format!(
+            r#"{{
+                "name": "t", "seed": 7, "requests": 16, "tick_s": 0.002,
+                "arrival": {{"process": "poisson", "rate_rps": 400}},
+                "workload": {{"prompt_tokens": [6, 18], "output_tokens": [3, 6]}},
+                {extra}
+                "serve": {{"sparsity": "dense", "workers": 2,
+                           "engine": {{"kv_blocks": 96, "kv_block_size": 8}}}}
+            }}"#
+        );
+        StudyConfig::from_json(&text).unwrap()
+    }
+
+    #[test]
+    fn arrival_times_are_monotone_and_deterministic() {
+        for arr in [
+            Arrival::Poisson { rate_rps: 100.0 },
+            Arrival::Bursty { rate_rps: 300.0, burst: 4, idle_s: 0.05 },
+            Arrival::Diurnal { base_rps: 50.0, peak_rps: 200.0, period_s: 0.5 },
+        ] {
+            let a = arr.times(32, &mut XorShift::new(3));
+            let b = arr.times(32, &mut XorShift::new(3));
+            assert_eq!(a, b, "{} not deterministic", arr.name());
+            assert!(a.windows(2).all(|w| w[0] < w[1]), "{} not monotone", arr.name());
+            assert!(a[0] > 0.0);
+        }
+    }
+
+    #[test]
+    fn config_parses_all_sections() {
+        let cfg = base_cfg(
+            r#""frontend": {"max_queue": 4, "max_inflight": 8,
+                            "policy": "shed", "deadline_s": 0.5},"#,
+        );
+        assert_eq!(cfg.name, "t");
+        assert_eq!(cfg.requests, 16);
+        assert_eq!(cfg.frontend.max_queue, 4);
+        assert_eq!(cfg.frontend.max_inflight, 8);
+        assert_eq!(cfg.frontend.submit, SubmitPolicy::Shed);
+        assert_eq!(cfg.frontend.default_deadline, Some(0.5));
+        assert_eq!(cfg.serve.workers, 2);
+        assert_eq!(cfg.serve.engine.kv_blocks, 96);
+        assert!(StudyConfig::from_json(r#"{"requests": 0}"#).is_err());
+        assert!(StudyConfig::from_json(
+            r#"{"workload": {"prompt_tokens": [250, 250]}}"#
+        )
+        .is_err());
+        assert!(StudyConfig::from_json(
+            r#"{"arrival": {"process": "lunar"}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn replay_is_deterministic_modulo_wall() {
+        let cfg = base_cfg("");
+        let a = run(&cfg).unwrap();
+        let b = run(&cfg).unwrap();
+        assert_eq!(
+            deterministic_view(&a.entry).to_string_pretty(),
+            deterministic_view(&b.entry).to_string_pretty()
+        );
+        assert_ne!(
+            a.entry.req("stream_checksum").as_str(),
+            Some("0000000000000000")
+        );
+        // all requests complete when nothing sheds or expires
+        assert_eq!(a.entry.req("completed").as_usize(), Some(16));
+        assert_eq!(a.entry.req("shed").as_usize(), Some(0));
+        assert_eq!(a.outputs.len(), 16);
+        assert!(a
+            .outputs
+            .iter()
+            .all(|o| o.finish == FinishReason::MaxTokens));
+    }
+
+    #[test]
+    fn overload_sheds_and_accounts_every_request() {
+        // a tight queue bound + a hot arrival process forces shedding
+        let cfg = base_cfg(r#""frontend": {"max_queue": 2, "policy": "shed"},"#);
+        let out = run(&cfg).unwrap();
+        let shed = out.entry.req("shed").as_usize().unwrap();
+        let accepted = out.entry.req("accepted").as_usize().unwrap();
+        assert!(shed > 0, "expected shedding under overload");
+        assert_eq!(shed + accepted, 16, "every submit is shed xor accepted");
+        assert_eq!(out.outputs.len(), 16, "shed outputs surface too");
+        assert_eq!(
+            out.outputs
+                .iter()
+                .filter(|o| o.finish == FinishReason::Rejected)
+                .count(),
+            shed
+        );
+    }
+
+    #[test]
+    fn deadlines_expire_on_the_virtual_clock() {
+        // deadline shorter than a single decode's worth of ticks
+        let cfg = base_cfg(r#""frontend": {"deadline_s": 0.004},"#);
+        let out = run(&cfg).unwrap();
+        let missed = out.entry.req("deadline_missed").as_usize().unwrap();
+        assert!(missed > 0, "expected deadline misses with a 2-tick budget");
+        assert_eq!(
+            out.outputs
+                .iter()
+                .filter(|o| o.finish == FinishReason::DeadlineExceeded)
+                .count(),
+            missed
+        );
+        // deterministic: the same config misses the same requests
+        let again = run(&cfg).unwrap();
+        assert_eq!(
+            deterministic_view(&out.entry).to_string_pretty(),
+            deterministic_view(&again.entry).to_string_pretty()
+        );
+    }
+
+    #[test]
+    fn swarm_prefixes_hit_the_prefix_cache() {
+        let text = r#"{
+            "name": "swarm", "seed": 11, "requests": 12, "tick_s": 0.002,
+            "arrival": {"process": "bursty", "rate_rps": 500, "burst": 4, "idle_s": 0.05},
+            "workload": {
+                "prompt_tokens": [24, 32], "output_tokens": [3, 5],
+                "shared_prefix": {"groups": 2, "prefix_tokens": 24, "fraction": 1.0}
+            },
+            "serve": {"sparsity": "dense", "workers": 2, "routing": "prefix:24",
+                      "prefix_cache": true,
+                      "engine": {"kv_blocks": 128, "kv_block_size": 8}}
+        }"#;
+        let cfg = StudyConfig::from_json(text).unwrap();
+        let out = run(&cfg).unwrap();
+        assert_eq!(out.entry.req("completed").as_usize(), Some(12));
+        let cached = out.entry.req("prefix_cached_tokens").as_usize().unwrap();
+        assert!(
+            cached > 0,
+            "shared-prefix swarm should reuse cached prefix KV"
+        );
+    }
+}

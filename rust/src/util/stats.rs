@@ -15,6 +15,12 @@ impl Summary {
         self.samples.push(v);
     }
 
+    /// Fold another summary's samples into this one (used to aggregate
+    /// per-worker engine metrics into study-level percentiles).
+    pub fn merge(&mut self, other: &Summary) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+
     pub fn len(&self) -> usize {
         self.samples.len()
     }
@@ -71,6 +77,10 @@ impl Summary {
 
     pub fn p50(&self) -> f64 {
         self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
     }
 
     pub fn p99(&self) -> f64 {
@@ -149,6 +159,20 @@ mod tests {
         assert_eq!(s.max(), 5.0);
         assert_eq!(s.p50(), 3.0);
         assert!((s.stddev() - 1.5811).abs() < 1e-3);
+    }
+
+    #[test]
+    fn merge_combines_samples() {
+        let mut a = Summary::new();
+        a.add(1.0);
+        a.add(2.0);
+        let mut b = Summary::new();
+        b.add(3.0);
+        b.add(4.0);
+        a.merge(&b);
+        assert_eq!(a.len(), 4);
+        assert_eq!(a.mean(), 2.5);
+        assert_eq!(b.len(), 2, "source summary untouched");
     }
 
     #[test]

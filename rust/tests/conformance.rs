@@ -459,6 +459,89 @@ fn migrated_generations_bit_exact_across_backends_threads_and_cache() {
     }
 }
 
+// ---------------------------------------------------------------------
+// (g) streaming: per-token events byte-identical to terminal outputs
+//     across backends x 1/2/4/8 threads x prefix-cache on/off
+// ---------------------------------------------------------------------
+
+#[test]
+fn streamed_tokens_bit_exact_across_backends_threads_and_cache() {
+    // streaming is an observation channel: accumulating the Token
+    // events for a request must reconstruct exactly the tokens its
+    // terminal RequestOutput reports, and the Finished event must carry
+    // that same output — for every backend, thread count, and cache
+    // setting (including preemption replays, which re-emit by index).
+    use std::collections::BTreeMap;
+
+    use slidesparse::coordinator::StreamEvent;
+
+    for backend in [Backend::Dense, Backend::Slide { n: 4 }, Backend::Native24] {
+        for threads in [1usize, 2, 4, 8] {
+            for prefix_cache in [false, true] {
+                let model = NativeModel::generate(
+                    BlockConfig { dim: 48, n_heads: 2, ffn: 64 },
+                    2,
+                    128,
+                    96,
+                    23,
+                    backend,
+                );
+                let mut engine = Engine::new(
+                    StcExecutor::new(model),
+                    EngineConfig {
+                        threads,
+                        prefix_cache,
+                        kv_block_size: 8,
+                        stream_events: true,
+                        ..Default::default()
+                    },
+                );
+                let prefix: Vec<i32> = (0..16).map(|t| (t * 7 + 3) % 128).collect();
+                for i in 0..5u64 {
+                    let mut prompt = prefix.clone();
+                    prompt.extend((0..3).map(|t| (i as i32 * 13 + t) % 128));
+                    engine.submit(Request::new(
+                        i,
+                        prompt,
+                        SamplingParams { max_new_tokens: 6, ..Default::default() },
+                    ));
+                }
+                let mut outs = engine.run_to_completion().unwrap();
+                outs.sort_by_key(|o| o.id);
+                assert_eq!(outs.len(), 5);
+
+                let mut streamed: BTreeMap<u64, Vec<i32>> = BTreeMap::new();
+                let mut finished: BTreeMap<u64, Vec<i32>> = BTreeMap::new();
+                for ev in engine.poll_stream_events() {
+                    match ev {
+                        StreamEvent::Token { id, index, token } => {
+                            let v = streamed.entry(id).or_default();
+                            if index < v.len() {
+                                v[index] = token; // preemption replay slot
+                            } else {
+                                assert_eq!(index, v.len(), "gap in stream for req {id}");
+                                v.push(token);
+                            }
+                        }
+                        StreamEvent::Finished { id, output } => {
+                            finished.insert(id, output.tokens);
+                        }
+                    }
+                }
+                for o in &outs {
+                    let ctx = format!(
+                        "{backend:?} t={threads} cache={prefix_cache} req={}",
+                        o.id
+                    );
+                    assert_eq!(streamed.get(&o.id), Some(&o.tokens), "tokens: {ctx}");
+                    assert_eq!(finished.get(&o.id), Some(&o.tokens), "finish: {ctx}");
+                }
+                assert!(engine.poll_stream_events().is_empty(), "drained once");
+            }
+        }
+    }
+}
+
 #[test]
 fn pooled_layer_forward_bit_exact_for_all_backends() {
     // the serving-layer view of (c): Linear::forward under a pool equals

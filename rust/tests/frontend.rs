@@ -1,0 +1,246 @@
+//! Serving front-end gate: admission control, deadlines, backpressure,
+//! and streaming behave as advertised under load and under randomized
+//! (chaos) configurations — shed requests never touch the scheduler,
+//! expired requests always release their KV blocks, every submitted
+//! request gets exactly one terminal output, and streamed tokens are
+//! byte-identical to the terminal outputs through both backends
+//! ([`Engine`] directly and the threaded [`Router`]).
+
+use slidesparse::coordinator::{
+    Engine, EngineConfig, FinishReason, Frontend, FrontendConfig, MockExecutor, Policy, Request,
+    Router, SamplingParams, StreamEvent, SubmitOutcome, SubmitPolicy,
+};
+use slidesparse::util::prop;
+
+fn req(id: u64, prompt: Vec<i32>, max_new: usize) -> Request {
+    Request::new(
+        id,
+        prompt,
+        SamplingParams { max_new_tokens: max_new, ..Default::default() },
+    )
+}
+
+fn small_engine(kv_blocks: usize) -> Engine<MockExecutor> {
+    Engine::new(
+        MockExecutor::new(10_000, 256),
+        EngineConfig { kv_blocks, kv_block_size: 4, ..Default::default() },
+    )
+}
+
+// ---------------------------------------------------------------------
+// admission control
+// ---------------------------------------------------------------------
+
+#[test]
+fn shed_requests_never_reach_the_scheduler() {
+    let cfg = FrontendConfig { max_inflight: 3, ..Default::default() };
+    let mut fe = Frontend::new(small_engine(64), cfg);
+    let mut shed_ids = Vec::new();
+    for i in 0..10u64 {
+        if fe.submit(req(i, vec![10 + i as i32], 3)).unwrap() == SubmitOutcome::Shed {
+            shed_ids.push(i);
+        }
+    }
+    assert_eq!(shed_ids.len(), 7, "3 admitted, 7 shed");
+    // the fast path is observable in engine metrics: only accepted
+    // requests were ever submitted to the scheduler
+    assert_eq!(fe.backend.metrics.requests_submitted, 3);
+    assert_eq!(fe.stats.shed, 7);
+    let outs = fe.run_to_completion().unwrap();
+    assert_eq!(outs.len(), 10, "sheds still get terminal outputs");
+    for o in &outs {
+        if shed_ids.contains(&o.id) {
+            assert_eq!(o.finish, FinishReason::Rejected);
+            assert!(o.tokens.is_empty());
+        } else {
+            assert_eq!(o.finish, FinishReason::MaxTokens);
+            assert_eq!(o.tokens.len(), 3);
+        }
+    }
+    assert_eq!(fe.backend.metrics.requests_finished, 3);
+}
+
+#[test]
+fn block_policy_backpressures_instead_of_shedding() {
+    let cfg = FrontendConfig {
+        max_inflight: 2,
+        submit: SubmitPolicy::Block,
+        ..Default::default()
+    };
+    let mut fe = Frontend::new(small_engine(64), cfg);
+    for i in 0..8u64 {
+        // every submit blocks until a slot frees; none are shed
+        assert_eq!(
+            fe.submit(req(i, vec![5 + i as i32], 2)).unwrap(),
+            SubmitOutcome::Accepted
+        );
+    }
+    let outs = fe.run_to_completion().unwrap();
+    assert_eq!(outs.len(), 8);
+    assert_eq!(fe.stats.shed, 0);
+    assert!(outs.iter().all(|o| o.finish == FinishReason::MaxTokens));
+}
+
+// ---------------------------------------------------------------------
+// deadlines release resources
+// ---------------------------------------------------------------------
+
+#[test]
+fn deadline_expiry_releases_kv_blocks_under_load() {
+    // more demand than the pool supports if expired requests held their
+    // blocks: 6 long-running requests, all with a 3-tick virtual
+    // deadline, on a pool sized for ~2 of them
+    let cfg = FrontendConfig { default_deadline: Some(0.3), ..Default::default() };
+    let mut fe = Frontend::with_virtual_clock(small_engine(8), cfg);
+    for i in 0..6u64 {
+        fe.submit(req(i, vec![1, 2, 3, 4, 10 + i as i32], 64)).unwrap();
+    }
+    for _ in 0..3 {
+        fe.tick().unwrap();
+        fe.clock.advance(0.1);
+    }
+    // virtual clock passed every deadline: the next ticks cancel all
+    let outs = fe.run_to_completion().unwrap();
+    assert_eq!(outs.len(), 6);
+    assert_eq!(fe.stats.deadline_missed, 6);
+    assert!(outs.iter().all(|o| o.finish == FinishReason::DeadlineExceeded));
+    // the pool is whole again: nothing leaked with the cancels
+    assert_eq!(fe.backend.kv_used_blocks(), 0, "expired requests freed KV");
+    assert_eq!(fe.backend.kv_free_blocks(), 8);
+    assert!(!fe.backend.has_work());
+}
+
+// ---------------------------------------------------------------------
+// chaos: randomized admission/deadline configs hold the invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn chaos_front_end_accounts_every_request_and_leaks_nothing() {
+    prop::for_all_cases("front-end chaos", 48, |rng, _| {
+        let cfg = FrontendConfig {
+            max_queue: rng.below(4), // 0 = unlimited
+            max_inflight: rng.below(5),
+            submit: SubmitPolicy::Shed,
+            default_deadline: if rng.below(2) == 1 {
+                Some(0.05 + rng.next_f64() * 0.2)
+            } else {
+                None
+            },
+        };
+        let kv_blocks = 6 + rng.below(20);
+        let mut fe = Frontend::with_virtual_clock(small_engine(kv_blocks), cfg);
+        let n = 4 + rng.below(12) as u64;
+        for i in 0..n {
+            let plen = 1 + rng.below(6);
+            let prompt: Vec<i32> = (0..plen).map(|_| rng.below(200) as i32).collect();
+            fe.submit(req(i, prompt, 1 + rng.below(12))).unwrap();
+            // interleave arrivals with progress and time passing
+            if rng.below(2) == 1 {
+                fe.tick().unwrap();
+                fe.clock.advance(0.01 + rng.next_f64() * 0.05);
+            }
+        }
+        let outs = fe.run_to_completion().unwrap();
+
+        // every submit is accounted exactly once
+        assert_eq!(fe.stats.submitted, n);
+        assert_eq!(fe.stats.accepted + fe.stats.shed, n);
+        assert_eq!(outs.len(), n as usize, "one terminal output per submit");
+        let mut ids: Vec<u64> = outs.iter().map(|o| o.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n as usize, "no duplicated terminal outputs");
+
+        // finish-reason accounting matches the front-end counters
+        let shed = outs.iter().filter(|o| o.finish == FinishReason::Rejected).count();
+        let missed = outs
+            .iter()
+            .filter(|o| o.finish == FinishReason::DeadlineExceeded)
+            .count();
+        assert_eq!(shed as u64, fe.stats.shed);
+        assert_eq!(missed as u64, fe.stats.deadline_missed);
+        assert_eq!(fe.stats.completed, fe.stats.accepted);
+
+        // nothing leaked: all KV released, engine fully drained
+        assert_eq!(fe.backend.kv_used_blocks(), 0, "kv leak");
+        assert!(!fe.backend.has_work(), "engine still has live sequences");
+        assert_eq!(
+            fe.backend.metrics.requests_submitted,
+            fe.stats.accepted,
+            "sheds must never reach the scheduler"
+        );
+    });
+}
+
+// ---------------------------------------------------------------------
+// streaming through the router backend
+// ---------------------------------------------------------------------
+
+#[test]
+fn router_frontend_streams_tokens_identical_to_outputs() {
+    let cfg = EngineConfig {
+        kv_blocks: 64,
+        kv_block_size: 4,
+        stream_events: true,
+        ..Default::default()
+    };
+    let router = Router::spawn(2, cfg, Policy::RoundRobin, |_wid| {
+        MockExecutor::new(10_000, 256)
+    });
+    let mut fe = Frontend::new(router, FrontendConfig::default());
+    for i in 0..6u64 {
+        fe.submit(req(i, vec![100 + 10 * i as i32], 4)).unwrap();
+    }
+    let mut outs = fe.run_to_completion().unwrap();
+    outs.sort_by_key(|o| o.id);
+    assert_eq!(outs.len(), 6);
+    assert_eq!(fe.stats.completed, 6);
+
+    // rebuild each request's token list from the event log
+    let mut streamed: std::collections::BTreeMap<u64, Vec<i32>> = Default::default();
+    let mut finishes = 0;
+    for ev in fe.poll_events() {
+        match ev {
+            StreamEvent::Token { id, index, token } => {
+                let v = streamed.entry(id).or_default();
+                assert_eq!(index, v.len(), "in-order per-request stream");
+                v.push(token);
+            }
+            StreamEvent::Finished { .. } => finishes += 1,
+        }
+    }
+    assert_eq!(finishes, 6);
+    for o in &outs {
+        assert_eq!(
+            streamed.get(&o.id),
+            Some(&o.tokens),
+            "req {}: streamed tokens must equal the terminal output",
+            o.id
+        );
+    }
+}
+
+#[test]
+fn router_frontend_sheds_on_pending_depth() {
+    // non-streaming router backend: admission still works, events
+    // degrade to Finished-only
+    let cfg = EngineConfig { kv_blocks: 64, kv_block_size: 4, ..Default::default() };
+    let router = Router::spawn(2, cfg, Policy::LeastLoaded, |_wid| {
+        MockExecutor::new(10_000, 256)
+    });
+    let fc = FrontendConfig { max_inflight: 4, ..Default::default() };
+    let mut fe = Frontend::new(router, fc);
+    let mut shed = 0;
+    for i in 0..12u64 {
+        if fe.submit(req(i, vec![7 + i as i32], 2)).unwrap() == SubmitOutcome::Shed {
+            shed += 1;
+        }
+    }
+    assert!(shed > 0, "12 instant submits over 4 slots must shed");
+    let outs = fe.run_to_completion().unwrap();
+    assert_eq!(outs.len(), 12);
+    assert_eq!(
+        outs.iter().filter(|o| o.finish == FinishReason::Rejected).count(),
+        shed
+    );
+}
