@@ -77,6 +77,26 @@ SCHEMAS = {
         "schema_version": None,
         "studies": None,
     },
+    "BENCH_elastic_fleet.json": {
+        "smoke": None,
+        "bench": None,
+        "schema_version": None,
+        "studies": None,
+    },
+}
+
+# required keys of each entry in BENCH_elastic_fleet.json's "studies" list
+ELASTIC_STUDY_KEYS = {
+    "study",
+    "scale_events",
+    "final_workers",
+    "migrated_warm",
+    "resumed_cold",
+    "warm_handoff_rate",
+    "recomputed_tokens",
+    "rebalanced_pins",
+    "stream_checksum",
+    "wall",
 }
 
 # required keys of each entry in BENCH_serving_slo.json's "studies" list
@@ -99,6 +119,13 @@ STUDY_KEYS = {
     "generated_tokens",
     "preemptions",
     "prefix_cached_tokens",
+    "prefilled_tokens",
+    "replayed_decode_tokens",
+    "scale_events",
+    "migrated_warm",
+    "resumed_cold",
+    "rebalanced_pins",
+    "final_workers",
     "stream_checksum",
     "wall",
 }
@@ -115,6 +142,7 @@ STUDY_WALL_KEYS = {
     "latency_p99_ms",
     "gen_tok_per_s",
     "wall_s",
+    "scale_event_wall_ms",
 }
 
 
@@ -210,6 +238,46 @@ def validate(path: str) -> None:
                 fail(f"{name}: study '{label}' stream_checksum not 16-hex: {cs!r}")
             if s["wall"]["wall_s"] <= 0.0:
                 fail(f"{name}: study '{label}' wall_s must be positive")
+    if name == "BENCH_elastic_fleet.json":
+        if data["bench"] != "elastic_fleet":
+            fail(f"{name}: bench must be 'elastic_fleet'")
+        if not data["studies"]:
+            fail(f"{name}: no elastic studies recorded")
+        for s in data["studies"]:
+            label = s.get("study", "<unnamed>")
+            missing = ELASTIC_STUDY_KEYS - set(s)
+            if missing:
+                fail(f"{name}: study '{label}' missing keys {sorted(missing)}")
+            if s["scale_events"] < 1:
+                fail(
+                    f"{name}: study '{label}' recorded no scale events "
+                    f"(only elastic studies belong in this file)"
+                )
+            if s["final_workers"] < 1:
+                fail(f"{name}: study '{label}' ended with an empty fleet")
+            if not 0.0 <= s["warm_handoff_rate"] <= 1.0:
+                fail(
+                    f"{name}: study '{label}' warm_handoff_rate "
+                    f"{s['warm_handoff_rate']} out of [0, 1]"
+                )
+            # THE elastic-fleet gate: a warm handoff carries the decode
+            # tail, so scale events must never recompute a generated
+            # token (cold fallbacks only touch not-yet-started requests)
+            if s["recomputed_tokens"] != 0:
+                fail(
+                    f"{name}: study '{label}' recomputed "
+                    f"{s['recomputed_tokens']} decode tokens across scale "
+                    f"events (warm handoffs must recompute zero)"
+                )
+            cs = s["stream_checksum"]
+            if not (
+                isinstance(cs, str)
+                and len(cs) == 16
+                and all(c in "0123456789abcdef" for c in cs)
+            ):
+                fail(f"{name}: study '{label}' stream_checksum not 16-hex: {cs!r}")
+            if s["wall"]["scale_event_wall_ms"] < 0.0:
+                fail(f"{name}: study '{label}' negative scale-event latency")
     if name == "BENCH_prefix_reuse.json":
         if data["bit_exact"] is not True:
             fail(f"{name}: bit_exact must be true")

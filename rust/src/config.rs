@@ -24,6 +24,16 @@ pub struct Config {
     pub artifacts_dir: String,
     /// "pjrt" or "stc"
     pub executor: String,
+    /// proactive sticky-pin rebalancing: the router re-homes hot prefix
+    /// pins (shipping buffered KV shards ahead) once the load gap hits
+    /// `REBALANCE_MIN_GAP`, before the reactive re-pin would move them cold
+    pub rebalance: bool,
+    /// elastic-fleet floor: `Router::remove_worker` refuses to shrink
+    /// the live roster below this many workers
+    pub min_workers: usize,
+    /// elastic-fleet ceiling: `Router::add_worker` refuses to grow past
+    /// this many workers (0 = unbounded)
+    pub max_workers: usize,
 }
 
 impl Default for Config {
@@ -35,6 +45,9 @@ impl Default for Config {
             routing: Policy::RoundRobin,
             artifacts_dir: "artifacts".into(),
             executor: "stc".into(),
+            rebalance: false,
+            min_workers: 1,
+            max_workers: 0,
         }
     }
 }
@@ -74,6 +87,28 @@ impl Config {
         }
         if let Some(v) = j.get("routing").and_then(|v| v.as_str()) {
             cfg.routing = v.parse().map_err(|e| anyhow!("config: {e}"))?;
+        }
+        // elastic-fleet knobs: accepted at the top level (the common
+        // case) or under a "fleet" object; the nested form wins
+        if let Some(v) = j.get("rebalance").and_then(|v| v.as_bool()) {
+            cfg.rebalance = v;
+        }
+        if let Some(v) = j.get("min_workers").and_then(|v| v.as_usize()) {
+            cfg.min_workers = v;
+        }
+        if let Some(v) = j.get("max_workers").and_then(|v| v.as_usize()) {
+            cfg.max_workers = v;
+        }
+        if let Some(f) = j.get("fleet") {
+            if let Some(v) = f.get("rebalance").and_then(|v| v.as_bool()) {
+                cfg.rebalance = v;
+            }
+            if let Some(v) = f.get("min_workers").and_then(|v| v.as_usize()) {
+                cfg.min_workers = v;
+            }
+            if let Some(v) = f.get("max_workers").and_then(|v| v.as_usize()) {
+                cfg.max_workers = v;
+            }
         }
         // `threads`, `kernel`, and `prefix_cache` ride in EngineConfig so
         // they reach the executor/engine: accepted at the top level (the
@@ -150,6 +185,26 @@ impl Config {
         cfg.backend()?;
         if !matches!(cfg.executor.as_str(), "pjrt" | "stc") {
             return Err(anyhow!("executor must be 'pjrt' or 'stc'"));
+        }
+        if cfg.min_workers == 0 {
+            return Err(anyhow!("min_workers must be >= 1"));
+        }
+        if cfg.max_workers != 0 && cfg.max_workers < cfg.min_workers {
+            return Err(anyhow!(
+                "max_workers ({}) must be 0 (unbounded) or >= min_workers ({})",
+                cfg.max_workers,
+                cfg.min_workers
+            ));
+        }
+        if cfg.workers < cfg.min_workers
+            || (cfg.max_workers != 0 && cfg.workers > cfg.max_workers)
+        {
+            return Err(anyhow!(
+                "workers ({}) outside the fleet bounds [min_workers={}, max_workers={}]",
+                cfg.workers,
+                cfg.min_workers,
+                if cfg.max_workers == 0 { "inf".to_string() } else { cfg.max_workers.to_string() }
+            ));
         }
         Ok(cfg)
     }
@@ -328,6 +383,43 @@ mod tests {
         )
         .unwrap();
         assert!(!nested.engine.stream_events);
+    }
+
+    #[test]
+    fn fleet_knobs_parse_at_both_levels() {
+        let d = Config::default();
+        assert!(!d.rebalance, "off by default");
+        assert_eq!(d.min_workers, 1);
+        assert_eq!(d.max_workers, 0, "unbounded by default");
+        let top = Config::from_json(
+            r#"{"workers": 2, "rebalance": true, "min_workers": 2, "max_workers": 4}"#,
+        )
+        .unwrap();
+        assert!(top.rebalance);
+        assert_eq!(top.min_workers, 2);
+        assert_eq!(top.max_workers, 4);
+        // top-level values survive a "fleet" object without the knobs
+        let kept = Config::from_json(
+            r#"{"workers": 2, "rebalance": true, "min_workers": 2, "fleet": {"max_workers": 8}}"#,
+        )
+        .unwrap();
+        assert!(kept.rebalance);
+        assert_eq!(kept.min_workers, 2);
+        assert_eq!(kept.max_workers, 8);
+        // nested form wins when both are present
+        let nested = Config::from_json(
+            r#"{"rebalance": true, "min_workers": 2, "max_workers": 2, "workers": 3,
+                "fleet": {"rebalance": false, "min_workers": 1, "max_workers": 4}}"#,
+        )
+        .unwrap();
+        assert!(!nested.rebalance);
+        assert_eq!(nested.min_workers, 1);
+        assert_eq!(nested.max_workers, 4);
+        // bounds are validated eagerly
+        assert!(Config::from_json(r#"{"min_workers": 0}"#).is_err());
+        assert!(Config::from_json(r#"{"min_workers": 4, "max_workers": 2}"#).is_err());
+        assert!(Config::from_json(r#"{"workers": 1, "min_workers": 2}"#).is_err());
+        assert!(Config::from_json(r#"{"workers": 5, "max_workers": 4}"#).is_err());
     }
 
     #[test]

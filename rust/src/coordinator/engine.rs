@@ -308,11 +308,200 @@ impl<E: Executor> Engine<E> {
                 v: cv.clone(),
             });
         }
-        KvShard {
+        KvShard::prefix_only(bs, self.executor.label(), blocks)
+    }
+
+    /// Export the FULL KV of a live mid-generation sequence — cached
+    /// prefix blocks AND the decode-time tail past the last block
+    /// boundary — as a v2 shard. The shard carries every token of the
+    /// sequence (prompt + generated so far); its KV covers all but the
+    /// newest token, whose KV the next decode step computes wherever the
+    /// sequence lands. `None` unless the sequence is decoding with its
+    /// KV fully resident (waiting or preempted sequences have nothing
+    /// warm to carry).
+    fn export_live_kv_shard(&self, id: SeqId) -> Option<KvShard> {
+        let seq = self.seqs.get(&id)?;
+        if seq.phase != Phase::Decoding || seq.output.is_empty() {
+            return None;
+        }
+        let total = seq.total_len();
+        let pos = seq.pos;
+        if pos + 1 != total || pos == 0 {
+            // mid-replay or inconsistent coverage: not warm-exportable
+            return None;
+        }
+        let bs = self.scheduler.blocks.block_size;
+        let mut stream = seq.request.prompt.clone();
+        stream.extend_from_slice(&seq.output);
+        let full = pos / bs;
+        let mut blocks = Vec::with_capacity(full);
+        for i in 0..full {
+            let (k, v) =
+                self.executor
+                    .extract_kv_range(&seq.kv.k, &seq.kv.v, i * bs, bs)?;
+            blocks.push(KvShardBlock {
+                tokens: stream[i * bs..(i + 1) * bs].to_vec(),
+                k,
+                v,
+            });
+        }
+        let tail_cov = pos - full * bs;
+        let (tail_k, tail_v) = if tail_cov > 0 {
+            self.executor
+                .extract_kv_range(&seq.kv.k, &seq.kv.v, full * bs, tail_cov)?
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        Some(KvShard {
             block_size: bs,
             executor: self.executor.label(),
             blocks,
+            tail_tokens: stream[full * bs..].to_vec(),
+            tail_k,
+            tail_v,
+            generated: seq.output.len(),
+        })
+    }
+
+    /// Pull one live request out of the engine for migration: its
+    /// original request plus, when the KV is fully resident, a live
+    /// shard capable of a zero-recompute resume on another worker. The
+    /// sequence's blocks return to the pool; it no longer exists here.
+    /// `None` when no live sequence carries the request id.
+    pub fn migrate_out(
+        &mut self,
+        rid: super::request::RequestId,
+    ) -> Option<(Request, Option<KvShard>)> {
+        let sid = *self.seqs.iter().find(|(_, s)| s.request.id == rid)?.0;
+        let shard = self.export_live_kv_shard(sid);
+        self.scheduler.finish(sid);
+        let seq = self.seqs.remove(&sid).unwrap();
+        Some((seq.request, shard))
+    }
+
+    /// Remove EVERY unfinished sequence for a scale-down drain, in
+    /// deterministic (admission) order. Warm sequences come back with a
+    /// live shard; waiting/preempted ones with `None` (the target worker
+    /// replays them — deterministic sampling regenerates identical
+    /// tokens). Finished-but-unpolled outputs are untouched.
+    pub fn drain_live_requests(&mut self) -> Vec<(Request, Option<KvShard>)> {
+        let mut ids: Vec<SeqId> = self.seqs.keys().copied().collect();
+        ids.sort_unstable();
+        let mut moved = Vec::with_capacity(ids.len());
+        for id in ids {
+            let shard = self.export_live_kv_shard(id);
+            self.scheduler.finish(id);
+            let seq = self.seqs.remove(&id).unwrap();
+            moved.push((seq.request, shard));
         }
+        moved
+    }
+
+    /// Resume a migrated mid-generation sequence from a live shard:
+    /// verify it against the request, admit it straight into the running
+    /// set, inject every carried KV position (full blocks + decode
+    /// tail), and continue decoding from the carried output — zero
+    /// replayed prefill AND zero recomputed decode tokens. Returns false
+    /// (importing nothing) when the shard cannot be verified or the pool
+    /// has no room; the caller then falls back to a plain submit.
+    pub fn resume_from_shard(&mut self, request: &Request, shard: &KvShard) -> bool {
+        self.metrics.mark_start();
+        let bs = self.scheduler.blocks.block_size;
+        let plen = request.prompt.len();
+        let stream = shard.all_tokens();
+        let total = stream.len();
+        let generated = shard.generated;
+        if generated == 0 || generated >= total {
+            self.metrics.kv_import_rejects += 1;
+            return false;
+        }
+        // KV covers all but the newest carried token (its KV is what
+        // the next decode step computes)
+        let pos = total - 1;
+        let full = pos / bs;
+        let tail_cov = pos - full * bs;
+        let block_ok = match self.executor.compact_kv_len(bs) {
+            Some(expect) => shard.blocks.iter().all(|b| {
+                b.tokens.len() == bs && b.k.len() == expect && b.v.len() == expect
+            }),
+            None => false,
+        };
+        let tail_ok = if tail_cov == 0 {
+            shard.tail_k.is_empty() && shard.tail_v.is_empty()
+        } else {
+            match self.executor.compact_kv_len(tail_cov) {
+                Some(expect) => {
+                    shard.tail_k.len() == expect && shard.tail_v.len() == expect
+                }
+                None => false,
+            }
+        };
+        let valid = shard.block_size == bs
+            && shard.executor == self.executor.label()
+            && shard.blocks.len() == full
+            && total - generated == plen
+            && stream[..plen] == request.prompt[..]
+            && plen > 0
+            && plen <= self.executor.max_prompt()
+            && plen + request.params.max_new_tokens <= self.executor.smax()
+            && generated < request.params.max_new_tokens
+            && block_ok
+            && tail_ok;
+        if !valid {
+            self.metrics.kv_import_rejects += 1;
+            return false;
+        }
+        let seq_id = self.next_seq;
+        if self.scheduler.admit_resumed(seq_id, total).is_err() {
+            // not a bad shard, just no room: cold fallback, no reject
+            return false;
+        }
+        self.next_seq += 1;
+        self.metrics.requests_submitted += 1;
+        self.metrics.prompt_tokens += plen as u64;
+        let mut seq = Sequence::new(seq_id, request.clone());
+        seq.output = stream[plen..].to_vec();
+        seq.pos = pos;
+        seq.phase = Phase::Decoding;
+        let kv_len = self.executor.kv_len();
+        seq.kv.k.resize(kv_len, 0.0);
+        seq.kv.v.resize(kv_len, 0.0);
+        for (i, b) in shard.blocks.iter().enumerate() {
+            self.executor
+                .inject_kv_range(&mut seq.kv.k, &mut seq.kv.v, i * bs, bs, &b.k, &b.v);
+        }
+        if tail_cov > 0 {
+            self.executor.inject_kv_range(
+                &mut seq.kv.k,
+                &mut seq.kv.v,
+                full * bs,
+                tail_cov,
+                &shard.tail_k,
+                &shard.tail_v,
+            );
+        }
+        self.metrics.kv_imported_blocks += full as u64;
+        self.seqs.insert(seq_id, seq);
+        true
+    }
+
+    /// Land a migrated request: try a warm resume from its live shard,
+    /// falling back to a plain submit (cold replay — deterministic
+    /// regeneration, never a wrong token) when the shard is absent,
+    /// damaged, or unverifiable. Returns whether the landing was warm.
+    pub fn resume_request(&mut self, request: Request, shard_bytes: Option<&[u8]>) -> bool {
+        let warm = match shard_bytes.map(KvShard::from_bytes) {
+            Some(Ok(shard)) => self.resume_from_shard(&request, &shard),
+            Some(Err(_)) => {
+                self.metrics.kv_import_rejects += 1;
+                false
+            }
+            None => false,
+        };
+        if !warm {
+            self.submit(request);
+        }
+        warm
     }
 
     /// Import a migration shard: verify it structurally (block size,
@@ -539,6 +728,11 @@ impl<E: Executor> Engine<E> {
                 }
             }
             self.metrics.prefilled_tokens += (toks.len() - start) as u64;
+            // positions [plen, toks.len()) hold already-emitted output
+            // (preemption replay / cold resume); recomputing them is
+            // replay work a warm decode-tail handoff avoids entirely
+            self.metrics.replayed_decode_tokens +=
+                (toks.len() - start).min(seq.output.len()) as u64;
             starts.push(start);
         }
         self.metrics.prefix_evictions = self.scheduler.blocks.prefix_stats.evictions;
@@ -1240,6 +1434,115 @@ mod tests {
         let outs = e.poll_outputs();
         assert_eq!(outs[0].finish, FinishReason::DeadlineExceeded);
         assert!(outs[0].tokens.is_empty());
+    }
+
+    #[test]
+    fn live_handoff_resumes_with_zero_recomputed_tokens() {
+        // uninterrupted reference run
+        let mut solo = engine(1000, 64);
+        solo.submit(req(7, vec![10, 11, 12], 6));
+        let reference = solo.run_to_completion().unwrap();
+
+        // same request, migrated mid-generation: prefill + 2 decodes on
+        // A, then a warm decode-tail handoff to B
+        let mut a = engine(1000, 64);
+        a.submit(req(7, vec![10, 11, 12], 6));
+        for _ in 0..3 {
+            assert!(a.step().unwrap());
+        }
+        let (request, shard) = a.migrate_out(7).expect("live sequence");
+        let shard = shard.expect("decoding sequence exports warm");
+        assert_eq!(shard.generated, 3, "three tokens emitted before the move");
+        assert_eq!(shard.total_tokens(), 6, "prompt + output carried");
+        assert!(!a.has_work(), "the sequence left engine A entirely");
+        assert_eq!(a.kv_used_blocks(), 0, "its blocks returned to the pool");
+
+        let mut b = engine(1000, 64);
+        assert!(b.resume_request(request, Some(&shard.to_bytes())), "warm landing");
+        let outs = b.run_to_completion().unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].tokens, reference[0].tokens, "byte-identical output");
+        assert_eq!(b.metrics.prefilled_tokens, 0, "zero replayed prefill");
+        assert_eq!(b.metrics.replayed_decode_tokens, 0, "zero recomputed decode");
+        b.scheduler.blocks.check_invariants();
+    }
+
+    #[test]
+    fn live_handoff_crosses_block_boundaries() {
+        // enough decodes that the sequence spans full blocks AND a tail;
+        // also the boundary case where the newest token starts a block
+        for decodes in [1usize, 4, 5, 9] {
+            let cfg = EngineConfig { kv_block_size: 4, ..Default::default() };
+            let mut solo = Engine::new(MockExecutor::new(1000, 64), cfg);
+            solo.submit(req(1, vec![1, 2, 3], 12));
+            let reference = solo.run_to_completion().unwrap();
+
+            let mut a = Engine::new(MockExecutor::new(1000, 64), cfg);
+            a.submit(req(1, vec![1, 2, 3], 12));
+            for _ in 0..1 + decodes {
+                assert!(a.step().unwrap());
+            }
+            let (request, shard) = a.migrate_out(1).expect("live sequence");
+            let shard = shard.expect("warm");
+            let mut b = Engine::new(MockExecutor::new(1000, 64), cfg);
+            assert!(b.resume_request(request, Some(&shard.to_bytes())));
+            let outs = b.run_to_completion().unwrap();
+            assert_eq!(outs[0].tokens, reference[0].tokens, "decodes={decodes}");
+            assert_eq!(b.metrics.replayed_decode_tokens, 0, "decodes={decodes}");
+            b.scheduler.blocks.check_invariants();
+        }
+    }
+
+    #[test]
+    fn drain_returns_waiting_requests_cold() {
+        let mut a = engine(1000, 64);
+        a.submit(req(1, vec![5, 6], 3));
+        // never stepped: nothing warm to export
+        let moved = a.drain_live_requests();
+        assert_eq!(moved.len(), 1);
+        assert!(moved[0].1.is_none(), "waiting sequence has no resident KV");
+        assert!(!a.has_work());
+        let mut b = engine(1000, 64);
+        let (request, _) = moved.into_iter().next().unwrap();
+        assert!(!b.resume_request(request, None), "cold landing");
+        let outs = b.run_to_completion().unwrap();
+        assert_eq!(outs[0].tokens, vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn damaged_live_shard_falls_back_to_cold_replay() {
+        let mut a = engine(1000, 64);
+        a.submit(req(3, vec![20, 21], 4));
+        for _ in 0..2 {
+            assert!(a.step().unwrap());
+        }
+        let (request, shard) = a.migrate_out(3).unwrap();
+        let mut bytes = shard.unwrap().to_bytes();
+        bytes[bytes.len() / 2] ^= 0x10; // corrupt in transit
+        let mut b = engine(1000, 64);
+        assert!(!b.resume_request(request, Some(&bytes)), "reject, not panic");
+        assert_eq!(b.metrics.kv_import_rejects, 1);
+        let outs = b.run_to_completion().unwrap();
+        assert_eq!(outs[0].tokens, vec![22, 23, 24, 25], "cold replay is exact");
+    }
+
+    #[test]
+    fn mismatched_live_shard_rejects_and_replays() {
+        // a shard whose carried prompt does not match the request must
+        // never alias the resumed sequence onto wrong tokens
+        let mut a = engine(1000, 64);
+        a.submit(req(9, vec![30, 31, 32], 5));
+        for _ in 0..2 {
+            assert!(a.step().unwrap());
+        }
+        let (_, shard) = a.migrate_out(9).unwrap();
+        let shard = shard.unwrap();
+        let mut b = engine(1000, 64);
+        let other = req(9, vec![40, 41, 42], 5);
+        assert!(!b.resume_request(other, Some(&shard.to_bytes())));
+        assert_eq!(b.metrics.kv_import_rejects, 1);
+        let outs = b.run_to_completion().unwrap();
+        assert_eq!(outs[0].tokens, vec![43, 44, 45, 46, 47]);
     }
 
     #[test]

@@ -634,6 +634,13 @@ impl<K: Hash + Eq + Copy, V> ByteLru<K, V> {
         self.map.contains_key(k)
     }
 
+    /// Visit every resident entry without touching recency (iteration
+    /// order is unspecified). Used to replay buffered shards into a
+    /// joining worker so it starts warm.
+    pub fn iter(&self) -> impl Iterator<Item = (&K, &V)> {
+        self.map.iter().map(|(k, e)| (k, &e.v))
+    }
+
     /// Look up without touching recency (read-only walkers like KV
     /// export use this so inspection does not distort eviction order).
     pub fn peek(&self, k: &K) -> Option<&V> {
@@ -732,6 +739,14 @@ pub struct KvShardBlock {
 /// [`KvShard::from_bytes`] add a checksum so truncation or corruption
 /// in transit is detected at decode time (the importer then recomputes
 /// instead — never trusts a damaged shard).
+///
+/// Wire v2 adds a **decode tail**: the tokens (and their compact KV)
+/// past the last full block boundary of a *mid-generation* sequence,
+/// plus a `generated` count splitting the carried token stream into
+/// prompt and already-emitted output. A finished-prefix shard is just a
+/// v2 shard with an empty tail and `generated == 0`; a live-sequence
+/// shard carries everything needed to resume decoding on another worker
+/// with zero recomputed tokens.
 #[derive(Clone, Debug, PartialEq)]
 pub struct KvShard {
     /// block size of the exporting allocator (must match the importer's)
@@ -739,6 +754,16 @@ pub struct KvShard {
     /// exporting executor's label (KV layouts are executor-private)
     pub executor: String,
     pub blocks: Vec<KvShardBlock>,
+    /// decode-tail tokens past the last full block boundary (may be
+    /// empty: a sequence parked exactly on a boundary has no tail)
+    pub tail_tokens: Vec<i32>,
+    /// compact KV for the tail positions (executor layout)
+    pub tail_k: Vec<f32>,
+    pub tail_v: Vec<f32>,
+    /// how many of the trailing carried tokens (blocks + tail, in
+    /// order) were generated rather than part of the prompt; the
+    /// importer resumes the sequence with exactly this much output
+    pub generated: usize,
 }
 
 /// Why a shard failed to decode.
@@ -754,7 +779,9 @@ impl std::fmt::Display for ShardDecodeError {
 impl std::error::Error for ShardDecodeError {}
 
 const SHARD_MAGIC: u32 = 0x4B56_5348; // "KVSH"
-const SHARD_VERSION: u16 = 1;
+/// v2: appends the decode-tail section (tail tokens + compact tail KV +
+/// generated-token count) between the block array and the checksum.
+const SHARD_VERSION: u16 = 2;
 
 fn shard_checksum(bytes: &[u8]) -> u64 {
     // FNV-1a 64: cheap, order-sensitive, and plenty to catch the
@@ -802,9 +829,37 @@ impl<'a> ShardCursor<'a> {
 }
 
 impl KvShard {
-    /// Tokens covered by the shard's blocks.
+    /// A finished-prefix shard: full blocks only, no decode tail.
+    pub fn prefix_only(block_size: usize, executor: String, blocks: Vec<KvShardBlock>) -> KvShard {
+        KvShard {
+            block_size,
+            executor,
+            blocks,
+            tail_tokens: Vec::new(),
+            tail_k: Vec::new(),
+            tail_v: Vec::new(),
+            generated: 0,
+        }
+    }
+
+    /// Tokens covered by the shard's full blocks (tail excluded).
     pub fn tokens_covered(&self) -> usize {
         self.blocks.iter().map(|b| b.tokens.len()).sum()
+    }
+
+    /// All tokens carried: full blocks plus the decode tail.
+    pub fn total_tokens(&self) -> usize {
+        self.tokens_covered() + self.tail_tokens.len()
+    }
+
+    /// The carried token stream in positional order (blocks then tail).
+    pub fn all_tokens(&self) -> Vec<i32> {
+        let mut toks = Vec::with_capacity(self.total_tokens());
+        for b in &self.blocks {
+            toks.extend_from_slice(&b.tokens);
+        }
+        toks.extend_from_slice(&self.tail_tokens);
+        toks
     }
 
     /// Serialize: little-endian fields, trailing FNV-1a checksum.
@@ -830,6 +885,20 @@ impl KvShard {
                 out.extend(f.to_bits().to_le_bytes());
             }
         }
+        // v2 decode-tail section
+        out.extend((self.tail_tokens.len() as u32).to_le_bytes());
+        for t in &self.tail_tokens {
+            out.extend(t.to_le_bytes());
+        }
+        out.extend((self.tail_k.len() as u32).to_le_bytes());
+        for f in &self.tail_k {
+            out.extend(f.to_bits().to_le_bytes());
+        }
+        out.extend((self.tail_v.len() as u32).to_le_bytes());
+        for f in &self.tail_v {
+            out.extend(f.to_bits().to_le_bytes());
+        }
+        out.extend((self.generated as u32).to_le_bytes());
         let sum = shard_checksum(&out);
         out.extend(sum.to_le_bytes());
         out
@@ -879,10 +948,39 @@ impl KvShard {
             }
             blocks.push(KvShardBlock { tokens, k, v });
         }
+        // v2 decode-tail section
+        let ntt = c.len_of(4)?;
+        let mut tail_tokens = Vec::with_capacity(ntt);
+        for _ in 0..ntt {
+            tail_tokens.push(i32::from_le_bytes(c.take(4)?.try_into().unwrap()));
+        }
+        let ntk = c.len_of(4)?;
+        let mut tail_k = Vec::with_capacity(ntk);
+        for _ in 0..ntk {
+            tail_k.push(f32::from_bits(c.u32()?));
+        }
+        let ntv = c.len_of(4)?;
+        let mut tail_v = Vec::with_capacity(ntv);
+        for _ in 0..ntv {
+            tail_v.push(f32::from_bits(c.u32()?));
+        }
+        let generated = c.u32()? as usize;
         if c.pos != payload.len() {
             return Err(ShardDecodeError("trailing bytes"));
         }
-        Ok(KvShard { block_size, executor, blocks })
+        let shard = KvShard {
+            block_size,
+            executor,
+            blocks,
+            tail_tokens,
+            tail_k,
+            tail_v,
+            generated,
+        };
+        if shard.generated > shard.total_tokens() {
+            return Err(ShardDecodeError("generated count exceeds carried tokens"));
+        }
+        Ok(shard)
     }
 }
 
@@ -1428,31 +1526,64 @@ mod tests {
     // --- KvShard wire format ---
 
     fn demo_shard() -> KvShard {
-        KvShard {
-            block_size: 4,
-            executor: "stc-native".into(),
-            blocks: (0..2)
+        KvShard::prefix_only(
+            4,
+            "stc-native".into(),
+            (0..2)
                 .map(|b| KvShardBlock {
                     tokens: (b * 4..b * 4 + 4).collect(),
                     k: (0..8).map(|i| (b * 8 + i) as f32 * 0.5).collect(),
                     v: (0..8).map(|i| -((b * 8 + i) as f32)).collect(),
                 })
                 .collect(),
-        }
+        )
+    }
+
+    fn demo_live_shard() -> KvShard {
+        // a mid-generation shard: 2 full blocks + a 3-token decode tail,
+        // of which the last 5 carried tokens were generated
+        let mut s = demo_shard();
+        s.tail_tokens = vec![100, 101, 102];
+        s.tail_k = (0..6).map(|i| i as f32 * 0.25).collect();
+        s.tail_v = (0..6).map(|i| -(i as f32) * 0.25).collect();
+        s.generated = 5;
+        s
     }
 
     #[test]
     fn shard_roundtrips_through_bytes() {
         let s = demo_shard();
         assert_eq!(s.tokens_covered(), 8);
+        assert_eq!(s.total_tokens(), 8, "empty tail adds nothing");
         let bytes = s.to_bytes();
         let back = KvShard::from_bytes(&bytes).unwrap();
         assert_eq!(back, s, "decode(encode(shard)) is identity");
     }
 
     #[test]
+    fn live_shard_roundtrips_with_decode_tail() {
+        let s = demo_live_shard();
+        assert_eq!(s.tokens_covered(), 8);
+        assert_eq!(s.total_tokens(), 11);
+        assert_eq!(s.all_tokens()[8..], [100, 101, 102]);
+        let back = KvShard::from_bytes(&s.to_bytes()).unwrap();
+        assert_eq!(back, s, "tail section survives the wire");
+        assert_eq!(back.generated, 5);
+    }
+
+    #[test]
+    fn shard_rejects_generated_count_past_carried_tokens() {
+        // a syntactically valid shard whose generated count exceeds the
+        // carried token stream must be rejected, not resumed aliased
+        let mut s = demo_live_shard();
+        s.generated = s.total_tokens() + 1;
+        let err = KvShard::from_bytes(&s.to_bytes()).unwrap_err();
+        assert_eq!(err.0, "generated count exceeds carried tokens");
+    }
+
+    #[test]
     fn shard_decode_survives_any_truncation_or_bitflip() {
-        let bytes = demo_shard().to_bytes();
+        let bytes = demo_live_shard().to_bytes();
         // every proper prefix must fail cleanly (no panic, no partial shard)
         for cut in 0..bytes.len() {
             assert!(

@@ -20,6 +20,11 @@ pub struct EngineMetrics {
     /// prompt tokens actually computed by prefill (excludes tokens
     /// served from the prefix cache; includes preemption replays)
     pub prefilled_tokens: u64,
+    /// already-generated tokens recomputed by prefill when a sequence
+    /// resumes (preemption replays, cold migrations). A fully warm
+    /// decode-tail handoff keeps this at zero: the shard carries the
+    /// KV for every generated token, so nothing is recomputed.
+    pub replayed_decode_tokens: u64,
     /// prefill batches that reused at least one cached prefix block
     pub prefix_hits: u64,
     /// prefill batches that found no reusable prefix (cache enabled)
@@ -150,6 +155,7 @@ impl EngineMetrics {
         KvFlowStats {
             requests_finished: self.requests_finished,
             prefilled_tokens: self.prefilled_tokens,
+            replayed_decode_tokens: self.replayed_decode_tokens,
             prefix_cached_tokens: self.prefix_cached_tokens,
             kv_exported_shards: self.kv_exported_shards,
             kv_imported_blocks: self.kv_imported_blocks,
@@ -169,6 +175,8 @@ pub struct KvFlowStats {
     pub requests_finished: u64,
     /// prompt tokens actually computed by prefill (replays included)
     pub prefilled_tokens: u64,
+    /// generated tokens recomputed on resume (0 for warm handoffs)
+    pub replayed_decode_tokens: u64,
     /// prompt tokens served from cached/migrated KV instead
     pub prefix_cached_tokens: u64,
     pub kv_exported_shards: u64,
@@ -199,6 +207,7 @@ mod tests {
     fn kv_flow_snapshot_mirrors_counters() {
         let mut m = EngineMetrics::new();
         m.prefilled_tokens = 12;
+        m.replayed_decode_tokens = 5;
         m.prefix_cached_tokens = 32;
         m.kv_exported_shards = 2;
         m.kv_imported_blocks = 4;
@@ -207,6 +216,7 @@ mod tests {
         m.kv_resident_bytes = 256;
         let s = m.kv_flow();
         assert_eq!(s.prefilled_tokens, 12);
+        assert_eq!(s.replayed_decode_tokens, 5);
         assert_eq!(s.kv_imported_blocks, 4);
         assert_eq!(s.kv_import_rejects, 1);
         assert!(m.report().contains("kv=2exp/4imp/1rej (3 spill, 256 B resident)"));

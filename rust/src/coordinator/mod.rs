@@ -51,6 +51,20 @@
 //! `EngineMetrics`). Gated by `rust/tests/migration.rs` (fault
 //! injection) and the migration-equivalence sweep in
 //! `rust/tests/conformance.rs`.
+//!
+//! ## Elastic fleet (docs/ARCHITECTURE.md §"Elastic fleet")
+//!
+//! Workers carry STABLE ids (assigned at spawn/join, never reused) so
+//! metrics and sticky pins survive roster changes. `Router::add_worker`
+//! spawns a joiner and warms it from the buffered shards;
+//! `Router::remove_worker` drains a leaver — mid-generation sequences
+//! export their FULL live KV (v2 shards carry the decode tail past the
+//! last block boundary) and resume on survivors with zero recomputed
+//! tokens; `Router::rebalance` proactively re-homes hot pins (shards
+//! shipped ahead) once the load gap reaches `REBALANCE_MIN_GAP`, before
+//! the reactive `STICKY_MAX_IMBALANCE` fallback would re-pin them cold.
+//! `EngineMetrics::replayed_decode_tokens` counts any generated token a
+//! resume recomputed — the warm-handoff invariant pins it at zero.
 
 pub mod batcher;
 pub mod engine;
@@ -75,5 +89,5 @@ pub use metrics::KvFlowStats;
 #[cfg(feature = "pjrt")]
 pub use pjrt_exec::PjrtExecutor;
 pub use request::{FinishReason, Request, RequestOutput, SamplingParams, StreamEvent};
-pub use router::{Policy, Router};
+pub use router::{Policy, Router, REBALANCE_MIN_GAP, STICKY_MAX_IMBALANCE};
 pub use scheduler::{Scheduler, SchedulerConfig};

@@ -47,6 +47,12 @@ pub const DEFAULT_AFFINITY_TOKENS: usize = 16;
 /// in-flight count exceeds the least-loaded worker's by this much.
 pub const STICKY_MAX_IMBALANCE: usize = 8;
 
+/// Load gap (hottest minus coldest worker) at which PROACTIVE
+/// rebalancing starts moving sticky pins — half the reactive re-pin
+/// threshold, so hot prefixes migrate (shards shipped ahead, warm)
+/// before the [`STICKY_MAX_IMBALANCE`] fallback would strand them cold.
+pub const REBALANCE_MIN_GAP: usize = STICKY_MAX_IMBALANCE / 2;
+
 /// Bound on the sticky prefix→worker map. Mostly-unique traffic would
 /// otherwise grow it one entry per distinct prefix forever; past the
 /// cap the map is reset (pins rebuild on the next repeats — losing a
@@ -123,6 +129,13 @@ enum Msg {
     /// serialized `KvShard` for the worker's engine to import before
     /// the requests that follow it on the channel (warm handoff)
     ImportKv(Vec<u8>),
+    /// a migrated mid-generation request plus its serialized live shard
+    /// (None or undecodable -> the engine replays it cold; correctness
+    /// never depends on the shard landing)
+    Resume(Request, Option<Vec<u8>>),
+    /// scale-down: hand back every unfinished request (with live shards
+    /// where the KV is resident) so the router can re-home them
+    Drain(Sender<Vec<(Request, Option<Vec<u8>>)>>),
     /// cancel a live request (deadline expiry / client disconnect);
     /// broadcast to every worker — engines without the id ignore it
     Cancel(RequestId, FinishReason),
@@ -133,31 +146,58 @@ enum Msg {
 }
 
 struct Worker {
+    /// stable id, assigned at spawn/join and never reused: metrics and
+    /// sticky pins key on it, so a joiner can never alias into a dead
+    /// worker's slot
+    id: usize,
     tx: Sender<Msg>,
     inflight: Arc<AtomicUsize>,
+    /// requests dispatched to this worker over its lifetime
+    dispatched: usize,
     handle: Option<JoinHandle<()>>,
 }
 
-/// The router: owns worker threads, each running an engine loop.
+/// The router: owns worker threads, each running an engine loop. The
+/// fleet is elastic: [`Router::add_worker`] spawns-and-warms a joiner,
+/// [`Router::remove_worker`] drains a leaver (migrating its in-flight
+/// sequences warm), and [`Router::rebalance`] proactively re-homes hot
+/// sticky pins before the reactive imbalance fallback would fire.
 pub struct Router {
+    /// live roster in join order; removed workers leave the vec (their
+    /// stable ids are never reused)
     workers: Vec<Worker>,
+    /// next stable worker id to assign
+    next_worker_id: usize,
+    /// spawns one fully wired worker for a stable id (captures the
+    /// executor factory and all channel senders), so the fleet can grow
+    /// after construction
+    spawner: Box<dyn Fn(usize) -> Worker + Send>,
     out_rx: Receiver<RequestOutput>,
     policy: Policy,
     rr_next: usize,
     submitted: usize,
-    /// prefix hash -> pinned worker (PrefixAffinity only)
+    /// inflight requests owned by workers that were removed from the
+    /// roster while dead (their outputs can never arrive)
+    orphaned: usize,
+    /// prefix hash -> pinned worker STABLE ID (PrefixAffinity only)
     sticky: HashMap<u64, usize>,
-    /// requests dispatched per worker over the router's lifetime
-    dispatched: Vec<usize>,
     /// ship buffered shards to re-pinned workers (EngineConfig::migrate_kv)
     migrate: bool,
+    /// run a proactive rebalance pass before each dispatch
+    auto_rebalance: bool,
+    /// elastic-fleet floor: `remove_worker` refuses to shrink below this
+    min_workers: usize,
+    /// elastic-fleet ceiling for `add_worker` (0 = unbounded)
+    max_workers: usize,
     /// shards the workers publish for finished prefixes
     shard_rx: Receiver<(Vec<i32>, Vec<u8>)>,
     /// newest serialized shard per affinity hash, byte-budgeted by
     /// `EngineConfig::prefix_cache_bytes` (the "migration buffer")
     shards: ByteLru<u64, Vec<u8>>,
-    /// warm handoffs shipped (ImportKv + its paired request both landed)
+    /// warm handoffs shipped (ImportKv/Resume + its paired request landed)
     migrations: u64,
+    /// sticky pins moved by proactive rebalancing
+    rebalances: u64,
     /// per-token events forwarded from every worker's engine
     /// (`EngineConfig::stream_events`); the channel exists but stays
     /// silent when streaming is off
@@ -178,8 +218,10 @@ impl Router {
         let (shard_tx, shard_rx) = channel::<(Vec<i32>, Vec<u8>)>();
         let (event_tx, event_rx) = channel::<StreamEvent>();
         let factory = Arc::new(factory);
-        let mut workers = Vec::with_capacity(n);
-        for wid in 0..n {
+        // the spawner captures everything a worker needs, so scale-up
+        // (`add_worker`) can mint new workers long after construction;
+        // `factory(id)` receives the STABLE id, never a roster position
+        let spawner: Box<dyn Fn(usize) -> Worker + Send> = Box::new(move |wid: usize| {
             let (tx, rx) = channel::<Msg>();
             let inflight = Arc::new(AtomicUsize::new(0));
             let inflight2 = inflight.clone();
@@ -220,6 +262,20 @@ impl Router {
                                 // a failed handoff is never fatal
                                 let _ = engine.import_kv_shard_bytes(&bytes);
                             }
+                            Some(Msg::Resume(r, shard)) => {
+                                // a rejected/undecodable shard falls back
+                                // to a cold submit inside the engine, so
+                                // the request always produces an output
+                                let _ = engine.resume_request(r, shard.as_deref());
+                            }
+                            Some(Msg::Drain(reply)) => {
+                                let moved = engine
+                                    .drain_live_requests()
+                                    .into_iter()
+                                    .map(|(r, s)| (r, s.map(|sh| sh.to_bytes())))
+                                    .collect();
+                                let _ = reply.send(moved);
+                            }
                             Some(Msg::Cancel(rid, finish)) => {
                                 // only the owning worker has the id; the
                                 // rest no-op. The cancel output flows out
@@ -254,20 +310,27 @@ impl Router {
                     }
                 })
                 .expect("spawn worker");
-            workers.push(Worker { tx, inflight, handle: Some(handle) });
-        }
+            Worker { id: wid, tx, inflight, dispatched: 0, handle: Some(handle) }
+        });
+        let workers = (0..n).map(|wid| spawner(wid)).collect();
         Router {
             workers,
+            next_worker_id: n,
+            spawner,
             out_rx,
             policy,
             rr_next: 0,
             submitted: 0,
+            orphaned: 0,
             sticky: HashMap::new(),
-            dispatched: vec![0; n],
             migrate: cfg.migrate_kv,
+            auto_rebalance: false,
+            min_workers: 1,
+            max_workers: 0,
             shard_rx,
             shards: ByteLru::new(cfg.prefix_cache_bytes),
             migrations: 0,
+            rebalances: 0,
             event_rx,
             streaming: cfg.stream_events,
         }
@@ -324,6 +387,12 @@ impl Router {
         }
     }
 
+    /// Roster position of the worker with this stable id (None once it
+    /// has been removed — ids are never reused).
+    fn position_of(&self, id: usize) -> Option<usize> {
+        self.workers.iter().position(|w| w.id == id)
+    }
+
     fn least_loaded(&self) -> usize {
         // the affinity chooser with no pin IS the least-loaded-alive scan
         choose_affinity(None, &self.loads(), |w| self.worker_alive(w))
@@ -352,15 +421,20 @@ impl Router {
             Policy::PrefixAffinity { prefix_tokens } => {
                 let h = Self::affinity_hash(&req.prompt, prefix_tokens);
                 let loads = self.loads();
-                let prev = self.sticky.get(&h).copied();
-                let chosen = choose_affinity(prev, &loads, |w| self.worker_alive(w));
-                if prev.is_none() && self.sticky.len() >= STICKY_CAPACITY {
+                // sticky pins hold STABLE ids; the position-space
+                // chooser sees the pin translated into the live roster
+                // (a pin whose worker left the fleet reads as "no pin")
+                let prev_id = self.sticky.get(&h).copied();
+                let prev_pos = prev_id.and_then(|id| self.position_of(id));
+                let chosen = choose_affinity(prev_pos, &loads, |w| self.worker_alive(w));
+                let chosen_id = self.workers[chosen].id;
+                if prev_id.is_none() && self.sticky.len() >= STICKY_CAPACITY {
                     self.sticky.clear();
                 }
-                self.sticky.insert(h, chosen);
+                self.sticky.insert(h, chosen_id);
                 // a handoff is only worth shipping when the pin moved:
                 // the previously pinned worker already holds the KV
-                let handoff = if self.migrate && prev != Some(chosen) {
+                let handoff = if self.migrate && prev_id != Some(chosen_id) {
                     self.shards.get(&h).cloned()
                 } else {
                     None
@@ -393,9 +467,9 @@ impl Router {
         token_hash(PREFIX_HASH_SEED, &prompt[..k])
     }
 
-    /// The worker a prompt with this prefix is currently pinned to
-    /// (None until a request with the prefix has been dispatched, or
-    /// when the policy is not PrefixAffinity).
+    /// The STABLE id of the worker a prompt with this prefix is
+    /// currently pinned to (None until a request with the prefix has
+    /// been dispatched, or when the policy is not PrefixAffinity).
     pub fn affinity_assignment(&self, prompt: &[i32]) -> Option<usize> {
         let Policy::PrefixAffinity { prefix_tokens } = self.policy else {
             return None;
@@ -408,6 +482,11 @@ impl Router {
     /// worker can accept work at all.
     pub fn submit(&mut self, request: Request) {
         self.pump_shards();
+        if self.auto_rebalance {
+            // proactive pass: move hot pins (with their shards) BEFORE
+            // the reactive imbalance fallback would re-pin them cold
+            self.rebalance();
+        }
         let mut req = request;
         for _ in 0..self.workers.len() {
             let (w, handoff) = self.pick_worker(&req);
@@ -431,7 +510,7 @@ impl Router {
                         self.migrations += 1;
                     }
                     self.submitted += 1;
-                    self.dispatched[w] += 1;
+                    self.workers[w].dispatched += 1;
                     let _ = self.workers[w].tx.send(Msg::Flush);
                     return;
                 }
@@ -443,7 +522,8 @@ impl Router {
                     // repeats) re-evaluate cleanly
                     if let Policy::PrefixAffinity { prefix_tokens } = self.policy {
                         let h = Self::affinity_hash(&r.prompt, prefix_tokens);
-                        if self.sticky.get(&h) == Some(&w) {
+                        let dead_id = self.workers[w].id;
+                        if self.sticky.get(&h) == Some(&dead_id) {
                             self.sticky.remove(&h);
                         }
                     }
@@ -454,7 +534,9 @@ impl Router {
         panic!("no live router workers to accept request");
     }
 
-    /// Per-worker inflight counts (for tests / metrics).
+    /// Per-worker inflight counts over the LIVE roster (positional; the
+    /// i-th entry is the i-th live worker — use [`Router::loads_by_id`]
+    /// when workers can join or leave mid-run).
     pub fn loads(&self) -> Vec<usize> {
         self.workers
             .iter()
@@ -462,14 +544,42 @@ impl Router {
             .collect()
     }
 
-    /// Requests dispatched to each worker over the router's lifetime.
-    pub fn dispatch_counts(&self) -> &[usize] {
-        &self.dispatched
+    /// Requests dispatched to each live worker over its lifetime
+    /// (positional, parallel to [`Router::loads`]). Regression note:
+    /// these counters live ON the worker now, not in a position-indexed
+    /// side vec, so a roster change can never misattribute them.
+    pub fn dispatch_counts(&self) -> Vec<usize> {
+        self.workers.iter().map(|w| w.dispatched).collect()
+    }
+
+    /// Stable ids of the live roster, in join order. Ids are assigned
+    /// at spawn/join and never reused, so metrics keyed on them stay
+    /// attributable across scale events.
+    pub fn worker_ids(&self) -> Vec<usize> {
+        self.workers.iter().map(|w| w.id).collect()
+    }
+
+    /// `(stable id, inflight)` per live worker.
+    pub fn loads_by_id(&self) -> Vec<(usize, usize)> {
+        self.workers
+            .iter()
+            .map(|w| (w.id, w.inflight.load(Ordering::SeqCst)))
+            .collect()
+    }
+
+    /// `(stable id, lifetime dispatch count)` per live worker.
+    pub fn dispatch_counts_by_id(&self) -> Vec<(usize, usize)> {
+        self.workers.iter().map(|w| (w.id, w.dispatched)).collect()
     }
 
     /// Warm handoffs shipped so far (ImportKv messages a worker accepted).
     pub fn kv_migrations(&self) -> u64 {
         self.migrations
+    }
+
+    /// Sticky pins proactively moved by [`Router::rebalance`].
+    pub fn rebalance_moves(&self) -> u64 {
+        self.rebalances
     }
 
     /// Migration shard buffer occupancy: `(shards, bytes)`. Bounded by
@@ -493,6 +603,12 @@ impl Router {
                 rx.recv_timeout(Duration::from_secs(10)).ok()
             })
             .collect()
+    }
+
+    /// [`Router::kv_stats`] keyed by stable worker id — the scale-safe
+    /// view: entries stay attributable after joins and removals.
+    pub fn kv_stats_by_id(&self) -> Vec<(usize, Option<KvFlowStats>)> {
+        self.worker_ids().into_iter().zip(self.kv_stats()).collect()
     }
 
     /// Wait for all submitted requests to complete. A worker whose
@@ -528,8 +644,9 @@ impl Router {
         self.submitted = 0;
         if lost > 0 {
             // the lost counts belong to this (now failed) batch; zero
-            // the dead workers' gauges so a later drain doesn't count
-            // them again
+            // the dead workers' gauges (and the orphan count from
+            // removed-while-dead workers) so a later drain doesn't
+            // count them again
             for w in &self.workers {
                 let dead = match &w.handle {
                     Some(h) => h.is_finished(),
@@ -539,6 +656,7 @@ impl Router {
                     w.inflight.store(0, Ordering::SeqCst);
                 }
             }
+            self.orphaned = 0;
             return Err(anyhow!(
                 "router worker(s) died with {lost} request(s) inflight \
                  (executor panic?)"
@@ -550,16 +668,220 @@ impl Router {
     /// Total inflight requests owned by workers whose thread has
     /// exited. Workers only exit on Shutdown, so a finished handle with
     /// inflight > 0 means the engine loop panicked; those outputs can
-    /// never arrive.
+    /// never arrive. Includes requests orphaned by workers that were
+    /// already dead when a scale-down removed them from the roster.
     fn lost_inflight(&self) -> usize {
-        self.workers
+        self.orphaned
+            + self
+                .workers
+                .iter()
+                .filter(|w| match &w.handle {
+                    Some(h) => h.is_finished(),
+                    None => true,
+                })
+                .map(|w| w.inflight.load(Ordering::SeqCst))
+                .sum::<usize>()
+    }
+
+    /// Scale-up: spawn one worker with a fresh stable id, warm its
+    /// prefix cache by replaying every buffered migration shard into it
+    /// (so it joins with the fleet's hot prefixes already resident),
+    /// and add it to the dispatch roster. Returns the new stable id.
+    /// Refuses to grow past the `max_workers` ceiling (0 = unbounded).
+    pub fn add_worker(&mut self) -> Result<usize> {
+        if self.max_workers != 0 && self.workers.len() >= self.max_workers {
+            return Err(anyhow!(
+                "fleet is at its max_workers ceiling ({}); refusing to grow",
+                self.max_workers
+            ));
+        }
+        self.pump_shards();
+        let id = self.next_worker_id;
+        self.next_worker_id += 1;
+        let w = (self.spawner)(id);
+        if self.migrate {
+            for (_h, bytes) in self.shards.iter() {
+                let _ = w.tx.send(Msg::ImportKv(bytes.clone()));
+            }
+            let _ = w.tx.send(Msg::Flush);
+        }
+        self.workers.push(w);
+        Ok(id)
+    }
+
+    /// Scale-down: drain the worker with this stable id and remove it
+    /// from the roster. The drainer hands back every unfinished request
+    /// — mid-generation sequences with their live KV shards — and each
+    /// is re-homed on a surviving worker via a warm `Resume` (zero
+    /// recomputed tokens when the shard lands; cold replay otherwise).
+    /// Returns how many in-flight requests were migrated off.
+    ///
+    /// A worker that is already dead cannot be drained: its in-flight
+    /// requests are counted as orphaned (the next [`Router::drain`]
+    /// reports them) and this returns an error after removing it.
+    pub fn remove_worker(&mut self, id: usize) -> Result<usize> {
+        let pos = self
+            .position_of(id)
+            .ok_or_else(|| anyhow!("no live worker with id {id}"))?;
+        if self.workers.len() == 1 {
+            return Err(anyhow!("cannot remove the last router worker"));
+        }
+        if self.workers.len() <= self.min_workers {
+            return Err(anyhow!(
+                "fleet is at its min_workers floor ({}); refusing to shrink",
+                self.min_workers
+            ));
+        }
+        self.pump_shards();
+        // unpin its prefixes first so re-dispatch re-evaluates cleanly
+        self.sticky.retain(|_, w| *w != id);
+        let mut departing = self.workers.remove(pos);
+        let inflight = departing.inflight.load(Ordering::SeqCst);
+        let alive = matches!(&departing.handle, Some(h) if !h.is_finished());
+        let drained: Option<Vec<(Request, Option<Vec<u8>>)>> = if alive {
+            let (reply_tx, reply_rx) = channel();
+            if departing.tx.send(Msg::Drain(reply_tx)).is_ok() {
+                reply_rx.recv_timeout(std::time::Duration::from_secs(10)).ok()
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        let _ = departing.tx.send(Msg::Shutdown);
+        if let Some(h) = departing.handle.take() {
+            let _ = h.join();
+        }
+        let Some(moved) = drained else {
+            // died before (or during) the drain: whatever it still
+            // owed can never arrive
+            self.orphaned += inflight;
+            return Err(anyhow!(
+                "worker {id} died before drain; {inflight} request(s) lost"
+            ));
+        };
+        let n_moved = moved.len();
+        for (r, shard) in moved {
+            let mut r = r;
+            let mut shard = shard;
+            let mut placed = false;
+            for _ in 0..self.workers.len() {
+                let (w, _) = self.pick_worker(&r);
+                let warm = shard.is_some();
+                self.workers[w].inflight.fetch_add(1, Ordering::SeqCst);
+                match self.workers[w].tx.send(Msg::Resume(r, shard)) {
+                    Ok(()) => {
+                        // the request was already counted in `submitted`
+                        // at its original submit; only the per-worker
+                        // attribution moves
+                        if warm {
+                            self.migrations += 1;
+                        }
+                        self.workers[w].dispatched += 1;
+                        let _ = self.workers[w].tx.send(Msg::Flush);
+                        placed = true;
+                        break;
+                    }
+                    Err(std::sync::mpsc::SendError(m)) => {
+                        self.workers[w].inflight.fetch_sub(1, Ordering::SeqCst);
+                        let Msg::Resume(r2, s2) = m else { unreachable!() };
+                        if let Policy::PrefixAffinity { prefix_tokens } = self.policy {
+                            let h = Self::affinity_hash(&r2.prompt, prefix_tokens);
+                            let dead_id = self.workers[w].id;
+                            if self.sticky.get(&h) == Some(&dead_id) {
+                                self.sticky.remove(&h);
+                            }
+                        }
+                        r = r2;
+                        shard = s2;
+                    }
+                }
+            }
+            if !placed {
+                self.orphaned += 1;
+            }
+        }
+        Ok(n_moved)
+    }
+
+    /// Proactive rebalancing pass (PrefixAffinity only): when the
+    /// hottest live worker is at least [`REBALANCE_MIN_GAP`] in-flight
+    /// requests ahead of the coldest, move half the gap's worth of the
+    /// hot worker's sticky pins to the coldest worker, shipping each
+    /// pin's buffered shard ahead so its next request lands warm —
+    /// BEFORE the reactive [`STICKY_MAX_IMBALANCE`] fallback would
+    /// strand it cold. Victim pins are chosen in sorted-hash order so
+    /// the pass is deterministic. Returns the number of pins moved.
+    pub fn rebalance(&mut self) -> usize {
+        if !matches!(self.policy, Policy::PrefixAffinity { .. }) {
+            return 0;
+        }
+        self.pump_shards();
+        let loads = self.loads();
+        let mut hot: Option<(usize, usize)> = None;
+        let mut cold: Option<(usize, usize)> = None;
+        for (i, &l) in loads.iter().enumerate() {
+            if !self.worker_alive(i) {
+                continue;
+            }
+            if hot.map_or(true, |(_, hl)| l > hl) {
+                hot = Some((i, l));
+            }
+            if cold.map_or(true, |(_, cl)| l < cl) {
+                cold = Some((i, l));
+            }
+        }
+        let (Some((hot_pos, hot_load)), Some((cold_pos, cold_load))) = (hot, cold) else {
+            return 0;
+        };
+        if hot_pos == cold_pos || hot_load - cold_load < REBALANCE_MIN_GAP {
+            return 0;
+        }
+        let hot_id = self.workers[hot_pos].id;
+        let cold_id = self.workers[cold_pos].id;
+        let quota = ((hot_load - cold_load) / 2).max(1);
+        let mut victims: Vec<u64> = self
+            .sticky
             .iter()
-            .filter(|w| match &w.handle {
-                Some(h) => h.is_finished(),
-                None => true,
-            })
-            .map(|w| w.inflight.load(Ordering::SeqCst))
-            .sum()
+            .filter(|&(_, w)| *w == hot_id)
+            .map(|(h, _)| *h)
+            .collect();
+        victims.sort_unstable();
+        victims.truncate(quota);
+        let mut moved = 0;
+        for h in victims {
+            // ship the buffered shard ahead so the first request routed
+            // to the new home finds its prefix resident (the handoff is
+            // counted in kv_migrations only when a request follows it,
+            // via the pin-moved path in pick_worker staying quiet —
+            // the import itself shows up in the worker's kv counters)
+            if self.migrate {
+                if let Some(bytes) = self.shards.get(&h).cloned() {
+                    let _ = self.workers[cold_pos].tx.send(Msg::ImportKv(bytes));
+                    let _ = self.workers[cold_pos].tx.send(Msg::Flush);
+                }
+            }
+            self.sticky.insert(h, cold_id);
+            self.rebalances += 1;
+            moved += 1;
+        }
+        moved
+    }
+
+    /// Enable/disable the automatic rebalance pass before each dispatch
+    /// (`serve --rebalance`; off by default so single-shot batch runs
+    /// and the static-fleet tests keep their exact dispatch patterns).
+    pub fn set_auto_rebalance(&mut self, on: bool) {
+        self.auto_rebalance = on;
+    }
+
+    /// Install the elastic-fleet size bounds (`Config::min_workers` /
+    /// `Config::max_workers`): scale events that would cross either
+    /// bound are refused with an error instead of applied. `max = 0`
+    /// means unbounded; `min` is clamped to at least 1.
+    pub fn set_fleet_bounds(&mut self, min: usize, max: usize) {
+        self.min_workers = min.max(1);
+        self.max_workers = max;
     }
 }
 
@@ -1193,5 +1515,341 @@ mod tests {
         assert_eq!(outs[0].tokens, vec![8, 9, 10]);
         assert_eq!(outs[1].id, 101);
         assert_eq!(outs[1].tokens, vec![21, 22, 23]);
+    }
+
+    #[test]
+    fn stable_ids_survive_scale_events() {
+        // regression (position-indexed metrics): after a removal the
+        // roster compacts, but ids — and everything keyed on them —
+        // must not shift onto the wrong worker, and a joiner must never
+        // alias into a removed worker's slot
+        let mut r = Router::spawn(
+            3,
+            EngineConfig::default(),
+            Policy::RoundRobin,
+            |_| MockExecutor::new(10_000, 64),
+        );
+        assert_eq!(r.worker_ids(), vec![0, 1, 2]);
+        for i in 0..6 {
+            r.submit(req(i, i as i32 * 10));
+        }
+        assert_eq!(r.drain().unwrap().len(), 6);
+        assert_eq!(r.dispatch_counts_by_id(), vec![(0, 2), (1, 2), (2, 2)]);
+        let moved = r.remove_worker(1).expect("idle worker drains clean");
+        assert_eq!(moved, 0, "nothing was inflight");
+        assert_eq!(r.worker_ids(), vec![0, 2]);
+        // dispatch counts stay attributed to their workers, not to
+        // positions 0 and 1 of the compacted roster
+        assert_eq!(r.dispatch_counts_by_id(), vec![(0, 2), (2, 2)]);
+        let joined = r.add_worker().expect("unbounded fleet grows");
+        assert_eq!(joined, 3, "removed id 1 is never reused");
+        assert_eq!(r.worker_ids(), vec![0, 2, 3]);
+        assert!(r.remove_worker(1).is_err(), "removed id stays gone");
+        for i in 6..12 {
+            r.submit(req(i, i as i32 * 10));
+        }
+        let mut outs = r.drain().unwrap();
+        outs.sort_by_key(|o| o.id);
+        assert_eq!(outs.len(), 6);
+        for out in outs {
+            let base = out.id as i32 * 10;
+            assert_eq!(out.tokens, vec![base + 1, base + 2, base + 3]);
+        }
+        // round-robin over the live roster [0, 2, 3]: two more each;
+        // removed worker 1 took its count of 2 with it
+        assert_eq!(r.dispatch_counts_by_id(), vec![(0, 4), (2, 4), (3, 2)]);
+        assert_eq!(r.loads_by_id(), vec![(0, 0), (2, 0), (3, 0)]);
+        for (_, s) in r.kv_stats_by_id() {
+            s.expect("all roster workers alive");
+        }
+    }
+
+    #[test]
+    fn remove_worker_rejects_unknown_and_last() {
+        let mut r = Router::spawn(
+            1,
+            EngineConfig::default(),
+            Policy::RoundRobin,
+            |_| MockExecutor::new(100, 16),
+        );
+        assert!(r.remove_worker(7).unwrap_err().to_string().contains("no live worker"));
+        assert!(r.remove_worker(0).unwrap_err().to_string().contains("last"));
+        assert_eq!(r.worker_ids(), vec![0], "failed removals leave the roster intact");
+    }
+
+    #[test]
+    fn fleet_bounds_gate_scale_events() {
+        let mut r = Router::spawn(
+            2,
+            EngineConfig::default(),
+            Policy::RoundRobin,
+            |_| MockExecutor::new(100, 16),
+        );
+        r.set_fleet_bounds(2, 3);
+        let floor = r.remove_worker(0).unwrap_err().to_string();
+        assert!(floor.contains("min_workers floor (2)"), "{floor}");
+        assert_eq!(r.add_worker().expect("room below the ceiling"), 2);
+        let ceil = r.add_worker().unwrap_err().to_string();
+        assert!(ceil.contains("max_workers ceiling (3)"), "{ceil}");
+        assert_eq!(r.worker_ids(), vec![0, 1, 2], "refused events change nothing");
+        // with the ceiling at 3 the fleet can shrink again, then regrow
+        assert_eq!(r.remove_worker(2).expect("above the floor"), 0);
+        assert_eq!(r.add_worker().expect("back below the ceiling"), 3);
+        assert_eq!(r.worker_ids(), vec![0, 1, 3]);
+        // the serve demo still works inside the bounds
+        r.submit(req(1, 10));
+        r.submit(req(2, 20));
+        r.submit(req(3, 30));
+        assert_eq!(r.drain().unwrap().len(), 3);
+    }
+
+    /// Executor whose DECODE spins until the shared gate opens — holds
+    /// a sequence mid-generation (KV resident, decode tail live) so a
+    /// scale-down is guaranteed to catch it in flight.
+    struct DecodeGated {
+        inner: MockExecutor,
+        gate: Arc<AtomicUsize>,
+    }
+
+    impl crate::coordinator::executor::Executor for DecodeGated {
+        fn vocab(&self) -> usize {
+            self.inner.vocab
+        }
+
+        fn max_prompt(&self) -> usize {
+            self.inner.smax - 1
+        }
+
+        fn smax(&self) -> usize {
+            self.inner.smax
+        }
+
+        fn kv_len(&self) -> usize {
+            1
+        }
+
+        fn decode_buckets(&self) -> Vec<usize> {
+            vec![usize::MAX]
+        }
+
+        fn prefill(
+            &mut self,
+            batch: &mut [crate::coordinator::executor::PrefillItem],
+        ) -> Result<()> {
+            self.inner.prefill(batch)
+        }
+
+        fn decode(
+            &mut self,
+            batch: &mut [crate::coordinator::executor::DecodeItem],
+        ) -> Result<()> {
+            while self.gate.load(Ordering::SeqCst) == 0 {
+                std::thread::yield_now();
+            }
+            self.inner.decode(batch)
+        }
+
+        fn label(&self) -> String {
+            self.inner.label()
+        }
+
+        fn compact_kv_len(&self, len: usize) -> Option<usize> {
+            self.inner.compact_kv_len(len)
+        }
+
+        fn extract_kv_range(
+            &self,
+            kv_k: &[f32],
+            kv_v: &[f32],
+            start: usize,
+            len: usize,
+        ) -> Option<(Vec<f32>, Vec<f32>)> {
+            self.inner.extract_kv_range(kv_k, kv_v, start, len)
+        }
+
+        fn inject_kv_range(
+            &self,
+            kv_k: &mut [f32],
+            kv_v: &mut [f32],
+            start: usize,
+            len: usize,
+            ck: &[f32],
+            cv: &[f32],
+        ) {
+            self.inner.inject_kv_range(kv_k, kv_v, start, len, ck, cv)
+        }
+    }
+
+    #[test]
+    fn scale_down_migrates_inflight_request_warm() {
+        // worker 0's decode spins on the gate, pinning its request
+        // mid-generation. remove_worker(0) queues the Drain behind that
+        // decode; a helper opens the gate AFTER the Drain is already in
+        // the channel, so the worker finishes exactly one more decode
+        // step and then hands the live sequence over — the survivor
+        // must finish it with ZERO prefilled and ZERO replayed tokens.
+        let cfg = EngineConfig {
+            prefix_cache: true,
+            migrate_kv: true,
+            kv_block_size: 4,
+            ..Default::default()
+        };
+        let gate = Arc::new(AtomicUsize::new(0));
+        let g2 = gate.clone();
+        let mut r = Router::spawn(2, cfg, Policy::RoundRobin, move |wid| DecodeGated {
+            inner: MockExecutor::new(10_000, 64),
+            gate: if wid == 0 { g2.clone() } else { Arc::new(AtomicUsize::new(1)) },
+        });
+        r.submit(req_prompt(1, vec![10, 11, 12])); // round-robin -> worker 0
+        let g3 = gate.clone();
+        let opener = std::thread::spawn(move || {
+            // the Drain below is sent within microseconds of
+            // remove_worker being called; this delay only has to cover
+            // that send, not any engine work
+            std::thread::sleep(std::time::Duration::from_millis(300));
+            g3.store(1, Ordering::SeqCst);
+        });
+        let moved = r.remove_worker(0).expect("live worker drains");
+        opener.join().unwrap();
+        assert_eq!(moved, 1, "the in-flight request was handed over");
+        assert_eq!(r.worker_ids(), vec![1]);
+        let outs = r.drain().unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].tokens, vec![13, 14, 15], "byte-identical to a 1-worker run");
+        let s1 = r.kv_stats()[0].expect("survivor alive");
+        assert_eq!(s1.prefilled_tokens, 0, "no prefill ran on the survivor");
+        assert_eq!(s1.replayed_decode_tokens, 0, "zero recomputed tokens");
+        assert_eq!(s1.requests_finished, 1);
+    }
+
+    #[test]
+    fn scale_down_of_dead_worker_reports_orphans() {
+        let mut r = Router::spawn(
+            2,
+            EngineConfig::default(),
+            Policy::RoundRobin,
+            |wid| FlakyExecutor { inner: MockExecutor::new(1000, 64), poisoned: wid == 0 },
+        );
+        r.submit(req(1, 10)); // round-robin -> worker 0, which dies on it
+        let err = r.remove_worker(0).expect_err("dead worker cannot drain");
+        assert!(err.to_string().contains("died"), "{err}");
+        assert_eq!(r.worker_ids(), vec![1], "the dead worker still left the roster");
+        // the orphaned request surfaces exactly once, then is cleared
+        let err = r.drain().expect_err("orphaned request is reported lost");
+        assert!(err.to_string().contains("1 request(s) inflight"), "{err}");
+        r.submit(req(2, 20));
+        let outs = r.drain().expect("survivor keeps serving");
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].tokens, vec![21, 22, 23]);
+    }
+
+    #[test]
+    fn rebalance_moves_hot_pins_before_reactive_fallback() {
+        // hold every decode closed so submitted requests pile up as
+        // load; the gap (5 vs 0) is past REBALANCE_MIN_GAP but well
+        // under STICKY_MAX_IMBALANCE — only the PROACTIVE pass moves
+        // the pin
+        let cfg = EngineConfig {
+            prefix_cache: true,
+            migrate_kv: true,
+            kv_block_size: 4,
+            ..Default::default()
+        };
+        let gate = Arc::new(AtomicUsize::new(0));
+        let g2 = gate.clone();
+        let mut r = Router::spawn(
+            2,
+            cfg,
+            Policy::PrefixAffinity { prefix_tokens: 4 },
+            move |_| DecodeGated { inner: MockExecutor::new(10_000, 64), gate: g2.clone() },
+        );
+        let prompt = |i: i32| vec![1, 2, 3, 4, 50 + i];
+        for i in 0..5 {
+            r.submit(req_prompt(i as u64, prompt(i)));
+        }
+        assert_eq!(r.affinity_assignment(&prompt(9)), Some(0));
+        // decodes are gated, so all 5 stay inflight on worker 0
+        let t0 = std::time::Instant::now();
+        while r.loads() != vec![5, 0] {
+            assert!(t0.elapsed().as_secs() < 5, "loads {:?}", r.loads());
+            std::thread::yield_now();
+        }
+        assert!(5 - 0 < STICKY_MAX_IMBALANCE, "reactive fallback would not fire");
+        assert_eq!(r.rebalance(), 1, "the one hot pin moves");
+        assert_eq!(r.rebalance_moves(), 1);
+        assert_eq!(r.affinity_assignment(&prompt(9)), Some(1), "re-homed proactively");
+        gate.store(1, Ordering::SeqCst);
+        assert_eq!(r.drain().unwrap().len(), 5);
+        // phase 2: the drained batch published the prefix's shard; a
+        // fresh imbalance the OTHER way ships it ahead of the pin move,
+        // so the new home imports the prefix KV before any request
+        gate.store(0, Ordering::SeqCst);
+        for i in 5..10 {
+            r.submit(req_prompt(i as u64, prompt(i)));
+        }
+        let t0 = std::time::Instant::now();
+        while r.loads() != vec![0, 5] {
+            assert!(t0.elapsed().as_secs() < 5, "loads {:?}", r.loads());
+            std::thread::yield_now();
+        }
+        assert_eq!(r.rebalance(), 1);
+        assert_eq!(r.affinity_assignment(&prompt(9)), Some(0));
+        gate.store(1, Ordering::SeqCst);
+        assert_eq!(r.drain().unwrap().len(), 5);
+        let s0 = r.kv_stats()[0].expect("alive");
+        assert!(s0.kv_imported_blocks >= 1, "shard shipped ahead of the moved pin");
+    }
+
+    #[test]
+    fn rebalance_noops_without_affinity_or_gap() {
+        let mut rr = Router::spawn(
+            2,
+            EngineConfig::default(),
+            Policy::RoundRobin,
+            |_| MockExecutor::new(100, 16),
+        );
+        assert_eq!(rr.rebalance(), 0, "policy without pins has nothing to move");
+        let mut aff = Router::spawn(
+            2,
+            EngineConfig::default(),
+            Policy::PrefixAffinity { prefix_tokens: 4 },
+            |_| MockExecutor::new(100, 16),
+        );
+        assert_eq!(aff.rebalance(), 0, "balanced fleet stays put");
+        assert_eq!(aff.rebalance_moves(), 0);
+        drop(rr);
+    }
+
+    #[test]
+    fn add_worker_joins_warm_from_shard_buffer() {
+        let cfg = EngineConfig {
+            prefix_cache: true,
+            migrate_kv: true,
+            kv_block_size: 4,
+            ..Default::default()
+        };
+        let mut r = Router::spawn(
+            1,
+            cfg,
+            Policy::PrefixAffinity { prefix_tokens: 4 },
+            |_| MockExecutor::new(10_000, 64),
+        );
+        r.submit(req_prompt(1, vec![1, 2, 3, 4, 9]));
+        assert_eq!(r.drain().unwrap().len(), 1);
+        assert_eq!(r.shard_buffer().0, 1, "finished prefix left a shard behind");
+        let id = r.add_worker().expect("unbounded fleet grows");
+        assert_eq!(id, 1);
+        assert_eq!(r.worker_ids(), vec![0, 1]);
+        let s1 = r.kv_stats()[1].expect("joiner alive");
+        assert!(s1.kv_imported_blocks >= 1, "joiner warmed from the shard buffer");
+        // and it serves: fresh prefixes pin over the grown roster and
+        // every request completes
+        for i in 0..6 {
+            let base = i * 100;
+            r.submit(req_prompt(10 + i as u64, vec![base, base + 1, base + 2, base + 3, 7]));
+        }
+        assert_eq!(r.drain().unwrap().len(), 6);
+        let counts = r.dispatch_counts_by_id();
+        assert_eq!(counts.iter().map(|(_, c)| c).sum::<usize>(), 7);
     }
 }

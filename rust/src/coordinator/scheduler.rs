@@ -129,6 +129,21 @@ impl Scheduler {
         step
     }
 
+    /// Admit a migrated mid-generation sequence straight into the
+    /// running set: allocate blocks for its full token stream (prompt +
+    /// already-generated) without queueing or a prefill step — the
+    /// caller injects the KV that arrived with it. Allocates nothing on
+    /// failure; the caller then falls back to the normal waiting queue
+    /// (cold replay).
+    pub fn admit_resumed(&mut self, id: SeqId, n_tokens: usize) -> Result<(), OutOfBlocks> {
+        if self.running.len() >= self.cfg.max_batch || !self.blocks.can_allocate(n_tokens + 1) {
+            return Err(OutOfBlocks);
+        }
+        self.blocks.allocate(id, n_tokens)?;
+        self.running.push(id);
+        Ok(())
+    }
+
     /// Record a generated token for `id`, preempting others if the pool
     /// is exhausted. Returns the evicted ids (the engine clears them).
     pub fn append_token(&mut self, id: SeqId) -> Vec<SeqId> {

@@ -6,8 +6,9 @@
 //!                     [--kernel auto|scalar|blocked|avx2|vnni|neon] [--tune]
 //!                     [--workers W] [--routing round_robin|least_loaded|prefix[:K]]
 //!                     [--prefix-cache] [--prefix-cache-bytes B] [--migrate-kv]
-//!                     [--stream]
+//!                     [--stream] [--rebalance] [--min-workers N] [--max-workers N]
 //! slidesparse study   --config study.json[,more.json...] [--out BENCH_serving_slo.json]
+//!                     [--elastic-out BENCH_elastic_fleet.json]
 //! slidesparse bench   [--suite kernel|e2e|figures|all]
 //! slidesparse explore [--pattern Z:L] [--hw M:N]
 //! slidesparse pack    --o O --k K [--n N] [--threads T]  # packer demo + stats
@@ -79,6 +80,11 @@ fn serve(args: &Args) -> Result<()> {
         cfg.routing = r.parse().map_err(|e: String| anyhow!(e))?;
     }
     cfg.workers = args.opt_usize("workers", cfg.workers).max(1);
+    if args.flag("rebalance") {
+        cfg.rebalance = true;
+    }
+    cfg.min_workers = args.opt_usize("min-workers", cfg.min_workers).max(1);
+    cfg.max_workers = args.opt_usize("max-workers", cfg.max_workers);
     let backend = cfg.backend()?;
     let n_requests = args.opt_usize("requests", 16);
     println!(
@@ -202,6 +208,8 @@ fn serve_router(
         }
         exec
     });
+    router.set_auto_rebalance(cfg.rebalance);
+    router.set_fleet_bounds(cfg.min_workers, cfg.max_workers);
     let vocab = tables::E2E_VOCAB;
     let mut rng = XorShift::new(42);
     let prefixes: Vec<Vec<i32>> = (0..4)
@@ -226,11 +234,12 @@ fn serve_router(
     let (shards, shard_bytes) = router.shard_buffer();
     let report = format!(
         "router: policy={} workers={} dispatched={:?} kv_migrations={} \
-         shard_buffer={}x/{}B{}",
+         rebalanced_pins={} shard_buffer={}x/{}B{}",
         cfg.routing,
         cfg.workers,
         router.dispatch_counts(),
         router.kv_migrations(),
+        router.rebalance_moves(),
         shards,
         shard_bytes,
         streamed
@@ -291,6 +300,9 @@ fn demo_requests(n: usize, vocab: usize) -> Vec<Request> {
 /// study and write one schema'd `BENCH_serving_slo.json`. Deterministic
 /// fields (counts, rates, `stream_checksum`) depend only on each study's
 /// seed; wall-clock percentiles ride under each entry's `"wall"` object.
+/// Studies with scripted `scale_events` additionally emit a
+/// `BENCH_elastic_fleet.json` summarizing handoff warmth (the
+/// recomputed-token gate), rebalance activity, and scale-event latency.
 fn study_cmd(args: &Args) -> Result<()> {
     use slidesparse::bench::harness::Table;
     use slidesparse::study::StudyConfig;
@@ -335,6 +347,36 @@ fn study_cmd(args: &Args) -> Result<()> {
         entries.push(out.entry);
     }
     table.print();
+    // per-study elastic summary: only studies that applied scale events
+    // have handoffs to account for
+    let elastic: Vec<Json> = entries
+        .iter()
+        .filter(|e| e.req("scale_events").as_usize().unwrap_or(0) > 0)
+        .map(|e| {
+            let n = |k: &str| e.req(k).as_f64().unwrap_or(0.0);
+            let warm = n("migrated_warm");
+            let cold = n("resumed_cold");
+            let warmth = if warm + cold > 0.0 { warm / (warm + cold) } else { 1.0 };
+            obj(vec![
+                ("study", e.req("name").clone()),
+                ("scale_events", e.req("scale_events").clone()),
+                ("final_workers", e.req("final_workers").clone()),
+                ("migrated_warm", e.req("migrated_warm").clone()),
+                ("resumed_cold", e.req("resumed_cold").clone()),
+                ("warm_handoff_rate", Json::Num(warmth)),
+                ("recomputed_tokens", e.req("replayed_decode_tokens").clone()),
+                ("rebalanced_pins", e.req("rebalanced_pins").clone()),
+                ("stream_checksum", e.req("stream_checksum").clone()),
+                (
+                    "wall",
+                    obj(vec![(
+                        "scale_event_wall_ms",
+                        e.req("wall").req("scale_event_wall_ms").clone(),
+                    )]),
+                ),
+            ])
+        })
+        .collect();
     let doc = obj(vec![
         ("bench", Json::Str("serving_slo".into())),
         ("schema_version", Json::Num(1.0)),
@@ -343,6 +385,17 @@ fn study_cmd(args: &Args) -> Result<()> {
     ]);
     std::fs::write(out_path, doc.to_string_pretty() + "\n")?;
     println!("wrote {out_path}");
+    if !elastic.is_empty() {
+        let elastic_path = args.opt_str("elastic-out", "BENCH_elastic_fleet.json");
+        let doc = obj(vec![
+            ("bench", Json::Str("elastic_fleet".into())),
+            ("schema_version", Json::Num(1.0)),
+            ("smoke", Json::Bool(smoke)),
+            ("studies", Json::Arr(elastic)),
+        ]);
+        std::fs::write(elastic_path, doc.to_string_pretty() + "\n")?;
+        println!("wrote {elastic_path}");
+    }
     Ok(())
 }
 

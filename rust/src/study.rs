@@ -37,7 +37,7 @@ use crate::coordinator::kvcache::{token_hash, PREFIX_HASH_SEED};
 use crate::coordinator::request::{
     FinishReason, Request, RequestId, RequestOutput, SamplingParams, StreamEvent,
 };
-use crate::coordinator::router::{choose_affinity, Policy};
+use crate::coordinator::router::{choose_affinity, Policy, REBALANCE_MIN_GAP};
 use crate::model::{Backend, BlockConfig, NativeModel};
 use crate::util::json::{obj, Json};
 use crate::util::prng::XorShift;
@@ -223,6 +223,67 @@ fn frontend_from_value(j: Option<&Json>) -> Result<FrontendConfig> {
     Ok(fc)
 }
 
+/// A scripted fleet action, applied on the virtual clock — so a study
+/// replays scale-up/scale-down/rebalance at exactly the same point in
+/// the traffic on every run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScaleEvent {
+    /// virtual time at which the event fires (applied at the first tick
+    /// whose clock is >= this)
+    pub at_s: f64,
+    pub action: ScaleAction,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleAction {
+    /// join one worker (fresh stable id), warmed from peers' pending
+    /// shard exports when KV migration is on
+    AddWorker,
+    /// drain the worker with this STABLE id: its live sequences resume
+    /// on survivors (warm via their serialized live shards), then it
+    /// leaves the fleet
+    RemoveWorker { worker: usize },
+    /// one proactive rebalance pass (PrefixAffinity only)
+    Rebalance,
+}
+
+fn scale_events_from_value(j: Option<&Json>) -> Result<Vec<ScaleEvent>> {
+    let Some(j) = j else { return Ok(Vec::new()) };
+    let Json::Arr(items) = j else {
+        return Err(anyhow!("study: scale_events wants an array"));
+    };
+    let mut evs = Vec::with_capacity(items.len());
+    for it in items {
+        let at_s = it
+            .get("at_s")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("study: scale event wants at_s"))?;
+        if at_s < 0.0 {
+            return Err(anyhow!("study: scale event at_s must be >= 0"));
+        }
+        let action = match it.get("action").and_then(|v| v.as_str()) {
+            Some("add_worker") => ScaleAction::AddWorker,
+            Some("remove_worker") => {
+                let worker = it
+                    .get("worker")
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| anyhow!("study: remove_worker wants a worker id"))?;
+                ScaleAction::RemoveWorker { worker }
+            }
+            Some("rebalance") => ScaleAction::Rebalance,
+            other => {
+                return Err(anyhow!(
+                    "study: unknown scale action {other:?} \
+                     (want add_worker, remove_worker, or rebalance)"
+                ))
+            }
+        };
+        evs.push(ScaleEvent { at_s, action });
+    }
+    evs.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+    Ok(evs)
+}
+
 /// One parsed study file.
 #[derive(Clone, Debug)]
 pub struct StudyConfig {
@@ -235,6 +296,8 @@ pub struct StudyConfig {
     pub workload: Workload,
     pub frontend: FrontendConfig,
     pub serve: Config,
+    /// scripted fleet actions, sorted by `at_s`
+    pub scale_events: Vec<ScaleEvent>,
 }
 
 impl StudyConfig {
@@ -263,6 +326,7 @@ impl StudyConfig {
             workload: Workload::from_value(j.get("workload"))?,
             frontend: frontend_from_value(j.get("frontend"))?,
             serve,
+            scale_events: scale_events_from_value(j.get("scale_events"))?,
         };
         if cfg.requests == 0 {
             return Err(anyhow!("study: requests must be > 0"));
@@ -286,44 +350,92 @@ impl StudyConfig {
 // Simulated cluster: the router's policy logic over in-process engines
 // ---------------------------------------------------------------------
 
+/// One worker of the simulated cluster: a stable id (assigned at
+/// spawn/join, never reused — mirroring the threaded router) plus its
+/// in-process engine and lifetime dispatch count.
+struct SimWorker {
+    id: usize,
+    engine: Engine<StcExecutor>,
+    dispatched: u64,
+}
+
 /// One [`Engine`] per worker, stepped round-robin by the front-end —
 /// the threaded router's dispatch policies without its threads, so a
-/// study replays identically for a fixed seed.
+/// study replays identically for a fixed seed. Scripted
+/// [`ScaleEvent`]s grow, shrink, and rebalance the fleet mid-replay on
+/// the virtual clock.
 pub struct SimCluster {
-    engines: Vec<Engine<StcExecutor>>,
+    workers: Vec<SimWorker>,
+    /// drained-out workers, kept so their metrics and any buffered
+    /// stream events still aggregate into the study report
+    retired: Vec<SimWorker>,
     policy: Policy,
+    /// prefix hash -> pinned worker STABLE ID
     sticky: HashMap<u64, usize>,
     rr: usize,
-    dispatched: Vec<u64>,
+    next_id: usize,
+    streaming: bool,
+    serve_engine: crate::coordinator::EngineConfig,
+    model_backend: Backend,
+    /// in-flight sequences re-homed with their live KV shard (warm)
+    pub migrated_warm: u64,
+    /// re-homed without a shard (cold replay: waiting/preempted seqs,
+    /// or a live export that could not be taken)
+    pub resumed_cold: u64,
+    /// sticky pins moved by scripted rebalance events
+    pub rebalanced_pins: u64,
+    /// scale events applied
+    pub scale_events_applied: u64,
 }
 
 impl SimCluster {
     pub fn new(serve: &Config) -> Result<SimCluster> {
         let backend = serve.backend()?;
-        let workers = serve.workers.max(1);
-        let engines = (0..workers)
-            .map(|_| Engine::new(StcExecutor::new(study_model(backend)), serve.engine))
+        let n = serve.workers.max(1);
+        let workers = (0..n)
+            .map(|id| SimWorker {
+                id,
+                engine: Engine::new(StcExecutor::new(study_model(backend)), serve.engine),
+                dispatched: 0,
+            })
             .collect();
         Ok(SimCluster {
-            engines,
+            workers,
+            retired: Vec::new(),
             policy: serve.routing,
             sticky: HashMap::new(),
             rr: 0,
-            dispatched: vec![0; workers],
+            next_id: n,
+            streaming: false,
+            serve_engine: serve.engine,
+            model_backend: backend,
+            migrated_warm: 0,
+            resumed_cold: 0,
+            rebalanced_pins: 0,
+            scale_events_applied: 0,
         })
     }
 
     fn loads(&self) -> Vec<usize> {
-        self.engines
+        self.workers
             .iter()
-            .map(|e| e.num_waiting() + e.num_running())
+            .map(|w| w.engine.num_waiting() + w.engine.num_running())
             .collect()
+    }
+
+    fn position_of(&self, id: usize) -> Option<usize> {
+        self.workers.iter().position(|w| w.id == id)
+    }
+
+    /// Stable ids of the live fleet, in join order.
+    pub fn worker_ids(&self) -> Vec<usize> {
+        self.workers.iter().map(|w| w.id).collect()
     }
 
     fn route(&mut self, prompt: &[i32]) -> usize {
         match self.policy {
             Policy::RoundRobin => {
-                let w = self.rr % self.engines.len();
+                let w = self.rr % self.workers.len();
                 self.rr += 1;
                 w
             }
@@ -331,33 +443,137 @@ impl SimCluster {
             Policy::PrefixAffinity { prefix_tokens } => {
                 let k = prefix_tokens.min(prompt.len());
                 let h = token_hash(PREFIX_HASH_SEED, &prompt[..k]);
-                let prev = self.sticky.get(&h).copied();
-                let w = choose_affinity(prev, &self.loads(), |_| true);
-                self.sticky.insert(h, w);
+                let prev_pos = self
+                    .sticky
+                    .get(&h)
+                    .copied()
+                    .and_then(|id| self.position_of(id));
+                let w = choose_affinity(prev_pos, &self.loads(), |_| true);
+                self.sticky.insert(h, self.workers[w].id);
                 w
             }
         }
     }
 
-    pub fn dispatch_counts(&self) -> &[u64] {
-        &self.dispatched
+    /// `(stable id, lifetime dispatch count)` per live worker.
+    pub fn dispatch_counts(&self) -> Vec<(usize, u64)> {
+        self.workers.iter().map(|w| (w.id, w.dispatched)).collect()
+    }
+
+    /// Apply one scripted fleet action. Errors only on config mistakes
+    /// (removing an unknown id or the last worker) — the traffic study
+    /// should fail loudly rather than silently skip a scripted event.
+    pub fn apply_scale_event(&mut self, action: ScaleAction) -> Result<()> {
+        match action {
+            ScaleAction::AddWorker => {
+                let id = self.next_id;
+                self.next_id += 1;
+                let mut joiner = SimWorker {
+                    id,
+                    engine: Engine::new(
+                        StcExecutor::new(study_model(self.model_backend)),
+                        self.serve_engine,
+                    ),
+                    dispatched: 0,
+                };
+                if self.streaming {
+                    joiner.engine.enable_stream_buffer();
+                }
+                // warm the joiner from the peers' pending shard exports
+                // (the sim has no router buffer; the export backlog is
+                // the same bytes the threaded router would have parked)
+                for w in &mut self.workers {
+                    for (_prompt, shard) in w.engine.take_kv_exports() {
+                        let _ = joiner.engine.import_kv_shard_bytes(&shard.to_bytes());
+                    }
+                }
+                self.workers.push(joiner);
+            }
+            ScaleAction::RemoveWorker { worker } => {
+                let pos = self
+                    .position_of(worker)
+                    .ok_or_else(|| anyhow!("study: no live worker with id {worker}"))?;
+                if self.workers.len() == 1 {
+                    return Err(anyhow!("study: cannot remove the last worker"));
+                }
+                self.sticky.retain(|_, w| *w != worker);
+                let mut leaver = self.workers.remove(pos);
+                for (req, shard) in leaver.engine.drain_live_requests() {
+                    let target = self.route(&req.prompt);
+                    let bytes = shard.map(|s| s.to_bytes());
+                    self.workers[target].dispatched += 1;
+                    // resume_request returns true only for a WARM
+                    // landing (shard decoded, validated, and admitted);
+                    // everything else falls back to a cold submit
+                    if self.workers[target]
+                        .engine
+                        .resume_request(req, bytes.as_deref())
+                    {
+                        self.migrated_warm += 1;
+                    } else {
+                        self.resumed_cold += 1;
+                    }
+                }
+                self.retired.push(leaver);
+            }
+            ScaleAction::Rebalance => {
+                if let Policy::PrefixAffinity { .. } = self.policy {
+                    let loads = self.loads();
+                    let Some((hot, &hot_load)) =
+                        loads.iter().enumerate().max_by_key(|&(_, l)| l)
+                    else {
+                        return Ok(());
+                    };
+                    let Some((cold, &cold_load)) =
+                        loads.iter().enumerate().min_by_key(|&(_, l)| l)
+                    else {
+                        return Ok(());
+                    };
+                    if hot == cold || hot_load - cold_load < REBALANCE_MIN_GAP {
+                        self.scale_events_applied += 1;
+                        return Ok(());
+                    }
+                    let hot_id = self.workers[hot].id;
+                    let cold_id = self.workers[cold].id;
+                    let quota = ((hot_load - cold_load) / 2).max(1);
+                    let mut victims: Vec<u64> = self
+                        .sticky
+                        .iter()
+                        .filter(|&(_, w)| *w == hot_id)
+                        .map(|(h, _)| *h)
+                        .collect();
+                    victims.sort_unstable();
+                    victims.truncate(quota);
+                    for h in victims {
+                        self.sticky.insert(h, cold_id);
+                        self.rebalanced_pins += 1;
+                    }
+                }
+            }
+        }
+        self.scale_events_applied += 1;
+        Ok(())
     }
 
     /// Merge per-worker engine metrics into study-level aggregates:
     /// (ttft, itl, latency) summaries plus deterministic counters.
+    /// Retired (scaled-down) workers count too.
     fn aggregate(&self) -> (Summary, Summary, Summary, StudyCounters) {
         let mut ttft = Summary::new();
         let mut itl = Summary::new();
         let mut latency = Summary::new();
         let mut c = StudyCounters::default();
-        for e in &self.engines {
-            ttft.merge(&e.metrics.ttft);
-            itl.merge(&e.metrics.itl);
-            latency.merge(&e.metrics.latency);
-            c.prompt_tokens += e.metrics.prompt_tokens;
-            c.generated_tokens += e.metrics.generated_tokens;
-            c.preemptions += e.metrics.preemptions;
-            c.prefix_cached_tokens += e.metrics.prefix_cached_tokens;
+        for w in self.workers.iter().chain(self.retired.iter()) {
+            let m = &w.engine.metrics;
+            ttft.merge(&m.ttft);
+            itl.merge(&m.itl);
+            latency.merge(&m.latency);
+            c.prompt_tokens += m.prompt_tokens;
+            c.generated_tokens += m.generated_tokens;
+            c.preemptions += m.preemptions;
+            c.prefix_cached_tokens += m.prefix_cached_tokens;
+            c.prefilled_tokens += m.prefilled_tokens;
+            c.replayed_decode_tokens += m.replayed_decode_tokens;
         }
         (ttft, itl, latency, c)
     }
@@ -369,31 +585,35 @@ struct StudyCounters {
     generated_tokens: u64,
     preemptions: u64,
     prefix_cached_tokens: u64,
+    prefilled_tokens: u64,
+    replayed_decode_tokens: u64,
 }
 
 impl ServeBackend for SimCluster {
     fn submit(&mut self, request: Request) {
         let w = self.route(&request.prompt);
-        self.dispatched[w] += 1;
-        self.engines[w].submit(request);
+        self.workers[w].dispatched += 1;
+        self.workers[w].engine.submit(request);
     }
 
     fn cancel(&mut self, rid: RequestId, finish: FinishReason) -> bool {
-        self.engines.iter_mut().any(|e| e.cancel_request(rid, finish))
+        self.workers
+            .iter_mut()
+            .any(|w| w.engine.cancel_request(rid, finish))
     }
 
     fn step(&mut self) -> Result<bool> {
         let mut progressed = false;
-        for e in &mut self.engines {
-            progressed |= e.step()?;
+        for w in &mut self.workers {
+            progressed |= w.engine.step()?;
         }
         Ok(progressed)
     }
 
     fn poll_events(&mut self) -> Vec<StreamEvent> {
         let mut evs = Vec::new();
-        for e in &mut self.engines {
-            evs.extend(ServeBackend::poll_events(e));
+        for w in self.workers.iter_mut().chain(self.retired.iter_mut()) {
+            evs.extend(ServeBackend::poll_events(&mut w.engine));
         }
         evs
     }
@@ -403,8 +623,9 @@ impl ServeBackend for SimCluster {
     }
 
     fn enable_streaming(&mut self) {
-        for e in &mut self.engines {
-            e.enable_stream_buffer();
+        self.streaming = true;
+        for w in &mut self.workers {
+            w.engine.enable_stream_buffer();
         }
     }
 }
@@ -490,7 +711,23 @@ pub fn run(cfg: &StudyConfig) -> Result<StudyOutcome> {
 
     let t0 = Instant::now();
     let mut next = 0usize;
-    while next < requests.len() || fe.live_sessions() > 0 {
+    let mut ev_next = 0usize;
+    let mut scale_wall_s = 0.0f64;
+    while next < requests.len()
+        || ev_next < cfg.scale_events.len()
+        || fe.live_sessions() > 0
+    {
+        // scripted fleet actions fire on the virtual clock, BEFORE this
+        // tick's arrivals, so routing sees the post-event fleet exactly
+        // like a replay of the same file would
+        while ev_next < cfg.scale_events.len()
+            && cfg.scale_events[ev_next].at_s <= fe.clock.now()
+        {
+            let e0 = Instant::now();
+            fe.backend.apply_scale_event(cfg.scale_events[ev_next].action)?;
+            scale_wall_s += e0.elapsed().as_secs_f64();
+            ev_next += 1;
+        }
         while next < requests.len() && arrivals[next] <= fe.clock.now() {
             fe.submit(requests[next].clone())?;
             next += 1;
@@ -530,6 +767,7 @@ pub fn run(cfg: &StudyConfig) -> Result<StudyOutcome> {
             }),
         ),
         ("wall_s", Json::Num(wall_s)),
+        ("scale_event_wall_ms", ms(scale_wall_s)),
     ]);
     let entry = obj(vec![
         ("name", Json::Str(cfg.name.clone())),
@@ -552,6 +790,25 @@ pub fn run(cfg: &StudyConfig) -> Result<StudyOutcome> {
         (
             "prefix_cached_tokens",
             Json::Num(counters.prefix_cached_tokens as f64),
+        ),
+        ("prefilled_tokens", Json::Num(counters.prefilled_tokens as f64)),
+        (
+            "replayed_decode_tokens",
+            Json::Num(counters.replayed_decode_tokens as f64),
+        ),
+        (
+            "scale_events",
+            Json::Num(fe.backend.scale_events_applied as f64),
+        ),
+        ("migrated_warm", Json::Num(fe.backend.migrated_warm as f64)),
+        ("resumed_cold", Json::Num(fe.backend.resumed_cold as f64)),
+        (
+            "rebalanced_pins",
+            Json::Num(fe.backend.rebalanced_pins as f64),
+        ),
+        (
+            "final_workers",
+            Json::Num(fe.backend.worker_ids().len() as f64),
         ),
         (
             "stream_checksum",
@@ -696,6 +953,96 @@ mod tests {
             deterministic_view(&out.entry).to_string_pretty(),
             deterministic_view(&again.entry).to_string_pretty()
         );
+    }
+
+    #[test]
+    fn scale_events_parse_sorted_and_validated() {
+        let cfg = base_cfg(
+            r#""scale_events": [
+                {"at_s": 0.2, "action": "rebalance"},
+                {"at_s": 0.05, "action": "remove_worker", "worker": 0},
+                {"at_s": 0.1, "action": "add_worker"}
+            ],"#,
+        );
+        assert_eq!(cfg.scale_events.len(), 3);
+        assert_eq!(
+            cfg.scale_events[0],
+            ScaleEvent { at_s: 0.05, action: ScaleAction::RemoveWorker { worker: 0 } },
+            "events sort by at_s"
+        );
+        assert_eq!(cfg.scale_events[1].action, ScaleAction::AddWorker);
+        assert_eq!(cfg.scale_events[2].action, ScaleAction::Rebalance);
+        for bad in [
+            r#"{"scale_events": {"at_s": 1}}"#,
+            r#"{"scale_events": [{"action": "add_worker"}]}"#,
+            r#"{"scale_events": [{"at_s": -1, "action": "add_worker"}]}"#,
+            r#"{"scale_events": [{"at_s": 1, "action": "fork_lift"}]}"#,
+            r#"{"scale_events": [{"at_s": 1, "action": "remove_worker"}]}"#,
+        ] {
+            assert!(StudyConfig::from_json(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn elastic_scale_replay_matches_static_fleet_bit_for_bit() {
+        // scripted scale-down under load (every prefix pinned to the
+        // drained worker), a later join, and a rebalance pass. The
+        // elastic run must complete every request with ZERO replayed
+        // decode tokens and the SAME token streams as an untouched
+        // static fleet — migrations never change results.
+        let elastic = r#"{
+            "name": "elastic", "seed": 13, "requests": 24, "tick_s": 0.002,
+            "arrival": {"process": "poisson", "rate_rps": 400},
+            "workload": {
+                "prompt_tokens": [10, 20], "output_tokens": [4, 8],
+                "shared_prefix": {"groups": 1, "prefix_tokens": 10, "fraction": 1.0}
+            },
+            "serve": {"sparsity": "dense", "workers": 2, "routing": "prefix:10",
+                      "prefix_cache": true, "migrate_kv": true,
+                      "engine": {"kv_blocks": 256, "kv_block_size": 8}},
+            "scale_events": [
+                {"at_s": 0.05, "action": "remove_worker", "worker": 0},
+                {"at_s": 0.08, "action": "add_worker"},
+                {"at_s": 0.10, "action": "rebalance"}
+            ]
+        }"#;
+        let cfg = StudyConfig::from_json(elastic).unwrap();
+        let a = run(&cfg).unwrap();
+        let b = run(&cfg).unwrap();
+        assert_eq!(
+            deterministic_view(&a.entry).to_string_pretty(),
+            deterministic_view(&b.entry).to_string_pretty(),
+            "elastic replay is deterministic"
+        );
+        assert_eq!(a.entry.req("completed").as_usize(), Some(24));
+        assert_eq!(a.entry.req("scale_events").as_usize(), Some(3));
+        assert_eq!(a.entry.req("final_workers").as_usize(), Some(2), "2 - 1 + 1");
+        assert_eq!(a.entry.req("preemptions").as_usize(), Some(0));
+        assert_eq!(
+            a.entry.req("replayed_decode_tokens").as_usize(),
+            Some(0),
+            "warm handoffs recompute nothing; cold fallbacks only touch \
+             not-yet-started requests"
+        );
+        let warm = a.entry.req("migrated_warm").as_usize().unwrap();
+        let cold = a.entry.req("resumed_cold").as_usize().unwrap();
+        assert!(
+            warm + cold > 0,
+            "the pinned worker was drained under load: something moved"
+        );
+        // identical config, no scale events: the static reference
+        let static_cfg = StudyConfig {
+            scale_events: Vec::new(),
+            ..cfg.clone()
+        };
+        let s = run(&static_cfg).unwrap();
+        assert_eq!(
+            a.entry.req("stream_checksum").as_str(),
+            s.entry.req("stream_checksum").as_str(),
+            "scale events must not change a single output token"
+        );
+        assert_eq!(s.entry.req("migrated_warm").as_usize(), Some(0));
+        assert_eq!(s.entry.req("final_workers").as_usize(), Some(2));
     }
 
     #[test]

@@ -10,7 +10,9 @@
 
 use std::sync::Arc;
 
-use slidesparse::coordinator::{Engine, EngineConfig, Request, SamplingParams, StcExecutor};
+use slidesparse::coordinator::{
+    Engine, EngineConfig, Policy, Request, Router, SamplingParams, StcExecutor,
+};
 use slidesparse::model::{Backend, BlockConfig, NativeModel};
 use slidesparse::quant::quantize_weight_per_channel;
 use slidesparse::sparsity::prune::prune_magnitude;
@@ -537,6 +539,221 @@ fn streamed_tokens_bit_exact_across_backends_threads_and_cache() {
                     assert_eq!(finished.get(&o.id), Some(&o.tokens), "finish: {ctx}");
                 }
                 assert!(engine.poll_stream_events().is_empty(), "drained once");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// (h) elastic fleet: scripted scale-up / rebalance / scale-down mid-run
+//     == static fleet (bit-exact) across backends x 1/2/4/8 threads x
+//     prefix-cache on/off, with an exact per-worker prefill ledger
+// ---------------------------------------------------------------------
+
+#[test]
+fn fleet_elastic_scale_events_bit_exact_across_backends_threads_and_cache() {
+    // The elastic-fleet acceptance grid: a fleet that scales up, runs a
+    // scripted rebalance pass, and scales down MID-STREAM must generate
+    // byte-identical tokens to a static fleet over the same request
+    // stream — for every backend, thread count, and prefix-cache
+    // setting — while replaying ZERO prefill tokens (the joiner warms
+    // itself from the shard buffer; the post-scale-down re-pin ships
+    // the buffered prefix shard ahead of the request) and recomputing
+    // ZERO decode tokens. Requests are staggered (each drains before
+    // the next is submitted) so the per-worker prefill ledger asserted
+    // below is exact arithmetic, not a race-dependent bound.
+    let prefix: Vec<i32> = (0..16).map(|t| (t * 7 + 3) % 128).collect();
+    let params = SamplingParams { max_new_tokens: 6, ..Default::default() };
+    let policy = Policy::PrefixAffinity { prefix_tokens: 8 };
+    for backend in [Backend::Dense, Backend::Slide { n: 4 }, Backend::Native24] {
+        for threads in [1usize, 2, 4, 8] {
+            for prefix_cache in [false, true] {
+                let prompt = |i: u64| {
+                    let mut p = prefix.clone();
+                    p.extend((0..3).map(|t| (i as i32 * 13 + t) % 128));
+                    p
+                };
+                let cfg = EngineConfig {
+                    threads,
+                    prefix_cache,
+                    migrate_kv: true,
+                    kv_block_size: 8,
+                    ..Default::default()
+                };
+                let factory = move |_wid: usize| {
+                    StcExecutor::new(NativeModel::generate(
+                        BlockConfig { dim: 48, n_heads: 2, ffn: 64 },
+                        2,
+                        128,
+                        96,
+                        23,
+                        backend,
+                    ))
+                };
+                let ctx = format!("{backend:?} t={threads} cache={prefix_cache}");
+
+                // the control arm: a static two-worker fleet
+                let mut stat = Router::spawn(2, cfg, policy, factory);
+                let mut want = Vec::new();
+                for i in 1..=8u64 {
+                    stat.submit(Request::new(i, prompt(i), params));
+                    let outs = stat.drain().unwrap();
+                    assert_eq!(outs.len(), 1, "{ctx}: static req {i}");
+                    want.push(outs.into_iter().next().unwrap().tokens);
+                }
+
+                // the elastic arm: identical stream, scale events between
+                let mut r = Router::spawn(2, cfg, policy, factory);
+                r.set_fleet_bounds(1, 3);
+                let mut got = Vec::new();
+                for i in 1..=8u64 {
+                    if i == 4 {
+                        // scale-up between requests 3 and 4: the joiner
+                        // warms itself from the router's shard buffer
+                        assert_eq!(
+                            r.add_worker().expect("within max_workers"),
+                            2,
+                            "{ctx}: stable ids continue past the initial fleet"
+                        );
+                    }
+                    if i == 6 {
+                        // scripted rebalance: on an idle fleet there is
+                        // no hot pin to move, and it must not perturb
+                        // the stream (hot-pin moves are covered by the
+                        // router's own gated-decode tests)
+                        assert_eq!(r.rebalance(), 0, "{ctx}: idle fleet has no hot pins");
+                        // scale-down of the worker that served 1-5: its
+                        // exact prefill ledger proves zero replay so far
+                        let pre = r.kv_stats_by_id();
+                        assert_eq!(pre[0].0, 0, "{ctx}");
+                        let s0 = pre[0].1.expect("leaver alive");
+                        let ledger = if prefix_cache { 19 + 4 * 3 } else { 5 * 19 };
+                        assert_eq!(
+                            s0.prefilled_tokens, ledger,
+                            "{ctx}: leaver prefill ledger before scale-down"
+                        );
+                        assert_eq!(s0.replayed_decode_tokens, 0, "{ctx}");
+                        assert_eq!(
+                            r.remove_worker(0).expect("idle leaver drains"),
+                            0,
+                            "{ctx}: nothing in flight at the scale-down"
+                        );
+                        assert_eq!(r.worker_ids(), vec![1, 2], "{ctx}");
+                    }
+                    r.submit(Request::new(i, prompt(i), params));
+                    let outs = r.drain().unwrap();
+                    assert_eq!(outs.len(), 1, "{ctx}: elastic req {i}");
+                    got.push(outs.into_iter().next().unwrap().tokens);
+                }
+                assert_eq!(got, want, "{ctx}: scale events must not change any token");
+
+                let stats = r.kv_stats_by_id();
+                assert_eq!(
+                    stats.iter().map(|(id, _)| *id).collect::<Vec<_>>(),
+                    vec![1, 2],
+                    "{ctx}"
+                );
+                let s1 = stats[0].1.expect("survivor alive");
+                let s2 = stats[1].1.expect("joiner alive");
+                assert_eq!(s1.replayed_decode_tokens, 0, "{ctx}: zero recomputed decode");
+                assert_eq!(s2.replayed_decode_tokens, 0, "{ctx}: zero recomputed decode");
+                assert_eq!(s2.prefilled_tokens, 0, "{ctx}: the joiner never prefilled");
+                if prefix_cache {
+                    // requests 6-8 re-pinned onto worker 1 with a warm
+                    // handoff covering the 16-token prefix (two full
+                    // blocks), so each prefills only its 3-token suffix
+                    assert_eq!(s1.prefilled_tokens, 9, "{ctx}: suffix-only after handoff");
+                    assert_eq!(s1.kv_imported_blocks, 2, "{ctx}: handoff shipped the prefix");
+                    assert_eq!(s2.kv_imported_blocks, 2, "{ctx}: joiner warmed at join");
+                    assert_eq!(r.kv_migrations(), 1, "{ctx}: exactly the request-6 re-pin");
+                    assert_eq!(r.shard_buffer().0, 1, "{ctx}: one prefix family buffered");
+                } else {
+                    // without the prefix cache nothing is exported, so
+                    // scale events are KV-inert: a cold fleet, but the
+                    // stream is STILL bit-exact
+                    assert_eq!(s1.prefilled_tokens, 3 * 19, "{ctx}: cold full prefills");
+                    assert_eq!(s1.kv_imported_blocks, 0, "{ctx}");
+                    assert_eq!(s2.kv_imported_blocks, 0, "{ctx}");
+                    assert_eq!(r.kv_migrations(), 0, "{ctx}");
+                    assert_eq!(r.shard_buffer(), (0, 0), "{ctx}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_tail_handoff_resumes_mid_generation_bit_exact_across_backends() {
+    // The warm decode-tail handoff at the engine boundary: a sequence
+    // drained MID-GENERATION — its newest KV positions live past the
+    // last block boundary, in the shard's decode tail — resumes on a
+    // second engine with zero replayed prefill and zero recomputed
+    // decode tokens, and the stitched generation is byte-identical to
+    // the uninterrupted run. The live export reads the sequence's own
+    // KV, so the guarantee holds with the prefix cache OFF as well.
+    let prompt: Vec<i32> = (0..19).map(|t| (t * 7 + 3) % 128).collect();
+    let params = SamplingParams { max_new_tokens: 6, ..Default::default() };
+    for backend in [Backend::Dense, Backend::Slide { n: 4 }, Backend::Native24] {
+        let model = || {
+            NativeModel::generate(
+                BlockConfig { dim: 48, n_heads: 2, ffn: 64 },
+                2,
+                128,
+                96,
+                23,
+                backend,
+            )
+        };
+        for threads in [1usize, 2, 4, 8] {
+            let mut base = Engine::new(
+                StcExecutor::new(model()),
+                EngineConfig { threads, kv_block_size: 8, ..Default::default() },
+            );
+            base.submit(Request::new(1, prompt.clone(), params));
+            let want = base.run_to_completion().unwrap()[0].tokens.clone();
+            assert_eq!(want.len(), 6);
+            for prefix_cache in [false, true] {
+                let cfg = EngineConfig {
+                    threads,
+                    prefix_cache,
+                    migrate_kv: true,
+                    kv_block_size: 8,
+                    ..Default::default()
+                };
+                let ctx = format!("{backend:?} t={threads} cache={prefix_cache}");
+                let mut a = Engine::new(StcExecutor::new(model()), cfg);
+                a.submit(Request::new(1, prompt.clone(), params));
+                for _ in 0..3 {
+                    a.step().unwrap();
+                }
+                let mut moved = a.drain_live_requests();
+                assert_eq!(moved.len(), 1, "{ctx}: one live sequence to drain");
+                let (req, shard) = moved.pop().unwrap();
+                let shard = shard.expect("mid-generation KV is warm-exportable");
+                assert!(
+                    (1..6).contains(&shard.generated),
+                    "{ctx}: drained mid-generation, generated={}",
+                    shard.generated
+                );
+                // KV covers pos = total - 1: with a 19-token prompt and
+                // under 6 generated, always 2 full blocks + a live tail
+                assert_eq!(shard.blocks.len(), 2, "{ctx}");
+                assert!(!shard.tail_k.is_empty(), "{ctx}: KV past the block boundary");
+
+                let mut b = Engine::new(StcExecutor::new(model()), cfg);
+                assert!(
+                    b.resume_request(req, Some(&shard.to_bytes())),
+                    "{ctx}: resume lands warm"
+                );
+                let outs = b.run_to_completion().unwrap();
+                assert_eq!(outs.len(), 1);
+                assert_eq!(outs[0].tokens, want, "{ctx}: stitched generation bit-exact");
+                assert_eq!(b.metrics.prefilled_tokens, 0, "{ctx}: zero replayed prefill");
+                assert_eq!(
+                    b.metrics.replayed_decode_tokens, 0,
+                    "{ctx}: zero recomputed decode"
+                );
+                assert_eq!(b.metrics.kv_imported_blocks, 2, "{ctx}: both blocks injected");
             }
         }
     }

@@ -1,0 +1,224 @@
+//! Seeded mutation harness over the `KvShard` wire format (v2).
+//!
+//! The migration wire is the one place a worker consumes bytes produced
+//! by another process boundary, so `KvShard::from_bytes` must reject
+//! EVERY damaged buffer gracefully: an error, never a panic, never a
+//! partially-decoded ("aliased") shard. This harness sweeps the whole
+//! damage space that matters in practice:
+//!
+//! - every truncation offset (torn transfer),
+//! - every single bitflip (bit rot — exhaustive, not sampled),
+//! - seeded random multi-bitflips (burst corruption),
+//! - every length field rewritten to hostile values WITH the checksum
+//!   recomputed, so the structural bounds checks themselves are on
+//!   trial rather than the checksum gate in front of them.
+//!
+//! std-only: the rng is the repo's own XorShift, so the "random" trials
+//! are reproducible byte-for-byte from the literal seed below.
+
+use slidesparse::coordinator::kvcache::ShardDecodeError;
+use slidesparse::coordinator::{KvShard, KvShardBlock};
+use slidesparse::util::prng::XorShift;
+
+/// A representative live-sequence shard: two full blocks, a decode
+/// tail, and a generated count — every v2 wire section populated.
+///
+/// Token values are kept >= 1000 and the KV floats normal-range on
+/// purpose: a mutation that shifts the decode cursor makes the decoder
+/// read a token (or a float's bit pattern) as a length field, and large
+/// values guarantee the `len_of` bounds check trips instead of the
+/// misparse limping through to an aliased success.
+fn sample_shard() -> KvShard {
+    let block = |b: i32| KvShardBlock {
+        tokens: (0..4).map(|t| 1000 + b * 16 + t).collect(),
+        k: (0..4).map(|i| 1.5 + b as f32 + i as f32).collect(),
+        v: (0..4).map(|i| 2.5 + b as f32 + i as f32).collect(),
+    };
+    KvShard {
+        block_size: 4,
+        executor: "mock".into(),
+        blocks: vec![block(0), block(1)],
+        tail_tokens: vec![2001, 2002, 2003],
+        tail_k: vec![3.25, 4.25, 5.25],
+        tail_v: vec![6.5, 7.5, 8.5],
+        generated: 5,
+    }
+}
+
+/// FNV-1a 64 twin of the encoder's checksum, so a targeted mutation can
+/// re-seal the buffer and reach the structural checks behind the gate.
+fn reseal(mut bytes: Vec<u8>) -> Vec<u8> {
+    let split = bytes.len() - 8;
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in &bytes[..split] {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    bytes[split..].copy_from_slice(&h.to_le_bytes());
+    bytes
+}
+
+/// Overwrite the u32 at `offset` and re-seal the checksum.
+fn patch_u32(bytes: &[u8], offset: usize, val: u32) -> Vec<u8> {
+    let mut m = bytes.to_vec();
+    m[offset..offset + 4].copy_from_slice(&val.to_le_bytes());
+    reseal(m)
+}
+
+/// Walk the wire layout and return `(offset, current value)` of every
+/// u32 length field: the block count, each block's three element
+/// counts, and the three tail element counts. Mirrors `to_bytes` —
+/// a layout change breaks this loudly via the roundtrip test below.
+fn length_field_offsets(bytes: &[u8]) -> Vec<(usize, u32)> {
+    let u32_at = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
+    let u16_at = |o: usize| u16::from_le_bytes(bytes[o..o + 2].try_into().unwrap());
+    let mut fields = Vec::new();
+    let mut pos = 4 + 2 + 4; // magic + version + block_size
+    let exec_len = u16_at(pos) as usize;
+    pos += 2 + exec_len;
+    let n_blocks = u32_at(pos) as usize;
+    fields.push((pos, n_blocks as u32));
+    pos += 4;
+    for _ in 0..n_blocks {
+        for _ in 0..3 {
+            // tokens, k, v element counts
+            let n = u32_at(pos) as usize;
+            fields.push((pos, n as u32));
+            pos += 4 + n * 4;
+        }
+    }
+    for _ in 0..3 {
+        // tail tokens, tail k, tail v element counts
+        let n = u32_at(pos) as usize;
+        fields.push((pos, n as u32));
+        pos += 4 + n * 4;
+    }
+    // what remains is generated (4) + checksum (8)
+    assert_eq!(pos + 4 + 8, bytes.len(), "layout walk out of sync");
+    fields
+}
+
+#[test]
+fn clean_roundtrip_is_identity() {
+    let shard = sample_shard();
+    let bytes = shard.to_bytes();
+    let back = KvShard::from_bytes(&bytes).expect("clean shard decodes");
+    assert_eq!(back, shard, "decode must not alias or drop any section");
+    assert_eq!(back.total_tokens(), 11);
+    assert_eq!(back.generated, 5);
+}
+
+#[test]
+fn every_truncation_offset_rejected() {
+    let bytes = sample_shard().to_bytes();
+    for len in 0..bytes.len() {
+        let r = KvShard::from_bytes(&bytes[..len]);
+        assert!(r.is_err(), "truncation to {len}/{} bytes decoded", bytes.len());
+    }
+    assert!(KvShard::from_bytes(&bytes).is_ok());
+}
+
+#[test]
+fn every_single_bitflip_rejected() {
+    // exhaustive: a one-bit flip lands in the payload (checksum no
+    // longer matches) or in the checksum itself (ditto) — either way
+    // the decoder must refuse, for all positions, without panicking
+    let bytes = sample_shard().to_bytes();
+    for byte in 0..bytes.len() {
+        for bit in 0..8 {
+            let mut m = bytes.clone();
+            m[byte] ^= 1 << bit;
+            assert!(
+                KvShard::from_bytes(&m).is_err(),
+                "bitflip at byte {byte} bit {bit} decoded"
+            );
+        }
+    }
+}
+
+#[test]
+fn seeded_random_multi_bitflips_rejected() {
+    let bytes = sample_shard().to_bytes();
+    let mut rng = XorShift::new(0x5eed_f1ee);
+    let mut trials = 0;
+    while trials < 4000 {
+        let mut m = bytes.clone();
+        for _ in 0..(1 + rng.below(8)) {
+            let byte = rng.below(m.len());
+            let bit = rng.below(8);
+            m[byte] ^= 1 << bit;
+        }
+        if m == bytes {
+            // an even number of flips on the same bit is a no-op;
+            // only genuinely damaged buffers count as trials
+            continue;
+        }
+        trials += 1;
+        assert!(KvShard::from_bytes(&m).is_err(), "trial {trials} decoded");
+    }
+}
+
+#[test]
+fn hostile_length_fields_rejected_even_resealed() {
+    let bytes = sample_shard().to_bytes();
+    let fields = length_field_offsets(&bytes);
+    assert_eq!(fields.len(), 1 + 2 * 3 + 3, "2 blocks + tail sections");
+    for &(offset, orig) in &fields {
+        for val in [orig + 1, 0, 64, 0x7fff_ffff, 0xffff_ffff] {
+            if val == orig {
+                continue;
+            }
+            let m = patch_u32(&bytes, offset, val);
+            let r = KvShard::from_bytes(&m);
+            assert!(
+                r.is_err(),
+                "length field at {offset} rewritten {orig} -> {val} decoded"
+            );
+        }
+    }
+}
+
+#[test]
+fn header_and_semantic_fields_rejected_resealed() {
+    let shard = sample_shard();
+    let bytes = shard.to_bytes();
+    // magic and version are the first six bytes
+    assert_eq!(
+        KvShard::from_bytes(&patch_u32(&bytes, 0, 0xdead_beef)),
+        Err(ShardDecodeError("bad magic"))
+    );
+    let mut v1 = bytes.clone();
+    v1[4..6].copy_from_slice(&1u16.to_le_bytes()); // v1 pre-dates the tail
+    assert_eq!(
+        KvShard::from_bytes(&reseal(v1)),
+        Err(ShardDecodeError("unknown version"))
+    );
+    let mut v3 = bytes.clone();
+    v3[4..6].copy_from_slice(&3u16.to_le_bytes());
+    assert_eq!(
+        KvShard::from_bytes(&reseal(v3)),
+        Err(ShardDecodeError("unknown version"))
+    );
+    // an oversized executor-label length runs off the payload
+    let mut exec = bytes.clone();
+    exec[10..12].copy_from_slice(&u16::MAX.to_le_bytes());
+    assert!(KvShard::from_bytes(&reseal(exec)).is_err());
+    // generated > carried tokens is structurally valid but semantically
+    // impossible; the decoder must refuse rather than hand the engine a
+    // sequence claiming more output than it carries
+    let generated_off = bytes.len() - 8 - 4;
+    assert_eq!(
+        KvShard::from_bytes(&patch_u32(
+            &bytes,
+            generated_off,
+            shard.total_tokens() as u32 + 1
+        )),
+        Err(ShardDecodeError("generated count exceeds carried tokens"))
+    );
+    // ... while generated == total is the legal extreme and still decodes
+    let all_gen = patch_u32(&bytes, generated_off, shard.total_tokens() as u32);
+    assert_eq!(
+        KvShard::from_bytes(&all_gen).expect("legal extreme decodes").generated,
+        shard.total_tokens()
+    );
+}

@@ -24,11 +24,39 @@ struct ChaosExecutor<E: Executor> {
     inner: E,
     decode_calls: usize,
     die_after_decodes: usize,
+    inject_calls: std::cell::Cell<usize>,
+    die_after_injects: usize,
+    compact_calls: std::cell::Cell<usize>,
+    die_after_compacts: usize,
 }
 
 impl<E: Executor> ChaosExecutor<E> {
     fn new(inner: E, die_after_decodes: usize) -> ChaosExecutor<E> {
-        ChaosExecutor { inner, decode_calls: 0, die_after_decodes }
+        ChaosExecutor {
+            inner,
+            decode_calls: 0,
+            die_after_decodes,
+            inject_calls: std::cell::Cell::new(0),
+            die_after_injects: usize::MAX,
+            compact_calls: std::cell::Cell::new(0),
+            die_after_compacts: usize::MAX,
+        }
+    }
+
+    /// A worker that panics INSIDE `inject_kv_range` once the fuse
+    /// blows — it accepts a migrated shard but dies while wiring the
+    /// warm KV into the consuming sequence (death mid-migration rather
+    /// than mid-generation).
+    fn with_inject_fault(inner: E, die_after_injects: usize) -> ChaosExecutor<E> {
+        ChaosExecutor { die_after_injects, ..Self::new(inner, usize::MAX) }
+    }
+
+    /// A worker that panics INSIDE `compact_kv_len` once the fuse blows
+    /// — `Engine::import_kv_shard` consults it while validating an
+    /// incoming shard, so fuse 0 kills a joiner during its very first
+    /// warm-up import, before it ever serves a request.
+    fn with_import_fault(inner: E, die_after_compacts: usize) -> ChaosExecutor<E> {
+        ChaosExecutor { die_after_compacts, ..Self::new(inner, usize::MAX) }
     }
 }
 
@@ -83,6 +111,11 @@ impl<E: Executor> Executor for ChaosExecutor<E> {
     }
 
     fn compact_kv_len(&self, len: usize) -> Option<usize> {
+        self.compact_calls.set(self.compact_calls.get() + 1);
+        assert!(
+            self.compact_calls.get() <= self.die_after_compacts,
+            "injected chaos fault: worker dies during shard import"
+        );
         self.inner.compact_kv_len(len)
     }
 
@@ -105,6 +138,11 @@ impl<E: Executor> Executor for ChaosExecutor<E> {
         ck: &[f32],
         cv: &[f32],
     ) {
+        self.inject_calls.set(self.inject_calls.get() + 1);
+        assert!(
+            self.inject_calls.get() <= self.die_after_injects,
+            "injected chaos fault: worker dies mid-import"
+        );
         self.inner.inject_kv_range(kv_k, kv_v, start, len, ck, cv);
     }
 }
@@ -323,8 +361,185 @@ fn death_during_handoff_falls_back_again_and_clears_the_pin() {
 }
 
 // ---------------------------------------------------------------------
-// Corrupt / truncated / mismatched shards -> graceful recompute
+// Elastic scale events under chaos: deaths mid-drain, mid-migration,
+// and right after joining
 // ---------------------------------------------------------------------
+
+/// Poll until the worker at roster position `pos` stops answering stats
+/// (its thread died); panics after ~5s so a hung test fails loudly.
+fn wait_for_death(r: &Router, pos: usize) {
+    for _ in 0..500 {
+        if r.kv_stats()[pos].is_none() {
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    panic!("worker at position {pos} still alive after 5s");
+}
+
+#[test]
+fn scale_down_leaver_dies_mid_drain_orphans_then_recovers_byte_identical() {
+    let prefix = vec![1, 2, 3, 4];
+    let prompt = |s: i32| {
+        let mut p = prefix.clone();
+        p.push(s);
+        p
+    };
+
+    // uninterrupted baseline: one healthy worker, no scale event
+    let mut base = Router::spawn(
+        1,
+        migrate_cfg(4),
+        Policy::PrefixAffinity { prefix_tokens: 4 },
+        |_| MockExecutor::new(1000, 64),
+    );
+    base.submit(req(1, prompt(10), 3));
+    base.drain().unwrap();
+    base.submit(req(2, prompt(20), 6));
+    let uninterrupted = base.drain().unwrap()[0].tokens.clone();
+
+    // chaos: worker 0 finishes request 1 (2 decode calls), then dies on
+    // its 5th decode — mid-generation on request 2, so the scale-down's
+    // drain request can never be answered
+    let mut r = Router::spawn(
+        2,
+        migrate_cfg(4),
+        Policy::PrefixAffinity { prefix_tokens: 4 },
+        |wid| {
+            let die_after = if wid == 0 { 4 } else { usize::MAX };
+            ChaosExecutor::new(MockExecutor::new(1000, 64), die_after)
+        },
+    );
+    r.submit(req(1, prompt(10), 3));
+    assert_eq!(r.drain().unwrap().len(), 1);
+    r.submit(req(2, prompt(20), 6));
+    wait_for_death(&r, 0);
+
+    let err = r.remove_worker(0).expect_err("a dead leaver cannot drain");
+    assert!(err.to_string().contains("died before drain"), "{err}");
+    assert_eq!(r.worker_ids(), vec![1], "the leaver is off the roster regardless");
+    // the crashed in-flight request surfaces as lost on the next drain
+    // (not silently swallowed, not double-counted later)...
+    let err = r.drain().expect_err("the orphaned request is reported");
+    assert!(err.to_string().contains("1 request(s) inflight"), "{err}");
+    // ...and a retry serves warm on the survivor, byte-identical
+    r.submit(req(3, prompt(20), 6));
+    assert_eq!(r.kv_migrations(), 1, "the buffered shard shipped to the survivor");
+    let outs = r.drain().unwrap();
+    assert_eq!(outs[0].tokens, uninterrupted, "recovery is byte-identical");
+    let stats = r.kv_stats_by_id();
+    assert_eq!(stats.len(), 1);
+    assert_eq!(stats[0].0, 1);
+    let s = stats[0].1.expect("survivor alive");
+    assert_eq!(s.kv_imported_blocks, 1);
+    assert_eq!(s.prefilled_tokens, 1, "prefix served from the migrated shard");
+    // nothing leaked: gauges are clean and a follow-up batch completes
+    for i in 0..6 {
+        r.submit(req(10 + i, prompt(50 + i as i32), 3));
+    }
+    assert_eq!(r.drain().unwrap().len(), 6);
+    assert_eq!(r.loads(), vec![0], "no stuck in-flight gauges after the chaos");
+}
+
+#[test]
+fn double_fault_death_during_proactive_migration_still_lands_warm() {
+    // double fault: worker 0 dies mid-generation, and the migration
+    // target (worker 1) accepts the shard but dies INSIDE the prefill
+    // that wires the warm KV in. The fleet must converge on the healthy
+    // worker 2 with the prefix still served warm from the shard buffer.
+    let prefix = vec![1, 2, 3, 4];
+    let prompt = |s: i32| {
+        let mut p = prefix.clone();
+        p.push(s);
+        p
+    };
+    let mut r = Router::spawn(
+        3,
+        migrate_cfg(4),
+        Policy::PrefixAffinity { prefix_tokens: 4 },
+        |wid| match wid {
+            0 => ChaosExecutor::new(MockExecutor::new(1000, 64), 4),
+            1 => ChaosExecutor::with_inject_fault(MockExecutor::new(1000, 64), 0),
+            _ => ChaosExecutor::new(MockExecutor::new(1000, 64), usize::MAX),
+        },
+    );
+
+    r.submit(req(1, prompt(10), 3)); // worker 0 completes, publishes its shard
+    assert_eq!(r.drain().unwrap().len(), 1);
+    r.submit(req(2, prompt(20), 8)); // worker 0 dies mid-generation
+    r.drain().expect_err("worker 0 died");
+    assert_eq!(r.loads(), vec![0, 0, 0]);
+
+    // the re-pin ships the shard to worker 1, whose import-consuming
+    // prefill panics: the SECOND fault, in the middle of the migration
+    r.submit(req(3, prompt(30), 3));
+    assert_eq!(r.kv_migrations(), 1, "handoff shipped to worker 1");
+    let err = r.drain().expect_err("worker 1 died consuming the handoff");
+    assert!(err.to_string().contains("died"), "{err}");
+    assert_eq!(r.loads(), vec![0, 0, 0], "gauges decrement through both deaths");
+
+    r.submit(req(4, prompt(30), 3));
+    assert_eq!(r.affinity_assignment(&prompt(99)), Some(2), "pin settled on the survivor");
+    assert_eq!(r.kv_migrations(), 2, "the shard shipped again, to worker 2");
+    let outs = r.drain().expect("second fallback serves");
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].tokens, vec![31, 32, 33], "byte-identical to an uninterrupted run");
+
+    let stats = r.kv_stats();
+    assert!(stats[0].is_none() && stats[1].is_none(), "both chaos workers are gone");
+    let w2 = stats[2].expect("survivor alive");
+    assert_eq!(w2.kv_imported_blocks, 1, "the shard landed warm despite the double fault");
+    assert_eq!(w2.prefilled_tokens, 1, "only the suffix prefilled — zero prefix replay");
+}
+
+#[test]
+fn joiner_dies_during_warm_up_import_and_the_fleet_keeps_serving() {
+    let prefix = vec![1, 2, 3, 4];
+    let prompt = |s: i32| {
+        let mut p = prefix.clone();
+        p.push(s);
+        p
+    };
+    // workers 0 and 1 are healthy; any joiner (stable id >= 2) dies
+    // inside its very first import validation — i.e. while warming from
+    // the shard buffer, before it ever owns a request
+    let mut r = Router::spawn(
+        2,
+        migrate_cfg(4),
+        Policy::PrefixAffinity { prefix_tokens: 4 },
+        |wid| {
+            if wid >= 2 {
+                ChaosExecutor::with_import_fault(MockExecutor::new(1000, 64), 0)
+            } else {
+                ChaosExecutor::new(MockExecutor::new(1000, 64), usize::MAX)
+            }
+        },
+    );
+    r.submit(req(1, prompt(10), 3));
+    assert_eq!(r.drain().unwrap().len(), 1);
+    assert_eq!(r.shard_buffer().0, 1, "the finished prefix is buffered");
+
+    let id = r.add_worker().expect("fleet grows");
+    assert_eq!(id, 2);
+    wait_for_death(&r, 2); // the warm-up import kills it immediately
+
+    // the fleet keeps serving around the corpse: the pinned prefix
+    // stays warm on worker 0 and fresh work completes
+    r.submit(req(2, prompt(20), 3));
+    let outs = r.drain().expect("nothing was inflight on the joiner");
+    assert_eq!(outs[0].tokens, vec![21, 22, 23], "byte-identical to an uninterrupted run");
+
+    // scale-down reaps the corpse: it owned nothing, so nothing is
+    // lost, and the roster is clean afterwards
+    let err = r.remove_worker(2).expect_err("a dead joiner cannot drain");
+    assert!(err.to_string().contains("0 request(s) lost"), "{err}");
+    assert_eq!(r.worker_ids(), vec![0, 1]);
+    for i in 0..4 {
+        r.submit(req(10 + i, prompt(40 + i as i32), 2));
+    }
+    assert_eq!(r.drain().unwrap().len(), 4, "service continues after the reap");
+    assert_eq!(r.loads(), vec![0, 0], "zero leaked gauges after join-then-death");
+}
 
 /// Export one shard (and its wire bytes) from a mock engine that served
 /// `prefix + [10, 11]`.
