@@ -77,6 +77,20 @@ SCHEMAS = {
         "schema_version": None,
         "studies": None,
     },
+    "BENCH_artifact_load.json": {
+        "smoke": None,
+        "bench": None,
+        "backend": None,
+        "threads": None,
+        "file_bytes": None,
+        "build_s": None,
+        "write_s": None,
+        "map_load_s": None,
+        "parse_load_s": None,
+        "load_ratio": None,
+        "bit_exact": None,
+        "header_fnv": None,
+    },
     "BENCH_elastic_fleet.json": {
         "smoke": None,
         "bench": None,
@@ -278,6 +292,30 @@ def validate(path: str) -> None:
                 fail(f"{name}: study '{label}' stream_checksum not 16-hex: {cs!r}")
             if s["wall"]["scale_event_wall_ms"] < 0.0:
                 fail(f"{name}: study '{label}' negative scale-event latency")
+    if name == "BENCH_artifact_load.json":
+        if data["bench"] != "artifact_load":
+            fail(f"{name}: bench must be 'artifact_load'")
+        if data["bit_exact"] is not True:
+            fail(f"{name}: bit_exact must be true (artifact-served logits diverged)")
+        for k in ("build_s", "write_s", "map_load_s", "parse_load_s"):
+            if data[k] <= 0.0:
+                fail(f"{name}: {k} must be positive")
+        # THE artifact gate: a zero-copy map must never be slower than
+        # regenerating + repacking the model in-process
+        if data["load_ratio"] < 1.0:
+            fail(
+                f"{name}: load_ratio {data['load_ratio']} < 1.0 "
+                f"(mapping the artifact was slower than a full repack)"
+            )
+        if data["file_bytes"] <= 0:
+            fail(f"{name}: empty artifact file")
+        cs = data["header_fnv"]
+        if not (
+            isinstance(cs, str)
+            and len(cs) == 16
+            and all(c in "0123456789abcdef" for c in cs)
+        ):
+            fail(f"{name}: header_fnv not 16-hex: {cs!r}")
     if name == "BENCH_prefix_reuse.json":
         if data["bit_exact"] is not True:
             fail(f"{name}: bit_exact must be true")

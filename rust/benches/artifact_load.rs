@@ -1,0 +1,103 @@
+//! Artifact cold-start bench: pack-once wall time through the fused
+//! single-pass offline pipeline, then the headline comparison — mapping
+//! a `.ssaf` artifact zero-copy (O(header) work) vs regenerating and
+//! repacking the same model in-process. Asserts the served outputs are
+//! bit-exact and writes `BENCH_artifact_load.json` so future PRs get a
+//! cold-start trajectory.
+use std::collections::BTreeMap;
+
+use slidesparse::bench::harness::{bench, smoke_mode, write_json, Table};
+use slidesparse::bench::tables;
+use slidesparse::model::{load_model, Backend};
+use slidesparse::util::json::Json;
+
+fn main() {
+    let smoke = smoke_mode();
+    let backend = Backend::Slide { n: 4 };
+    let threads = 4;
+    let mut path = std::env::temp_dir();
+    path.push(format!("slidesparse_bench_{}.ssaf", std::process::id()));
+
+    // pack once: fused prune -> int8 quant -> 2:4 pack, one sweep per row
+    let t0 = std::time::Instant::now();
+    let built = tables::build_e2e_artifact(backend, threads).expect("fused pack");
+    let build_s = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    built.write(&path).expect("write artifact");
+    let write_s = t1.elapsed().as_secs_f64();
+    let art = slidesparse::runtime::Artifact::open(&path).expect("open artifact");
+    art.verify().expect("section checksums");
+    let file_bytes = art.file_len();
+    let header_fnv = art.header_checksum_hex();
+
+    let target = if smoke { 0.05 } else { 0.25 };
+    // cold start A: map the file and point every linear at the mapping
+    let m_map = bench(1, target, 20, || {
+        let (model, _) = load_model(&path).expect("map-load");
+        std::hint::black_box(model.vocab);
+    });
+    // cold start B: what a worker without an artifact does — regenerate
+    // the weights and run the staged prune/quant/pack per linear
+    let m_parse = bench(0, target, 10, || {
+        std::hint::black_box(tables::e2e_model(backend).vocab);
+    });
+    let load_ratio = m_parse.min_s / m_map.min_s;
+
+    // the whole point is that the mapped model serves identical bytes
+    let (loaded, loaded_backend) = load_model(&path).expect("map-load");
+    let reference = tables::e2e_model(backend);
+    let toks = [3usize, 99, 204, 7];
+    let bit_exact =
+        loaded_backend == backend && loaded.logits(&toks) == reference.logits(&toks);
+    assert!(bit_exact, "artifact-served logits diverged from in-process model");
+
+    let mut t = Table::new(
+        "Artifact cold start: zero-copy map vs in-process regenerate+pack",
+        &["stage", "wall (ms)", "notes"],
+    );
+    t.row(vec![
+        "pack once (fused)".into(),
+        format!("{:.1}", build_s * 1e3),
+        format!("{threads} threads, one sweep per row"),
+    ]);
+    t.row(vec![
+        "write".into(),
+        format!("{:.1}", write_s * 1e3),
+        format!("{file_bytes} bytes"),
+    ]);
+    t.row(vec![
+        "map-load".into(),
+        format!("{:.3}", m_map.min_s * 1e3),
+        "O(header): no weight byte read".into(),
+    ]);
+    t.row(vec![
+        "parse-load".into(),
+        format!("{:.1}", m_parse.min_s * 1e3),
+        "generate + staged prune/quant/pack".into(),
+    ]);
+    t.row(vec![
+        "cold-start ratio".into(),
+        format!("{load_ratio:.0}x"),
+        "parse / map (higher = better)".into(),
+    ]);
+    t.print();
+
+    let mut j = BTreeMap::new();
+    j.insert("bench".to_string(), Json::Str("artifact_load".into()));
+    j.insert("smoke".to_string(), Json::Bool(smoke));
+    j.insert("backend".to_string(), Json::Str(backend.label()));
+    j.insert("threads".to_string(), Json::Num(threads as f64));
+    j.insert("file_bytes".to_string(), Json::Num(file_bytes as f64));
+    j.insert("build_s".to_string(), Json::Num(build_s));
+    j.insert("write_s".to_string(), Json::Num(write_s));
+    j.insert("map_load_s".to_string(), Json::Num(m_map.min_s));
+    j.insert("parse_load_s".to_string(), Json::Num(m_parse.min_s));
+    j.insert("load_ratio".to_string(), Json::Num(load_ratio));
+    j.insert("bit_exact".to_string(), Json::Bool(bit_exact));
+    j.insert("header_fnv".to_string(), Json::Str(header_fnv));
+    match write_json("BENCH_artifact_load.json", &Json::Obj(j)) {
+        Ok(()) => println!("\nwrote BENCH_artifact_load.json"),
+        Err(e) => eprintln!("could not write BENCH_artifact_load.json: {e}"),
+    }
+    std::fs::remove_file(&path).ok();
+}

@@ -420,15 +420,31 @@ pub fn fused_kernel_modeled(ms: &[usize], k: usize) -> Table {
 /// without building a model first).
 pub const E2E_VOCAB: usize = 512;
 
+/// Architecture of [`e2e_model`]. Exposed so the `convert` subcommand
+/// and the artifact cold-start bench rebuild the exact same model spec
+/// (same seeds, same shapes) the serving benches run on.
+pub const E2E_CFG: BlockConfig = BlockConfig { dim: 240, n_heads: 4, ffn: 480 };
+/// Layer count of [`e2e_model`].
+pub const E2E_LAYERS: usize = 4;
+/// KV capacity of [`e2e_model`].
+pub const E2E_SMAX: usize = 320;
+/// Weight-generation seed of [`e2e_model`].
+pub const E2E_SEED: u64 = 99;
+
 /// Serving-model scale for CPU E2E benches (small-real-model, DESIGN §2).
 pub fn e2e_model(backend: Backend) -> NativeModel {
-    NativeModel::generate(
-        BlockConfig { dim: 240, n_heads: 4, ffn: 480 },
-        4,
-        E2E_VOCAB,
-        320,
-        99,
-        backend,
+    NativeModel::generate(E2E_CFG, E2E_LAYERS, E2E_VOCAB, E2E_SMAX, E2E_SEED, backend)
+}
+
+/// Pack the E2E serving model into a [`BuiltArtifact`] through the fused
+/// single-pass pipeline — the model `serve --artifact` then maps
+/// zero-copy is bit-identical to what [`e2e_model`] generates in-process.
+pub fn build_e2e_artifact(
+    backend: Backend,
+    threads: usize,
+) -> Result<crate::runtime::BuiltArtifact, crate::runtime::ArtifactError> {
+    crate::model::build_generated_artifact(
+        E2E_CFG, E2E_LAYERS, E2E_VOCAB, E2E_SMAX, E2E_SEED, backend, threads,
     )
 }
 

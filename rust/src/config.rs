@@ -22,6 +22,11 @@ pub struct Config {
     /// "prefix" (sticky prefix-affinity), or "prefix:K"
     pub routing: Policy,
     pub artifacts_dir: String,
+    /// path to a packed `.ssaf` model artifact; when non-empty, `serve`
+    /// maps it once and every worker (elastic joiners included) warms
+    /// zero-copy from the mapping instead of regenerating + repacking
+    /// the model in-process. Empty = generate in-process (the default).
+    pub artifact: String,
     /// "pjrt" or "stc"
     pub executor: String,
     /// proactive sticky-pin rebalancing: the router re-homes hot prefix
@@ -44,6 +49,7 @@ impl Default for Config {
             workers: 1,
             routing: Policy::RoundRobin,
             artifacts_dir: "artifacts".into(),
+            artifact: String::new(),
             executor: "stc".into(),
             rebalance: false,
             min_workers: 1,
@@ -81,6 +87,9 @@ impl Config {
         }
         if let Some(v) = j.get("artifacts_dir").and_then(|v| v.as_str()) {
             cfg.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = j.get("artifact").and_then(|v| v.as_str()) {
+            cfg.artifact = v.to_string();
         }
         if let Some(v) = j.get("executor").and_then(|v| v.as_str()) {
             cfg.executor = v.to_string();
@@ -420,6 +429,13 @@ mod tests {
         assert!(Config::from_json(r#"{"min_workers": 4, "max_workers": 2}"#).is_err());
         assert!(Config::from_json(r#"{"workers": 1, "min_workers": 2}"#).is_err());
         assert!(Config::from_json(r#"{"workers": 5, "max_workers": 4}"#).is_err());
+    }
+
+    #[test]
+    fn artifact_knob_parses() {
+        assert!(Config::default().artifact.is_empty(), "in-process by default");
+        let cfg = Config::from_json(r#"{"artifact": "model.ssaf"}"#).unwrap();
+        assert_eq!(cfg.artifact, "model.ssaf");
     }
 
     #[test]

@@ -145,6 +145,25 @@ impl StcExecutor {
         exec
     }
 
+    /// Cold-start an executor straight from a packed `.ssaf` artifact:
+    /// map the file, validate the header, point every linear at the
+    /// mapping. O(header) work — no weight byte is parsed or copied, so
+    /// this is the fast path for spinning up workers (elastic joiners
+    /// included) from a `convert`-built model.
+    pub fn from_artifact(path: &std::path::Path) -> Result<StcExecutor> {
+        let (model, _backend) = crate::model::load_model(path)?;
+        Ok(StcExecutor::new(model))
+    }
+
+    /// Assemble a worker from an already-open artifact. The router's
+    /// per-worker factory holds one `Arc<Artifact>` and calls this per
+    /// worker, so the whole fleet shares ONE file mapping: every
+    /// weight segment is an `Arc` view over the same bytes.
+    pub fn from_artifact_shared(art: &crate::runtime::Artifact) -> Result<StcExecutor> {
+        let (model, _backend) = crate::model::model_from_artifact(art)?;
+        Ok(StcExecutor::new(model))
+    }
+
     pub fn threads(&self) -> usize {
         self.pool.threads()
     }
@@ -683,6 +702,36 @@ mod tests {
         assert_eq!(tuned, base);
         // a table with no matching classes installs nothing
         assert!(exec.apply_tune(&TuneTable::new()).is_empty());
+    }
+
+    #[test]
+    fn executor_from_artifact_matches_in_memory_model() {
+        // same spec as tiny_model: the disk-loaded executor must be
+        // bit-exact with the generate-in-memory one
+        let mut p = std::env::temp_dir();
+        p.push(format!("slidesparse_exec_{}.ssaf", std::process::id()));
+        crate::model::build_generated_artifact(
+            BlockConfig { dim: 32, n_heads: 2, ffn: 48 },
+            2,
+            64,
+            32,
+            9,
+            Backend::Slide { n: 4 },
+            1,
+        )
+        .unwrap()
+        .write(&p)
+        .unwrap();
+        let toks = [3i32, 11, 40, 7];
+        let mut in_mem = StcExecutor::new(tiny_model(Backend::Slide { n: 4 }));
+        let (expect, _, _) = prefill_one(&mut in_mem, &toks);
+        let mut from_disk = StcExecutor::from_artifact(&p).unwrap();
+        assert_eq!(prefill_one(&mut from_disk, &toks).0, expect);
+        // the shared-mapping path the router's worker factory uses
+        let art = std::sync::Arc::new(crate::runtime::Artifact::open(&p).unwrap());
+        let mut shared = StcExecutor::from_artifact_shared(&art).unwrap();
+        assert_eq!(prefill_one(&mut shared, &toks).0, expect);
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

@@ -7,12 +7,20 @@
 //!                     [--workers W] [--routing round_robin|least_loaded|prefix[:K]]
 //!                     [--prefix-cache] [--prefix-cache-bytes B] [--migrate-kv]
 //!                     [--stream] [--rebalance] [--min-workers N] [--max-workers N]
+//!                     [--artifact model.ssaf]
+//! slidesparse convert [--sparsity dense|2:4|6:8|...] [--out model.ssaf] [--threads T]
 //! slidesparse study   --config study.json[,more.json...] [--out BENCH_serving_slo.json]
 //!                     [--elastic-out BENCH_elastic_fleet.json]
 //! slidesparse bench   [--suite kernel|e2e|figures|all]
 //! slidesparse explore [--pattern Z:L] [--hw M:N]
-//! slidesparse pack    --o O --k K [--n N] [--threads T]  # packer demo + stats
+//! slidesparse pack    --o O --k K [--n N] [--threads T]  # fused-pipeline demo + stats
 //! ```
+//!
+//! `convert` packs the E2E serving model through the fused single-pass
+//! offline pipeline (prune -> int8 quant -> 2:4 pack in one sweep per
+//! row) into a mmap-able `.ssaf` artifact; `serve --artifact` then maps
+//! it once and every worker — elastic joiners included — cold-starts
+//! zero-copy in O(header) time, bit-exact with the in-process model.
 //!
 //! `study` replays a declarative traffic study (arrival process +
 //! workload mix + admission knobs, see `studies/*.json`) against a
@@ -40,13 +48,14 @@ fn main() -> Result<()> {
     let args = Args::parse();
     match args.subcommand.as_deref() {
         Some("serve") => serve(&args),
+        Some("convert") => convert(&args),
         Some("study") => study_cmd(&args),
         Some("bench") => bench(&args),
         Some("explore") => explore(&args),
         Some("pack") => pack(&args),
         _ => {
             eprintln!(
-                "usage: slidesparse <serve|study|bench|explore|pack> [options]\n\
+                "usage: slidesparse <serve|convert|study|bench|explore|pack> [options]\n\
                  see rust/src/main.rs for per-command flags"
             );
             Ok(())
@@ -85,7 +94,31 @@ fn serve(args: &Args) -> Result<()> {
     }
     cfg.min_workers = args.opt_usize("min-workers", cfg.min_workers).max(1);
     cfg.max_workers = args.opt_usize("max-workers", cfg.max_workers);
-    let backend = cfg.backend()?;
+    if let Some(p) = args.opt("artifact") {
+        cfg.artifact = p.to_string();
+    }
+    let mut backend = cfg.backend()?;
+    // map the artifact once up front: its header names the backend (the
+    // sparsity flag only steers in-process generation), and a bad file
+    // fails here — not inside a worker factory
+    let artifact = if cfg.artifact.is_empty() {
+        None
+    } else {
+        let art = slidesparse::runtime::Artifact::open(std::path::Path::new(&cfg.artifact))
+            .map_err(|e| anyhow!("artifact '{}': {e}", cfg.artifact))?;
+        slidesparse::model::model_from_artifact(&art)
+            .map_err(|e| anyhow!("artifact '{}': {e}", cfg.artifact))?;
+        backend = art.backend();
+        println!(
+            "artifact {}: {} tensors, {} bytes mapped, backend {}, header fnv {}",
+            cfg.artifact,
+            art.tensor_names().count(),
+            art.file_len(),
+            backend.label(),
+            art.header_checksum_hex()
+        );
+        Some(std::sync::Arc::new(art))
+    };
     let n_requests = args.opt_usize("requests", 16);
     println!(
         "serving with sparsity={} executor={} workers={} routing={} threads={} kernel={} \
@@ -103,15 +136,21 @@ fn serve(args: &Args) -> Result<()> {
     );
 
     let (outs, report) = if cfg.executor == "pjrt" {
+        if artifact.is_some() {
+            return Err(anyhow!("--artifact is an stc-executor path (pjrt ships HLO)"));
+        }
         serve_pjrt(&cfg, backend, n_requests)?
     } else if cfg.workers > 1 {
-        serve_router(&cfg, backend, n_requests, args.flag("tune"))?
+        serve_router(&cfg, backend, n_requests, args.flag("tune"), artifact)?
     } else {
-        let model = tables::e2e_model(backend);
-        let vocab = model.vocab;
-        let dim = model.dim;
+        let exec = match &artifact {
+            Some(art) => StcExecutor::from_artifact_shared(art)?,
+            None => StcExecutor::new(tables::e2e_model(backend)),
+        };
+        let vocab = exec.model.vocab;
+        let dim = exec.model.dim;
         // Engine::new installs cfg.engine.threads on the executor
-        let mut engine = Engine::new(StcExecutor::new(model), cfg.engine);
+        let mut engine = Engine::new(exec, cfg.engine);
         if args.flag("tune") {
             let table = load_or_tune(dim, cfg.engine.threads);
             let applied = engine.executor.apply_tune(&table);
@@ -186,11 +225,17 @@ fn serve_pjrt(
 /// worker's executor gets the tune table before its engine spawns
 /// (`Engine::new` preserves a pre-tuned executor's kernel/threads), so
 /// tuning is not silently dropped when `--workers > 1`.
+///
+/// With `--artifact`, the factory holds one `Arc<Artifact>` and every
+/// worker — including elastic joiners spawned mid-run — assembles its
+/// model zero-copy from that shared mapping in O(header) time instead
+/// of regenerating and repacking weights per worker.
 fn serve_router(
     cfg: &Config,
     backend: Backend,
     n_requests: usize,
     tune: bool,
+    artifact: Option<std::sync::Arc<slidesparse::runtime::Artifact>>,
 ) -> Result<(Vec<RequestOutput>, String)> {
     let engine_cfg = cfg.engine;
     let tune_table = if tune {
@@ -199,7 +244,14 @@ fn serve_router(
         None
     };
     let mut router: Router = Router::spawn(cfg.workers, engine_cfg, cfg.routing, move |wid| {
-        let mut exec = StcExecutor::new(tables::e2e_model(backend));
+        // serve() already validated the artifact end-to-end, so a
+        // failure here would be a programming error, not bad input
+        let mut exec = match &artifact {
+            Some(art) => {
+                StcExecutor::from_artifact_shared(art).expect("validated artifact")
+            }
+            None => StcExecutor::new(tables::e2e_model(backend)),
+        };
         if let Some(table) = &tune_table {
             let applied = exec.apply_tune(table);
             for (class, kern, threads) in &applied {
@@ -440,6 +492,31 @@ fn parse_zl(s: &str) -> Result<Pattern> {
     Ok(Pattern::new(z.trim().parse()?, l.trim().parse()?))
 }
 
+/// `slidesparse convert`: pack the E2E serving model through the fused
+/// single-pass offline pipeline into a `.ssaf` artifact, then re-open
+/// and deep-verify the written file (header + every section checksum).
+fn convert(args: &Args) -> Result<()> {
+    let backend = slidesparse::config::parse_backend(args.opt_str("sparsity", "6:8"))?;
+    let out = args.opt_str("out", "model.ssaf");
+    let threads = args.opt_usize("threads", 0);
+    let t0 = std::time::Instant::now();
+    let built = tables::build_e2e_artifact(backend, threads)?;
+    let build_s = t0.elapsed().as_secs_f64();
+    built.write(std::path::Path::new(out))?;
+    let art = slidesparse::runtime::Artifact::open(std::path::Path::new(out))?;
+    art.verify()?;
+    println!(
+        "wrote {out}: {} tensors, {} bytes, backend {}, header fnv {} \
+         (fused prune+quant+pack in {:.1} ms, deep-verified)",
+        art.tensor_names().count(),
+        art.file_len(),
+        art.backend().label(),
+        art.header_checksum_hex(),
+        build_s * 1e3
+    );
+    Ok(())
+}
+
 fn pack(args: &Args) -> Result<()> {
     let o = args.opt_usize("o", 1024);
     let k = args.opt_usize("k", 4096);
@@ -448,22 +525,28 @@ fn pack(args: &Args) -> Result<()> {
     let mut rng = XorShift::new(1);
     let w: Vec<f32> = (0..o * k).map(|_| rng.normal()).collect();
     let pat = Pattern::family(n);
-    let pruned = slidesparse::sparsity::prune::prune_magnitude(&w, o, k, pat.z, pat.l);
-    let pool = slidesparse::util::ThreadPool::new(threads);
     let t0 = std::time::Instant::now();
-    let packed = slidesparse::sparsity::pack_matrix_pool(&pool, &pruned, o, k, n)
-        .map_err(|e| anyhow!("{e}"))?;
+    // fused single-pass pipeline: prune -> int8 quant -> 2:4 pack in one
+    // sweep per row (no intermediate dense copies)
+    let built = slidesparse::runtime::ArtifactBuilder::new(Backend::Slide { n })
+        .threads(threads)
+        .add_tensor("w", &w, o, k)?
+        .finish();
     let dt = t0.elapsed().as_secs_f64();
+    let bytes = built.to_bytes()?;
+    let kp = slidesparse::sparsity::packer::expanded_k(k, n);
     println!(
-        "packed {o}x{k} ({} pattern, {} threads) in {:.1} ms ({:.2} GB/s)",
+        "fused prune+quant+pack {o}x{k} ({} pattern, {} threads) in {:.1} ms ({:.2} GB/s)",
         pat,
-        pool.threads(),
+        slidesparse::util::ThreadPool::resolve(threads),
         dt * 1e3,
         (o * k * 4) as f64 / dt / 1e9
     );
-    println!("  expansion: K {k} -> K' {} (gamma {:.3})", packed.k_packed, pat.gamma());
-    let nz: usize = packed.data.iter().filter(|v| **v != 0.0).count();
-    println!("  non-zeros preserved: {} ({:.1}% of packed slots)", nz,
-             100.0 * nz as f64 / packed.data.len() as f64);
+    println!("  expansion: K {k} -> K' {kp} (gamma {:.3})", pat.gamma());
+    println!(
+        "  artifact: {} bytes ({:.2}x the dense f32 tensor)",
+        bytes.len(),
+        bytes.len() as f64 / (o * k * 4) as f64
+    );
     Ok(())
 }

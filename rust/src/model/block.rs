@@ -30,9 +30,21 @@ pub struct Block {
     pub w2: Linear,
 }
 
+/// The raw (pre-prune, pre-quant) f32 weights of one block, in the
+/// deterministic draw order of [`Block::generate`]. Shared by in-memory
+/// preparation and the offline artifact builder (`model::zoo`) so both
+/// start from bit-identical tensors.
+pub struct BlockWeights {
+    pub wqkv: Vec<f32>,
+    pub wo: Vec<f32>,
+    pub w13: Vec<f32>,
+    pub w2: Vec<f32>,
+}
+
 impl Block {
-    /// Generate deterministic weights and prepare under `backend`.
-    pub fn generate(cfg: BlockConfig, seed: u64, backend: Backend) -> Block {
+    /// Draw the block's raw dense weights for `seed` (ONE generator,
+    /// fixed tensor order: wqkv, wo, w13, w2).
+    pub fn raw_weights(cfg: BlockConfig, seed: u64) -> BlockWeights {
         let mut rng = XorShift::new(seed);
         let d = cfg.dim;
         let gen = |rng: &mut XorShift, o: usize, k: usize| -> Vec<f32> {
@@ -43,13 +55,32 @@ impl Block {
         let wo = gen(&mut rng, d, d);
         let w13 = gen(&mut rng, 2 * cfg.ffn, d);
         let w2 = gen(&mut rng, d, cfg.ffn);
+        BlockWeights { wqkv, wo, w13, w2 }
+    }
+
+    /// Generate deterministic weights and prepare under `backend`.
+    pub fn generate(cfg: BlockConfig, seed: u64, backend: Backend) -> Block {
+        let w = Block::raw_weights(cfg, seed);
+        let d = cfg.dim;
         Block {
             cfg,
-            wqkv: Linear::prepare(&wqkv, 3 * d, d, backend),
-            wo: Linear::prepare(&wo, d, d, backend),
-            w13: Linear::prepare(&w13, 2 * cfg.ffn, d, backend),
-            w2: Linear::prepare(&w2, d, cfg.ffn, backend),
+            wqkv: Linear::prepare(&w.wqkv, 3 * d, d, backend),
+            wo: Linear::prepare(&w.wo, d, d, backend),
+            w13: Linear::prepare(&w.w13, 2 * cfg.ffn, d, backend),
+            w2: Linear::prepare(&w.w2, d, cfg.ffn, backend),
         }
+    }
+
+    /// Assemble a block from already-prepared linears (the artifact load
+    /// path).
+    pub fn from_linears(
+        cfg: BlockConfig,
+        wqkv: Linear,
+        wo: Linear,
+        w13: Linear,
+        w2: Linear,
+    ) -> Block {
+        Block { cfg, wqkv, wo, w13, w2 }
     }
 
     /// Install the worker pool on every linear in this block.
@@ -186,13 +217,22 @@ impl Block {
 /// model. KV caches are external (owned by the engine's sequences).
 pub struct NativeModel {
     pub blocks: Vec<Block>,
-    pub embed: Vec<f32>,
+    pub embed: crate::util::Seg<f32>,
     pub vocab: usize,
     pub dim: usize,
     pub smax: usize,
 }
 
 impl NativeModel {
+    /// The deterministic raw embedding table for `seed` (the same draw
+    /// [`NativeModel::generate`] makes; the artifact builder reuses it).
+    pub fn raw_embed(dim: usize, vocab: usize, seed: u64) -> Vec<f32> {
+        let mut rng = XorShift::new(seed + 777);
+        (0..vocab * dim)
+            .map(|_| rng.normal() / (dim as f32).sqrt())
+            .collect()
+    }
+
     pub fn generate(
         cfg: BlockConfig,
         n_layers: usize,
@@ -204,11 +244,22 @@ impl NativeModel {
         let blocks = (0..n_layers)
             .map(|i| Block::generate(cfg, seed + 1000 * i as u64, backend))
             .collect();
-        let mut rng = XorShift::new(seed + 777);
-        let embed = (0..vocab * cfg.dim)
-            .map(|_| rng.normal() / (cfg.dim as f32).sqrt())
-            .collect();
-        NativeModel { blocks, embed, vocab, dim: cfg.dim, smax }
+        let embed = NativeModel::raw_embed(cfg.dim, vocab, seed);
+        NativeModel { blocks, embed: embed.into(), vocab, dim: cfg.dim, smax }
+    }
+
+    /// Assemble a model from prepared blocks and an embedding segment
+    /// (possibly borrowing an mmap'd artifact).
+    pub fn from_parts(
+        blocks: Vec<Block>,
+        embed: crate::util::Seg<f32>,
+        vocab: usize,
+        dim: usize,
+        smax: usize,
+    ) -> NativeModel {
+        assert!(!blocks.is_empty());
+        assert_eq!(embed.len(), vocab * dim);
+        NativeModel { blocks, embed, vocab, dim, smax }
     }
 
     pub fn n_layers(&self) -> usize {

@@ -96,8 +96,55 @@ impl Linear {
         }
     }
 
+    /// Assemble a sparse-backend layer from artifact parts (the
+    /// `runtime::ssaf` zero-copy load path). `weights`/`w_scales` may
+    /// borrow an mmap'd file; `k_pad` is the stored padded K (the layer
+    /// re-pads activations exactly as a `prepare`d layer would).
+    pub fn from_slide_parts(
+        o: usize,
+        k: usize,
+        k_pad: usize,
+        backend: Backend,
+        n: usize,
+        weights: crate::stc::Compressed24,
+        w_scales: crate::util::Seg<f32>,
+    ) -> Linear {
+        debug_assert!(matches!(backend, Backend::Slide { .. } | Backend::Native24));
+        Linear {
+            o,
+            k,
+            k_pad,
+            backend,
+            inner: Inner::Slide(SlideLinear::from_parts(o, k_pad, n, weights, w_scales)),
+        }
+    }
+
+    /// Assemble a dense-backend layer from artifact parts (zero-copy
+    /// load path; dense layers never pad K).
+    pub fn from_dense_parts(
+        o: usize,
+        k: usize,
+        wq: crate::util::Seg<i8>,
+        wpan: crate::util::Seg<i8>,
+        w_scales: crate::util::Seg<f32>,
+    ) -> Linear {
+        Linear {
+            o,
+            k,
+            k_pad: k,
+            backend: Backend::Dense,
+            inner: Inner::Dense(DenseLinear::from_parts(o, k, wq, wpan, w_scales)),
+        }
+    }
+
     pub fn backend(&self) -> Backend {
         self.backend
+    }
+
+    /// The padded K the backend actually stores (the paper's Appendix
+    /// D.3 adjustment); equals `k` when no padding was needed.
+    pub fn k_pad(&self) -> usize {
+        self.k_pad
     }
 
     /// Install the worker pool the backend GEMMs partition over

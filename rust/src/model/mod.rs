@@ -6,6 +6,9 @@ pub mod block;
 pub mod layer;
 pub mod zoo;
 
-pub use block::{Block, BlockConfig, NativeModel};
+pub use block::{Block, BlockConfig, BlockWeights, NativeModel};
 pub use layer::{padded_k, Backend, Linear};
-pub use zoo::{by_name, zoo, LinearShape, ZooModel};
+pub use zoo::{
+    build_generated_artifact, by_name, load_model, model_from_artifact, zoo, LinearShape,
+    ZooModel,
+};

@@ -2,6 +2,20 @@
 //! Llama-3.2-1B/3B, Qwen-2.5-7B/14B and BitNet-2B. Model-mode kernel
 //! benchmarks (Appendix D.3.2) aggregate the four linear types
 //! (Wqkv, Wo, W13, W2) that execute together per transformer block.
+//!
+//! Also home of the artifact glue: [`build_generated_artifact`] converts
+//! a deterministic generated model through the fused single-pass
+//! [`crate::runtime::ssaf::ArtifactBuilder`], and [`load_model`] /
+//! [`model_from_artifact`] reassemble a [`NativeModel`] zero-copy from a
+//! mapped `.ssaf` file (O(header) work per linear).
+
+use std::path::Path;
+
+use super::block::{Block, BlockConfig, NativeModel};
+use super::layer::{Backend, Linear};
+use crate::runtime::ssaf::{
+    Artifact, ArtifactBuilder, ArtifactError, BuiltArtifact, ModelDims, TensorView,
+};
 
 /// One linear layer's GEMM shape: y[M, o] = x[M, k] @ W[o, k]^T.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -89,6 +103,105 @@ pub fn by_name(name: &str) -> Option<ZooModel> {
     zoo().into_iter().find(|m| m.name == name)
 }
 
+/// Convert a deterministic generated model — the exact draws
+/// [`NativeModel::generate`] makes for the same `(cfg, n_layers, vocab,
+/// smax, seed)` — through the fused single-pass builder. Tensors are
+/// named `blk{i}.{wqkv,wo,w13,w2}` plus a raw `embed`, and the header
+/// carries every dimension a loader needs.
+pub fn build_generated_artifact(
+    cfg: BlockConfig,
+    n_layers: usize,
+    vocab: usize,
+    smax: usize,
+    seed: u64,
+    backend: Backend,
+    threads: usize,
+) -> Result<BuiltArtifact, ArtifactError> {
+    let d = cfg.dim;
+    let mut b = ArtifactBuilder::new(backend).threads(threads).model_meta(ModelDims {
+        dim: d,
+        n_layers,
+        n_heads: cfg.n_heads,
+        ffn: cfg.ffn,
+        vocab,
+        smax,
+    });
+    for i in 0..n_layers {
+        let w = Block::raw_weights(cfg, seed + 1000 * i as u64);
+        b = b
+            .add_tensor(&format!("blk{i}.wqkv"), &w.wqkv, 3 * d, d)?
+            .add_tensor(&format!("blk{i}.wo"), &w.wo, d, d)?
+            .add_tensor(&format!("blk{i}.w13"), &w.w13, 2 * cfg.ffn, d)?
+            .add_tensor(&format!("blk{i}.w2"), &w.w2, d, cfg.ffn)?;
+    }
+    let embed = NativeModel::raw_embed(d, vocab, seed);
+    b = b.add_raw_tensor("embed", &embed, vocab, d)?;
+    Ok(b.finish())
+}
+
+fn shape_err(name: &str) -> ArtifactError {
+    ArtifactError::Header(format!("tensor '{name}' has an unexpected shape or kind"))
+}
+
+fn linear_from_view(
+    art: &Artifact,
+    name: &str,
+    o: usize,
+    k: usize,
+    backend: Backend,
+) -> Result<Linear, ArtifactError> {
+    match art.get(name)? {
+        TensorView::Slide { rows, k_orig, k_pad, n, weights, scales } => {
+            if rows != o || k_orig != k {
+                return Err(shape_err(name));
+            }
+            Ok(Linear::from_slide_parts(o, k, k_pad, backend, n, weights, scales))
+        }
+        TensorView::Dense { rows, k_orig, wq, wpan, scales } => {
+            if rows != o || k_orig != k {
+                return Err(shape_err(name));
+            }
+            Ok(Linear::from_dense_parts(o, k, wq, wpan, scales))
+        }
+        TensorView::Raw { .. } => Err(shape_err(name)),
+    }
+}
+
+/// Assemble a [`NativeModel`] from an open artifact. Zero-copy: every
+/// weight segment borrows the mapping, so the work here is O(header) —
+/// no weight byte is read, parsed or copied.
+pub fn model_from_artifact(art: &Artifact) -> Result<(NativeModel, Backend), ArtifactError> {
+    let dims = art.dims();
+    let backend = art.backend();
+    if dims.dim == 0 || dims.n_layers == 0 || dims.vocab == 0 || dims.n_heads == 0 {
+        return Err(ArtifactError::Header(
+            "artifact carries no model dims (built without model_meta?)".into(),
+        ));
+    }
+    let cfg = BlockConfig { dim: dims.dim, n_heads: dims.n_heads, ffn: dims.ffn };
+    let d = dims.dim;
+    let mut blocks = Vec::with_capacity(dims.n_layers);
+    for i in 0..dims.n_layers {
+        let wqkv = linear_from_view(art, &format!("blk{i}.wqkv"), 3 * d, d, backend)?;
+        let wo = linear_from_view(art, &format!("blk{i}.wo"), d, d, backend)?;
+        let w13 = linear_from_view(art, &format!("blk{i}.w13"), 2 * dims.ffn, d, backend)?;
+        let w2 = linear_from_view(art, &format!("blk{i}.w2"), d, dims.ffn, backend)?;
+        blocks.push(Block::from_linears(cfg, wqkv, wo, w13, w2));
+    }
+    let embed = match art.get("embed")? {
+        TensorView::Raw { rows, k_orig, data } if rows == dims.vocab && k_orig == d => data,
+        _ => return Err(shape_err("embed")),
+    };
+    Ok((NativeModel::from_parts(blocks, embed, dims.vocab, d, dims.smax), backend))
+}
+
+/// One-call cold start: map the file, validate the header, assemble the
+/// model pointing straight at the mapping.
+pub fn load_model(path: &Path) -> Result<(NativeModel, Backend), ArtifactError> {
+    let art = Artifact::open(path)?;
+    model_from_artifact(&art)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,6 +229,35 @@ mod tests {
                 linear_b,
                 m.params_b
             );
+        }
+    }
+
+    #[test]
+    fn artifact_round_trip_is_bit_exact_with_generate() {
+        let cfg = BlockConfig { dim: 16, n_heads: 2, ffn: 24 };
+        let (layers, vocab, smax, seed) = (2, 32, 8, 5);
+        for backend in [Backend::Dense, Backend::Native24, Backend::Slide { n: 4 }] {
+            let mut p = std::env::temp_dir();
+            p.push(format!(
+                "slidesparse_zoo_{}_{}.ssaf",
+                std::process::id(),
+                backend.label().replace(':', "_")
+            ));
+            build_generated_artifact(cfg, layers, vocab, smax, seed, backend, 2)
+                .unwrap()
+                .write(&p)
+                .unwrap();
+            let (loaded, be) = load_model(&p).unwrap();
+            assert_eq!(be, backend);
+            assert_eq!(loaded.smax, smax);
+            let reference = NativeModel::generate(cfg, layers, vocab, smax, seed, backend);
+            let toks = [1usize, 5, 9];
+            assert_eq!(
+                loaded.logits(&toks),
+                reference.logits(&toks),
+                "{backend:?}: artifact-served logits must be bit-exact"
+            );
+            std::fs::remove_file(&p).ok();
         }
     }
 

@@ -1,13 +1,17 @@
-//! PJRT runtime layer: artifact manifest parsing and the compiled-HLO
-//! execution client (see /opt/xla-example/load_hlo for the pattern).
-//! The client needs the `xla` bindings crate, which is outside the
-//! offline crate set, so it is gated behind the `pjrt` feature; manifest
-//! parsing is plain JSON and always builds.
+//! Runtime layer: the `.ssaf` zero-copy packed-model artifact
+//! (builder, on-disk format and mmap loader — [`ssaf`]), PJRT artifact
+//! manifest parsing, and the compiled-HLO execution client (see
+//! /opt/xla-example/load_hlo for the pattern). The client needs the
+//! `xla` bindings crate, which is outside the offline crate set, so it
+//! is gated behind the `pjrt` feature; manifest parsing is plain JSON
+//! and always builds.
 
 pub mod artifacts;
 #[cfg(feature = "pjrt")]
 pub mod client;
+pub mod ssaf;
 
 pub use artifacts::{ArtifactSpec, Manifest, ModelMeta};
+pub use ssaf::{Artifact, ArtifactBuilder, ArtifactError, BuiltArtifact, ModelDims, TensorView};
 #[cfg(feature = "pjrt")]
 pub use client::{literal_f32, literal_i32, literal_scalar_i32, Runtime};

@@ -1,0 +1,1415 @@
+//! `.ssaf` — the SlideSparse artifact: packed models as zero-copy files.
+//!
+//! Two halves live here:
+//!
+//! * **[`ArtifactBuilder`]** — the single-pass offline pipeline. One
+//!   sweep per weight row fuses magnitude pruning ((2N-2):2N), per-channel
+//!   INT8 quantization and Algorithm-2 greedy packing, and emits the 2:4
+//!   compressed operand directly — no intermediate dense f32 copies. It is
+//!   property-tested byte-identical to the staged reference pipeline
+//!   ([`crate::stc::SlideLinear::prepare`]: prune → quantize → pack →
+//!   compress), and pool-parallel over rows with bit-exact output at any
+//!   thread count.
+//! * **[`Artifact`]** — the mmap-able on-disk format. A checksummed,
+//!   versioned header describes every tensor; the data sections are
+//!   64-byte-aligned so a cold worker maps the file
+//!   ([`crate::util::Mapped`]) and points [`CompressedMatrix`] /
+//!   [`crate::util::Seg`] borrows straight at it with O(header) work.
+//!
+//! # On-disk layout (all integers little-endian)
+//!
+//! ```text
+//! magic          b"SSAF"                                      4 bytes
+//! version        u16 = 1
+//! endian         u16 = 0xFEFF (tripwire for byte-order damage)
+//! backend        u32: 0 = dense, 1 = native 2:4, N >= 2 = slide N
+//! model dims     dim, n_layers, n_heads, ffn, vocab, smax     u32 x 6
+//! n_tensors      u32
+//! per tensor:
+//!   name         u16 length + UTF-8 bytes
+//!   kind         u8: 0 = slide-compressed, 1 = dense INT8, 2 = raw f32
+//!   rows, k_orig, k_pad, k_packed                             u64 x 4
+//!   n            u32 (pack family; 0 for dense/raw)
+//!   n_segs       u8, then per segment:
+//!     dtype      u8: 0 = i8, 1 = u8, 2 = u32, 3 = f32
+//!     off        u64 byte offset (64-aligned, strictly in order)
+//!     len        u64 element count
+//!     fnv        u64 FNV-1a over the segment bytes
+//! header_fnv     u64 FNV-1a over every preceding header byte
+//! data sections  each at the next 64-aligned offset, zero padding
+//!                between; the file ends exactly at the last segment
+//! ```
+//!
+//! The layout depends only on the declared shapes — never on CPU
+//! features or thread counts — so an artifact written anywhere loads
+//! anywhere. [`Artifact::open`] does O(header) validation (magic,
+//! version, header checksum, shape arithmetic, offset discipline);
+//! [`Artifact::verify`] adds the O(data) segment checksums and the
+//! zero-padding scan, so every single-bit flip anywhere in the file is
+//! caught by `open` + `verify`. Weights are INT8 — the serving format of
+//! every backend here; FP8 ([`crate::quant::fp8`]) remains a perf-model
+//! precision and is not serialized.
+
+use std::io;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::model::{padded_k, Backend};
+use crate::quant::int8::{quantize_row_into, QMAX};
+use crate::sparsity::packer::expanded_k;
+use crate::stc::dense::{pack_b_panels, MT};
+use crate::stc::CompressedMatrix;
+use crate::util::pool::partition;
+use crate::util::{Mapped, Seg, ThreadPool};
+
+/// The unified error surface of the offline pipeline: packing, quant,
+/// header and I/O failures in one enum, always with tensor + row context
+/// where a row exists. [`crate::sparsity::packer::PackError`] (which has
+/// no tensor name, and no row at all from `pack_row`) folds into
+/// [`ArtifactError::Pack`] here.
+#[derive(Debug)]
+pub enum ArtifactError {
+    /// A row violates its sparsity budget (cannot happen for weights the
+    /// builder pruned itself — Theorem 1 — but the greedy pass still
+    /// counts residuals defensively).
+    Pack { tensor: String, row: usize, unplaced: usize },
+    /// A non-finite weight reached the quantizer.
+    Quant { tensor: String, row: usize },
+    /// The file is not a valid `.ssaf` artifact (parse/validation).
+    Header(String),
+    /// A data-section checksum or padding byte does not match.
+    Checksum { section: String },
+    Io(io::Error),
+}
+
+impl std::fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArtifactError::Pack { tensor, row, unplaced } => write!(
+                f,
+                "tensor '{tensor}' row {row} violates the sparsity budget: \
+                 {unplaced} non-zeros unplaced"
+            ),
+            ArtifactError::Quant { tensor, row } => write!(
+                f,
+                "tensor '{tensor}' row {row}: non-finite weight cannot be quantized"
+            ),
+            ArtifactError::Header(m) => write!(f, "invalid .ssaf artifact: {m}"),
+            ArtifactError::Checksum { section } => {
+                write!(f, ".ssaf checksum mismatch in {section}")
+            }
+            ArtifactError::Io(e) => write!(f, ".ssaf I/O error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ArtifactError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for ArtifactError {
+    fn from(e: io::Error) -> ArtifactError {
+        ArtifactError::Io(e)
+    }
+}
+
+fn hdr(msg: impl Into<String>) -> ArtifactError {
+    ArtifactError::Header(msg.into())
+}
+
+/// FNV-1a 64-bit — the checksum sealing the header and every data
+/// segment (public so the wire fuzzer can reseal mutated headers).
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+const MAGIC: &[u8; 4] = b"SSAF";
+const VERSION: u16 = 1;
+const ENDIAN: u16 = 0xFEFF;
+
+const KIND_SLIDE: u8 = 0;
+const KIND_DENSE: u8 = 1;
+const KIND_RAW: u8 = 2;
+
+const DT_I8: u8 = 0;
+const DT_U8: u8 = 1;
+const DT_U32: u8 = 2;
+const DT_F32: u8 = 3;
+
+fn dtype_size(dt: u8) -> usize {
+    match dt {
+        DT_U32 | DT_F32 => 4,
+        _ => 1,
+    }
+}
+
+fn align64(x: usize) -> usize {
+    x.div_ceil(64) * 64
+}
+
+fn backend_code(b: Backend) -> u32 {
+    match b {
+        Backend::Dense => 0,
+        Backend::Native24 => 1,
+        Backend::Slide { n } => n as u32,
+    }
+}
+
+fn decode_backend(code: u32) -> Result<Backend, ArtifactError> {
+    match code {
+        0 => Ok(Backend::Dense),
+        1 => Ok(Backend::Native24),
+        n if n >= 2 => Ok(Backend::Slide { n: n as usize }),
+        _ => Err(hdr("unknown backend code")),
+    }
+}
+
+/// Model geometry carried in the header so a loader can assemble a
+/// [`crate::model::NativeModel`] without any side-channel config.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ModelDims {
+    pub dim: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub smax: usize,
+}
+
+// ---------------------------------------------------------------------
+// Fused single-pass conversion (the offline tentpole)
+// ---------------------------------------------------------------------
+
+/// Per-row scratch reused across rows (never reallocated in the sweep).
+struct Scratch {
+    q: Vec<i8>,
+    used: Vec<bool>,
+    order: Vec<usize>,
+}
+
+impl Scratch {
+    fn new(kp: usize, block: usize) -> Scratch {
+        Scratch {
+            q: vec![0i8; kp],
+            used: vec![false; kp],
+            order: Vec::with_capacity(block),
+        }
+    }
+}
+
+enum RowFail {
+    Pack { unplaced: usize },
+    NonFinite,
+}
+
+impl RowFail {
+    fn into_artifact(self, tensor: &str, row: usize) -> ArtifactError {
+        match self {
+            RowFail::Pack { unplaced } => {
+                ArtifactError::Pack { tensor: tensor.into(), row, unplaced }
+            }
+            RowFail::NonFinite => ArtifactError::Quant { tensor: tensor.into(), row },
+        }
+    }
+}
+
+/// One fused sweep over one row: prune to (2N-2):2N, quantize on the
+/// row's absmax scale, greedily pack (Algorithm 2) and emit the 2:4
+/// compressed triple directly. Byte-identical to the staged
+/// prune → `quantize_weight_per_channel` → `pack_matrix` →
+/// `Compressed24::from_dense` chain:
+///
+/// * the row absmax is taken over the ORIGINAL row — the top-magnitude
+///   element always survives magnitude pruning, so the staged scale
+///   (absmax of the pruned row) is the same number;
+/// * the keep set replicates `prune_magnitude`'s stable descending sort
+///   (ties break toward the lower index);
+/// * placement replicates `pack_row_into`'s greedy window walk on the
+///   quantized values (a kept value that rounds to zero is skipped,
+///   exactly as its `0.0f32` is in the staged pack);
+/// * emission replicates `from_dense`'s slot/metadata layout, including
+///   the distinct-position padding of underfull windows.
+///
+/// Returns the per-row scale, or how the row failed.
+fn fused_slide_row(
+    w: &[f32],
+    n: usize,
+    s: &mut Scratch,
+    vals: &mut [i8],
+    cols: &mut [u32],
+    meta: &mut [u8],
+) -> Result<f32, RowFail> {
+    let kp = w.len();
+    let block = 2 * n;
+    let mut a = 0f32;
+    for v in w {
+        if !v.is_finite() {
+            return Err(RowFail::NonFinite);
+        }
+        a = a.max(v.abs());
+    }
+    a = a.max(1e-12);
+    let r = QMAX / a;
+    // prune + quantize: top (2N-2) magnitudes per block, scaled to int8
+    s.q.fill(0);
+    for g in 0..kp / block {
+        let blk = &w[g * block..(g + 1) * block];
+        s.order.clear();
+        s.order.extend(0..block);
+        s.order.sort_by(|&x, &y| {
+            blk[y].abs().partial_cmp(&blk[x].abs()).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        for &p in s.order.iter().take(block - 2) {
+            s.q[g * block + p] =
+                (blk[p] * r).round_ties_even().clamp(-QMAX, QMAX) as i8;
+        }
+    }
+    // greedy pack + compress: windows in order, values at their local
+    // offset d, metadata nibble per window
+    s.used.fill(false);
+    let mut wi = 0usize;
+    for g in 0..kp / block {
+        for l in 0..n - 1 {
+            let b = block * g + 2 * l;
+            let mut slot = 0usize;
+            let mut positions = [0u8; 2];
+            for d in 0..4 {
+                let p = b + d;
+                if s.q[p] != 0 && !s.used[p] && slot < 2 {
+                    s.used[p] = true;
+                    vals[wi * 2 + slot] = s.q[p];
+                    cols[wi * 2 + slot] = (wi * 4 + d) as u32;
+                    positions[slot] = d as u8;
+                    slot += 1;
+                }
+            }
+            while slot < 2 {
+                let d = (0..4u8).find(|d| !positions[..slot].contains(d)).unwrap();
+                positions[slot] = d;
+                cols[wi * 2 + slot] = (wi * 4 + d as usize) as u32;
+                slot += 1;
+            }
+            meta[wi] = positions[0] | (positions[1] << 2);
+            wi += 1;
+        }
+    }
+    let unplaced = (0..kp).filter(|&p| s.q[p] != 0 && !s.used[p]).count();
+    if unplaced > 0 {
+        return Err(RowFail::Pack { unplaced });
+    }
+    Ok(a / QMAX)
+}
+
+/// Split `buf` into per-range row chunks of `per` elements per row.
+fn split_rows<'a, T>(
+    mut buf: &'a mut [T],
+    ranges: &[(usize, usize)],
+    per: usize,
+) -> Vec<&'a mut [T]> {
+    let mut out = Vec::with_capacity(ranges.len());
+    for &(r0, r1) in ranges {
+        let tmp = buf;
+        let (head, tail) = tmp.split_at_mut((r1 - r0) * per);
+        out.push(head);
+        buf = tail;
+    }
+    debug_assert!(buf.is_empty());
+    out
+}
+
+/// Record the failure of the LOWEST row (== what the serial sweep would
+/// hit first, so errors are identical at any thread count).
+fn record_fail(slot: &Mutex<Option<(usize, RowFail)>>, row: usize, fail: RowFail) {
+    let mut g = slot.lock().unwrap();
+    if g.as_ref().is_none_or(|(r, _)| row < *r) {
+        *g = Some((row, fail));
+    }
+}
+
+struct SlideData {
+    vals: Vec<i8>,
+    cols: Vec<u32>,
+    meta: Vec<u8>,
+    scales: Vec<f32>,
+    k_packed: usize,
+}
+
+fn convert_slide(
+    tensor: &str,
+    w: &[f32],
+    rows: usize,
+    kp: usize,
+    n: usize,
+    pool: &ThreadPool,
+) -> Result<SlideData, ArtifactError> {
+    let kpk = expanded_k(kp, n);
+    let (half, wins) = (kpk / 2, kpk / 4);
+    let mut vals = vec![0i8; rows * half];
+    let mut cols = vec![0u32; rows * half];
+    let mut meta = vec![0u8; rows * wins];
+    let mut scales = vec![0f32; rows];
+    if pool.is_serial() || rows <= 1 {
+        let mut s = Scratch::new(kp, 2 * n);
+        for r in 0..rows {
+            match fused_slide_row(
+                &w[r * kp..(r + 1) * kp],
+                n,
+                &mut s,
+                &mut vals[r * half..(r + 1) * half],
+                &mut cols[r * half..(r + 1) * half],
+                &mut meta[r * wins..(r + 1) * wins],
+            ) {
+                Ok(sc) => scales[r] = sc,
+                Err(fail) => return Err(fail.into_artifact(tensor, r)),
+            }
+        }
+    } else {
+        let ranges = partition(rows, pool.threads());
+        let vcs = split_rows(&mut vals, &ranges, half);
+        let ccs = split_rows(&mut cols, &ranges, half);
+        let mcs = split_rows(&mut meta, &ranges, wins);
+        let scs = split_rows(&mut scales, &ranges, 1);
+        let first_fail: Mutex<Option<(usize, RowFail)>> = Mutex::new(None);
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for (i, (((vc, cc), mc), sc)) in
+            vcs.into_iter().zip(ccs).zip(mcs).zip(scs).enumerate()
+        {
+            let (r0, r1) = ranges[i];
+            let ff = &first_fail;
+            tasks.push(Box::new(move || {
+                let mut s = Scratch::new(kp, 2 * n);
+                for (j, r) in (r0..r1).enumerate() {
+                    match fused_slide_row(
+                        &w[r * kp..(r + 1) * kp],
+                        n,
+                        &mut s,
+                        &mut vc[j * half..(j + 1) * half],
+                        &mut cc[j * half..(j + 1) * half],
+                        &mut mc[j * wins..(j + 1) * wins],
+                    ) {
+                        Ok(scale) => sc[j] = scale,
+                        Err(fail) => {
+                            record_fail(ff, r, fail);
+                            return;
+                        }
+                    }
+                }
+            }));
+        }
+        pool.run(tasks);
+        if let Some((r, fail)) = first_fail.into_inner().unwrap() {
+            return Err(fail.into_artifact(tensor, r));
+        }
+    }
+    Ok(SlideData { vals, cols, meta, scales, k_packed: kpk })
+}
+
+/// Dense conversion: per-channel INT8 quantization (pool-parallel over
+/// rows) plus the deterministic 16-lane B-panel relayout the dense GEMM
+/// streams — stored in the artifact so dense loads are zero-copy too.
+fn convert_dense(
+    tensor: &str,
+    w: &[f32],
+    rows: usize,
+    k: usize,
+    pool: &ThreadPool,
+) -> Result<(Vec<i8>, Vec<i8>, Vec<f32>), ArtifactError> {
+    let mut wq = vec![0i8; rows * k];
+    let mut scales = vec![0f32; rows];
+    let quant_row = |row: usize, out: &mut [i8]| -> Result<f32, RowFail> {
+        let src = &w[row * k..(row + 1) * k];
+        if src.iter().any(|v| !v.is_finite()) {
+            return Err(RowFail::NonFinite);
+        }
+        Ok(quantize_row_into(src, out))
+    };
+    if pool.is_serial() || rows <= 1 {
+        for r in 0..rows {
+            match quant_row(r, &mut wq[r * k..(r + 1) * k]) {
+                Ok(s) => scales[r] = s,
+                Err(fail) => return Err(fail.into_artifact(tensor, r)),
+            }
+        }
+    } else {
+        let ranges = partition(rows, pool.threads());
+        let qcs = split_rows(&mut wq, &ranges, k);
+        let scs = split_rows(&mut scales, &ranges, 1);
+        let first_fail: Mutex<Option<(usize, RowFail)>> = Mutex::new(None);
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for (i, (qc, sc)) in qcs.into_iter().zip(scs).enumerate() {
+            let (r0, r1) = ranges[i];
+            let ff = &first_fail;
+            let quant_row = &quant_row;
+            tasks.push(Box::new(move || {
+                for (j, r) in (r0..r1).enumerate() {
+                    match quant_row(r, &mut qc[j * k..(j + 1) * k]) {
+                        Ok(s) => sc[j] = s,
+                        Err(fail) => {
+                            record_fail(ff, r, fail);
+                            return;
+                        }
+                    }
+                }
+            }));
+        }
+        pool.run(tasks);
+        if let Some((r, fail)) = first_fail.into_inner().unwrap() {
+            return Err(fail.into_artifact(tensor, r));
+        }
+    }
+    let wpan = pack_b_panels(&wq, rows, k);
+    Ok((wq, wpan, scales))
+}
+
+// ---------------------------------------------------------------------
+// Builder (the one offline entry point)
+// ---------------------------------------------------------------------
+
+enum SegData {
+    I8(Vec<i8>),
+    U8(Vec<u8>),
+    U32(Vec<u32>),
+    F32(Vec<f32>),
+}
+
+impl SegData {
+    fn dtype(&self) -> u8 {
+        match self {
+            SegData::I8(_) => DT_I8,
+            SegData::U8(_) => DT_U8,
+            SegData::U32(_) => DT_U32,
+            SegData::F32(_) => DT_F32,
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            SegData::I8(v) => v.len(),
+            SegData::U8(v) => v.len(),
+            SegData::U32(v) => v.len(),
+            SegData::F32(v) => v.len(),
+        }
+    }
+
+    fn to_bytes(&self) -> Vec<u8> {
+        match self {
+            SegData::I8(v) => v.iter().map(|&x| x as u8).collect(),
+            SegData::U8(v) => v.clone(),
+            SegData::U32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            SegData::F32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        }
+    }
+}
+
+struct BuiltTensor {
+    name: String,
+    kind: u8,
+    rows: usize,
+    k_orig: usize,
+    k_pad: usize,
+    k_packed: usize,
+    n: usize,
+    segs: Vec<SegData>,
+}
+
+/// Fluent single-pass offline conversion:
+///
+/// ```ignore
+/// ArtifactBuilder::new(Backend::Slide { n: 4 })
+///     .threads(8)
+///     .model_meta(dims)
+///     .add_tensor("blk0.wqkv", &w, 3 * d, d)?
+///     .write(path)?;
+/// ```
+///
+/// Every `add_tensor` runs the fused prune/quant/pack sweep for the
+/// builder's backend; `add_raw_tensor` stores f32 verbatim (embeddings).
+/// The scattered staged entry points (`prune_magnitude`,
+/// `quantize_weight_per_channel`, `pack_matrix*`) remain as inspectable
+/// primitives, but end-to-end conversion goes through here.
+pub struct ArtifactBuilder {
+    backend: Backend,
+    threads: usize,
+    pool: Option<ThreadPool>,
+    dims: ModelDims,
+    tensors: Vec<BuiltTensor>,
+}
+
+impl ArtifactBuilder {
+    pub fn new(backend: Backend) -> ArtifactBuilder {
+        ArtifactBuilder {
+            backend,
+            threads: 1,
+            pool: None,
+            dims: ModelDims::default(),
+            tensors: Vec::new(),
+        }
+    }
+
+    /// Conversion lanes (0 = one per core). Output bytes are identical
+    /// at any thread count.
+    pub fn threads(mut self, t: usize) -> ArtifactBuilder {
+        self.threads = t;
+        self.pool = None;
+        self
+    }
+
+    /// Record the model geometry the loader reassembles from.
+    pub fn model_meta(mut self, dims: ModelDims) -> ArtifactBuilder {
+        self.dims = dims;
+        self
+    }
+
+    fn pool(&mut self) -> &ThreadPool {
+        let t = self.threads;
+        self.pool.get_or_insert_with(|| ThreadPool::new(t))
+    }
+
+    /// Convert one dense f32 weight `[rows, k]` through the fused sweep
+    /// of the builder's backend and stage it for serialization. K is
+    /// zero-padded to the pattern block internally (Appendix D.3), same
+    /// as [`crate::model::Linear::prepare`].
+    pub fn add_tensor(
+        mut self,
+        name: &str,
+        w: &[f32],
+        rows: usize,
+        k: usize,
+    ) -> Result<ArtifactBuilder, ArtifactError> {
+        assert_eq!(w.len(), rows * k);
+        let t = match self.backend {
+            Backend::Dense => {
+                let (wq, wpan, scales) = convert_dense(name, w, rows, k, self.pool())?;
+                BuiltTensor {
+                    name: name.into(),
+                    kind: KIND_DENSE,
+                    rows,
+                    k_orig: k,
+                    k_pad: k,
+                    k_packed: 0,
+                    n: 0,
+                    segs: vec![SegData::I8(wq), SegData::I8(wpan), SegData::F32(scales)],
+                }
+            }
+            Backend::Slide { n } => self.slide_tensor(name, w, rows, k, n)?,
+            Backend::Native24 => self.slide_tensor(name, w, rows, k, 2)?,
+        };
+        self.tensors.push(t);
+        Ok(self)
+    }
+
+    fn slide_tensor(
+        &mut self,
+        name: &str,
+        w: &[f32],
+        rows: usize,
+        k: usize,
+        n: usize,
+    ) -> Result<BuiltTensor, ArtifactError> {
+        let kp = padded_k(k, 2 * n);
+        let padded;
+        let wp: &[f32] = if kp == k {
+            w
+        } else {
+            padded = pad_cols(w, rows, k, kp);
+            &padded
+        };
+        let d = convert_slide(name, wp, rows, kp, n, self.pool())?;
+        Ok(BuiltTensor {
+            name: name.into(),
+            kind: KIND_SLIDE,
+            rows,
+            k_orig: k,
+            k_pad: kp,
+            k_packed: d.k_packed,
+            n,
+            segs: vec![
+                SegData::I8(d.vals),
+                SegData::U32(d.cols),
+                SegData::U8(d.meta),
+                SegData::F32(d.scales),
+            ],
+        })
+    }
+
+    /// Store an f32 tensor verbatim (embeddings, norms — anything the
+    /// engine reads dense).
+    pub fn add_raw_tensor(
+        mut self,
+        name: &str,
+        w: &[f32],
+        rows: usize,
+        k: usize,
+    ) -> Result<ArtifactBuilder, ArtifactError> {
+        assert_eq!(w.len(), rows * k);
+        self.tensors.push(BuiltTensor {
+            name: name.into(),
+            kind: KIND_RAW,
+            rows,
+            k_orig: k,
+            k_pad: k,
+            k_packed: 0,
+            n: 0,
+            segs: vec![SegData::F32(w.to_vec())],
+        });
+        Ok(self)
+    }
+
+    /// Finish conversion; the result serializes with
+    /// [`BuiltArtifact::to_bytes`] / [`BuiltArtifact::write`].
+    pub fn finish(self) -> BuiltArtifact {
+        BuiltArtifact { backend: self.backend, dims: self.dims, tensors: self.tensors }
+    }
+
+    /// `finish()` + write the `.ssaf` file.
+    pub fn write(self, path: &Path) -> Result<(), ArtifactError> {
+        self.finish().write(path)
+    }
+}
+
+/// A fully converted model, ready to serialize.
+pub struct BuiltArtifact {
+    pub backend: Backend,
+    pub dims: ModelDims,
+    tensors: Vec<BuiltTensor>,
+}
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn dim_u32(v: usize, what: &str) -> Result<u32, ArtifactError> {
+    u32::try_from(v).map_err(|_| hdr(format!("{what} does not fit u32")))
+}
+
+impl BuiltArtifact {
+    /// Serialize to the on-disk byte layout (see the module docs).
+    pub fn to_bytes(&self) -> Result<Vec<u8>, ArtifactError> {
+        // header size first, so data offsets are known up front
+        let mut hlen = 4 + 2 + 2 + 4 + 6 * 4 + 4;
+        for t in &self.tensors {
+            if t.name.len() > u16::MAX as usize {
+                return Err(hdr("tensor name too long"));
+            }
+            hlen += 2 + t.name.len() + 1 + 4 * 8 + 4 + 1 + t.segs.len() * (1 + 8 + 8 + 8);
+        }
+        hlen += 8; // trailing header fnv
+        let mut segs: Vec<(Vec<u8>, u64, usize)> = Vec::new(); // bytes, fnv, off
+        let mut off = hlen;
+        for t in &self.tensors {
+            for s in &t.segs {
+                let bytes = s.to_bytes();
+                off = align64(off);
+                let fnv = fnv64(&bytes);
+                let end = off + bytes.len();
+                segs.push((bytes, fnv, off));
+                off = end;
+            }
+        }
+        let total = off;
+        let mut buf = Vec::with_capacity(total);
+        buf.extend_from_slice(MAGIC);
+        put_u16(&mut buf, VERSION);
+        put_u16(&mut buf, ENDIAN);
+        put_u32(&mut buf, backend_code(self.backend));
+        for (v, what) in [
+            (self.dims.dim, "dim"),
+            (self.dims.n_layers, "n_layers"),
+            (self.dims.n_heads, "n_heads"),
+            (self.dims.ffn, "ffn"),
+            (self.dims.vocab, "vocab"),
+            (self.dims.smax, "smax"),
+        ] {
+            put_u32(&mut buf, dim_u32(v, what)?);
+        }
+        put_u32(&mut buf, dim_u32(self.tensors.len(), "n_tensors")?);
+        let mut si = 0usize;
+        for t in &self.tensors {
+            put_u16(&mut buf, t.name.len() as u16);
+            buf.extend_from_slice(t.name.as_bytes());
+            buf.push(t.kind);
+            put_u64(&mut buf, t.rows as u64);
+            put_u64(&mut buf, t.k_orig as u64);
+            put_u64(&mut buf, t.k_pad as u64);
+            put_u64(&mut buf, t.k_packed as u64);
+            put_u32(&mut buf, dim_u32(t.n, "n")?);
+            buf.push(t.segs.len() as u8);
+            for s in &t.segs {
+                let (_, fnv, soff) = &segs[si];
+                buf.push(s.dtype());
+                put_u64(&mut buf, *soff as u64);
+                put_u64(&mut buf, s.len() as u64);
+                put_u64(&mut buf, *fnv);
+                si += 1;
+            }
+        }
+        let hfnv = fnv64(&buf);
+        put_u64(&mut buf, hfnv);
+        debug_assert_eq!(buf.len(), hlen);
+        for (bytes, _, soff) in &segs {
+            buf.resize(*soff, 0); // zero alignment padding
+            buf.extend_from_slice(bytes);
+        }
+        debug_assert_eq!(buf.len(), total);
+        Ok(buf)
+    }
+
+    /// Write the `.ssaf` file.
+    pub fn write(&self, path: &Path) -> Result<(), ArtifactError> {
+        let bytes = self.to_bytes()?;
+        std::fs::write(path, bytes)?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Loader (zero-copy open)
+// ---------------------------------------------------------------------
+
+struct SegEntry {
+    dtype: u8,
+    off: usize,
+    len: usize,
+    fnv: u64,
+}
+
+impl SegEntry {
+    fn byte_len(&self) -> usize {
+        self.len * dtype_size(self.dtype)
+    }
+}
+
+struct TensorEntry {
+    name: String,
+    kind: u8,
+    rows: usize,
+    k_orig: usize,
+    k_pad: usize,
+    k_packed: usize,
+    n: usize,
+    segs: Vec<SegEntry>,
+}
+
+/// One tensor, viewed zero-copy out of the mapped file.
+pub enum TensorView {
+    Slide {
+        rows: usize,
+        k_orig: usize,
+        k_pad: usize,
+        n: usize,
+        weights: CompressedMatrix,
+        scales: Seg<f32>,
+    },
+    Dense {
+        rows: usize,
+        k_orig: usize,
+        wq: Seg<i8>,
+        wpan: Seg<i8>,
+        scales: Seg<f32>,
+    },
+    Raw { rows: usize, k_orig: usize, data: Seg<f32> },
+}
+
+/// Checked little-endian cursor over the header bytes.
+struct Rd<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ArtifactError> {
+        let end = self.p.checked_add(n).ok_or_else(|| hdr("header offset overflow"))?;
+        if end > self.b.len() {
+            return Err(hdr("truncated header"));
+        }
+        let s = &self.b[self.p..end];
+        self.p = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, ArtifactError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, ArtifactError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, ArtifactError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, ArtifactError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn usz(&mut self, what: &str) -> Result<usize, ArtifactError> {
+        usize::try_from(self.u64()?).map_err(|_| hdr(format!("{what} does not fit usize")))
+    }
+}
+
+fn ckmul(a: usize, b: usize, what: &str) -> Result<usize, ArtifactError> {
+    a.checked_mul(b).ok_or_else(|| hdr(format!("{what} overflows")))
+}
+
+/// A parsed, mapped `.ssaf` file. [`Artifact::open`] is O(header): it
+/// validates the header (checksum, shape arithmetic, offset discipline)
+/// but touches none of the data pages; tensors are handed out as
+/// zero-copy [`TensorView`]s borrowing the mapping. [`Artifact::verify`]
+/// is the on-demand O(data) integrity pass.
+pub struct Artifact {
+    map: Arc<Mapped>,
+    backend: Backend,
+    dims: ModelDims,
+    header_len: usize,
+    header_fnv: u64,
+    tensors: Vec<TensorEntry>,
+}
+
+impl Artifact {
+    /// Map and validate an artifact file (mmap where available, heap
+    /// read under Miri / non-unix).
+    pub fn open(path: &Path) -> Result<Artifact, ArtifactError> {
+        Self::parse(Arc::new(Mapped::open(path)?))
+    }
+
+    /// Parse in-memory bytes (unit tests and the wire fuzzer).
+    pub fn from_bytes(bytes: Vec<u8>) -> Result<Artifact, ArtifactError> {
+        Self::parse(Arc::new(Mapped::from_vec(bytes)))
+    }
+
+    fn parse(map: Arc<Mapped>) -> Result<Artifact, ArtifactError> {
+        let b = map.as_bytes();
+        let mut rd = Rd { b, p: 0 };
+        if rd.take(4)? != MAGIC {
+            return Err(hdr("bad magic (not an .ssaf file)"));
+        }
+        let version = rd.u16()?;
+        if version != VERSION {
+            return Err(hdr(format!("unsupported version {version} (want {VERSION})")));
+        }
+        if rd.u16()? != ENDIAN {
+            return Err(hdr("endian marker mismatch"));
+        }
+        let backend = decode_backend(rd.u32()?)?;
+        let dims = ModelDims {
+            dim: rd.u32()? as usize,
+            n_layers: rd.u32()? as usize,
+            n_heads: rd.u32()? as usize,
+            ffn: rd.u32()? as usize,
+            vocab: rd.u32()? as usize,
+            smax: rd.u32()? as usize,
+        };
+        let n_tensors = rd.u32()? as usize;
+        if n_tensors > 1 << 20 {
+            return Err(hdr("implausible tensor count"));
+        }
+        let mut tensors = Vec::with_capacity(n_tensors.min(1024));
+        for ti in 0..n_tensors {
+            let name_len = rd.u16()? as usize;
+            if name_len == 0 || name_len > 4096 {
+                return Err(hdr(format!("tensor {ti}: bad name length")));
+            }
+            let name = std::str::from_utf8(rd.take(name_len)?)
+                .map_err(|_| hdr(format!("tensor {ti}: name is not UTF-8")))?
+                .to_string();
+            let kind = rd.u8()?;
+            let rows = rd.usz("rows")?;
+            let k_orig = rd.usz("k_orig")?;
+            let k_pad = rd.usz("k_pad")?;
+            let k_packed = rd.usz("k_packed")?;
+            let n = rd.u32()? as usize;
+            let n_segs = rd.u8()? as usize;
+            let mut segs = Vec::with_capacity(n_segs.min(8));
+            for _ in 0..n_segs {
+                let dtype = rd.u8()?;
+                if dtype > DT_F32 {
+                    return Err(hdr(format!("tensor '{name}': unknown dtype")));
+                }
+                let off = rd.usz("segment offset")?;
+                let len = rd.usz("segment length")?;
+                let fnv = rd.u64()?;
+                segs.push(SegEntry { dtype, off, len, fnv });
+            }
+            let t = TensorEntry { name, kind, rows, k_orig, k_pad, k_packed, n, segs };
+            validate_tensor_shape(&t)?;
+            tensors.push(t);
+        }
+        let pre_fnv = rd.p;
+        let header_fnv = rd.u64()?;
+        if fnv64(&b[..pre_fnv]) != header_fnv {
+            return Err(hdr("header checksum mismatch"));
+        }
+        let header_len = rd.p;
+        // offset discipline: segments in declared order, each at exactly
+        // the next 64-aligned offset, file ends at the last byte
+        let mut cur = header_len;
+        for t in &tensors {
+            for (i, s) in t.segs.iter().enumerate() {
+                let want = align64(cur);
+                if s.off != want {
+                    return Err(hdr(format!(
+                        "tensor '{}' segment {i}: offset {} (want {want})",
+                        t.name, s.off
+                    )));
+                }
+                cur = s
+                    .off
+                    .checked_add(s.byte_len())
+                    .ok_or_else(|| hdr("segment end overflows"))?;
+                if cur > b.len() {
+                    return Err(hdr(format!(
+                        "tensor '{}' segment {i} extends past end of file",
+                        t.name
+                    )));
+                }
+            }
+        }
+        if cur != b.len() {
+            return Err(hdr(format!("trailing bytes: file is {}, data ends at {cur}", b.len())));
+        }
+        // the artifact-level backend must match every tensor's kind
+        for t in &tensors {
+            let ok = match backend {
+                Backend::Dense => t.kind != KIND_SLIDE,
+                Backend::Slide { n } => t.kind != KIND_DENSE && (t.kind == KIND_RAW || t.n == n),
+                Backend::Native24 => t.kind != KIND_DENSE && (t.kind == KIND_RAW || t.n == 2),
+            };
+            if !ok {
+                return Err(hdr(format!("tensor '{}' does not match artifact backend", t.name)));
+            }
+        }
+        Ok(Artifact { map, backend, dims, header_len, header_fnv, tensors })
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    pub fn dims(&self) -> ModelDims {
+        self.dims
+    }
+
+    /// The sealed header checksum, 16 lowercase hex chars (bench JSON).
+    pub fn header_checksum_hex(&self) -> String {
+        format!("{:016x}", self.header_fnv)
+    }
+
+    pub fn file_len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn tensor_names(&self) -> impl Iterator<Item = &str> {
+        self.tensors.iter().map(|t| t.name.as_str())
+    }
+
+    /// Zero-copy view of one tensor: the returned segments borrow the
+    /// mapping (no bytes are copied or parsed).
+    pub fn get(&self, name: &str) -> Result<TensorView, ArtifactError> {
+        let t = self
+            .tensors
+            .iter()
+            .find(|t| t.name == name)
+            .ok_or_else(|| hdr(format!("no tensor '{name}' in artifact")))?;
+        match t.kind {
+            KIND_SLIDE => Ok(TensorView::Slide {
+                rows: t.rows,
+                k_orig: t.k_orig,
+                k_pad: t.k_pad,
+                n: t.n,
+                weights: CompressedMatrix {
+                    vals: self.seg_i8(&t.segs[0])?,
+                    cols: self.seg_u32(&t.segs[1])?,
+                    rows: t.rows,
+                    k_packed: t.k_packed,
+                    meta: self.seg_u8(&t.segs[2])?,
+                },
+                scales: self.seg_f32(&t.segs[3])?,
+            }),
+            KIND_DENSE => Ok(TensorView::Dense {
+                rows: t.rows,
+                k_orig: t.k_orig,
+                wq: self.seg_i8(&t.segs[0])?,
+                wpan: self.seg_i8(&t.segs[1])?,
+                scales: self.seg_f32(&t.segs[2])?,
+            }),
+            _ => Ok(TensorView::Raw {
+                rows: t.rows,
+                k_orig: t.k_orig,
+                data: self.seg_f32(&t.segs[0])?,
+            }),
+        }
+    }
+
+    fn seg_i8(&self, s: &SegEntry) -> Result<Seg<i8>, ArtifactError> {
+        Seg::mapped(&self.map, s.off, s.len).map_err(hdr)
+    }
+
+    fn seg_u8(&self, s: &SegEntry) -> Result<Seg<u8>, ArtifactError> {
+        Seg::mapped(&self.map, s.off, s.len).map_err(hdr)
+    }
+
+    fn seg_u32(&self, s: &SegEntry) -> Result<Seg<u32>, ArtifactError> {
+        Seg::mapped(&self.map, s.off, s.len).map_err(hdr)
+    }
+
+    fn seg_f32(&self, s: &SegEntry) -> Result<Seg<f32>, ArtifactError> {
+        Seg::mapped(&self.map, s.off, s.len).map_err(hdr)
+    }
+
+    /// O(data) integrity: every segment checksum, plus every alignment
+    /// padding byte must be zero — together with the header checksum in
+    /// `open`, this catches any single-bit flip anywhere in the file.
+    pub fn verify(&self) -> Result<(), ArtifactError> {
+        let b = self.map.as_bytes();
+        let mut prev_end = self.header_len;
+        for t in &self.tensors {
+            for (i, s) in t.segs.iter().enumerate() {
+                if b[prev_end..s.off].iter().any(|&p| p != 0) {
+                    return Err(ArtifactError::Checksum {
+                        section: format!("padding before '{}' segment {i}", t.name),
+                    });
+                }
+                let end = s.off + s.byte_len();
+                if fnv64(&b[s.off..end]) != s.fnv {
+                    return Err(ArtifactError::Checksum {
+                        section: format!("'{}' segment {i}", t.name),
+                    });
+                }
+                prev_end = end;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Cross-check the declared shapes against the kind's segment recipe
+/// (checked arithmetic throughout — hostile u64s error, never wrap).
+fn validate_tensor_shape(t: &TensorEntry) -> Result<(), ArtifactError> {
+    let name = &t.name;
+    let expect = |cond: bool, what: &str| -> Result<(), ArtifactError> {
+        if cond {
+            Ok(())
+        } else {
+            Err(hdr(format!("tensor '{name}': {what}")))
+        }
+    };
+    match t.kind {
+        KIND_SLIDE => {
+            expect(t.n >= 2, "slide family needs N >= 2")?;
+            let block = ckmul(2, t.n, "block")?;
+            expect(t.k_pad % block == 0, "k_pad is not a multiple of 2N")?;
+            let kpk = ckmul(t.k_pad / block, (t.n - 1) * 4, "k_packed")?;
+            expect(t.k_packed == kpk, "k_packed does not match expanded_k(k_pad, N)")?;
+            // the exact padding relation, not just <=: k_pad must be
+            // k_orig rounded up to the block, so no header rewrite can
+            // smuggle in a bogus logical width
+            expect(
+                t.k_orig <= t.k_pad && t.k_pad - t.k_orig < block,
+                "k_pad is not k_orig rounded up to 2N",
+            )?;
+            let half = ckmul(t.rows, kpk, "vals")? / 2;
+            let wins = ckmul(t.rows, kpk, "meta")? / 4;
+            expect(t.segs.len() == 4, "slide tensors carry 4 segments")?;
+            expect(
+                t.segs[0].dtype == DT_I8 && t.segs[0].len == half,
+                "segment 0 must be i8 vals [rows * k_packed / 2]",
+            )?;
+            expect(
+                t.segs[1].dtype == DT_U32 && t.segs[1].len == half,
+                "segment 1 must be u32 cols [rows * k_packed / 2]",
+            )?;
+            expect(
+                t.segs[2].dtype == DT_U8 && t.segs[2].len == wins,
+                "segment 2 must be u8 meta [rows * k_packed / 4]",
+            )?;
+            expect(
+                t.segs[3].dtype == DT_F32 && t.segs[3].len == t.rows,
+                "segment 3 must be f32 scales [rows]",
+            )?;
+        }
+        KIND_DENSE => {
+            expect(t.n == 0 && t.k_packed == 0, "dense tensors have no pack family")?;
+            expect(t.k_pad == t.k_orig, "dense tensors never pad K")?;
+            let wq = ckmul(t.rows, t.k_orig, "wq")?;
+            let panel_rows = ckmul(t.rows.div_ceil(MT), MT, "panels")?;
+            let wpan = ckmul(panel_rows, t.k_orig, "panels")?;
+            expect(t.segs.len() == 3, "dense tensors carry 3 segments")?;
+            expect(
+                t.segs[0].dtype == DT_I8 && t.segs[0].len == wq,
+                "segment 0 must be i8 weights [rows * k]",
+            )?;
+            expect(
+                t.segs[1].dtype == DT_I8 && t.segs[1].len == wpan,
+                "segment 1 must be i8 B-panels [ceil(rows/16)*16 * k]",
+            )?;
+            expect(
+                t.segs[2].dtype == DT_F32 && t.segs[2].len == t.rows,
+                "segment 2 must be f32 scales [rows]",
+            )?;
+        }
+        KIND_RAW => {
+            expect(t.n == 0 && t.k_packed == 0, "raw tensors have no pack family")?;
+            expect(t.k_pad == t.k_orig, "raw tensors never pad K")?;
+            let len = ckmul(t.rows, t.k_orig, "raw")?;
+            expect(t.segs.len() == 1, "raw tensors carry 1 segment")?;
+            expect(
+                t.segs[0].dtype == DT_F32 && t.segs[0].len == len,
+                "segment 0 must be f32 data [rows * k]",
+            )?;
+        }
+        _ => return Err(hdr(format!("tensor '{name}': unknown kind"))),
+    }
+    Ok(())
+}
+
+fn pad_cols(x: &[f32], rows: usize, k: usize, kp: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * kp];
+    for r in 0..rows {
+        out[r * kp..r * kp + k].copy_from_slice(&x[r * k..(r + 1) * k]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::int8::quantize_weight_per_channel;
+    use crate::sparsity::packer::pack_matrix;
+    use crate::sparsity::prune::prune_magnitude;
+    use crate::stc::{Compressed24, SlideLinear};
+    use crate::util::{prng::XorShift, prop};
+
+    fn random_w(rng: &mut XorShift, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.normal()).collect()
+    }
+
+    /// The staged reference: prune → quantize → pack → compress.
+    fn staged_slide(w: &[f32], o: usize, kp: usize, n: usize) -> (Compressed24, Vec<f32>) {
+        let pruned = prune_magnitude(w, o, kp, 2 * n - 2, 2 * n);
+        let (wq, ws) = quantize_weight_per_channel(&pruned, o, kp);
+        let wq_f: Vec<f32> = wq.iter().map(|v| *v as f32).collect();
+        let packed = pack_matrix(&wq_f, o, kp, n).unwrap();
+        let packed_i8: Vec<i8> = packed.data.iter().map(|v| *v as i8).collect();
+        (Compressed24::from_dense(&packed_i8, o, packed.k_packed).unwrap(), ws)
+    }
+
+    fn build_one(w: &[f32], o: usize, k: usize, backend: Backend, threads: usize) -> Artifact {
+        let built = ArtifactBuilder::new(backend)
+            .threads(threads)
+            .add_tensor("w", w, o, k)
+            .unwrap()
+            .finish();
+        Artifact::from_bytes(built.to_bytes().unwrap()).unwrap()
+    }
+
+    #[test]
+    fn fused_conversion_is_byte_identical_to_staged_pipeline() {
+        prop::for_all("fused == staged", |rng: &mut XorShift, case| {
+            let n = [2, 3, 4, 8][case % 4];
+            let k = 2 * n * (1 + rng.below(4));
+            let o = 1 + rng.below(10);
+            let w = random_w(rng, o * k);
+            let art = build_one(&w, o, k, Backend::Slide { n }, 1);
+            let TensorView::Slide { weights, scales, k_pad, .. } = art.get("w").unwrap()
+            else {
+                panic!("expected slide view")
+            };
+            assert_eq!(k_pad, k);
+            let (sc, sws) = staged_slide(&w, o, k, n);
+            assert_eq!(&weights.vals[..], &sc.vals[..], "vals differ (n={n})");
+            assert_eq!(&weights.cols[..], &sc.cols[..], "cols differ (n={n})");
+            assert_eq!(&weights.meta[..], &sc.meta[..], "meta differ (n={n})");
+            assert_eq!(weights.k_packed, sc.k_packed);
+            for (a, b) in scales.iter().zip(sws.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "scales differ (n={n})");
+            }
+        });
+    }
+
+    #[test]
+    fn fused_conversion_matches_staged_slide_linear_prepare() {
+        let mut rng = XorShift::new(11);
+        let (o, k, n) = (12, 48, 3);
+        let w = random_w(&mut rng, o * k);
+        let art = build_one(&w, o, k, Backend::Slide { n }, 1);
+        let TensorView::Slide { weights, scales, .. } = art.get("w").unwrap() else {
+            panic!()
+        };
+        let staged = SlideLinear::prepare(&w, o, k, n);
+        assert_eq!(&weights.vals[..], &staged.weights.vals[..]);
+        assert_eq!(&weights.cols[..], &staged.weights.cols[..]);
+        assert_eq!(&weights.meta[..], &staged.weights.meta[..]);
+        assert_eq!(&scales[..], &staged.w_scales[..]);
+        assert!(weights.vals.is_mapped() && scales.is_mapped());
+    }
+
+    #[test]
+    fn thread_count_does_not_change_bytes() {
+        let mut rng = XorShift::new(7);
+        let (o, k, n) = (37, 96, 4);
+        let w = random_w(&mut rng, o * k);
+        let reference = ArtifactBuilder::new(Backend::Slide { n })
+            .add_tensor("w", &w, o, k)
+            .unwrap()
+            .finish()
+            .to_bytes()
+            .unwrap();
+        for t in [2, 4, 8] {
+            let bytes = ArtifactBuilder::new(Backend::Slide { n })
+                .threads(t)
+                .add_tensor("w", &w, o, k)
+                .unwrap()
+                .finish()
+                .to_bytes()
+                .unwrap();
+            assert_eq!(bytes, reference, "threads={t} changed the artifact bytes");
+        }
+    }
+
+    #[test]
+    fn dense_conversion_matches_staged_quant_and_panels() {
+        let mut rng = XorShift::new(9);
+        let (o, k) = (21, 40);
+        let w = random_w(&mut rng, o * k);
+        for threads in [1, 4] {
+            let art = build_one(&w, o, k, Backend::Dense, threads);
+            let TensorView::Dense { wq, wpan, scales, .. } = art.get("w").unwrap() else {
+                panic!()
+            };
+            let (swq, sws) = quantize_weight_per_channel(&w, o, k);
+            assert_eq!(&wq[..], &swq[..]);
+            assert_eq!(&wpan[..], &pack_b_panels(&swq, o, k)[..]);
+            assert_eq!(&scales[..], &sws[..]);
+        }
+    }
+
+    #[test]
+    fn unaligned_k_pads_like_linear_prepare() {
+        let mut rng = XorShift::new(5);
+        let (o, k, n) = (6, 50, 4); // 50 % 8 != 0 → pads to 56
+        let w = random_w(&mut rng, o * k);
+        let art = build_one(&w, o, k, Backend::Slide { n }, 1);
+        let TensorView::Slide { k_orig, k_pad, weights, scales, .. } =
+            art.get("w").unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!((k_orig, k_pad), (50, 56));
+        let wp = pad_cols(&w, o, k, 56);
+        let (sc, sws) = staged_slide(&wp, o, 56, n);
+        assert_eq!(&weights.vals[..], &sc.vals[..]);
+        assert_eq!(&scales[..], &sws[..]);
+    }
+
+    #[test]
+    fn open_loads_written_file_zero_copy_and_verifies() {
+        let mut rng = XorShift::new(3);
+        let (o, k, n) = (8, 32, 2);
+        let w = random_w(&mut rng, o * k);
+        let mut p = std::env::temp_dir();
+        p.push(format!("slidesparse_ssaf_{}_roundtrip.ssaf", std::process::id()));
+        ArtifactBuilder::new(Backend::Native24)
+            .model_meta(ModelDims { dim: 4, n_layers: 1, n_heads: 1, ffn: 8, vocab: 16, smax: 9 })
+            .add_tensor("w", &w, o, k)
+            .unwrap()
+            .add_raw_tensor("embed", &w[..16], 4, 4)
+            .unwrap()
+            .write(&p)
+            .unwrap();
+        let art = Artifact::open(&p).unwrap();
+        assert_eq!(art.backend(), Backend::Native24);
+        assert_eq!(art.dims().vocab, 16);
+        assert_eq!(art.tensor_names().collect::<Vec<_>>(), ["w", "embed"]);
+        assert_eq!(art.header_checksum_hex().len(), 16);
+        art.verify().unwrap();
+        let TensorView::Slide { weights, .. } = art.get("w").unwrap() else { panic!() };
+        let (sc, _) = staged_slide(&w, o, k, 2);
+        assert_eq!(&weights.vals[..], &sc.vals[..]);
+        let TensorView::Raw { data, .. } = art.get("embed").unwrap() else { panic!() };
+        assert_eq!(&data[..], &w[..16]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn non_finite_weight_reports_tensor_and_row() {
+        let mut w = vec![1.0f32; 4 * 16];
+        w[2 * 16 + 5] = f32::NAN;
+        let err = ArtifactBuilder::new(Backend::Native24)
+            .add_tensor("blk0.wo", &w, 4, 16)
+            .unwrap_err();
+        match err {
+            ArtifactError::Quant { tensor, row } => {
+                assert_eq!(tensor, "blk0.wo");
+                assert_eq!(row, 2);
+            }
+            other => panic!("expected Quant error, got {other}"),
+        }
+        assert!(err.to_string().contains("blk0.wo"));
+    }
+
+    #[test]
+    fn error_display_carries_context() {
+        let e = ArtifactError::Pack { tensor: "w13".into(), row: 7, unplaced: 3 };
+        let s = e.to_string();
+        assert!(s.contains("w13") && s.contains("row 7") && s.contains('3'), "{s}");
+    }
+
+    #[test]
+    fn rejects_truncation_and_bitflip_smoke() {
+        // exhaustive sweeps live in tests/fuzz_ssaf.rs; this is the
+        // Miri-visible smoke version
+        let w = vec![0.5f32; 2 * 8];
+        let bytes = ArtifactBuilder::new(Backend::Native24)
+            .add_tensor("w", &w, 2, 8)
+            .unwrap()
+            .finish()
+            .to_bytes()
+            .unwrap();
+        assert!(Artifact::from_bytes(bytes.clone()).is_ok());
+        for cut in [0, 3, 17, bytes.len() - 1] {
+            assert!(Artifact::from_bytes(bytes[..cut].to_vec()).is_err(), "cut={cut}");
+        }
+        let mut flipped = bytes.clone();
+        flipped[6] ^= 1; // endian marker
+        assert!(Artifact::from_bytes(flipped).is_err());
+        let mut flipped = bytes.clone();
+        *flipped.last_mut().unwrap() ^= 0x80; // payload tail → verify catches
+        let art = Artifact::from_bytes(flipped).unwrap();
+        assert!(art.verify().is_err());
+    }
+
+    #[test]
+    fn empty_artifact_round_trips() {
+        let bytes = ArtifactBuilder::new(Backend::Dense).finish().to_bytes().unwrap();
+        let art = Artifact::from_bytes(bytes).unwrap();
+        assert_eq!(art.tensor_names().count(), 0);
+        art.verify().unwrap();
+        assert!(art.get("nope").is_err());
+    }
+
+    #[test]
+    fn fnv_reference_vector() {
+        // FNV-1a 64 of "a" per the published reference
+        assert_eq!(fnv64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv64(b""), 0xcbf29ce484222325);
+    }
+}

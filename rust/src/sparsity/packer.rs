@@ -7,19 +7,33 @@
 //! (Theorem 1).
 
 /// Packing error: the input row violates its declared pattern.
+///
+/// `row` is `Some(r)` when the caller packed a whole matrix (the FIRST
+/// offending row, identical at any thread count) and `None` when a single
+/// row was packed in isolation — [`pack_row`] has no row index to report,
+/// so it no longer fabricates `row: 0`. The artifact pipeline folds this
+/// into [`crate::runtime::ssaf::ArtifactError`], which always carries the
+/// tensor name and the concrete row.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PackError {
-    pub row: usize,
+    pub row: Option<usize>,
     pub unplaced: usize,
 }
 
 impl std::fmt::Display for PackError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(
-            f,
-            "row {} violates the sparsity budget: {} non-zeros unplaced",
-            self.row, self.unplaced
-        )
+        match self.row {
+            Some(r) => write!(
+                f,
+                "row {} violates the sparsity budget: {} non-zeros unplaced",
+                r, self.unplaced
+            ),
+            None => write!(
+                f,
+                "row violates the sparsity budget: {} non-zeros unplaced",
+                self.unplaced
+            ),
+        }
     }
 }
 
@@ -72,13 +86,18 @@ pub fn pack_row_into(w: &[f32], n: usize, out: &mut [f32], used: &mut [bool]) ->
         .count()
 }
 
-/// Pack one row, allocating the output.
+/// Pack one row, allocating the output. On failure the error carries
+/// `row: None` — a lone row has no matrix index.
+///
+/// Offline conversion call sites should prefer the fused
+/// [`crate::runtime::ssaf::ArtifactBuilder`], which prunes, quantizes and
+/// packs in one sweep and reports errors with tensor + row context.
 pub fn pack_row(w: &[f32], n: usize) -> Result<Vec<f32>, PackError> {
     let mut out = vec![0.0; expanded_k(w.len(), n)];
     let mut used = vec![false; w.len()];
     let unplaced = pack_row_into(w, n, &mut out, &mut used);
     if unplaced > 0 {
-        return Err(PackError { row: 0, unplaced });
+        return Err(PackError { row: None, unplaced });
     }
     Ok(out)
 }
@@ -100,6 +119,10 @@ impl PackedMatrix {
 }
 
 /// Pack a [rows, k] row-major matrix (the offline phase of Fig. 5).
+///
+/// This is the staged-pipeline primitive; end-to-end offline conversion
+/// (prune → quantize → pack → serialize) should go through the fused
+/// [`crate::runtime::ssaf::ArtifactBuilder`] instead.
 pub fn pack_matrix(w: &[f32], rows: usize, k: usize, n: usize)
     -> Result<PackedMatrix, PackError> {
     assert_eq!(w.len(), rows * k);
@@ -114,14 +137,16 @@ pub fn pack_matrix(w: &[f32], rows: usize, k: usize, n: usize)
             &mut used,
         );
         if unplaced > 0 {
-            return Err(PackError { row: r, unplaced });
+            return Err(PackError { row: Some(r), unplaced });
         }
     }
     Ok(PackedMatrix { data, rows, k_orig: k, k_packed: kp, n })
 }
 
 /// `pack_matrix` with the row loop partitioned over a worker pool (the
-/// A.2 projection: the offline 70B conversion wants every core). Rows
+/// A.2 projection: the offline 70B conversion wants every core). Prefer
+/// [`crate::runtime::ssaf::ArtifactBuilder`] for full offline
+/// conversions — it fuses prune/quantize/pack into one pooled sweep. Rows
 /// are split into contiguous blocks, one per lane, each writing its own
 /// disjoint slice of the output — the packed matrix is byte-identical
 /// to the serial result regardless of thread count, and on a
@@ -154,11 +179,11 @@ pub fn pack_matrix_pool(
                 // rows before the global first error never fail, so the
                 // min over per-block first errors IS the serial error
                 let keep = match e.as_ref() {
-                    Some(p) => r < p.row,
+                    Some(p) => p.row.is_none_or(|pr| r < pr),
                     None => true,
                 };
                 if keep {
-                    *e = Some(PackError { row: r, unplaced });
+                    *e = Some(PackError { row: Some(r), unplaced });
                 }
                 return;
             }
@@ -210,7 +235,10 @@ mod tests {
     #[test]
     fn rejects_overfull_rows() {
         let row = [1.0; 8]; // 8 nonzeros > capacity 6
-        assert!(pack_row(&row, 4).is_err());
+        let err = pack_row(&row, 4).unwrap_err();
+        // a lone row carries no fabricated matrix index
+        assert_eq!(err.row, None);
+        assert_eq!(err.unplaced, 2);
     }
 
     #[test]
@@ -280,7 +308,7 @@ mod tests {
             *v = 1.0;
         }
         let err = pack_matrix(&bad, rows, k, n).unwrap_err();
-        assert_eq!(err.row, 3);
+        assert_eq!(err.row, Some(3));
     }
 
     #[test]
@@ -307,11 +335,11 @@ mod tests {
                 *v = 1.0;
             }
         }
-        assert_eq!(pack_matrix(&bad, rows, k, n).unwrap_err().row, 5);
+        assert_eq!(pack_matrix(&bad, rows, k, n).unwrap_err().row, Some(5));
         for threads in [2usize, 4, 8] {
             let pool = ThreadPool::new(threads);
             let err = pack_matrix_pool(&pool, &bad, rows, k, n).unwrap_err();
-            assert_eq!(err.row, 5, "{threads} threads");
+            assert_eq!(err.row, Some(5), "{threads} threads");
         }
     }
 

@@ -9,19 +9,30 @@
 //! gains (paper §5.3 "Memory-Bound Decode").
 
 use crate::stc::microkernel::{auto_kernel, Microkernel};
+use crate::util::Seg;
 
 /// Compressed 2:4 matrix: for every output row, k_packed/2 (value, column)
 /// pairs. Columns are absolute (precomputed from the 2-bit metadata) so
 /// the hot loop is a pure gather-multiply.
+///
+/// Storage is [`Seg`]-backed: `Owned` for the in-memory pipeline, or
+/// borrowed straight out of an mmap'd `.ssaf` artifact
+/// (`runtime::ssaf`) for zero-copy cold starts. Kernels see plain
+/// slices either way.
 #[derive(Clone, Debug)]
 pub struct Compressed24 {
-    pub vals: Vec<i8>,
-    pub cols: Vec<u32>,
+    pub vals: Seg<i8>,
+    pub cols: Seg<u32>,
     pub rows: usize,
     pub k_packed: usize,
     /// 2-bit metadata as stored by hardware (two positions per window).
-    pub meta: Vec<u8>,
+    pub meta: Seg<u8>,
 }
+
+/// The role this struct plays in the artifact pipeline (the paper's
+/// compressed operand); `runtime::ssaf` and docs refer to it by this
+/// name.
+pub type CompressedMatrix = Compressed24;
 
 impl Compressed24 {
     /// Compress a 2:4-compliant row-major [rows, k_packed] int8 matrix.
@@ -65,7 +76,13 @@ impl Compressed24 {
                 meta[r * (k_packed / 4) + win] = positions[0] | (positions[1] << 2);
             }
         }
-        Ok(Compressed24 { vals, cols, rows, k_packed, meta })
+        Ok(Compressed24 {
+            vals: vals.into(),
+            cols: cols.into(),
+            rows,
+            k_packed,
+            meta: meta.into(),
+        })
     }
 
     /// Compressed storage bytes (values + 2-bit metadata), the footprint
@@ -470,7 +487,7 @@ mod tests {
         let mut rng = XorShift::new(5);
         let w = random_24_row(&mut rng, 16);
         let c = Compressed24::from_dense(&w, 1, 16).unwrap();
-        for m in &c.meta {
+        for m in c.meta.iter() {
             let p0 = m & 3;
             let p1 = (m >> 2) & 3;
             assert_ne!(p0, p1, "positions must be distinct");

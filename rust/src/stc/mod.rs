@@ -52,7 +52,7 @@ pub use compressed::{
     gemm_compressed_i8, gemm_compressed_i8_mtile, gemm_compressed_i8_mtile_pool,
     gemm_compressed_i8_mtile_pool_with, gemm_compressed_i8_mtile_with, gemv_compressed_i8,
     gemv_compressed_i8_batch_pool, gemv_compressed_i8_batch_pool_with, gemv_compressed_i8_pool,
-    gemv_compressed_i8_with, Compressed24,
+    gemv_compressed_i8_with, Compressed24, CompressedMatrix,
 };
 pub use dense::{
     gemm_f32, gemm_i8, gemm_i8_mtile, gemm_i8_mtile_pool, gemm_i8_mtile_pool_with,

@@ -16,7 +16,7 @@ use crate::stc::compressed::{
 };
 use crate::stc::dense::{gemm_i8_mtile_pool_with, gemm_i8_panels_pool_with, pack_b_panels};
 use crate::stc::microkernel::{auto_kernel, Microkernel};
-use crate::util::ThreadPool;
+use crate::util::{Seg, ThreadPool};
 
 /// A prepared SlideSparse linear layer: offline-packed + compressed
 /// weights and the fused activation kernel. Executes on `pool` (the
@@ -28,7 +28,7 @@ pub struct SlideLinear {
     pub k: usize,
     pub n: usize,
     pub weights: Compressed24,
-    pub w_scales: Vec<f32>,
+    pub w_scales: Seg<f32>,
     pub kernel: FusedQuantSlide,
     pool: Arc<ThreadPool>,
     micro: &'static dyn Microkernel,
@@ -38,6 +38,12 @@ pub struct SlideLinear {
 impl SlideLinear {
     /// Offline phase: prune dense f32 weights to (2N-2):2N, quantize
     /// per-channel, pack (Phi), compress to the 2:4 format.
+    ///
+    /// This is the REFERENCE staged pipeline: each stage materializes its
+    /// output, which keeps every intermediate inspectable in tests. The
+    /// fused single-sweep equivalent lives in
+    /// [`crate::runtime::ssaf`] (property-tested byte-identical to this
+    /// path) and is what offline artifact conversion uses.
     pub fn prepare(w: &[f32], o: usize, k: usize, n: usize) -> SlideLinear {
         assert_eq!(w.len(), o * k);
         let pruned = prune_magnitude(w, o, k, 2 * n - 2, 2 * n);
@@ -52,7 +58,7 @@ impl SlideLinear {
             k,
             n,
             weights,
-            w_scales: ws,
+            w_scales: ws.into(),
             kernel: FusedQuantSlide::new(k, n),
             pool: ThreadPool::serial(),
             micro: auto_kernel(),
@@ -73,7 +79,33 @@ impl SlideLinear {
             k,
             n,
             weights,
-            w_scales: ws,
+            w_scales: ws.into(),
+            kernel: FusedQuantSlide::new(k, n),
+            pool: ThreadPool::serial(),
+            micro: auto_kernel(),
+            micro_decode: auto_kernel(),
+        }
+    }
+
+    /// Assemble from already-converted parts — the zero-copy artifact
+    /// load path (`runtime::ssaf`): the weight and scale segments may
+    /// borrow an mmap'd file, and nothing is pruned, packed or copied
+    /// here.
+    pub fn from_parts(
+        o: usize,
+        k: usize,
+        n: usize,
+        weights: Compressed24,
+        w_scales: Seg<f32>,
+    ) -> SlideLinear {
+        assert_eq!(weights.rows, o);
+        assert_eq!(w_scales.len(), o);
+        SlideLinear {
+            o,
+            k,
+            n,
+            weights,
+            w_scales,
             kernel: FusedQuantSlide::new(k, n),
             pool: ThreadPool::serial(),
             micro: auto_kernel(),
@@ -135,13 +167,14 @@ impl SlideLinear {
 pub struct DenseLinear {
     pub o: usize,
     pub k: usize,
-    pub wq: Vec<i8>,
+    pub wq: Seg<i8>,
     /// Column-blocked B-panel relayout of `wq` (see
     /// [`crate::stc::dense::pack_b_panels`]), built once at prepare time
     /// so the decode GEMV streams K-major panels instead of striding
-    /// weight rows.
-    pub wpan: Vec<i8>,
-    pub w_scales: Vec<f32>,
+    /// weight rows. The layout depends only on the fixed tile constant,
+    /// so artifacts store it and the loader maps it back zero-copy.
+    pub wpan: Seg<i8>,
+    pub w_scales: Seg<f32>,
     pool: Arc<ThreadPool>,
     micro: &'static dyn Microkernel,
     micro_decode: &'static dyn Microkernel,
@@ -154,9 +187,33 @@ impl DenseLinear {
         DenseLinear {
             o,
             k,
+            wq: wq.into(),
+            wpan: wpan.into(),
+            w_scales: ws.into(),
+            pool: ThreadPool::serial(),
+            micro: auto_kernel(),
+            micro_decode: auto_kernel(),
+        }
+    }
+
+    /// Assemble from already-quantized parts — the zero-copy artifact
+    /// load path (`runtime::ssaf`); segments may borrow an mmap'd file.
+    pub fn from_parts(
+        o: usize,
+        k: usize,
+        wq: Seg<i8>,
+        wpan: Seg<i8>,
+        w_scales: Seg<f32>,
+    ) -> DenseLinear {
+        assert_eq!(wq.len(), o * k);
+        assert_eq!(wpan.len(), o.div_ceil(crate::stc::dense::MT) * crate::stc::dense::MT * k);
+        assert_eq!(w_scales.len(), o);
+        DenseLinear {
+            o,
+            k,
             wq,
             wpan,
-            w_scales: ws,
+            w_scales,
             pool: ThreadPool::serial(),
             micro: auto_kernel(),
             micro_decode: auto_kernel(),

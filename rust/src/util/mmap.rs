@@ -1,0 +1,338 @@
+//! Read-only memory mapping with a heap fallback, plus `Seg<T>`: the
+//! borrowed-or-owned storage that lets packed weights point straight into
+//! a mapped artifact file (`runtime::ssaf`) without copying.
+//!
+//! std-only: the unix path declares `mmap`/`munmap` directly (libc is
+//! already linked by std); every other configuration — and Miri, whose
+//! interpreter has no mmap — reads the file into an 8-byte-aligned heap
+//! buffer instead. Both paths expose identical bytes, so everything above
+//! this module is backend-agnostic.
+
+use std::io;
+use std::path::Path;
+use std::sync::Arc;
+
+#[cfg(all(unix, not(miri)))]
+mod sys {
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        pub fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+}
+
+enum Backing {
+    /// A live `mmap(2)` region, unmapped on drop.
+    #[cfg(all(unix, not(miri)))]
+    Map { ptr: *const u8 },
+    /// Heap copy in a `u64` buffer: 8-byte base alignment, so 64-byte
+    /// aligned segment offsets stay aligned for every artifact dtype.
+    Heap(Vec<u64>),
+}
+
+/// An immutable byte region: either a real file mapping or a heap read.
+pub struct Mapped {
+    len: usize,
+    backing: Backing,
+}
+
+// SAFETY: the region is read-only for its whole lifetime; the mmap
+// pointer is never aliased mutably and the heap buffer is never touched
+// after construction.
+unsafe impl Send for Mapped {}
+unsafe impl Sync for Mapped {}
+
+impl std::fmt::Debug for Mapped {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = match self.backing {
+            #[cfg(all(unix, not(miri)))]
+            Backing::Map { .. } => "mmap",
+            Backing::Heap(_) => "heap",
+        };
+        write!(f, "Mapped({kind}, {} bytes)", self.len)
+    }
+}
+
+impl Mapped {
+    /// Map `path` read-only. Uses `mmap` where available (unix, not
+    /// Miri) and transparently falls back to [`Mapped::open_heap`]
+    /// elsewhere or when the mapping fails (e.g. an empty file).
+    pub fn open(path: &Path) -> io::Result<Mapped> {
+        #[cfg(all(unix, not(miri)))]
+        {
+            use std::os::unix::io::AsRawFd;
+            let file = std::fs::File::open(path)?;
+            let len = file.metadata()?.len();
+            if len > 0 && len <= usize::MAX as u64 {
+                let len = len as usize;
+                // SAFETY: fd is valid for the duration of the call;
+                // PROT_READ + MAP_PRIVATE never mutates the file.
+                let ptr = unsafe {
+                    sys::mmap(
+                        std::ptr::null_mut(),
+                        len,
+                        sys::PROT_READ,
+                        sys::MAP_PRIVATE,
+                        file.as_raw_fd(),
+                        0,
+                    )
+                };
+                if ptr as isize != -1 && !ptr.is_null() {
+                    return Ok(Mapped { len, backing: Backing::Map { ptr } });
+                }
+            }
+        }
+        Self::open_heap(path)
+    }
+
+    /// Read `path` into an aligned heap buffer (the tests/Miri path).
+    pub fn open_heap(path: &Path) -> io::Result<Mapped> {
+        Ok(Self::from_vec(std::fs::read(path)?))
+    }
+
+    /// Wrap in-memory bytes (fuzzing and unit tests): copies into a
+    /// `u64`-backed buffer so segment casts stay aligned.
+    pub fn from_vec(bytes: Vec<u8>) -> Mapped {
+        let len = bytes.len();
+        let mut words = vec![0u64; len.div_ceil(8)];
+        // SAFETY: the word buffer spans at least `len` bytes.
+        unsafe {
+            std::ptr::copy_nonoverlapping(bytes.as_ptr(), words.as_mut_ptr() as *mut u8, len);
+        }
+        Mapped { len, backing: Backing::Heap(words) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The mapped bytes.
+    pub fn as_bytes(&self) -> &[u8] {
+        match &self.backing {
+            #[cfg(all(unix, not(miri)))]
+            // SAFETY: ptr..ptr+len is the live PROT_READ mapping.
+            Backing::Map { ptr } => unsafe { std::slice::from_raw_parts(*ptr, self.len) },
+            Backing::Heap(words) => {
+                // SAFETY: the buffer holds >= len initialized bytes.
+                unsafe { std::slice::from_raw_parts(words.as_ptr() as *const u8, self.len) }
+            }
+        }
+    }
+}
+
+impl Drop for Mapped {
+    fn drop(&mut self) {
+        #[cfg(all(unix, not(miri)))]
+        if let Backing::Map { ptr } = self.backing {
+            // SAFETY: ptr/len came from a successful mmap; unmapped once.
+            unsafe {
+                sys::munmap(ptr as *mut u8, self.len);
+            }
+        }
+    }
+}
+
+impl std::ops::Deref for Mapped {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_bytes()
+    }
+}
+
+/// Element types a `Seg` may reinterpret from raw artifact bytes: every
+/// bit pattern is a valid value, no padding, no destructor.
+pub trait Pod: Copy + 'static {}
+impl Pod for i8 {}
+impl Pod for u8 {}
+impl Pod for u32 {}
+impl Pod for f32 {}
+
+/// Borrowed-or-owned typed storage. `Owned` is a plain `Vec` (the
+/// in-memory pipeline); `Mapped` borrows a range of a shared [`Mapped`]
+/// region (the zero-copy artifact load path). Both deref to `[T]`, so
+/// kernels are oblivious to where the weights live.
+#[derive(Clone, Debug)]
+pub enum Seg<T: Pod> {
+    Owned(Vec<T>),
+    Mapped {
+        map: Arc<Mapped>,
+        /// Byte offset of the first element inside `map`.
+        byte_off: usize,
+        /// Element count.
+        len: usize,
+    },
+}
+
+impl<T: Pod> Seg<T> {
+    /// Borrow `len` elements of `T` at `byte_off` inside `map`,
+    /// validating bounds and alignment up front so `deref` stays
+    /// branch-free and panic-free.
+    pub fn mapped(map: &Arc<Mapped>, byte_off: usize, len: usize) -> Result<Seg<T>, &'static str> {
+        let bytes = len
+            .checked_mul(std::mem::size_of::<T>())
+            .ok_or("segment length overflows")?;
+        let end = byte_off.checked_add(bytes).ok_or("segment offset overflows")?;
+        if end > map.len() {
+            return Err("segment out of bounds");
+        }
+        let base = map.as_bytes().as_ptr() as usize;
+        if (base + byte_off) % std::mem::align_of::<T>() != 0 {
+            return Err("segment misaligned");
+        }
+        Ok(Seg::Mapped { map: Arc::clone(map), byte_off, len })
+    }
+
+    /// True when the storage borrows a mapped region (no heap copy).
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, Seg::Mapped { .. })
+    }
+}
+
+impl<T: Pod> From<Vec<T>> for Seg<T> {
+    fn from(v: Vec<T>) -> Seg<T> {
+        Seg::Owned(v)
+    }
+}
+
+impl<T: Pod> std::ops::Deref for Seg<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        match self {
+            Seg::Owned(v) => v,
+            Seg::Mapped { map, byte_off, len } => {
+                // SAFETY: bounds and alignment were checked at
+                // construction; T is Pod so any bytes are a valid value;
+                // the map is immutable and outlives the borrow via Arc.
+                unsafe {
+                    let p = map.as_bytes().as_ptr().add(*byte_off) as *const T;
+                    std::slice::from_raw_parts(p, *len)
+                }
+            }
+        }
+    }
+}
+
+impl<T: Pod + PartialEq> PartialEq for Seg<T> {
+    fn eq(&self, other: &Seg<T>) -> bool {
+        self[..] == other[..]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_file(tag: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("slidesparse_mmap_{}_{tag}.bin", std::process::id()));
+        std::fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn from_vec_roundtrips_bytes() {
+        for len in [0usize, 1, 7, 8, 9, 64, 100] {
+            let bytes: Vec<u8> = (0..len as u32).map(|i| (i * 37 + 11) as u8).collect();
+            let m = Mapped::from_vec(bytes.clone());
+            assert_eq!(m.len(), len);
+            assert_eq!(m.as_bytes(), &bytes[..]);
+        }
+    }
+
+    #[test]
+    fn heap_buffer_base_is_8_aligned() {
+        let m = Mapped::from_vec(vec![1, 2, 3, 4, 5]);
+        assert_eq!(m.as_bytes().as_ptr() as usize % 8, 0);
+    }
+
+    #[test]
+    fn typed_segments_reinterpret_bytes() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&0x0403_0201u32.to_le_bytes());
+        bytes.extend_from_slice(&1.5f32.to_le_bytes());
+        bytes.extend_from_slice(&[0x7f, 0x80]); // i8: 127, -128
+        let map = Arc::new(Mapped::from_vec(bytes));
+        let u: Seg<u32> = Seg::mapped(&map, 0, 1).unwrap();
+        assert_eq!(&u[..], &[0x0403_0201]);
+        let f: Seg<f32> = Seg::mapped(&map, 4, 1).unwrap();
+        assert_eq!(&f[..], &[1.5]);
+        let i: Seg<i8> = Seg::mapped(&map, 8, 2).unwrap();
+        assert_eq!(&i[..], &[127, -128]);
+        assert!(u.is_mapped() && f.is_mapped() && i.is_mapped());
+    }
+
+    #[test]
+    fn segment_validation_rejects_bad_ranges() {
+        let map = Arc::new(Mapped::from_vec(vec![0u8; 16]));
+        assert!(Seg::<u32>::mapped(&map, 0, 4).is_ok());
+        // out of bounds
+        assert!(Seg::<u32>::mapped(&map, 0, 5).is_err());
+        assert!(Seg::<u8>::mapped(&map, 16, 1).is_err());
+        // misaligned for 4-byte elements
+        assert!(Seg::<u32>::mapped(&map, 2, 1).is_err());
+        assert!(Seg::<f32>::mapped(&map, 1, 1).is_err());
+        // overflow in the length computation must error, not wrap
+        assert!(Seg::<u32>::mapped(&map, 0, usize::MAX / 2).is_err());
+        assert!(Seg::<u8>::mapped(&map, usize::MAX, 1).is_err());
+    }
+
+    #[test]
+    fn owned_and_mapped_compare_equal() {
+        let vals: Vec<u32> = vec![7, 8, 9];
+        let mut bytes = Vec::new();
+        for v in &vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let map = Arc::new(Mapped::from_vec(bytes));
+        let mapped: Seg<u32> = Seg::mapped(&map, 0, 3).unwrap();
+        let owned: Seg<u32> = vals.into();
+        assert_eq!(mapped, owned);
+        assert!(!owned.is_mapped());
+        // Clone of a mapped seg shares the region
+        assert_eq!(mapped.clone(), mapped);
+    }
+
+    #[test]
+    fn open_heap_reads_file() {
+        let bytes: Vec<u8> = (0u32..200).map(|i| (i % 251) as u8).collect();
+        let p = temp_file("heap", &bytes);
+        let m = Mapped::open_heap(&p).unwrap();
+        assert_eq!(m.as_bytes(), &bytes[..]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn open_matches_heap_fallback() {
+        // on unix this exercises the real mmap path; elsewhere both are
+        // heap reads — either way the bytes must be identical
+        let bytes: Vec<u8> = (0u32..4096).map(|i| (i * 13 % 256) as u8).collect();
+        let p = temp_file("map", &bytes);
+        let m = Mapped::open(&p).unwrap();
+        let h = Mapped::open_heap(&p).unwrap();
+        assert_eq!(m.as_bytes(), h.as_bytes());
+        assert_eq!(&m[..16], &h[..16]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn empty_file_maps_as_empty() {
+        let p = temp_file("empty", &[]);
+        let m = Mapped::open(&p).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(m.as_bytes(), &[] as &[u8]);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -5,9 +5,11 @@
 
 pub mod cli;
 pub mod json;
+pub mod mmap;
 pub mod pool;
 pub mod prng;
 pub mod prop;
 pub mod stats;
 
+pub use mmap::{Mapped, Seg};
 pub use pool::ThreadPool;

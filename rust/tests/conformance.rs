@@ -15,6 +15,7 @@ use slidesparse::coordinator::{
 };
 use slidesparse::model::{Backend, BlockConfig, NativeModel};
 use slidesparse::quant::quantize_weight_per_channel;
+use slidesparse::runtime::{Artifact, ArtifactBuilder, TensorView};
 use slidesparse::sparsity::prune::prune_magnitude;
 use slidesparse::sparsity::LiftPlan;
 use slidesparse::sparsity::{pack_matrix, Pattern};
@@ -127,7 +128,7 @@ fn compressed24_roundtrips_and_meta_is_wellformed() {
         let c = Compressed24::from_dense(&w, o, kp).unwrap();
         assert_eq!(c.to_dense(), w, "decompress must invert compress");
         assert_eq!(c.storage_bytes(), o * (kp / 2 + kp / 4));
-        for mb in &c.meta {
+        for mb in c.meta.iter() {
             let p0 = mb & 3;
             let p1 = (mb >> 2) & 3;
             assert_ne!(p0, p1, "metadata positions must be distinct");
@@ -756,6 +757,138 @@ fn decode_tail_handoff_resumes_mid_generation_bit_exact_across_backends() {
                 assert_eq!(b.metrics.kv_imported_blocks, 2, "{ctx}: both blocks injected");
             }
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// (i) packed-model artifacts: the fused single-pass offline pipeline is
+//     byte-identical to the staged reference through a full serialize →
+//     reparse round-trip, and artifact-served generations are bit-exact
+//     with the in-memory model across backends x 1/2/4/8 threads
+// ---------------------------------------------------------------------
+
+#[test]
+fn fused_offline_pipeline_matches_staged_through_file_roundtrip() {
+    // property: for every family pattern and worker-pool width, the
+    // fused prune+quant+pack sweep serialized to `.ssaf` and reparsed
+    // yields exactly the bytes the staged prune -> quantize -> pack ->
+    // compress reference produces
+    for n in FAMILY_NS {
+        let backend = if n == 2 { Backend::Native24 } else { Backend::Slide { n } };
+        prop::for_all(&format!("fused == staged through .ssaf, N={n}"), |rng, _| {
+            let k = 2 * n * (1 + rng.below(4));
+            let o = 1 + rng.below(12);
+            let threads = 1 << rng.below(4); // 1 / 2 / 4 / 8
+            let w: Vec<f32> = (0..o * k).map(|_| rng.normal()).collect();
+            // staged reference
+            let pruned = prune_magnitude(&w, o, k, 2 * n - 2, 2 * n);
+            let (wq, ws) = quantize_weight_per_channel(&pruned, o, k);
+            let wq_f: Vec<f32> = wq.iter().map(|v| *v as f32).collect();
+            let packed = pack_matrix(&wq_f, o, k, n).unwrap();
+            let packed_i8: Vec<i8> = packed.data.iter().map(|v| *v as i8).collect();
+            let want = Compressed24::from_dense(&packed_i8, o, packed.k_packed).unwrap();
+            // fused single pass, through serialize + reparse
+            let bytes = ArtifactBuilder::new(backend)
+                .threads(threads)
+                .add_tensor("w", &w, o, k)
+                .unwrap()
+                .finish()
+                .to_bytes()
+                .unwrap();
+            let art = Artifact::from_bytes(bytes).unwrap();
+            art.verify().unwrap();
+            match art.get("w").unwrap() {
+                TensorView::Slide { rows, k_orig, k_pad, n: tn, weights, scales } => {
+                    assert_eq!((rows, k_orig, k_pad, tn), (o, k, k, n), "N={n}");
+                    assert_eq!(weights.k_packed, want.k_packed, "N={n}");
+                    assert_eq!(&weights.vals[..], &want.vals[..], "vals, N={n}");
+                    assert_eq!(&weights.cols[..], &want.cols[..], "cols, N={n}");
+                    assert_eq!(&weights.meta[..], &want.meta[..], "meta, N={n}");
+                    assert_eq!(&scales[..], &ws[..], "scales, N={n}");
+                }
+                _ => panic!("expected a slide view, N={n}"),
+            }
+        });
+    }
+}
+
+#[test]
+fn fused_dense_quant_matches_staged_through_file_roundtrip() {
+    prop::for_all("fused dense == staged through .ssaf", |rng, _| {
+        let k = 1 + rng.below(40);
+        let o = 1 + rng.below(24);
+        let w: Vec<f32> = (0..o * k).map(|_| rng.normal()).collect();
+        let (wq, ws) = quantize_weight_per_channel(&w, o, k);
+        let wpan = pack_b_panels(&wq, o, k);
+        let bytes = ArtifactBuilder::new(Backend::Dense)
+            .threads(1 + rng.below(4))
+            .add_tensor("w", &w, o, k)
+            .unwrap()
+            .finish()
+            .to_bytes()
+            .unwrap();
+        let art = Artifact::from_bytes(bytes).unwrap();
+        art.verify().unwrap();
+        match art.get("w").unwrap() {
+            TensorView::Dense { rows, k_orig, wq: got_wq, wpan: got_pan, scales } => {
+                assert_eq!((rows, k_orig), (o, k));
+                assert_eq!(&got_wq[..], &wq[..], "quantized weights");
+                assert_eq!(&got_pan[..], &wpan[..], "decode B-panels");
+                assert_eq!(&scales[..], &ws[..], "scales");
+            }
+            _ => panic!("expected a dense view"),
+        }
+    });
+}
+
+#[test]
+fn artifact_served_generations_bit_exact_across_backends_and_threads() {
+    // builder -> write -> map -> serve: the full engine over a
+    // disk-loaded executor generates byte-identical tokens to the same
+    // engine over the in-memory generated model, for every backend and
+    // thread count — the acceptance gate for `serve --artifact`
+    use slidesparse::model::build_generated_artifact;
+    let cfg = BlockConfig { dim: 48, n_heads: 2, ffn: 64 };
+    let (layers, vocab, smax, seed) = (2usize, 128usize, 96usize, 23u64);
+    let run = |exec: StcExecutor, threads: usize| {
+        let mut engine =
+            Engine::new(exec, EngineConfig { threads, ..Default::default() });
+        for i in 0..6u64 {
+            let prompt: Vec<i32> = (0..5).map(|t| (i as i32 * 11 + t * 3) % 128).collect();
+            engine.submit(Request::new(
+                i,
+                prompt,
+                SamplingParams { max_new_tokens: 8, ..Default::default() },
+            ));
+        }
+        let mut outs = engine.run_to_completion().unwrap();
+        outs.sort_by_key(|o| o.id);
+        outs.into_iter().map(|o| o.tokens).collect::<Vec<_>>()
+    };
+    for backend in [Backend::Dense, Backend::Slide { n: 4 }, Backend::Native24] {
+        let tag = match backend {
+            Backend::Dense => "dense",
+            Backend::Native24 => "n24",
+            Backend::Slide { .. } => "s4",
+        };
+        let mut path = std::env::temp_dir();
+        path.push(format!("slidesparse_conf_{}_{tag}.ssaf", std::process::id()));
+        build_generated_artifact(cfg, layers, vocab, smax, seed, backend, 2)
+            .unwrap()
+            .write(&path)
+            .unwrap();
+        for threads in [1usize, 2, 4, 8] {
+            let from_disk = StcExecutor::from_artifact(&path).unwrap();
+            let in_mem = StcExecutor::new(NativeModel::generate(
+                cfg, layers, vocab, smax, seed, backend,
+            ));
+            assert_eq!(
+                run(from_disk, threads),
+                run(in_mem, threads),
+                "{backend:?} t={threads}: artifact-served generations"
+            );
+        }
+        std::fs::remove_file(&path).ok();
     }
 }
 

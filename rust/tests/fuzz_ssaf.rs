@@ -1,0 +1,243 @@
+//! Seeded mutation harness over the `.ssaf` packed-model artifact
+//! format (v1), the twin of `fuzz_wire.rs` for the other byte boundary
+//! a worker consumes: a weight file written by an earlier offline run.
+//!
+//! `Artifact::from_bytes` (the header parse behind `Artifact::open`)
+//! plus `Artifact::verify` (the O(data) checksum pass) must together
+//! reject EVERY damaged buffer gracefully — an error, never a panic,
+//! never a model assembled from aliased weights. The damage space:
+//!
+//! - every truncation offset (torn download / partial write),
+//! - every single bitflip (bit rot — exhaustive, not sampled),
+//! - seeded random multi-bitflips (burst corruption),
+//! - every header shape/offset/length field rewritten to hostile values
+//!   WITH the header checksum recomputed, so the structural checks
+//!   themselves are on trial rather than the checksum gate in front.
+//!
+//! std-only: the rng is the repo's own XorShift, so the "random" trials
+//! are reproducible byte-for-byte from the literal seed below.
+
+use slidesparse::model::Backend;
+use slidesparse::runtime::ssaf::fnv64;
+use slidesparse::runtime::{Artifact, ArtifactBuilder};
+use slidesparse::util::prng::XorShift;
+
+/// A small artifact exercising every section kind the backend allows:
+/// one packed linear (4 segments) plus one raw f32 tensor.
+fn sample_bytes(backend: Backend) -> Vec<u8> {
+    let mut rng = XorShift::new(7);
+    let w: Vec<f32> = (0..2 * 16).map(|_| rng.normal()).collect();
+    let e: Vec<f32> = (0..2 * 4).map(|_| rng.normal()).collect();
+    ArtifactBuilder::new(backend)
+        .add_tensor("w", &w, 2, 16)
+        .unwrap()
+        .add_raw_tensor("e", &e, 2, 4)
+        .unwrap()
+        .finish()
+        .to_bytes()
+        .unwrap()
+}
+
+/// The acceptance criterion under attack: a damaged buffer must fail
+/// the O(header) open OR the O(data) verify. (Header damage trips the
+/// sealed header checksum or a structural check; data and padding
+/// damage is only visible to the per-section pass.)
+fn rejected(bytes: &[u8]) -> bool {
+    match Artifact::from_bytes(bytes.to_vec()) {
+        Err(_) => true,
+        Ok(a) => a.verify().is_err(),
+    }
+}
+
+/// One mutable header field: byte offset, width in bytes, current value.
+struct Field {
+    off: usize,
+    width: usize,
+    orig: u64,
+    what: &'static str,
+}
+
+/// Walk the header layout and return every shape/count/offset/length
+/// field, plus the total header length. Mirrors `BuiltArtifact::
+/// to_bytes` — a layout change breaks this loudly via the checksum
+/// cross-check at the end.
+fn header_fields(bytes: &[u8]) -> (usize, Vec<Field>) {
+    let u16_at = |o: usize| u16::from_le_bytes(bytes[o..o + 2].try_into().unwrap()) as u64;
+    let u32_at = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap()) as u64;
+    let u64_at = |o: usize| u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap());
+    let mut fields = Vec::new();
+    // magic(4) version(2) endian(2) backend(4) dims(6*4) = 36
+    let n_tensors = u32_at(36) as usize;
+    fields.push(Field { off: 36, width: 4, orig: n_tensors as u64, what: "n_tensors" });
+    let mut pos = 40;
+    for _ in 0..n_tensors {
+        let name_len = u16_at(pos) as usize;
+        fields.push(Field { off: pos, width: 2, orig: name_len as u64, what: "name_len" });
+        pos += 2 + name_len;
+        fields.push(Field { off: pos, width: 1, orig: bytes[pos] as u64, what: "kind" });
+        pos += 1;
+        for what in ["rows", "k_orig", "k_pad", "k_packed"] {
+            fields.push(Field { off: pos, width: 8, orig: u64_at(pos), what });
+            pos += 8;
+        }
+        fields.push(Field { off: pos, width: 4, orig: u32_at(pos), what: "n" });
+        pos += 4;
+        let n_segs = bytes[pos] as usize;
+        fields.push(Field { off: pos, width: 1, orig: n_segs as u64, what: "n_segs" });
+        pos += 1;
+        for _ in 0..n_segs {
+            pos += 1; // dtype (covered by the exhaustive bitflip sweep)
+            fields.push(Field { off: pos, width: 8, orig: u64_at(pos), what: "seg off" });
+            pos += 8;
+            fields.push(Field { off: pos, width: 8, orig: u64_at(pos), what: "seg len" });
+            pos += 8;
+            pos += 8; // seg fnv
+        }
+    }
+    assert_eq!(fnv64(&bytes[..pos]), u64_at(pos), "layout walk out of sync");
+    (pos + 8, fields)
+}
+
+/// Recompute and overwrite the sealed header checksum so a targeted
+/// field rewrite reaches the structural checks behind the gate.
+fn reseal(mut bytes: Vec<u8>, header_len: usize) -> Vec<u8> {
+    let split = header_len - 8;
+    let h = fnv64(&bytes[..split]);
+    bytes[split..header_len].copy_from_slice(&h.to_le_bytes());
+    bytes
+}
+
+/// Overwrite `width` bytes at `off` with the low bytes of `val`, reseal.
+fn patch(bytes: &[u8], header_len: usize, off: usize, width: usize, val: u64) -> Vec<u8> {
+    let mut m = bytes.to_vec();
+    m[off..off + width].copy_from_slice(&val.to_le_bytes()[..width]);
+    reseal(m, header_len)
+}
+
+#[test]
+fn clean_roundtrip_is_identity() {
+    for backend in [Backend::Slide { n: 4 }, Backend::Dense, Backend::Native24] {
+        let bytes = sample_bytes(backend);
+        // building twice is byte-deterministic (the artifact is content,
+        // not a log: same weights -> same file)
+        assert_eq!(bytes, sample_bytes(backend), "{backend:?}: non-deterministic bytes");
+        let art = Artifact::from_bytes(bytes.clone()).expect("clean artifact parses");
+        art.verify().expect("clean artifact deep-verifies");
+        assert_eq!(art.backend(), backend);
+        assert_eq!(art.tensor_names().collect::<Vec<_>>(), ["w", "e"]);
+        assert_eq!(art.file_len(), bytes.len());
+        art.get("w").expect("packed tensor view");
+        art.get("e").expect("raw tensor view");
+        assert!(art.get("nope").is_err());
+    }
+}
+
+#[test]
+fn every_truncation_offset_rejected() {
+    let bytes = sample_bytes(Backend::Slide { n: 4 });
+    for len in 0..bytes.len() {
+        assert!(
+            Artifact::from_bytes(bytes[..len].to_vec()).is_err(),
+            "truncation to {len}/{} bytes parsed",
+            bytes.len()
+        );
+    }
+    assert!(Artifact::from_bytes(bytes).is_ok());
+}
+
+#[test]
+fn every_single_bitflip_rejected() {
+    // exhaustive over the whole file, both backends (slide exercises the
+    // 4-segment recipe, dense the B-panel recipe): a flip lands in the
+    // header (sealed checksum / structural checks), in a data section
+    // (per-section checksum), or in alignment padding (must-be-zero) —
+    // somewhere, the reject must fire, without panicking
+    for backend in [Backend::Slide { n: 4 }, Backend::Dense] {
+        let bytes = sample_bytes(backend);
+        for byte in 0..bytes.len() {
+            for bit in 0..8 {
+                let mut m = bytes.clone();
+                m[byte] ^= 1 << bit;
+                assert!(
+                    rejected(&m),
+                    "{backend:?}: bitflip at byte {byte} bit {bit} accepted"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn seeded_random_multi_bitflips_rejected() {
+    let bytes = sample_bytes(Backend::Slide { n: 4 });
+    let mut rng = XorShift::new(0x55af_f12e);
+    let mut trials = 0;
+    while trials < 4000 {
+        let mut m = bytes.clone();
+        for _ in 0..(1 + rng.below(8)) {
+            let byte = rng.below(m.len());
+            let bit = rng.below(8);
+            m[byte] ^= 1 << bit;
+        }
+        if m == bytes {
+            // an even number of flips on the same bit is a no-op;
+            // only genuinely damaged buffers count as trials
+            continue;
+        }
+        trials += 1;
+        assert!(rejected(&m), "trial {trials} accepted");
+    }
+}
+
+#[test]
+fn hostile_header_fields_rejected_even_resealed() {
+    let bytes = sample_bytes(Backend::Slide { n: 4 });
+    let (header_len, fields) = header_fields(&bytes);
+    // 1 count + 8 per tensor (name_len, kind, 4 shapes, n, n_segs) + 2
+    // per segment; tensor "w" has 4 segments, raw "e" has 1
+    assert_eq!(fields.len(), 1 + 2 * 8 + 2 * (4 + 1), "field walk incomplete");
+    for f in &fields {
+        let max = u64::MAX >> (64 - 8 * f.width);
+        for val in [f.orig + 1, 0, 64, 0x7fff_ffff, max] {
+            let val = val & max;
+            if val == f.orig {
+                continue;
+            }
+            let m = patch(&bytes, header_len, f.off, f.width, val);
+            assert!(
+                rejected(&m),
+                "{} at {} rewritten {} -> {val} accepted",
+                f.what,
+                f.off,
+                f.orig
+            );
+        }
+    }
+}
+
+#[test]
+fn bad_magic_version_endian_backend_rejected_resealed() {
+    let bytes = sample_bytes(Backend::Slide { n: 4 });
+    let (header_len, _) = header_fields(&bytes);
+    // magic
+    assert!(rejected(&patch(&bytes, header_len, 0, 4, 0xdead_beef)));
+    // versions we never wrote (0, and a future one)
+    assert!(rejected(&patch(&bytes, header_len, 4, 2, 0)));
+    assert!(rejected(&patch(&bytes, header_len, 4, 2, 2)));
+    // byte-swapped endian marker (a big-endian writer's file)
+    assert!(rejected(&patch(&bytes, header_len, 6, 2, 0xFFFE)));
+    // unknown backend code (1 = Native24 would also fail: the slide
+    // tensors carry n = 4, not 2)
+    assert!(rejected(&patch(&bytes, header_len, 8, 4, 0xffff_ffff)));
+    assert!(rejected(&patch(&bytes, header_len, 8, 4, 1)));
+    // and flipping the slide artifact to "dense" orphans the packed kind
+    assert!(rejected(&patch(&bytes, header_len, 8, 4, 0)));
+}
+
+#[test]
+fn appended_garbage_rejected() {
+    // exact-length discipline: the file must end at the last segment
+    let mut bytes = sample_bytes(Backend::Slide { n: 4 });
+    bytes.push(0);
+    assert!(Artifact::from_bytes(bytes).is_err(), "trailing byte accepted");
+}
