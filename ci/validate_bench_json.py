@@ -97,7 +97,22 @@ SCHEMAS = {
         "schema_version": None,
         "studies": None,
     },
+    "BENCH_sparsity_formats.json": {
+        "smoke": None,
+        "bench": None,
+        "o": None,
+        "k": None,
+        "threads": None,
+        "decode_m": None,
+        "prefill_m": None,
+        "rows": None,
+        "vnm_bit_exact": None,
+        "act_skip_exact": None,
+    },
 }
+
+# required keys of each entry in BENCH_sparsity_formats.json's "rows" list
+SPARSITY_FORMAT_ROW_KEYS = {"format", "weight_bytes", "decode_s", "prefill_s"}
 
 # required keys of each entry in BENCH_elastic_fleet.json's "studies" list
 ELASTIC_STUDY_KEYS = {
@@ -316,6 +331,31 @@ def validate(path: str) -> None:
             and all(c in "0123456789abcdef" for c in cs)
         ):
             fail(f"{name}: header_fnv not 16-hex: {cs!r}")
+    if name == "BENCH_sparsity_formats.json":
+        if data["bench"] != "sparsity_formats":
+            fail(f"{name}: bench must be 'sparsity_formats'")
+        # THE format gates: V:N:M must be bit-exact with dense int8 on
+        # compliant weights, and the activation-sparsity machinery at
+        # keep=1.0 must be the exact (unsparsified) path
+        if data["vnm_bit_exact"] is not True:
+            fail(f"{name}: vnm_bit_exact must be true (V:N:M diverged from dense)")
+        if data["act_skip_exact"] is not True:
+            fail(f"{name}: act_skip_exact must be true (topk:1.0 not exact)")
+        if not data["rows"]:
+            fail(f"{name}: no format rows recorded")
+        formats = set()
+        for r in data["rows"]:
+            missing = SPARSITY_FORMAT_ROW_KEYS - set(r)
+            if missing:
+                fail(f"{name}: row missing keys {sorted(missing)}: {r}")
+            if r["decode_s"] <= 0.0 or r["prefill_s"] <= 0.0:
+                fail(f"{name}: row '{r['format']}' has non-positive timings")
+            if r["weight_bytes"] <= 0:
+                fail(f"{name}: row '{r['format']}' has empty weights")
+            formats.add(r["format"])
+        for want in ("dense", "slide:6:8", "vnm:2:2:8"):
+            if want not in formats:
+                fail(f"{name}: missing format row '{want}' (got {sorted(formats)})")
     if name == "BENCH_prefix_reuse.json":
         if data["bit_exact"] is not True:
             fail(f"{name}: bit_exact must be true")

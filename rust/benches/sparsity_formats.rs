@@ -1,0 +1,124 @@
+//! Sparsity-format comparison bench: the V:N:M vectorized layout vs
+//! the (2N-2):2N sliding-window path vs the dense int8 baseline, over
+//! the same layer shape — decode GEMV (m=1) and prefill GEMM walls,
+//! weight-storage footprint, and the dynamic activation-sparsity decode
+//! path. Asserts the exactness gates (V:N:M == dense on compliant
+//! weights; `topk:1.0` == unsparsified) and writes
+//! `BENCH_sparsity_formats.json`.
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use slidesparse::bench::harness::{bench, smoke_mode, write_json, Table};
+use slidesparse::model::{Backend, Linear};
+use slidesparse::quant::ActSparsity;
+use slidesparse::sparsity::prune::prune_magnitude;
+use slidesparse::sparsity::{prune_vnm, VnmPattern};
+use slidesparse::util::json::Json;
+use slidesparse::util::prng::XorShift;
+use slidesparse::util::ThreadPool;
+
+fn main() {
+    let smoke = smoke_mode();
+    let (o, k) = if smoke { (64usize, 64usize) } else { (512, 512) };
+    let threads = 4;
+    let (decode_m, prefill_m) = (1usize, 32usize);
+    let target = if smoke { 0.02 } else { 0.2 };
+    let iters = if smoke { 5 } else { 50 };
+    let mut rng = XorShift::new(42);
+    let w: Vec<f32> = (0..o * k).map(|_| rng.normal()).collect();
+    let xd: Vec<f32> = (0..decode_m * k).map(|_| rng.normal()).collect();
+    let xp: Vec<f32> = (0..prefill_m * k).map(|_| rng.normal()).collect();
+
+    let vnm_pat = VnmPattern::new(2, 2, 8);
+    let vnm_pruned = prune_vnm(&w, o, k, vnm_pat);
+    let slide_pruned = prune_magnitude(&w, o, k, 6, 8);
+
+    // each format on its own natural pruning; V:N:M also vs dense on
+    // the SAME (vnm-pruned) weights for the bit-exactness gate
+    let prep = |w: &[f32], b: Backend| {
+        let mut l = Linear::prepare(w, o, k, b);
+        l.set_pool(Arc::new(ThreadPool::new(threads)));
+        l
+    };
+    let formats: Vec<(&str, Linear)> = vec![
+        ("dense", prep(&w, Backend::Dense)),
+        ("slide:6:8", prep(&slide_pruned, Backend::Slide { n: 4 })),
+        ("vnm:2:2:8", prep(&vnm_pruned, Backend::Vnm { v: 2, n: 2, m: 8 })),
+    ];
+
+    // gate 1: V:N:M forward is bit-exact with dense on compliant weights
+    let dense_ref = prep(&vnm_pruned, Backend::Dense);
+    let vnm_l = prep(&vnm_pruned, Backend::Vnm { v: 2, n: 2, m: 8 });
+    let vnm_bit_exact = vnm_l.forward(&xd, decode_m) == dense_ref.forward(&xd, decode_m)
+        && vnm_l.forward(&xp, prefill_m) == dense_ref.forward(&xp, prefill_m);
+    assert!(vnm_bit_exact, "V:N:M diverged from dense on compliant weights");
+
+    // gate 2: the act-sparsity machinery at keep=1.0 is the exact path
+    let exact = prep(&slide_pruned, Backend::Slide { n: 4 });
+    let mut keep_all = prep(&slide_pruned, Backend::Slide { n: 4 });
+    keep_all.set_act_sparsity(ActSparsity::TopK { keep: 1.0 });
+    let act_skip_exact = keep_all.forward(&xd, decode_m) == exact.forward(&xd, decode_m);
+    assert!(act_skip_exact, "topk:1.0 decode diverged from the exact path");
+
+    let mut t = Table::new(
+        "Sparsity formats: dense vs sliding-window vs V:N:M",
+        &["format", "weights (B)", "decode m=1 (us)", "prefill m=32 (us)"],
+    );
+    let mut rows = Vec::new();
+    for (name, l) in &formats {
+        let md = bench(1, target, iters, || {
+            std::hint::black_box(l.forward(&xd, decode_m));
+        });
+        let mp = bench(1, target, iters, || {
+            std::hint::black_box(l.forward(&xp, prefill_m));
+        });
+        let bytes = l.weight_bytes();
+        t.row(vec![
+            (*name).into(),
+            format!("{bytes}"),
+            format!("{:.1}", md.min_s * 1e6),
+            format!("{:.1}", mp.min_s * 1e6),
+        ]);
+        let mut r = BTreeMap::new();
+        r.insert("format".to_string(), Json::Str((*name).into()));
+        r.insert("weight_bytes".to_string(), Json::Num(bytes as f64));
+        r.insert("decode_s".to_string(), Json::Num(md.min_s));
+        r.insert("prefill_s".to_string(), Json::Num(mp.min_s));
+        rows.push(Json::Obj(r));
+    }
+    // the lossy knob, measured at a typical setting on the decode path
+    let mut act = prep(&slide_pruned, Backend::Slide { n: 4 });
+    act.set_act_sparsity(ActSparsity::TopK { keep: 0.5 });
+    let ma = bench(1, target, iters, || {
+        std::hint::black_box(act.forward(&xd, decode_m));
+    });
+    t.row(vec![
+        "slide:6:8 + topk:0.5".into(),
+        format!("{}", act.weight_bytes()),
+        format!("{:.1}", ma.min_s * 1e6),
+        "-".into(),
+    ]);
+    let mut r = BTreeMap::new();
+    r.insert("format".to_string(), Json::Str("slide:6:8+topk:0.5".into()));
+    r.insert("weight_bytes".to_string(), Json::Num(act.weight_bytes() as f64));
+    r.insert("decode_s".to_string(), Json::Num(ma.min_s));
+    r.insert("prefill_s".to_string(), Json::Num(ma.min_s));
+    rows.push(Json::Obj(r));
+    t.print();
+
+    let mut j = BTreeMap::new();
+    j.insert("bench".to_string(), Json::Str("sparsity_formats".into()));
+    j.insert("smoke".to_string(), Json::Bool(smoke));
+    j.insert("o".to_string(), Json::Num(o as f64));
+    j.insert("k".to_string(), Json::Num(k as f64));
+    j.insert("threads".to_string(), Json::Num(threads as f64));
+    j.insert("decode_m".to_string(), Json::Num(decode_m as f64));
+    j.insert("prefill_m".to_string(), Json::Num(prefill_m as f64));
+    j.insert("rows".to_string(), Json::Arr(rows));
+    j.insert("vnm_bit_exact".to_string(), Json::Bool(vnm_bit_exact));
+    j.insert("act_skip_exact".to_string(), Json::Bool(act_skip_exact));
+    match write_json("BENCH_sparsity_formats.json", &Json::Obj(j)) {
+        Ok(()) => println!("\nwrote BENCH_sparsity_formats.json"),
+        Err(e) => eprintln!("could not write BENCH_sparsity_formats.json: {e}"),
+    }
+}

@@ -16,6 +16,11 @@ use crate::util::json::Json;
 pub struct Config {
     /// "dense", "2:4", or a family pattern like "6:8" / "4:6" / "8:10"
     pub sparsity: String,
+    /// generalized weight-format override: empty (default) lets the
+    /// `sparsity` knob decide; otherwise any `sparsity` value or a
+    /// vectorized pattern like "vnm:2:2:8" (V:N:M row-group format,
+    /// decoupled from the 2:4 family)
+    pub sparsity_format: String,
     pub engine: EngineConfig,
     pub workers: usize,
     /// multi-worker dispatch policy: "round_robin", "least_loaded",
@@ -45,6 +50,7 @@ impl Default for Config {
     fn default() -> Self {
         Self {
             sparsity: "6:8".into(),
+            sparsity_format: String::new(),
             engine: EngineConfig::default(),
             workers: 1,
             routing: Policy::RoundRobin,
@@ -59,9 +65,14 @@ impl Default for Config {
 }
 
 impl Config {
-    /// Parse the sparsity flag into a layer backend.
+    /// Parse the sparsity flags into a layer backend: `sparsity_format`
+    /// (the generalized-format override) wins when set, else `sparsity`.
     pub fn backend(&self) -> Result<Backend> {
-        parse_backend(&self.sparsity)
+        if self.sparsity_format.is_empty() {
+            parse_backend(&self.sparsity)
+        } else {
+            parse_backend(&self.sparsity_format)
+        }
     }
 
     pub fn from_file(path: &Path) -> Result<Config> {
@@ -81,6 +92,9 @@ impl Config {
         let mut cfg = Config::default();
         if let Some(v) = j.get("sparsity").and_then(|v| v.as_str()) {
             cfg.sparsity = v.to_string();
+        }
+        if let Some(v) = j.get("sparsity_format").and_then(|v| v.as_str()) {
+            cfg.sparsity_format = v.to_string();
         }
         if let Some(v) = j.get("workers").and_then(|v| v.as_usize()) {
             cfg.workers = v.max(1);
@@ -140,6 +154,10 @@ impl Config {
         if let Some(v) = j.get("stream_events").and_then(|v| v.as_bool()) {
             cfg.engine.stream_events = v;
         }
+        if let Some(v) = j.get("act_sparsity").and_then(|v| v.as_str()) {
+            cfg.engine.act_sparsity =
+                crate::quant::ActSparsity::parse(v).map_err(|e| anyhow!("config: {e}"))?;
+        }
         if let Some(e) = j.get("engine") {
             let mut ec = EngineConfig {
                 threads: cfg.engine.threads,
@@ -147,6 +165,7 @@ impl Config {
                 prefix_cache: cfg.engine.prefix_cache,
                 prefix_cache_bytes: cfg.engine.prefix_cache_bytes,
                 migrate_kv: cfg.engine.migrate_kv,
+                act_sparsity: cfg.engine.act_sparsity,
                 stream_events: cfg.engine.stream_events,
                 ..Default::default()
             };
@@ -176,6 +195,10 @@ impl Config {
             }
             if let Some(v) = e.get("stream_events").and_then(|v| v.as_bool()) {
                 ec.stream_events = v;
+            }
+            if let Some(v) = e.get("act_sparsity").and_then(|v| v.as_str()) {
+                ec.act_sparsity =
+                    crate::quant::ActSparsity::parse(v).map_err(|e| anyhow!("config: {e}"))?;
             }
             let mut sc = SchedulerConfig::default();
             if let Some(v) = e.get("max_batch").and_then(|v| v.as_usize()) {
@@ -219,13 +242,18 @@ impl Config {
     }
 }
 
-/// Parse a sparsity string ("dense", "2:4", "6:8", ...) into a backend.
+/// Parse a sparsity string ("dense", "2:4", "6:8", "vnm:2:2:8", ...)
+/// into a backend.
 pub fn parse_backend(s: &str) -> Result<Backend> {
     if s == "dense" {
         return Ok(Backend::Dense);
     }
     if s == "2:4" {
         return Ok(Backend::Native24);
+    }
+    if let Some(pat) = s.strip_prefix("vnm:") {
+        let p = crate::sparsity::VnmPattern::parse(pat).map_err(|e| anyhow!("{e}"))?;
+        return Ok(Backend::Vnm { v: p.v, n: p.n, m: p.m });
     }
     let (z, l) = s
         .split_once(':')
@@ -252,8 +280,56 @@ mod tests {
         assert_eq!(parse_backend("6:8").unwrap(), Backend::Slide { n: 4 });
         assert_eq!(parse_backend("4:6").unwrap(), Backend::Slide { n: 3 });
         assert_eq!(parse_backend("14:16").unwrap(), Backend::Slide { n: 8 });
+        assert_eq!(parse_backend("vnm:2:2:8").unwrap(), Backend::Vnm { v: 2, n: 2, m: 8 });
+        assert_eq!(parse_backend("vnm:1:4:16").unwrap(), Backend::Vnm { v: 1, n: 4, m: 16 });
+        assert!(parse_backend("vnm:0:2:8").is_err());
+        assert!(parse_backend("vnm:2:9:8").is_err());
+        assert!(parse_backend("vnm:2:8").is_err());
         assert!(parse_backend("3:7").is_err());
         assert!(parse_backend("garbage").is_err());
+    }
+
+    #[test]
+    fn sparsity_format_knob_overrides_sparsity() {
+        // empty (default): the `sparsity` knob decides
+        assert!(Config::default().sparsity_format.is_empty());
+        let plain = Config::from_json(r#"{"sparsity": "4:6"}"#).unwrap();
+        assert_eq!(plain.backend().unwrap(), Backend::Slide { n: 3 });
+        // set: sparsity_format wins over sparsity
+        let vnm = Config::from_json(
+            r#"{"sparsity": "4:6", "sparsity_format": "vnm:2:2:8"}"#,
+        )
+        .unwrap();
+        assert_eq!(vnm.backend().unwrap(), Backend::Vnm { v: 2, n: 2, m: 8 });
+        // any plain sparsity value is accepted there too
+        let dense = Config::from_json(r#"{"sparsity_format": "dense"}"#).unwrap();
+        assert_eq!(dense.backend().unwrap(), Backend::Dense);
+        // validated eagerly at load time
+        assert!(Config::from_json(r#"{"sparsity_format": "vnm:0:2:8"}"#).is_err());
+        assert!(Config::from_json(r#"{"sparsity_format": "5:9"}"#).is_err());
+    }
+
+    #[test]
+    fn act_sparsity_knob_parses_at_both_levels() {
+        use crate::quant::ActSparsity;
+        assert!(Config::default().engine.act_sparsity.is_none(), "off by default");
+        let top = Config::from_json(r#"{"act_sparsity": "topk:0.5"}"#).unwrap();
+        assert_eq!(top.engine.act_sparsity, ActSparsity::TopK { keep: 0.5 });
+        // top-level value survives an "engine" object without the knob
+        let kept = Config::from_json(
+            r#"{"act_sparsity": "threshold:0.02", "engine": {"kv_blocks": 32}}"#,
+        )
+        .unwrap();
+        assert_eq!(kept.engine.act_sparsity, ActSparsity::Threshold { rel: 0.02 });
+        // nested form wins when both are present
+        let nested = Config::from_json(
+            r#"{"act_sparsity": "topk:0.5", "engine": {"act_sparsity": "none"}}"#,
+        )
+        .unwrap();
+        assert!(nested.engine.act_sparsity.is_none());
+        // bad values rejected eagerly
+        assert!(Config::from_json(r#"{"act_sparsity": "topk:2.0"}"#).is_err());
+        assert!(Config::from_json(r#"{"engine": {"act_sparsity": "magic"}}"#).is_err());
     }
 
     #[test]

@@ -56,6 +56,13 @@ pub struct EngineConfig {
     /// content-addressed cache); inert — and still bit-exact — without
     /// it.
     pub migrate_kv: bool,
+    /// dynamic activation sparsification for the executor's linear
+    /// layers ("none", "topk:F", "threshold:F" in config). Unlike
+    /// `threads`/`kernel` this CHANGES outputs — it is an accuracy/speed
+    /// trade gated by bounded-error sweeps. Installed by `Engine::new`
+    /// via `Executor::set_act_sparsity` (no-op for executors without the
+    /// fused quant+slide path).
+    pub act_sparsity: crate::quant::ActSparsity,
     /// emit per-token [`StreamEvent`]s as sequences decode (buffered on
     /// the engine until drained via `poll_stream_events`, or pushed into
     /// a channel the router installs). Off by default: streaming is an
@@ -75,6 +82,7 @@ impl Default for EngineConfig {
             prefix_cache: false,
             prefix_cache_bytes: 0,
             migrate_kv: false,
+            act_sparsity: crate::quant::ActSparsity::None,
             stream_events: false,
         }
     }
@@ -157,6 +165,8 @@ impl<E: Executor> Engine<E> {
             executor.set_kernel(cfg.kernel);
             executor.set_threads(cfg.threads);
         }
+        // independent of tuning (tune rows carry kernel/threads only)
+        executor.set_act_sparsity(cfg.act_sparsity);
         let mut metrics = EngineMetrics::new();
         metrics.kernel = executor.kernel_label();
         metrics.tuned = tuned;

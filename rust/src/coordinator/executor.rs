@@ -65,6 +65,12 @@ pub trait Executor {
     /// authoritative; every backend is bit-exact, so this only changes
     /// speed.
     fn set_kernel(&mut self, _choice: KernelChoice) {}
+    /// Install a dynamic activation-sparsification policy on executors
+    /// with the fused quant+slide path (default: no-op). `Engine::new`
+    /// calls this with `EngineConfig.act_sparsity`. Unlike
+    /// `set_threads`/`set_kernel` this CHANGES outputs (bounded-error
+    /// accuracy/speed trade, not a bit-exact execution knob).
+    fn set_act_sparsity(&mut self, _act: crate::quant::ActSparsity) {}
     /// Resolved microkernel backend name for logs/metrics (empty for
     /// executors without the STC microkernel layer).
     fn kernel_label(&self) -> String {
@@ -296,6 +302,10 @@ impl Executor for StcExecutor {
         let kern = crate::stc::select_kernel(choice);
         self.model.set_microkernel(kern);
         self.kernel = kern;
+    }
+
+    fn set_act_sparsity(&mut self, act: crate::quant::ActSparsity) {
+        self.model.set_act_sparsity(act);
     }
 
     fn kernel_label(&self) -> String {

@@ -7,7 +7,8 @@
 //!                     [--workers W] [--routing round_robin|least_loaded|prefix[:K]]
 //!                     [--prefix-cache] [--prefix-cache-bytes B] [--migrate-kv]
 //!                     [--stream] [--rebalance] [--min-workers N] [--max-workers N]
-//!                     [--artifact model.ssaf]
+//!                     [--artifact model.ssaf] [--sparsity-format vnm:V:N:M|Z:L|dense]
+//!                     [--act-sparsity none|topk:F|threshold:F]
 //! slidesparse convert [--sparsity dense|2:4|6:8|...] [--out model.ssaf] [--threads T]
 //! slidesparse study   --config study.json[,more.json...] [--out BENCH_serving_slo.json]
 //!                     [--elastic-out BENCH_elastic_fleet.json]
@@ -96,6 +97,13 @@ fn serve(args: &Args) -> Result<()> {
     cfg.max_workers = args.opt_usize("max-workers", cfg.max_workers);
     if let Some(p) = args.opt("artifact") {
         cfg.artifact = p.to_string();
+    }
+    if let Some(f) = args.opt("sparsity-format") {
+        cfg.sparsity_format = f.to_string();
+    }
+    if let Some(a) = args.opt("act-sparsity") {
+        cfg.engine.act_sparsity =
+            slidesparse::quant::ActSparsity::parse(a).map_err(|e| anyhow!(e))?;
     }
     let mut backend = cfg.backend()?;
     // map the artifact once up front: its header names the backend (the
@@ -190,7 +198,7 @@ fn serve_pjrt(
     let variant = match backend {
         Backend::Dense => "dense".to_string(),
         Backend::Slide { n } => format!("slide{n}"),
-        Backend::Native24 => {
+        Backend::Native24 | Backend::Vnm { .. } => {
             return Err(anyhow!("pjrt executor ships dense and slide variants"))
         }
     };

@@ -108,6 +108,15 @@ impl Block {
         self.w2.set_decode_microkernel(kern);
     }
 
+    /// Install a dynamic activation-sparsification policy on every
+    /// linear in this block (`act_sparsity` knob; slide backends only).
+    pub fn set_act_sparsity(&mut self, act: crate::quant::ActSparsity) {
+        self.wqkv.set_act_sparsity(act);
+        self.wo.set_act_sparsity(act);
+        self.w13.set_act_sparsity(act);
+        self.w2.set_act_sparsity(act);
+    }
+
     /// Forward `s` new rows starting at context position `start`,
     /// reading/writing this block's KV cache slices (`kc`/`vc`, each
     /// [n_heads, smax, head_dim] row-major).
@@ -289,6 +298,17 @@ impl NativeModel {
     pub fn set_decode_microkernel(&mut self, kern: &'static dyn crate::stc::Microkernel) {
         for b in &mut self.blocks {
             b.set_decode_microkernel(kern);
+        }
+    }
+
+    /// Install a dynamic activation-sparsification policy on every
+    /// linear in the model (`act_sparsity` knob; slide backends only).
+    /// Unlike the pool/kernel hooks this CHANGES outputs — it is an
+    /// accuracy/speed trade gated by bounded-error sweeps, not a
+    /// bit-exact execution knob.
+    pub fn set_act_sparsity(&mut self, act: crate::quant::ActSparsity) {
+        for b in &mut self.blocks {
+            b.set_act_sparsity(act);
         }
     }
 

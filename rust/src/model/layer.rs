@@ -4,8 +4,10 @@
 //! uniform `forward`; K dimensions that do not tile into 2N blocks are
 //! zero-padded (the paper's "K Dimension Adjustment", Appendix D.3).
 
+use crate::quant::ActSparsity;
 use crate::sparsity::pattern::Pattern;
-use crate::stc::{DenseLinear, SlideLinear};
+use crate::sparsity::vnm::VnmPattern;
+use crate::stc::{DenseLinear, SlideLinear, VnmLinear};
 
 /// Which GEMM backend a linear layer runs on (the vLLM config flag).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -16,6 +18,9 @@ pub enum Backend {
     Slide { n: usize },
     /// Native 2:4 (the upper-bound baseline): prune 2:4, compress, GEMM.
     Native24,
+    /// Vectorized V:N:M (VENOM-style): V-row groups share per-M-block
+    /// column masks; runs on the gather GEMM, decoupled from 2:4.
+    Vnm { v: usize, n: usize, m: usize },
 }
 
 impl Backend {
@@ -24,6 +29,8 @@ impl Backend {
             Backend::Dense => Pattern::dense(),
             Backend::Slide { n } => Pattern::family(*n),
             Backend::Native24 => Pattern::new(2, 4),
+            // the per-block budget V:N:M enforces column-wise
+            Backend::Vnm { n, m, .. } => Pattern::new(*n, *m),
         }
     }
 
@@ -32,6 +39,7 @@ impl Backend {
             Backend::Dense => "dense".into(),
             Backend::Slide { n } => format!("{}", Pattern::family(*n)),
             Backend::Native24 => "2:4".into(),
+            Backend::Vnm { v, n, m } => format!("vnm:{v}:{n}:{m}"),
         }
     }
 }
@@ -44,6 +52,7 @@ pub fn padded_k(k: usize, block: usize) -> usize {
 enum Inner {
     Dense(DenseLinear),
     Slide(SlideLinear),
+    Vnm(VnmLinear),
 }
 
 /// A served linear layer: backend + padding bookkeeping.
@@ -91,6 +100,18 @@ impl Linear {
                     k_pad: kp,
                     backend,
                     inner: Inner::Slide(SlideLinear::prepare(&wp, o, kp, 2)),
+                }
+            }
+            Backend::Vnm { v, n, m } => {
+                let pat = VnmPattern::new(v, n, m);
+                let kp = padded_k(k, m);
+                let wp = pad_cols(w, o, k, kp);
+                Linear {
+                    o,
+                    k,
+                    k_pad: kp,
+                    backend,
+                    inner: Inner::Vnm(VnmLinear::prepare(&wp, o, kp, pat)),
                 }
             }
         }
@@ -153,6 +174,7 @@ impl Linear {
         match &mut self.inner {
             Inner::Dense(l) => l.set_pool(pool),
             Inner::Slide(l) => l.set_pool(pool),
+            Inner::Vnm(l) => l.set_pool(pool),
         }
     }
 
@@ -162,6 +184,7 @@ impl Linear {
         match &mut self.inner {
             Inner::Dense(l) => l.set_microkernel(kern),
             Inner::Slide(l) => l.set_microkernel(kern),
+            Inner::Vnm(l) => l.set_microkernel(kern),
         }
     }
 
@@ -171,6 +194,17 @@ impl Linear {
         match &mut self.inner {
             Inner::Dense(l) => l.set_decode_microkernel(kern),
             Inner::Slide(l) => l.set_decode_microkernel(kern),
+            Inner::Vnm(l) => l.set_decode_microkernel(kern),
+        }
+    }
+
+    /// Install a dynamic activation-sparsification policy (`act_sparsity`
+    /// knob). It rides the fused quant+slide kernel, so only slide-family
+    /// backends honor it; dense and V:N:M layers serve exact activations.
+    pub fn set_act_sparsity(&mut self, act: ActSparsity) {
+        match &mut self.inner {
+            Inner::Slide(l) => l.set_act_sparsity(act),
+            Inner::Dense(_) | Inner::Vnm(_) => {}
         }
     }
 
@@ -187,6 +221,14 @@ impl Linear {
                     l.forward(&xp, m)
                 }
             }
+            Inner::Vnm(l) => {
+                if self.k_pad == self.k {
+                    l.forward(x, m)
+                } else {
+                    let xp = pad_cols(x, m, self.k, self.k_pad);
+                    l.forward(&xp, m)
+                }
+            }
         }
     }
 
@@ -195,6 +237,7 @@ impl Linear {
         match &self.inner {
             Inner::Dense(l) => l.weight_bytes(),
             Inner::Slide(l) => l.weight_bytes(),
+            Inner::Vnm(l) => l.weight_bytes(),
         }
     }
 }
@@ -267,6 +310,43 @@ mod tests {
             let exact: f32 = (0..k).map(|t| x[t] * pruned[c * k + t]).sum();
             assert!((y[c] - exact).abs() < 0.05 * (1.0 + exact.abs()));
         }
+    }
+
+    #[test]
+    fn prop_vnm_backend_equals_dense_on_pruned() {
+        // V:N:M face of the bit-exactness invariant: on V:N:M-compliant
+        // weights the gather backend output == the dense int8 backend
+        // (same quantizers, same multiset of i32 products)
+        use crate::sparsity::vnm::{prune_vnm, VnmPattern};
+        prop::for_all("layer vnm == dense", |rng: &mut XorShift, case| {
+            let v = 1 + case % 3;
+            let mm = [4usize, 8][case % 2];
+            let n = 1 + rng.below(mm / 2 + 1);
+            let k = mm * (2 + rng.below(3));
+            let o = 8 + rng.below(8);
+            let m = 1 + rng.below(3);
+            let w: Vec<f32> = (0..o * k).map(|_| rng.normal()).collect();
+            let pruned = prune_vnm(&w, o, k, VnmPattern::new(v, n, mm));
+            let vnm = Linear::prepare(&pruned, o, k, Backend::Vnm { v, n, m: mm });
+            let dense = Linear::prepare(&pruned, o, k, Backend::Dense);
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            assert_eq!(vnm.forward(&x, m), dense.forward(&x, m), "v={v} n={n} m={mm}");
+        });
+    }
+
+    #[test]
+    fn vnm_backend_pads_unaligned_k() {
+        let mut rng = XorShift::new(9);
+        let (o, k, m) = (8, 50, 3); // 50 not a multiple of 8
+        let w: Vec<f32> = (0..o * k).map(|_| rng.normal() * 0.2).collect();
+        let l = Linear::prepare(&w, o, k, Backend::Vnm { v: 2, n: 2, m: 8 });
+        assert_eq!(l.k_pad(), 56);
+        assert_eq!(l.backend().label(), "vnm:2:2:8");
+        assert_eq!(l.backend().pattern(), Pattern::new(2, 8));
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let y = l.forward(&x, m);
+        assert_eq!(y.len(), m * o);
+        assert!(y.iter().all(|v| v.is_finite()));
     }
 
     #[test]

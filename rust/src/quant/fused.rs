@@ -15,15 +15,83 @@ use crate::sparsity::LiftPlan;
 
 use super::int8::QMAX;
 
+/// Dynamic (runtime) activation sparsification, fused into the
+/// quantization pass: pass 1 already reads every element for the absmax,
+/// so selecting which lanes survive costs zero extra memory traffic —
+/// dropped lanes simply quantize to 0 in pass 2.
+///
+/// Unlike weight sparsity this is LOSSY (the dropped activations were
+/// not zero), so it is gated by bounded-error sweeps, not bit-exactness.
+/// What IS exact: however lanes were dropped, skipping all-zero packed
+/// windows in the decode GEMV changes nothing (`gemv_dot_skip`).
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum ActSparsity {
+    /// Keep every activation (the default; bit-exact path).
+    #[default]
+    None,
+    /// Keep the `keep` fraction of largest-|x| lanes per row, 0 < keep <= 1.
+    /// Ties at the cut keep every tied lane (deterministic).
+    TopK { keep: f32 },
+    /// Drop lanes with |x| < rel * absmax(row), 0 <= rel < 1.
+    Threshold { rel: f32 },
+}
+
+impl ActSparsity {
+    /// Parse the config-knob syntax: "none", "topk:0.5", "threshold:0.02".
+    pub fn parse(s: &str) -> Result<ActSparsity, String> {
+        let s = s.trim();
+        if s.is_empty() || s == "none" {
+            return Ok(ActSparsity::None);
+        }
+        let (kind, num) = s
+            .split_once(':')
+            .ok_or_else(|| format!("bad act_sparsity '{s}' (want none | topk:F | threshold:F)"))?;
+        let v: f32 = num
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad number in act_sparsity '{s}'"))?;
+        match kind.trim() {
+            "topk" => {
+                if !(v > 0.0 && v <= 1.0) {
+                    return Err(format!("topk keep fraction must be in (0, 1], got {v}"));
+                }
+                Ok(ActSparsity::TopK { keep: v })
+            }
+            "threshold" => {
+                if !(v >= 0.0 && v < 1.0) {
+                    return Err(format!("threshold must be in [0, 1), got {v}"));
+                }
+                Ok(ActSparsity::Threshold { rel: v })
+            }
+            other => Err(format!("unknown act_sparsity kind '{other}'")),
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        matches!(self, ActSparsity::None)
+    }
+}
+
 /// Precomputed fused quantize+slide kernel for fixed (K, N).
 #[derive(Clone, Debug)]
 pub struct FusedQuantSlide {
     plan: LiftPlan,
+    act: ActSparsity,
 }
 
 impl FusedQuantSlide {
     pub fn new(k: usize, n: usize) -> Self {
-        Self { plan: LiftPlan::new(k, n) }
+        Self { plan: LiftPlan::new(k, n), act: ActSparsity::None }
+    }
+
+    /// Install a dynamic activation-sparsification policy; it applies to
+    /// every subsequent `run`/`run_masked` (dropped lanes quantize to 0).
+    pub fn set_act_sparsity(&mut self, act: ActSparsity) {
+        self.act = act;
+    }
+
+    pub fn act(&self) -> ActSparsity {
+        self.act
     }
 
     pub fn k(&self) -> usize {
@@ -41,32 +109,78 @@ impl FusedQuantSlide {
     /// read->quantize->slide->pack->write pipeline per window with a
     /// single 32-bit store.
     pub fn run_row(&self, x: &[f32], out: &mut [i8]) -> f32 {
+        let mut scratch = Vec::new();
+        self.run_row_scratch(x, out, &mut scratch)
+    }
+
+    /// `run_row` with a caller-owned top-k scratch buffer so batch loops
+    /// allocate it once, not per row.
+    fn run_row_scratch(&self, x: &[f32], out: &mut [i8], scratch: &mut Vec<f32>) -> f32 {
         debug_assert_eq!(x.len(), self.plan.k);
         debug_assert_eq!(out.len(), self.plan.k_packed);
-        // Pass 1: absmax
+        // Pass 1: absmax (the same sweep the sparsifier piggybacks on)
         let mut a = 0f32;
         for v in x {
             a = a.max(v.abs());
         }
         a = a.max(1e-12);
         let r = QMAX / a;
+        let cut = self.drop_cut(x, a, scratch);
         // Pass 2: output-oriented fused loop, one u32 store per window
         let idx = self.plan.indices();
         // SAFETY-free path: view out as u32 words via chunks
-        for (w, chunk) in out.chunks_exact_mut(4).enumerate() {
-            let b = idx[w * 4] as usize;
-            let q0 = (x[b] * r).round_ties_even().clamp(-QMAX, QMAX) as i8;
-            let q1 = (x[b + 1] * r).round_ties_even().clamp(-QMAX, QMAX) as i8;
-            let q2 = (x[b + 2] * r).round_ties_even().clamp(-QMAX, QMAX) as i8;
-            let q3 = (x[b + 3] * r).round_ties_even().clamp(-QMAX, QMAX) as i8;
-            // p = q0 | q1<<8 | q2<<16 | q3<<24 (Alg.1 line 17): the
-            // 4-lane write below compiles to a single word store.
-            chunk[0] = q0;
-            chunk[1] = q1;
-            chunk[2] = q2;
-            chunk[3] = q3;
+        if cut > 0.0 {
+            // sparsified variant: a lane below the cut quantizes to 0
+            // (the select fuses here -- no third pass over x)
+            for (w, chunk) in out.chunks_exact_mut(4).enumerate() {
+                let b = idx[w * 4] as usize;
+                for d in 0..4 {
+                    let v = x[b + d];
+                    chunk[d] = if v.abs() >= cut {
+                        (v * r).round_ties_even().clamp(-QMAX, QMAX) as i8
+                    } else {
+                        0
+                    };
+                }
+            }
+        } else {
+            for (w, chunk) in out.chunks_exact_mut(4).enumerate() {
+                let b = idx[w * 4] as usize;
+                let q0 = (x[b] * r).round_ties_even().clamp(-QMAX, QMAX) as i8;
+                let q1 = (x[b + 1] * r).round_ties_even().clamp(-QMAX, QMAX) as i8;
+                let q2 = (x[b + 2] * r).round_ties_even().clamp(-QMAX, QMAX) as i8;
+                let q3 = (x[b + 3] * r).round_ties_even().clamp(-QMAX, QMAX) as i8;
+                // p = q0 | q1<<8 | q2<<16 | q3<<24 (Alg.1 line 17): the
+                // 4-lane write below compiles to a single word store.
+                chunk[0] = q0;
+                chunk[1] = q1;
+                chunk[2] = q2;
+                chunk[3] = q3;
+            }
         }
         a / QMAX
+    }
+
+    /// The |x| value below which a lane is dropped this row (0.0 = keep
+    /// everything). Top-k selects on a scratch copy of |x| — the one
+    /// policy that cannot reuse the pass-1 absmax alone.
+    fn drop_cut(&self, x: &[f32], absmax: f32, scratch: &mut Vec<f32>) -> f32 {
+        match self.act {
+            ActSparsity::None => 0.0,
+            ActSparsity::Threshold { rel } => rel * absmax,
+            ActSparsity::TopK { keep } => {
+                let kc = ((keep as f64 * x.len() as f64).ceil() as usize).clamp(1, x.len());
+                if kc == x.len() {
+                    return 0.0;
+                }
+                scratch.clear();
+                scratch.extend(x.iter().map(|v| v.abs()));
+                // NaN sorts as largest magnitude (total_cmp): poisoned
+                // lanes survive selection and surface downstream
+                scratch.select_nth_unstable_by(kc - 1, |a, b| b.total_cmp(a));
+                scratch[kc - 1]
+            }
+        }
     }
 
     /// Fused pass over a [m, k] matrix into [m, gamma*k] + scales.
@@ -75,13 +189,32 @@ impl FusedQuantSlide {
         let kp = self.plan.k_packed;
         let mut out = vec![0i8; m * kp];
         let mut scales = vec![0f32; m];
+        let mut scratch = Vec::new();
         for row in 0..m {
-            scales[row] = self.run_row(
+            scales[row] = self.run_row_scratch(
                 &x[row * self.plan.k..(row + 1) * self.plan.k],
                 &mut out[row * kp..(row + 1) * kp],
+                &mut scratch,
             );
         }
         (out, scales)
+    }
+
+    /// `run` plus a per-(row, window) skip mask: byte `row*(K'/4) + w` is
+    /// 1 iff every lane of packed window `w` quantized to 0. The decode
+    /// GEMV skips those windows ([`gemv_dot_skip`]) — dropping exact-zero
+    /// products only, so the skip itself is bit-exact for ANY input (the
+    /// sparsification that *creates* the zeros is the lossy part).
+    ///
+    /// [`gemv_dot_skip`]: crate::stc::Microkernel::gemv_dot_skip
+    pub fn run_masked(&self, x: &[f32], m: usize) -> (Vec<i8>, Vec<f32>, Vec<u8>) {
+        let (out, scales) = self.run(x, m);
+        let wins = self.plan.k_packed / 4;
+        let mut skip = vec![0u8; m * wins];
+        for (w, chunk) in out.chunks_exact(4).enumerate() {
+            skip[w] = chunk.iter().all(|q| *q == 0) as u8;
+        }
+        (out, scales, skip)
     }
 }
 
@@ -122,6 +255,92 @@ mod tests {
             let gamma = 2.0 - 2.0 / n as f64;
             assert_eq!(kern.k_packed(), (k as f64 * gamma).round() as usize);
         }
+    }
+
+    #[test]
+    fn act_sparsity_parse() {
+        assert_eq!(ActSparsity::parse("none").unwrap(), ActSparsity::None);
+        assert_eq!(ActSparsity::parse("").unwrap(), ActSparsity::None);
+        assert_eq!(
+            ActSparsity::parse("topk:0.5").unwrap(),
+            ActSparsity::TopK { keep: 0.5 }
+        );
+        assert_eq!(
+            ActSparsity::parse("threshold:0.02").unwrap(),
+            ActSparsity::Threshold { rel: 0.02 }
+        );
+        assert!(ActSparsity::parse("topk:0").is_err());
+        assert!(ActSparsity::parse("topk:1.5").is_err());
+        assert!(ActSparsity::parse("threshold:1.0").is_err());
+        assert!(ActSparsity::parse("magic:0.5").is_err());
+        assert!(ActSparsity::parse("topk").is_err());
+    }
+
+    #[test]
+    fn threshold_drops_exactly_the_small_lanes() {
+        let k = 16;
+        let x: Vec<f32> = (0..k).map(|i| (i as f32 + 1.0) / k as f32).collect(); // absmax = 1.0
+        let mut kern = FusedQuantSlide::new(k, 4);
+        kern.set_act_sparsity(ActSparsity::Threshold { rel: 0.5 });
+        let (q, _) = kern.run(&x, 1);
+        // reference: quantize with lanes |x| < 0.5 zeroed, then lift
+        let mut xs = x.clone();
+        for v in xs.iter_mut() {
+            if v.abs() < 0.5 {
+                *v = 0.0;
+            }
+        }
+        // scale comes from the UN-sparsified absmax, so quantize manually
+        let r = QMAX / 1.0f32;
+        let qs: Vec<i8> = xs.iter().map(|v| (v * r).round_ties_even() as i8).collect();
+        let lifted = LiftPlan::new(k, 4).lift_row(&qs);
+        assert_eq!(q, lifted);
+        assert!(q.iter().filter(|v| **v == 0).count() > 0);
+    }
+
+    #[test]
+    fn topk_keeps_the_largest_fraction() {
+        let k = 32;
+        let mut rng = XorShift::new(11);
+        let x: Vec<f32> = (0..k).map(|_| rng.normal()).collect();
+        let mut kern = FusedQuantSlide::new(k, 4);
+        kern.set_act_sparsity(ActSparsity::TopK { keep: 0.25 });
+        let (q, s) = kern.run(&x, 1);
+        // every surviving packed lane must correspond to a top-8 |x| lane
+        let mut mags: Vec<f32> = x.iter().map(|v| v.abs()).collect();
+        mags.sort_by(|a, b| b.total_cmp(a));
+        let cut = mags[7];
+        let plan = LiftPlan::new(k, 4);
+        let idx = plan.indices();
+        for (j, &v) in q.iter().enumerate() {
+            if v != 0 {
+                assert!(x[idx[j] as usize].abs() >= cut);
+            }
+        }
+        // keep=1.0 is the identity with the unsparsified kernel
+        let mut all = FusedQuantSlide::new(k, 4);
+        all.set_act_sparsity(ActSparsity::TopK { keep: 1.0 });
+        let base = FusedQuantSlide::new(k, 4);
+        assert_eq!(all.run(&x, 1), base.run(&x, 1));
+        assert!(s[0] > 0.0);
+    }
+
+    #[test]
+    fn masked_run_marks_exactly_the_zero_windows() {
+        let mut rng = XorShift::new(13);
+        let (k, n, m) = (24, 3, 4);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let mut kern = FusedQuantSlide::new(k, n);
+        kern.set_act_sparsity(ActSparsity::TopK { keep: 0.2 });
+        let (q, s, skip) = kern.run_masked(&x, m);
+        assert_eq!((q.clone(), s.clone()), kern.run(&x, m));
+        let wins = kern.k_packed() / 4;
+        assert_eq!(skip.len(), m * wins);
+        for (w, chunk) in q.chunks_exact(4).enumerate() {
+            assert_eq!(skip[w] != 0, chunk.iter().all(|v| *v == 0), "window {w}");
+        }
+        // aggressive top-k must actually produce skippable windows
+        assert!(skip.iter().any(|b| *b != 0));
     }
 
     #[test]

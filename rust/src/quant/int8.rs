@@ -41,6 +41,26 @@ pub fn quantize_weight_per_channel(w: &[f32], o: usize, k: usize) -> (Vec<i8>, V
     (q, s)
 }
 
+/// Checked variant of [`quantize_weight_per_channel`] for checkpoint
+/// ingestion: a NaN/Inf weight would otherwise mangle silently (`f32::max`
+/// skips NaN in the absmax pass, and the saturating `as i8` cast turns NaN
+/// into 0), so non-finite rows are rejected with the offending row index.
+/// The artifact layer maps the index to `ArtifactError::Quant` with tensor
+/// context.
+pub fn try_quantize_weight_per_channel(
+    w: &[f32],
+    o: usize,
+    k: usize,
+) -> Result<(Vec<i8>, Vec<f32>), usize> {
+    assert_eq!(w.len(), o * k);
+    for r in 0..o {
+        if w[r * k..(r + 1) * k].iter().any(|v| !v.is_finite()) {
+            return Err(r);
+        }
+    }
+    Ok(quantize_weight_per_channel(w, o, k))
+}
+
 /// Dequantize an int32 accumulator tile: `y = acc * xs[m] * ws[o]`.
 pub fn dequantize(acc: &[i32], m: usize, o: usize, xs: &[f32], ws: &[f32]) -> Vec<f32> {
     assert_eq!(acc.len(), m * o);
@@ -99,6 +119,17 @@ mod tests {
         let mut q = [0i8; 4];
         quantize_row_into(&x, &mut q);
         assert_eq!(q, [127, 0, 2, 2]);
+    }
+
+    #[test]
+    fn checked_quantize_reports_first_poisoned_row() {
+        let mut w = vec![1.0f32; 4 * 8];
+        w[2 * 8 + 3] = f32::NAN;
+        w[3 * 8] = f32::INFINITY;
+        assert_eq!(try_quantize_weight_per_channel(&w, 4, 8), Err(2));
+        let clean = vec![0.5f32; 4 * 8];
+        let (q, s) = try_quantize_weight_per_channel(&clean, 4, 8).unwrap();
+        assert_eq!((q, s), quantize_weight_per_channel(&clean, 4, 8));
     }
 
     #[test]

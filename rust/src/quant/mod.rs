@@ -5,8 +5,10 @@ pub mod fp8;
 pub mod fused;
 pub mod int8;
 
-pub use fused::FusedQuantSlide;
-pub use int8::{dequantize, quantize_per_token, quantize_weight_per_channel};
+pub use fused::{ActSparsity, FusedQuantSlide};
+pub use int8::{
+    dequantize, quantize_per_token, quantize_weight_per_channel, try_quantize_weight_per_channel,
+};
 
 /// Quantization precision of the serving path.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]

@@ -162,6 +162,10 @@ fn backend_code(b: Backend) -> u32 {
         Backend::Dense => 0,
         Backend::Native24 => 1,
         Backend::Slide { n } => n as u32,
+        // V:N:M artifacts need a format revision (group-shared column
+        // tables have no tensor kind yet); the builder rejects them up
+        // front rather than writing an artifact loaders mis-read.
+        Backend::Vnm { .. } => u32::MAX,
     }
 }
 
@@ -266,9 +270,11 @@ fn fused_slide_row(
         let blk = &w[g * block..(g + 1) * block];
         s.order.clear();
         s.order.extend(0..block);
-        s.order.sort_by(|&x, &y| {
-            blk[y].abs().partial_cmp(&blk[x].abs()).unwrap_or(std::cmp::Ordering::Equal)
-        });
+        // total_cmp, not partial_cmp-or-Equal: keeps the order total and
+        // identical to `prune::prune_magnitude` even on poisoned input
+        // (non-finite rows were already rejected above, but the two
+        // sorts must never be able to disagree)
+        s.order.sort_by(|&x, &y| blk[y].abs().total_cmp(&blk[x].abs()));
         for &p in s.order.iter().take(block - 2) {
             s.q[g * block + p] =
                 (blk[p] * r).round_ties_even().clamp(-QMAX, QMAX) as i8;
@@ -603,6 +609,12 @@ impl ArtifactBuilder {
             }
             Backend::Slide { n } => self.slide_tensor(name, w, rows, k, n)?,
             Backend::Native24 => self.slide_tensor(name, w, rows, k, 2)?,
+            Backend::Vnm { .. } => {
+                return Err(hdr(
+                    "V:N:M backends have no .ssaf tensor kind yet; \
+                     serve them from in-memory prepared weights",
+                ))
+            }
         };
         self.tensors.push(t);
         Ok(self)
@@ -992,6 +1004,9 @@ impl Artifact {
                 Backend::Dense => t.kind != KIND_SLIDE,
                 Backend::Slide { n } => t.kind != KIND_DENSE && (t.kind == KIND_RAW || t.n == n),
                 Backend::Native24 => t.kind != KIND_DENSE && (t.kind == KIND_RAW || t.n == 2),
+                // decode_backend never produces Vnm (no code assigned),
+                // so any artifact claiming it is corrupt
+                Backend::Vnm { .. } => false,
             };
             if !ok {
                 return Err(hdr(format!("tensor '{}' does not match artifact backend", t.name)));
@@ -1364,6 +1379,37 @@ mod tests {
             other => panic!("expected Quant error, got {other}"),
         }
         assert!(err.to_string().contains("blk0.wo"));
+    }
+
+    #[test]
+    fn nan_poisoned_checkpoint_rejected_through_convert() {
+        // the full convert pipeline (multi-tensor checkpoint, parallel
+        // sweep, dense AND slide backends) must refuse NaN/Inf weights
+        // and name the poisoned tensor + row — identically at any thread
+        // count (the parallel sweep reports the lowest failing row)
+        let mut rng = XorShift::new(44);
+        let (o, k) = (8, 32);
+        let clean = random_w(&mut rng, o * k);
+        let mut poisoned = random_w(&mut rng, o * k);
+        poisoned[5 * k + 3] = f32::NAN;
+        poisoned[6 * k] = f32::INFINITY; // row 5 must win, not row 6
+        for backend in [Backend::Dense, Backend::Native24, Backend::Slide { n: 4 }] {
+            for threads in [1usize, 4] {
+                let err = ArtifactBuilder::new(backend)
+                    .threads(threads)
+                    .add_tensor("blk0.wqkv", &clean, o, k)
+                    .unwrap()
+                    .add_tensor("blk0.w13", &poisoned, o, k)
+                    .unwrap_err();
+                match err {
+                    ArtifactError::Quant { ref tensor, row } => {
+                        assert_eq!(tensor, "blk0.w13", "{backend:?} {threads}t");
+                        assert_eq!(row, 5, "{backend:?} {threads}t");
+                    }
+                    ref other => panic!("expected Quant error, got {other}"),
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,19 +1,64 @@
 //! Generalized sliding-window theory (paper Appendix C.1): decompose any
 //! Z:L source pattern onto any M:N hardware pattern.
 
+use std::fmt;
+
 use super::pattern::Pattern;
 
+/// Why a [`Decomposition`] cannot be built for a (source, hw) pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecompositionError {
+    /// The hardware pattern keeps every lane (M == N): the window stride
+    /// N - M would be zero, so windows could never advance across a block.
+    DenseHardware { hw: Pattern },
+    /// The source is the dense sentinel (`Pattern::dense()`): there is no
+    /// finite block to decompose.
+    DenseSource,
+}
+
+impl fmt::Display for DecompositionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DecompositionError::DenseHardware { hw } => {
+                write!(f, "hardware pattern {hw} is dense (stride N-M = 0)")
+            }
+            DecompositionError::DenseSource => {
+                write!(f, "dense sentinel pattern has no finite block to decompose")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DecompositionError {}
+
 /// A sliding-window decomposition of `source` (Z:L) onto `hw` (M:N).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Decomposition {
     pub source: Pattern,
     pub hw: Pattern,
 }
 
 impl Decomposition {
+    /// Fallible constructor: every valid Z:L source on sparse M:N hardware
+    /// yields a decomposition (covering windows; see [`window_count`]).
+    ///
+    /// [`window_count`]: Decomposition::window_count
+    pub fn try_new(source: Pattern, hw: Pattern) -> Result<Decomposition, DecompositionError> {
+        if source.is_dense() {
+            return Err(DecompositionError::DenseSource);
+        }
+        if hw.z >= hw.l {
+            return Err(DecompositionError::DenseHardware { hw });
+        }
+        Ok(Decomposition { source, hw })
+    }
+
+    /// Panicking convenience wrapper around [`Decomposition::try_new`].
     pub fn new(source: Pattern, hw: Pattern) -> Decomposition {
-        assert!(hw.z < hw.l, "hardware pattern must be sparse");
-        Decomposition { source, hw }
+        match Decomposition::try_new(source, hw) {
+            Ok(d) => d,
+            Err(e) => panic!("invalid decomposition {source} onto {hw}: {e}"),
+        }
     }
 
     /// Stride s = N - M (windows overlap by M positions).
@@ -21,17 +66,24 @@ impl Decomposition {
         self.hw.l - self.hw.z
     }
 
-    /// Window count w = (L - N)/(N - M) + 1 (Eq. 8).
-    /// Requires (L - N) divisible by the stride.
+    /// Do the windows tile the source block exactly (Eq. 8 applies as-is)?
+    pub fn tiles_exactly(&self) -> bool {
+        let (l, n) = (self.source.l, self.hw.l);
+        l >= n && (l - n) % self.stride() == 0
+    }
+
+    /// Window count. When the windows tile the block exactly this is the
+    /// paper's Eq. 8, w = (L - N)/(N - M) + 1. For every other valid Z:L
+    /// (e.g. odd L on 2:4) we use the minimal *covering* window set:
+    /// w = ceil((L - N)/(N - M)) + 1, with the last window's start clamped
+    /// to L - N so it stays inside the block (windows then overlap by more
+    /// than M at the tail). A block no wider than one window needs w = 1.
     pub fn window_count(&self) -> usize {
         let (l, n) = (self.source.l, self.hw.l);
-        assert!(l >= n, "source block smaller than hardware window");
-        assert_eq!(
-            (l - n) % self.stride(),
-            0,
-            "L-N must be a multiple of the stride for exact tiling"
-        );
-        (l - n) / self.stride() + 1
+        if l <= n {
+            return 1;
+        }
+        (l - n).div_ceil(self.stride()) + 1
     }
 
     /// Total capacity w*M.
@@ -69,9 +121,13 @@ impl Decomposition {
         (self.s_eff() - self.s_bound()).abs() < 1e-9
     }
 
-    /// The window start offsets within one source block.
+    /// The window start offsets within one source block. For non-tiling
+    /// patterns the last start is clamped to L - N (the covering set).
     pub fn window_starts(&self) -> Vec<usize> {
-        (0..self.window_count()).map(|j| j * self.stride()).collect()
+        let last = self.source.l.saturating_sub(self.hw.l);
+        (0..self.window_count())
+            .map(|j| (j * self.stride()).min(last))
+            .collect()
     }
 }
 
@@ -85,6 +141,7 @@ pub fn hypothetical_1_4(source: Pattern) -> (f64, f64) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sparsity::pattern::HW_2_4;
     use crate::util::prng::XorShift;
 
     #[test]
@@ -124,7 +181,7 @@ mod tests {
             let z_max = (w_extra + 1) * m;
             let z = (1 + rng.below(z_max)).min(l);
             let src = Pattern::new(z, l);
-            if (src.density()) < (m as f64 / n as f64) {
+            if src.density() < m as f64 / n as f64 {
                 return; // paper constraint Eq. 7: source at least as dense
             }
             let d = Decomposition::new(src, Pattern::new(m, n));
@@ -168,5 +225,58 @@ mod tests {
     fn window_starts_cover_block() {
         let d = Decomposition::new(Pattern::family(4), Pattern::new(2, 4));
         assert_eq!(d.window_starts(), vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn non_tiling_pattern_7_9_no_longer_panics() {
+        // regression: (L-N) % stride != 0 used to abort the process
+        let d = Decomposition::try_new(Pattern::new(7, 9), HW_2_4).unwrap();
+        assert!(!d.tiles_exactly());
+        // covering windows: ceil((9-4)/2)+1 = 4, last start clamped to 5
+        assert_eq!(d.window_count(), 4);
+        assert_eq!(d.window_starts(), vec![0, 2, 4, 5]);
+        let g = d.gamma();
+        assert!(g.is_finite() && (g - 16.0 / 9.0).abs() < 1e-12);
+        assert!(d.is_valid()); // capacity 4*2 = 8 >= 7
+        assert!(d.s_eff() <= d.s_bound() + 1e-9);
+    }
+
+    #[test]
+    fn non_tiling_pattern_3_5_no_longer_panics() {
+        let d = Decomposition::try_new(Pattern::new(3, 5), HW_2_4).unwrap();
+        assert_eq!(d.window_count(), 2);
+        assert_eq!(d.window_starts(), vec![0, 1]);
+        assert!((d.gamma() - 8.0 / 5.0).abs() < 1e-12);
+        assert!(d.is_valid());
+    }
+
+    #[test]
+    fn block_narrower_than_window_gets_one_window() {
+        let d = Decomposition::try_new(Pattern::new(1, 3), HW_2_4).unwrap();
+        assert_eq!(d.window_count(), 1);
+        assert_eq!(d.window_starts(), vec![0]);
+        assert!(d.gamma().is_finite());
+    }
+
+    #[test]
+    fn try_new_rejects_degenerate_inputs() {
+        assert_eq!(
+            Decomposition::try_new(Pattern::new(6, 8), Pattern::new(4, 4)),
+            Err(DecompositionError::DenseHardware { hw: Pattern::new(4, 4) })
+        );
+        assert_eq!(
+            Decomposition::try_new(Pattern::dense(), HW_2_4),
+            Err(DecompositionError::DenseSource)
+        );
+    }
+
+    #[test]
+    fn exact_tiling_unchanged_by_covering_generalization() {
+        // every family member still reports the paper's Eq. 8 count
+        for n in 3..9 {
+            let d = Decomposition::new(Pattern::family(n), HW_2_4);
+            assert!(d.tiles_exactly());
+            assert_eq!(d.window_count(), n - 1);
+        }
     }
 }

@@ -36,7 +36,10 @@ pub mod lift;
 pub mod packer;
 pub mod pattern;
 pub mod prune;
+pub mod vnm;
 
+pub use general::{Decomposition, DecompositionError};
 pub use lift::LiftPlan;
 pub use packer::{pack_matrix, pack_matrix_pool, pack_row, PackedMatrix};
 pub use pattern::{Pattern, ALPHA_2_4, HW_2_4};
+pub use vnm::{prune_vnm, VnmError, VnmPattern};

@@ -196,9 +196,14 @@ pub fn pack_matrix_pool(
 }
 
 /// Validate 2:4 compliance of a packed row (every 4-window holds <= 2).
+/// A row whose length is not a multiple of 4 is malformed, not compliant:
+/// `chunks(4)` would silently accept a trailing partial window, so the
+/// length is checked explicitly and the scan uses `chunks_exact`.
 pub fn is_24_compliant(row: &[f32]) -> bool {
-    row.chunks(4)
-        .all(|w| w.iter().filter(|v| **v != 0.0).count() <= 2)
+    row.len() % 4 == 0
+        && row
+            .chunks_exact(4)
+            .all(|w| w.iter().filter(|v| **v != 0.0).count() <= 2)
 }
 
 #[cfg(test)]
@@ -354,6 +359,129 @@ mod tests {
         for r in 0..rows {
             assert!(is_24_compliant(pm.row(r)));
         }
+    }
+
+    #[test]
+    fn compliance_rejects_partial_trailing_window() {
+        // regression: chunks(4) accepted a malformed row length — a dense
+        // 3-element tail chunk has <= 2 nonzeros only by truncation luck,
+        // and any non-multiple-of-4 row can never be a packed 2:4 row
+        assert!(is_24_compliant(&[1.0, 2.0, 0.0, 0.0]));
+        assert!(!is_24_compliant(&[1.0, 2.0, 0.0])); // short row
+        assert!(!is_24_compliant(&[0.0; 7])); // even all-zero: wrong shape
+        assert!(!is_24_compliant(&[1.0, 0.0, 0.0, 0.0, 1.0])); // 4 + tail
+        assert!(is_24_compliant(&[])); // zero windows is vacuously fine
+    }
+
+    /// Exact maximum number of placeable non-zeros: bipartite matching
+    /// of non-zero positions to capacity-2 windows via augmenting paths.
+    /// Window `l` of a group covers in-group positions `2l..=2l+3`; a
+    /// position's window set is a contiguous interval, so this is the
+    /// Hall-condition oracle for Algorithm 2 on arbitrary (even
+    /// over-budget) rows.
+    fn max_placeable(row: &[f32], n: usize) -> usize {
+        let k = row.len();
+        let wins = n - 1; // windows per group
+        let slots = (k / (2 * n)) * wins * 2; // 2 slots per window
+        let windows_of = |p: usize| -> std::ops::RangeInclusive<usize> {
+            let (g, ing) = (p / (2 * n), p % (2 * n));
+            let lo = ing.saturating_sub(3).div_ceil(2);
+            let hi = (ing / 2).min(wins - 1);
+            (g * wins + lo)..=(g * wins + hi)
+        };
+        fn augment(
+            p: usize,
+            windows_of: &dyn Fn(usize) -> std::ops::RangeInclusive<usize>,
+            slot_of: &mut [Option<usize>],
+            seen: &mut [bool],
+        ) -> bool {
+            for w in windows_of(p) {
+                for s in [2 * w, 2 * w + 1] {
+                    if seen[s] {
+                        continue;
+                    }
+                    seen[s] = true;
+                    if slot_of[s].is_none_or(|q| augment(q, windows_of, slot_of, seen)) {
+                        slot_of[s] = Some(p);
+                        return true;
+                    }
+                }
+            }
+            false
+        }
+        let mut slot_of = vec![None; slots];
+        let mut placed = 0;
+        for p in (0..k).filter(|p| row[*p] != 0.0) {
+            let mut seen = vec![false; slots];
+            if augment(p, &windows_of, &mut slot_of, &mut seen) {
+                placed += 1;
+            }
+        }
+        placed
+    }
+
+    #[test]
+    fn prop_greedy_placement_matches_matching_oracle() {
+        // Algorithm 2's greedy pass is OPTIMAL, not merely lossless on
+        // budget-compliant rows: on arbitrary rows (any density,
+        // including over-budget) the number of placed non-zeros equals
+        // the exact max bipartite matching against capacity-2 windows.
+        prop::for_all("greedy == matching oracle", |rng, case| {
+            let n = 2 + case % 7; // N in 2..=8
+            let k = 2 * n * (1 + rng.below(3));
+            let mut row = vec![0.0f32; k];
+            for v in row.iter_mut() {
+                if rng.below(100) < 45 {
+                    *v = rng.normal();
+                }
+            }
+            let nnz = row.iter().filter(|v| **v != 0.0).count();
+            let mut out = vec![0.0; expanded_k(k, n)];
+            let mut used = vec![false; k];
+            let unplaced = pack_row_into(&row, n, &mut out, &mut used);
+            assert!(is_24_compliant(&out));
+            let oracle = max_placeable(&row, n);
+            assert_eq!(
+                nnz - unplaced,
+                oracle,
+                "N={n} k={k}: greedy placed {} of {nnz}, oracle {oracle}",
+                nnz - unplaced
+            );
+        });
+    }
+    #[test]
+    fn prop_family_rows_saturate_the_oracle() {
+        // Theorem 1 cross-checked against the oracle: a (2N-2):2N family
+        // row always admits a full matching, and the greedy finds it.
+        prop::for_all("family rows fully placeable", |rng, case| {
+            let n = 3 + case % 6;
+            let k = 2 * n * (1 + rng.below(4));
+            let row = random_family_row(rng, k, n);
+            let nnz = row.iter().filter(|v| **v != 0.0).count();
+            assert_eq!(max_placeable(&row, n), nnz);
+            assert!(pack_row(&row, n).is_ok());
+        });
+    }
+
+    #[test]
+    fn prop_vnm_pruned_rows_compress_and_roundtrip() {
+        // the V:N:M side of the offline pipeline: prune -> quantize ->
+        // compress loses nothing, and every row respects the N/M budget
+        use crate::quant::quantize_weight_per_channel;
+        use crate::sparsity::vnm::{prune_vnm, VnmPattern};
+        use crate::stc::CompressedVnm;
+        prop::for_all("vnm prune -> compress roundtrip", |rng, case| {
+            let (v, n, m) = [(1, 2, 4), (2, 2, 8), (4, 4, 16), (2, 1, 4)][case % 4];
+            let pat = VnmPattern::new(v, n, m);
+            let rows = 1 + rng.below(3 * v);
+            let k = m * (1 + rng.below(4));
+            let w: Vec<f32> = (0..rows * k).map(|_| rng.normal()).collect();
+            let pruned = prune_vnm(&w, rows, k, pat);
+            let (wq, _scales) = quantize_weight_per_channel(&pruned, rows, k);
+            let c = CompressedVnm::from_dense(&wq, rows, k, pat)
+                .expect("pruned rows are compliant");
+            assert_eq!(c.to_dense(), wq, "{pat} rows={rows} k={k}");
+        });
     }
 
     #[test]

@@ -62,14 +62,18 @@ impl Pattern {
     }
 
     /// Expansion factor gamma for sliding onto 2:4 hardware (Eq. 5 for the
-    /// family; Eq. 10 in general).
+    /// family; Eq. 10 in general; covering windows for non-tiling Z:L).
+    /// Finite for every valid pattern — see `Decomposition::window_count`.
     pub fn gamma(&self) -> f64 {
         if self.is_dense() {
             1.0
         } else if *self == HW_2_4 {
             1.0 // native, no sliding needed
         } else {
-            super::general::Decomposition::new(*self, HW_2_4).gamma()
+            // try_new cannot fail here: self is non-dense, HW_2_4 is sparse
+            super::general::Decomposition::try_new(*self, HW_2_4)
+                .expect("2:4 hardware is sparse")
+                .gamma()
         }
     }
 
@@ -195,6 +199,21 @@ mod tests {
         assert!(p.check(&ok));
         assert!(!p.check(&bad));
         assert!(!p.check(&ok[..7])); // length not multiple of L
+    }
+
+    #[test]
+    fn gamma_finite_for_non_tiling_patterns() {
+        // regression: these used to panic inside Decomposition::window_count
+        let g79 = Pattern::new(7, 9).gamma();
+        assert!(g79.is_finite() && (g79 - 16.0 / 9.0).abs() < 1e-12);
+        let g35 = Pattern::new(3, 5).gamma();
+        assert!(g35.is_finite() && (g35 - 8.0 / 5.0).abs() < 1e-12);
+        // s_eff follows: alpha / gamma, and never beats the density bound
+        for p in [Pattern::new(7, 9), Pattern::new(3, 5), Pattern::new(5, 7)] {
+            let s = p.s_eff();
+            assert!(s.is_finite() && s > 0.0, "{p}: s_eff {s}");
+            assert!(s <= p.s_bound() + 1e-9, "{p}: s_eff {s} beats L/Z");
+        }
     }
 
     #[test]

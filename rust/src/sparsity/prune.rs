@@ -15,13 +15,12 @@ pub fn prune_magnitude(w: &[f32], rows: usize, k: usize, z: usize, l: usize) -> 
             let block = &w[base..base + l];
             order.clear();
             order.extend(0..l);
-            // stable sort by descending |v|; stability = lower index wins ties
-            order.sort_by(|&a, &b| {
-                block[b]
-                    .abs()
-                    .partial_cmp(&block[a].abs())
-                    .unwrap_or(std::cmp::Ordering::Equal)
-            });
+            // stable sort by descending |v|; stability = lower index wins
+            // ties. total_cmp (not partial_cmp) so NaN is a deterministic
+            // largest-magnitude value instead of an arbitrary sort tie —
+            // a poisoned block always keeps its NaN, which the downstream
+            // finiteness check then rejects with row context.
+            order.sort_by(|&a, &b| block[b].abs().total_cmp(&block[a].abs()));
             for &p in order.iter().take(z) {
                 out[base + p] = block[p];
             }
@@ -97,6 +96,22 @@ mod tests {
         assert!(e68 > e46 && e46 > e24, "{e68} {e46} {e24}");
         assert!(e68 > 0.95, "25% magnitude pruning keeps >95% energy");
         assert!(e24 < 0.90, "50% pruning loses substantially more energy");
+    }
+
+    #[test]
+    fn nan_sorts_as_largest_magnitude_not_a_tie() {
+        // regression: partial_cmp().unwrap_or(Equal) made NaN a sort tie,
+        // so a poisoned block could silently drop the NaN and pack clean.
+        let w = [0.1f32, f32::NAN, 2.0, 0.3, 4.0, -0.2, 0.0, 1.0];
+        let p = prune_magnitude(&w, 1, 8, 2, 8);
+        // top-2 magnitudes are NaN (largest under total_cmp) and 4.0
+        assert!(p[1].is_nan(), "NaN must survive pruning: {p:?}");
+        assert_eq!(p[4], 4.0);
+        assert_eq!(p.iter().filter(|v| **v != 0.0).count(), 2);
+        // infinities likewise dominate finite magnitudes
+        let w = [1.0f32, f32::NEG_INFINITY, 2.0, 0.3];
+        let p = prune_magnitude(&w, 1, 4, 1, 4);
+        assert_eq!(p[1], f32::NEG_INFINITY);
     }
 
     #[test]

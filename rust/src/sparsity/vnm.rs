@@ -1,0 +1,260 @@
+//! Vectorized V:N:M weight sparsity (VENOM-style), decoupled from the
+//! 2:4 sliding-window constraint.
+//!
+//! A V:N:M pattern groups V consecutive output rows into a *vector
+//! block*; within each M-wide column block, the whole group shares one
+//! column selection of at most N kept columns. Sharing the mask across V
+//! rows is what makes the format vectorizable: one column-index load
+//! serves V rows of values, so the decode GEMV gathers V outputs per
+//! metadata byte instead of one.
+//!
+//! Unlike the (2N-2):2N family, N:M here is a free knob (any N <= M), so
+//! the pruning ratio is no longer tied to what slides onto 2:4 hardware.
+//! The trade: the column mask is a *group* decision, so rows in a group
+//! compromise on which columns survive (`prune_vnm` scores columns by
+//! the summed magnitude over the group).
+
+use std::fmt;
+
+/// A V:N:M vectorized sparsity pattern: V-row vector blocks, at most N
+/// shared non-zero columns per M-wide block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct VnmPattern {
+    /// Rows per vector block (mask-sharing group height), >= 1.
+    pub v: usize,
+    /// Kept columns per block, 1 <= n <= m.
+    pub n: usize,
+    /// Column block width, >= 1.
+    pub m: usize,
+}
+
+/// Why a V:N:M pattern or a matrix fails validation/compression.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum VnmError {
+    /// Pattern parameters out of range (v == 0, n == 0, or n > m).
+    BadPattern { v: usize, n: usize, m: usize },
+    /// K does not tile into M-wide blocks.
+    BadShape { k: usize, m: usize },
+    /// A row group uses more than N distinct non-zero columns in one
+    /// block: the matrix is not V:N:M compliant.
+    NonCompliant { group: usize, block: usize, distinct: usize },
+}
+
+impl fmt::Display for VnmError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            VnmError::BadPattern { v, n, m } => {
+                write!(f, "invalid V:N:M pattern {v}:{n}:{m} (need v>=1, 1<=n<=m)")
+            }
+            VnmError::BadShape { k, m } => {
+                write!(f, "K={k} does not tile into M={m} column blocks")
+            }
+            VnmError::NonCompliant { group, block, distinct } => write!(
+                f,
+                "row group {group} block {block} has {distinct} distinct non-zero columns (> N)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for VnmError {}
+
+impl VnmPattern {
+    pub fn try_new(v: usize, n: usize, m: usize) -> Result<VnmPattern, VnmError> {
+        if v == 0 || n == 0 || n > m {
+            return Err(VnmError::BadPattern { v, n, m });
+        }
+        Ok(VnmPattern { v, n, m })
+    }
+
+    pub fn new(v: usize, n: usize, m: usize) -> VnmPattern {
+        match VnmPattern::try_new(v, n, m) {
+            Ok(p) => p,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Parse "V:N:M" (e.g. "2:2:8").
+    pub fn parse(s: &str) -> Result<VnmPattern, String> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() != 3 {
+            return Err(format!("bad V:N:M pattern '{s}' (want V:N:M, e.g. 2:2:8)"));
+        }
+        let nums: Result<Vec<usize>, _> = parts.iter().map(|p| p.trim().parse()).collect();
+        let nums = nums.map_err(|_| format!("bad number in V:N:M pattern '{s}'"))?;
+        VnmPattern::try_new(nums[0], nums[1], nums[2]).map_err(|e| e.to_string())
+    }
+
+    /// Fraction of non-zero weights: N/M.
+    pub fn density(&self) -> f64 {
+        self.n as f64 / self.m as f64
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.density()
+    }
+
+    /// Number of V-row groups covering `rows` (last group may be short).
+    pub fn groups(&self, rows: usize) -> usize {
+        rows.div_ceil(self.v)
+    }
+
+    /// Check a [rows, k] row-major matrix for V:N:M compliance: every
+    /// group x block must use at most N distinct non-zero columns.
+    pub fn check(&self, w: &[f32], rows: usize, k: usize) -> bool {
+        assert_eq!(w.len(), rows * k);
+        if k % self.m != 0 {
+            return false;
+        }
+        for g in 0..self.groups(rows) {
+            let r0 = g * self.v;
+            let r1 = (r0 + self.v).min(rows);
+            for b in 0..k / self.m {
+                let mut distinct = 0usize;
+                for d in 0..self.m {
+                    if (r0..r1).any(|r| w[r * k + b * self.m + d] != 0.0) {
+                        distinct += 1;
+                    }
+                }
+                if distinct > self.n {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+impl fmt::Display for VnmPattern {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}:{}", self.v, self.n, self.m)
+    }
+}
+
+/// Magnitude-prune a [rows, k] row-major matrix into V:N:M: for every
+/// V-row group and M-wide block, keep the N columns with the largest
+/// summed |w| over the group's rows, zero the rest. Ties break toward
+/// the lower column index (stable sort), and NaN scores sort as the
+/// largest magnitude (total_cmp) so poisoned inputs surface downstream
+/// instead of silently dropping.
+pub fn prune_vnm(w: &[f32], rows: usize, k: usize, pat: VnmPattern) -> Vec<f32> {
+    assert_eq!(w.len(), rows * k);
+    assert_eq!(k % pat.m, 0, "K={k} must be a multiple of M={}", pat.m);
+    let mut out = vec![0.0f32; w.len()];
+    let mut order: Vec<usize> = Vec::with_capacity(pat.m);
+    let mut score = vec![0.0f32; pat.m];
+    for g in 0..pat.groups(rows) {
+        let r0 = g * pat.v;
+        let r1 = (r0 + pat.v).min(rows);
+        for b in 0..k / pat.m {
+            for (d, s) in score.iter_mut().enumerate() {
+                *s = (r0..r1).map(|r| w[r * k + b * pat.m + d].abs()).sum();
+            }
+            order.clear();
+            order.extend(0..pat.m);
+            order.sort_by(|&a, &c| score[c].total_cmp(&score[a]));
+            for &d in order.iter().take(pat.n) {
+                for r in r0..r1 {
+                    out[r * k + b * pat.m + d] = w[r * k + b * pat.m + d];
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prng::XorShift, prop};
+
+    #[test]
+    fn pattern_validation() {
+        assert!(VnmPattern::try_new(2, 2, 8).is_ok());
+        assert!(VnmPattern::try_new(1, 4, 4).is_ok()); // dense blocks allowed
+        assert_eq!(
+            VnmPattern::try_new(0, 2, 8),
+            Err(VnmError::BadPattern { v: 0, n: 2, m: 8 })
+        );
+        assert_eq!(
+            VnmPattern::try_new(2, 9, 8),
+            Err(VnmError::BadPattern { v: 2, n: 9, m: 8 })
+        );
+        assert_eq!(
+            VnmPattern::try_new(2, 0, 8),
+            Err(VnmError::BadPattern { v: 2, n: 0, m: 8 })
+        );
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let p = VnmPattern::parse("2:2:8").unwrap();
+        assert_eq!(p, VnmPattern::new(2, 2, 8));
+        assert_eq!(p.to_string(), "2:2:8");
+        assert!(VnmPattern::parse("2:8").is_err());
+        assert!(VnmPattern::parse("2:9:8").is_err());
+        assert!(VnmPattern::parse("a:b:c").is_err());
+    }
+
+    #[test]
+    fn prune_shares_mask_across_group_rows() {
+        // v=2: both rows must keep the SAME columns per block, chosen by
+        // the summed magnitude
+        let pat = VnmPattern::new(2, 1, 4);
+        #[rustfmt::skip]
+        let w = [
+            0.1, 3.0, 0.2, 0.0,
+            0.2, 0.1, 4.0, 0.0,
+        ];
+        let p = prune_vnm(&w, 2, 4, pat);
+        // col scores: 0.3, 3.1, 4.2, 0.0 -> col 2 wins for BOTH rows
+        assert_eq!(p, [0.0, 0.0, 0.2, 0.0, 0.0, 0.0, 4.0, 0.0]);
+        assert!(pat.check(&p, 2, 4));
+    }
+
+    #[test]
+    fn prune_handles_short_last_group() {
+        let pat = VnmPattern::new(2, 2, 4);
+        let w: Vec<f32> = (0..3 * 8).map(|i| (i % 7) as f32 - 3.0).collect();
+        let p = prune_vnm(&w, 3, 8, pat); // 3 rows, v=2: groups {0,1}, {2}
+        assert!(pat.check(&p, 3, 8));
+    }
+
+    #[test]
+    fn prop_pruned_is_compliant_and_sparse() {
+        prop::for_all("vnm prune compliant", |rng: &mut XorShift, case| {
+            let v = 1 + case % 4;
+            let m = [4usize, 8, 16][case % 3];
+            let n = 1 + rng.below(m);
+            let pat = VnmPattern::new(v, n, m);
+            let rows = 1 + rng.below(9);
+            let k = m * (1 + rng.below(4));
+            let w: Vec<f32> = (0..rows * k).map(|_| rng.normal()).collect();
+            let p = prune_vnm(&w, rows, k, pat);
+            assert!(pat.check(&p, rows, k), "{pat} rows={rows} k={k}");
+            // kept values are unchanged originals
+            for (orig, kept) in w.iter().zip(p.iter()) {
+                assert!(*kept == 0.0 || kept == orig);
+            }
+            // per-row nonzeros never exceed the N/M budget
+            for r in 0..rows {
+                let nnz = p[r * k..(r + 1) * k].iter().filter(|x| **x != 0.0).count();
+                assert!(nnz <= n * k / m);
+            }
+        });
+    }
+
+    #[test]
+    fn tie_break_toward_lower_column() {
+        let pat = VnmPattern::new(1, 2, 4);
+        let w = [1.0f32, 1.0, 1.0, 1.0];
+        let p = prune_vnm(&w, 1, 4, pat);
+        assert_eq!(p, [1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn check_rejects_untiled_k() {
+        let pat = VnmPattern::new(1, 2, 4);
+        assert!(!pat.check(&[0.0; 6], 1, 6));
+    }
+}

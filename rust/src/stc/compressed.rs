@@ -280,6 +280,81 @@ pub fn gemv_compressed_i8_batch_pool_with(
     y
 }
 
+/// `gemv_rows_block` honoring an activation window-skip mask (one byte
+/// per 4-wide window of `x`; non-zero = all four lanes are 0). Skipped
+/// windows contribute only exact-zero products, so this is bit-exact
+/// with `gemv_rows_block` for any honest mask.
+fn gemv_rows_block_skip(
+    kern: &dyn Microkernel,
+    x: &[i8],
+    skip: &[u8],
+    w: &Compressed24,
+    c0: usize,
+    y: &mut [i32],
+) {
+    let kp = w.k_packed;
+    let half = kp / 2;
+    let wins = kp / 4;
+    debug_assert_eq!(skip.len(), wins);
+    for (i, yc) in y.iter_mut().enumerate() {
+        let c = c0 + i;
+        *yc = kern.gemv_dot_skip(
+            x,
+            &w.vals[c * half..(c + 1) * half],
+            &w.meta[c * wins..(c + 1) * wins],
+            skip,
+        );
+    }
+}
+
+/// `gemv_compressed_i8_batch_pool_with` honoring a per-(row, window)
+/// activation skip mask from `FusedQuantSlide::run_masked` — the
+/// dynamic-activation-sparsity decode path. Bit-exact with the non-skip
+/// batch kernel on the same (already sparsified) activations.
+pub fn gemv_compressed_i8_skip_batch_pool_with(
+    pool: &crate::util::ThreadPool,
+    kern: &dyn Microkernel,
+    x: &[i8],
+    skip: &[u8],
+    w: &Compressed24,
+    m: usize,
+) -> Vec<i32> {
+    let kp = w.k_packed;
+    let wins = kp / 4;
+    assert_eq!(x.len(), m * kp);
+    assert_eq!(skip.len(), m * wins);
+    let o = w.rows;
+    let mut y = vec![0i32; m * o];
+    if pool.is_serial() {
+        for (r, yr) in y.chunks_mut(o).enumerate() {
+            gemv_rows_block_skip(
+                kern,
+                &x[r * kp..(r + 1) * kp],
+                &skip[r * wins..(r + 1) * wins],
+                w,
+                0,
+                yr,
+            );
+        }
+        return y;
+    }
+    let ranges = crate::util::pool::partition(o, pool.threads());
+    let nr = ranges.len();
+    let lens: Vec<usize> = (0..m * nr).map(|i| ranges[i % nr].1 - ranges[i % nr].0).collect();
+    crate::util::pool::run_over_chunks(pool, &mut y, &lens, |i, chunk| {
+        let r = i / nr;
+        gemv_rows_block_skip(
+            kern,
+            &x[r * kp..(r + 1) * kp],
+            &skip[r * wins..(r + 1) * wins],
+            w,
+            ranges[i % nr].0,
+            chunk,
+        );
+    });
+    y
+}
+
 /// Pooled compressed GEMV: the single-row view of
 /// `gemv_compressed_i8_batch_pool` (one token, output rows partitioned
 /// across lanes). Bit-exact with `gemv_compressed_i8`.
@@ -447,6 +522,61 @@ mod tests {
                 gemv_compressed_i8_pool(&pool, &x[..kp], &c),
                 gemv_compressed_i8(&x[..kp], &c)
             );
+        }
+    }
+
+    #[test]
+    fn skip_gemv_bit_exact_with_full_walk() {
+        // an honest mask (marks only all-zero activation windows) must
+        // leave every backend's decode result byte-identical, serial and
+        // pooled, at any thread count
+        use crate::util::ThreadPool;
+        let mut rng = XorShift::new(61);
+        let (m, o, kp) = (3usize, 17, 32);
+        let wins = kp / 4;
+        let mut w = Vec::new();
+        for _ in 0..o {
+            w.extend(random_24_row(&mut rng, kp));
+        }
+        let c = Compressed24::from_dense(&w, o, kp).unwrap();
+        // activations with plenty of all-zero windows
+        let mut x = vec![0i8; m * kp];
+        for v in x.iter_mut() {
+            if rng.below(3) == 0 {
+                *v = (rng.below(255) as i32 - 127) as i8;
+            }
+        }
+        for r in 0..m {
+            for win in 0..wins / 2 {
+                for d in 0..4 {
+                    x[r * kp + win * 4 + d] = 0;
+                }
+            }
+        }
+        let skip: Vec<u8> = (0..m * wins)
+            .map(|i| {
+                let (r, win) = (i / wins, i % wins);
+                x[r * kp + win * 4..r * kp + win * 4 + 4].iter().all(|v| *v == 0) as u8
+            })
+            .collect();
+        let want = gemv_compressed_i8_batch_pool_with(
+            &ThreadPool::new(1),
+            auto_kernel(),
+            &x,
+            &c,
+            m,
+        );
+        assert!(skip.iter().any(|b| *b != 0));
+        for kern in crate::stc::microkernel::available_kernels() {
+            for threads in [1usize, 2, 4, 8] {
+                let pool = ThreadPool::new(threads);
+                assert_eq!(
+                    gemv_compressed_i8_skip_batch_pool_with(&pool, kern, &x, &skip, &c, m),
+                    want,
+                    "{} {threads} threads",
+                    kern.name()
+                );
+            }
         }
     }
 

@@ -78,6 +78,40 @@ pub trait Microkernel: Send + Sync {
     /// (p0, p1) are the 2-bit positions in `meta[win]`. `x` is one
     /// lifted activation row (length K' = 4 * meta.len()).
     fn gemv_dot(&self, x: &[i8], vals: &[i8], meta: &[u8]) -> i32;
+
+    /// V:N:M gather dot product for one output row of a
+    /// [`crate::stc::CompressedVnm`] matrix:
+    /// `Σ_t vals[t] * x[cols[t]]` over the row's stored slots (absolute
+    /// columns, shared across the row's V-group). Provided as a default
+    /// scalar walk — the column indirection defeats the tile-contiguous
+    /// load pattern the SIMD backends are built around, and integer
+    /// addition keeps any override bit-exact with this reference.
+    fn vnm_gather_dot(&self, x: &[i8], vals: &[i8], cols: &[u32]) -> i32 {
+        let mut s = 0i32;
+        for (&v, &c) in vals.iter().zip(cols.iter()) {
+            s += v as i32 * x[c as usize] as i32;
+        }
+        s
+    }
+
+    /// [`Microkernel::gemv_dot`] with an activation window-skip mask
+    /// (one byte per 4-wide window; non-zero = every lane of that lifted
+    /// window quantized to 0). Skipping such a window drops only exact
+    /// zero products, so this is BIT-EXACT with `gemv_dot` for any mask
+    /// that honors the contract — the dynamic-activation-sparsity decode
+    /// path rides on it (`quant::fused::ActSparsity`).
+    fn gemv_dot_skip(&self, x: &[i8], vals: &[i8], meta: &[u8], skip: &[u8]) -> i32 {
+        let mut acc = 0i32;
+        for (win, &mb) in meta.iter().enumerate() {
+            if skip[win] != 0 {
+                continue;
+            }
+            let base = win * 4;
+            acc += vals[2 * win] as i32 * x[base + (mb & 3) as usize] as i32;
+            acc += vals[2 * win + 1] as i32 * x[base + ((mb >> 2) & 3) as usize] as i32;
+        }
+        acc
+    }
 }
 
 // ---------------------------------------------------------------------

@@ -46,13 +46,15 @@ pub mod compressed;
 pub mod dense;
 pub mod microkernel;
 pub mod slide_gemm;
+pub mod vnm;
 
 pub use autotune::{TuneDecision, TuneEntry, TuneTable};
 pub use compressed::{
     gemm_compressed_i8, gemm_compressed_i8_mtile, gemm_compressed_i8_mtile_pool,
     gemm_compressed_i8_mtile_pool_with, gemm_compressed_i8_mtile_with, gemv_compressed_i8,
     gemv_compressed_i8_batch_pool, gemv_compressed_i8_batch_pool_with, gemv_compressed_i8_pool,
-    gemv_compressed_i8_with, Compressed24, CompressedMatrix,
+    gemv_compressed_i8_skip_batch_pool_with, gemv_compressed_i8_with, Compressed24,
+    CompressedMatrix,
 };
 pub use dense::{
     gemm_f32, gemm_i8, gemm_i8_mtile, gemm_i8_mtile_pool, gemm_i8_mtile_pool_with,
@@ -64,6 +66,10 @@ pub use microkernel::{
     vnni_available, KernelChoice, Microkernel,
 };
 pub use slide_gemm::{DenseLinear, SlideLinear};
+pub use vnm::{
+    gemm_vnm_i8, gemm_vnm_i8_pool_with, gemm_vnm_i8_with, gemv_vnm_i8,
+    gemv_vnm_i8_batch_pool_with, gemv_vnm_i8_with, vnm_macs, CompressedVnm, VnmLinear,
+};
 
 /// MAC counts for the cost accounting used by benches.
 pub fn dense_macs(m: usize, o: usize, k: usize) -> u64 {

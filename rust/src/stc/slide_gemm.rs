@@ -7,12 +7,13 @@
 
 use std::sync::Arc;
 
-use crate::quant::fused::FusedQuantSlide;
+use crate::quant::fused::{ActSparsity, FusedQuantSlide};
 use crate::quant::int8::{dequantize, quantize_per_token, quantize_weight_per_channel};
 use crate::sparsity::packer::pack_matrix;
 use crate::sparsity::prune::prune_magnitude;
 use crate::stc::compressed::{
-    gemm_compressed_i8_mtile_pool_with, gemv_compressed_i8_batch_pool_with, Compressed24,
+    gemm_compressed_i8_mtile_pool_with, gemv_compressed_i8_batch_pool_with,
+    gemv_compressed_i8_skip_batch_pool_with, Compressed24,
 };
 use crate::stc::dense::{gemm_i8_mtile_pool_with, gemm_i8_panels_pool_with, pack_b_panels};
 use crate::stc::microkernel::{auto_kernel, Microkernel};
@@ -134,12 +135,36 @@ impl SlideLinear {
         self.micro_decode = kern;
     }
 
+    /// Install a dynamic activation-sparsification policy
+    /// (`act_sparsity` knob). Dropped lanes quantize to 0 in the fused
+    /// pass; the decode GEMV then skips all-zero packed windows — the
+    /// skip is bit-exact, the sparsification is the (bounded-error)
+    /// approximation.
+    pub fn set_act_sparsity(&mut self, act: ActSparsity) {
+        self.kernel.set_act_sparsity(act);
+    }
+
     /// Online phase: y [m, o] = dequant(compressed_gemm(fused(x))).
     /// m == 1 takes the metadata-walking GEMV (memory-bound decode path);
     /// larger m takes the M-tiled compute kernel.
     pub fn forward(&self, x: &[f32], m: usize) -> Vec<f32> {
+        let decode = m < crate::stc::dense::MT / 2;
+        if decode && !self.kernel.act().is_none() {
+            // sparsified decode: the fused pass reports which packed
+            // windows quantized to all zeros and the GEMV skips them
+            let (xq, xs, skip) = self.kernel.run_masked(x, m);
+            let acc = gemv_compressed_i8_skip_batch_pool_with(
+                &self.pool,
+                self.micro_decode,
+                &xq,
+                &skip,
+                &self.weights,
+                m,
+            );
+            return dequantize(&acc, m, self.o, &xs, &self.w_scales);
+        }
         let (xq, xs) = self.kernel.run(x, m);
-        let acc = if m < crate::stc::dense::MT / 2 {
+        let acc = if decode {
             // small batches: metadata-walking GEMVs partitioned over
             // output rows, all rows under one fork-join (no M-tile
             // padding waste; matches the dense small-m routing)
@@ -445,6 +470,64 @@ mod tests {
             assert_eq!(base_d.forward(&x, m), d.forward(&x, m), "dense m={m}");
             assert_eq!(base_s.forward(&x, m), s.forward(&x, m), "slide m={m}");
         }
+    }
+
+    #[test]
+    fn act_sparsity_skip_decode_bit_exact_with_full_walk() {
+        // the skip optimization must not change results: decode on the
+        // sparsified activations with window skipping == the plain GEMV
+        // on the SAME sparsified activations, at any thread count
+        let mut rng = XorShift::new(55);
+        let (o, k, n, m) = (24, 48, 4, 2);
+        let w: Vec<f32> = (0..o * k).map(|_| rng.normal()).collect();
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        for act in [
+            crate::quant::fused::ActSparsity::TopK { keep: 0.25 },
+            crate::quant::fused::ActSparsity::Threshold { rel: 0.1 },
+        ] {
+            let mut sparse = SlideLinear::prepare(&w, o, k, n);
+            sparse.set_act_sparsity(act);
+            // reference: run the sparsified fused pass, full GEMV walk
+            let (xq, xs) = sparse.kernel.run(&x, m);
+            let acc = crate::stc::compressed::gemv_compressed_i8_batch_pool_with(
+                &ThreadPool::new(1),
+                auto_kernel(),
+                &xq,
+                &sparse.weights,
+                m,
+            );
+            let want = crate::quant::int8::dequantize(&acc, m, o, &xs, &sparse.w_scales);
+            assert_eq!(sparse.forward(&x, m), want, "{act:?} serial");
+            for threads in [2usize, 4, 8] {
+                let mut pooled = SlideLinear::prepare(&w, o, k, n);
+                pooled.set_act_sparsity(act);
+                pooled.set_pool(Arc::new(ThreadPool::new(threads)));
+                assert_eq!(pooled.forward(&x, m), want, "{act:?} {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn act_sparsity_output_stays_close() {
+        // mild sparsification must stay near the exact layer output —
+        // the layer-level face of the bounded-error acceptance gate
+        let mut rng = XorShift::new(66);
+        let (o, k, n, m) = (16, 64, 4, 1);
+        let w: Vec<f32> = (0..o * k).map(|_| rng.normal() * 0.1).collect();
+        let exact = SlideLinear::prepare(&w, o, k, n);
+        let mut sparse = SlideLinear::prepare(&w, o, k, n);
+        sparse.set_act_sparsity(crate::quant::fused::ActSparsity::Threshold { rel: 0.02 });
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let ye = exact.forward(&x, m);
+        let ys = sparse.forward(&x, m);
+        let (mut dot, mut ne, mut ns) = (0f64, 0f64, 0f64);
+        for (a, b) in ye.iter().zip(ys.iter()) {
+            dot += (*a as f64) * (*b as f64);
+            ne += (*a as f64) * (*a as f64);
+            ns += (*b as f64) * (*b as f64);
+        }
+        let cos = dot / (ne.sqrt() * ns.sqrt()).max(1e-30);
+        assert!(cos > 0.98, "cosine {cos} too low for rel=0.02 threshold");
     }
 
     #[test]

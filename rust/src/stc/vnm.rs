@@ -1,0 +1,459 @@
+//! Compressed V:N:M storage + kernels (the VENOM-style vectorized
+//! format, `sparsity::vnm`).
+//!
+//! For every V-row group and M-wide column block the format stores ONE
+//! list of N absolute column indices (shared by all V rows) plus N
+//! values per row. Per-row metadata cost is therefore `cols / V` — the
+//! vectorization win over element-wise N:M — and execution does exactly
+//! `K*N/M` multiply-accumulates per output element.
+//!
+//! Bit-exactness: kernels reduce each output over the same multiset of
+//! exact i32 products as the dense int8 reference on the same weights
+//! (padded slots store value 0 and contribute nothing), so for V:N:M
+//! compliant weights `gemm_vnm_i8 == gemm_i8` EXACTLY, at any thread
+//! count — the same invariant the 2:4 path guarantees, gated by
+//! `rust/tests/conformance.rs`.
+
+use std::sync::Arc;
+
+use crate::quant::int8::{dequantize, quantize_per_token, quantize_weight_per_channel};
+use crate::sparsity::vnm::{prune_vnm, VnmError, VnmPattern};
+use crate::stc::microkernel::{auto_kernel, Microkernel};
+use crate::util::{Seg, ThreadPool};
+
+/// A compressed V:N:M int8 matrix: per output row, `(k/m)*n` stored
+/// values; per V-row group, `(k/m)*n` shared absolute column indices.
+#[derive(Clone, Debug)]
+pub struct CompressedVnm {
+    pub pattern: VnmPattern,
+    pub rows: usize,
+    pub k: usize,
+    /// Values, row-major: `vals[r * slots + b*n + s]` where
+    /// `slots = (k/m)*n`; padded slots hold 0.
+    pub vals: Seg<i8>,
+    /// Shared columns, group-major: `cols[g * slots + b*n + s]` is an
+    /// absolute column index; kept columns first (ascending), then
+    /// deterministic padding with the lowest unused in-block columns.
+    pub cols: Seg<u32>,
+}
+
+impl CompressedVnm {
+    /// Slots stored per row (and per group's column table): `(k/m)*n`.
+    pub fn slots(&self) -> usize {
+        (self.k / self.pattern.m) * self.pattern.n
+    }
+
+    /// Compress a V:N:M-compliant row-major [rows, k] int8 matrix.
+    /// Underfull blocks pad with the lowest unused in-block columns
+    /// (value 0), so the layout is deterministic and round-trips.
+    pub fn from_dense(
+        w: &[i8],
+        rows: usize,
+        k: usize,
+        pattern: VnmPattern,
+    ) -> Result<CompressedVnm, VnmError> {
+        assert_eq!(w.len(), rows * k);
+        let (v, n, m) = (pattern.v, pattern.n, pattern.m);
+        if k % m != 0 {
+            return Err(VnmError::BadShape { k, m });
+        }
+        let blocks = k / m;
+        let slots = blocks * n;
+        let groups = pattern.groups(rows);
+        let mut vals = vec![0i8; rows * slots];
+        let mut cols = vec![0u32; groups * slots];
+        let mut kept: Vec<usize> = Vec::with_capacity(m);
+        for g in 0..groups {
+            let r0 = g * v;
+            let r1 = (r0 + v).min(rows);
+            for b in 0..blocks {
+                kept.clear();
+                for d in 0..m {
+                    if (r0..r1).any(|r| w[r * k + b * m + d] != 0) {
+                        kept.push(d);
+                    }
+                }
+                if kept.len() > n {
+                    return Err(VnmError::NonCompliant { group: g, block: b, distinct: kept.len() });
+                }
+                // pad with the lowest unused in-block columns
+                let mut d = 0usize;
+                while kept.len() < n {
+                    if !kept.contains(&d) {
+                        kept.push(d);
+                    }
+                    d += 1;
+                }
+                for (s, &d) in kept.iter().enumerate() {
+                    let c = b * m + d;
+                    cols[g * slots + b * n + s] = c as u32;
+                    for r in r0..r1 {
+                        vals[r * slots + b * n + s] = w[r * k + c];
+                    }
+                }
+            }
+        }
+        Ok(CompressedVnm {
+            pattern,
+            rows,
+            k,
+            vals: vals.into(),
+            cols: cols.into(),
+        })
+    }
+
+    /// Compressed storage bytes: values + the (group-shared) column
+    /// table. The per-row metadata share is `4 * slots / v` bytes — the
+    /// V-way amortization element-wise N:M formats do not get.
+    pub fn storage_bytes(&self) -> usize {
+        self.vals.len() + self.cols.len() * 4
+    }
+
+    /// Decompress back to dense (for tests).
+    pub fn to_dense(&self) -> Vec<i8> {
+        let slots = self.slots();
+        let mut w = vec![0i8; self.rows * self.k];
+        for r in 0..self.rows {
+            let g = r / self.pattern.v;
+            for t in 0..slots {
+                let c = self.cols[g * slots + t] as usize;
+                w[r * self.k + c] = self.vals[r * slots + t];
+            }
+        }
+        w
+    }
+
+    /// The shared column table of row `r`'s group.
+    fn row_cols(&self, r: usize) -> &[u32] {
+        let slots = self.slots();
+        let g = r / self.pattern.v;
+        &self.cols[g * slots..(g + 1) * slots]
+    }
+
+    /// Row `r`'s stored values.
+    fn row_vals(&self, r: usize) -> &[i8] {
+        let slots = self.slots();
+        &self.vals[r * slots..(r + 1) * slots]
+    }
+}
+
+/// V:N:M GEMV on the auto-dispatched microkernel: y[o] for one int8
+/// activation row x[k].
+pub fn gemv_vnm_i8(x: &[i8], w: &CompressedVnm) -> Vec<i32> {
+    gemv_vnm_i8_with(auto_kernel(), x, w)
+}
+
+/// `gemv_vnm_i8` on an explicit microkernel backend.
+pub fn gemv_vnm_i8_with(kern: &dyn Microkernel, x: &[i8], w: &CompressedVnm) -> Vec<i32> {
+    assert_eq!(x.len(), w.k);
+    let mut y = vec![0i32; w.rows];
+    vnm_rows_block(kern, x, w, 0, &mut y);
+    y
+}
+
+/// Output-row block worker shared by the serial and pooled kernels:
+/// rows [c0, c0+y.len()) of the gather GEMV.
+fn vnm_rows_block(kern: &dyn Microkernel, x: &[i8], w: &CompressedVnm, c0: usize, y: &mut [i32]) {
+    for (i, yc) in y.iter_mut().enumerate() {
+        let c = c0 + i;
+        *yc = kern.vnm_gather_dot(x, w.row_vals(c), w.row_cols(c));
+    }
+}
+
+/// V:N:M GEMM: y[mt, o] over an int8 activation matrix x[mt, k].
+/// Exactly `K*N/M` MACs per output element.
+pub fn gemm_vnm_i8(x: &[i8], w: &CompressedVnm, mt: usize) -> Vec<i32> {
+    gemm_vnm_i8_with(auto_kernel(), x, w, mt)
+}
+
+/// `gemm_vnm_i8` on an explicit microkernel backend.
+pub fn gemm_vnm_i8_with(kern: &dyn Microkernel, x: &[i8], w: &CompressedVnm, mt: usize) -> Vec<i32> {
+    let k = w.k;
+    assert_eq!(x.len(), mt * k);
+    let o = w.rows;
+    let mut y = vec![0i32; mt * o];
+    for (r, yr) in y.chunks_mut(o).enumerate() {
+        vnm_rows_block(kern, &x[r * k..(r + 1) * k], w, 0, yr);
+    }
+    y
+}
+
+/// Pooled batch of V:N:M GEMVs: the whole (token row, output-row-block)
+/// task grid runs under ONE fork-join, mirroring
+/// `gemv_compressed_i8_batch_pool`. Bit-exact with `gemm_vnm_i8` at any
+/// thread count (each output element is computed by exactly one task
+/// with the serial accumulation order).
+pub fn gemv_vnm_i8_batch_pool_with(
+    pool: &ThreadPool,
+    kern: &dyn Microkernel,
+    x: &[i8],
+    w: &CompressedVnm,
+    mt: usize,
+) -> Vec<i32> {
+    let k = w.k;
+    assert_eq!(x.len(), mt * k);
+    let o = w.rows;
+    if pool.is_serial() {
+        return gemm_vnm_i8_with(kern, x, w, mt);
+    }
+    let mut y = vec![0i32; mt * o];
+    let ranges = crate::util::pool::partition(o, pool.threads());
+    let nr = ranges.len();
+    let lens: Vec<usize> = (0..mt * nr).map(|i| ranges[i % nr].1 - ranges[i % nr].0).collect();
+    crate::util::pool::run_over_chunks(pool, &mut y, &lens, |i, chunk| {
+        let r = i / nr;
+        vnm_rows_block(kern, &x[r * k..(r + 1) * k], w, ranges[i % nr].0, chunk);
+    });
+    y
+}
+
+/// Pooled V:N:M GEMM partitioned over token rows (the prefill shape:
+/// each lane computes full output rows for a contiguous token block).
+/// Bit-exact with `gemm_vnm_i8` at any thread count.
+pub fn gemm_vnm_i8_pool_with(
+    pool: &ThreadPool,
+    kern: &dyn Microkernel,
+    x: &[i8],
+    w: &CompressedVnm,
+    mt: usize,
+) -> Vec<i32> {
+    let k = w.k;
+    assert_eq!(x.len(), mt * k);
+    let o = w.rows;
+    if pool.is_serial() {
+        return gemm_vnm_i8_with(kern, x, w, mt);
+    }
+    let mut y = vec![0i32; mt * o];
+    let ranges = crate::util::pool::partition(mt, pool.threads());
+    let lens: Vec<usize> = ranges.iter().map(|&(t0, t1)| (t1 - t0) * o).collect();
+    crate::util::pool::run_over_chunks(pool, &mut y, &lens, |i, chunk| {
+        let (t0, _) = ranges[i];
+        for (j, yr) in chunk.chunks_mut(o).enumerate() {
+            let r = t0 + j;
+            vnm_rows_block(kern, &x[r * k..(r + 1) * k], w, 0, yr);
+        }
+    });
+    y
+}
+
+/// A prepared V:N:M linear layer: per-channel int8 weights in the
+/// compressed vectorized format, per-token activation quantization (no
+/// lifting — V:N:M runs on its own gather kernel, not the 2:4 path).
+pub struct VnmLinear {
+    pub o: usize,
+    pub k: usize,
+    pub pattern: VnmPattern,
+    pub weights: CompressedVnm,
+    pub w_scales: Seg<f32>,
+    pool: Arc<ThreadPool>,
+    micro: &'static dyn Microkernel,
+    micro_decode: &'static dyn Microkernel,
+}
+
+impl VnmLinear {
+    /// Offline phase: prune dense f32 weights to V:N:M, quantize
+    /// per-channel, compress. K must be a multiple of M (the model layer
+    /// pads, exactly like the slide backends).
+    pub fn prepare(w: &[f32], o: usize, k: usize, pattern: VnmPattern) -> VnmLinear {
+        let pruned = prune_vnm(w, o, k, pattern);
+        Self::prepare_pruned(&pruned, o, k, pattern)
+    }
+
+    /// Prepare from already-pruned (V:N:M-compliant) weights.
+    pub fn prepare_pruned(pruned: &[f32], o: usize, k: usize, pattern: VnmPattern) -> VnmLinear {
+        let (wq, ws) = quantize_weight_per_channel(pruned, o, k);
+        // NB: quantization maps zero to zero and never creates non-zeros,
+        // so the quantized matrix inherits the f32 matrix's compliance
+        let weights =
+            CompressedVnm::from_dense(&wq, o, k, pattern).expect("pruned weights are compliant");
+        VnmLinear {
+            o,
+            k,
+            pattern,
+            weights,
+            w_scales: ws.into(),
+            pool: ThreadPool::serial(),
+            micro: auto_kernel(),
+            micro_decode: auto_kernel(),
+        }
+    }
+
+    /// Install the worker pool the kernels partition over (bit-exact
+    /// with serial execution at any thread count).
+    pub fn set_pool(&mut self, pool: Arc<ThreadPool>) {
+        self.pool = pool;
+    }
+
+    /// Install an explicit microkernel backend on both routing branches.
+    pub fn set_microkernel(&mut self, kern: &'static dyn Microkernel) {
+        self.micro = kern;
+        self.micro_decode = kern;
+    }
+
+    /// Install a backend for the small-m decode branch only.
+    pub fn set_decode_microkernel(&mut self, kern: &'static dyn Microkernel) {
+        self.micro_decode = kern;
+    }
+
+    /// Online phase: y [m, o] = dequant(vnm_gemm(quantize(x))).
+    pub fn forward(&self, x: &[f32], m: usize) -> Vec<f32> {
+        let (xq, xs) = quantize_per_token(x, m, self.k);
+        let acc = if m < crate::stc::dense::MT / 2 {
+            gemv_vnm_i8_batch_pool_with(&self.pool, self.micro_decode, &xq, &self.weights, m)
+        } else {
+            gemm_vnm_i8_pool_with(&self.pool, self.micro, &xq, &self.weights, m)
+        };
+        dequantize(&acc, m, self.o, &xs, &self.w_scales)
+    }
+
+    /// Weight storage bytes in compressed form.
+    pub fn weight_bytes(&self) -> usize {
+        self.weights.storage_bytes() + self.w_scales.len() * 4
+    }
+}
+
+/// V:N:M GEMM MAC count: K*N/M per output element.
+pub fn vnm_macs(mt: usize, o: usize, k: usize, pattern: VnmPattern) -> u64 {
+    (mt * o * (k / pattern.m) * pattern.n) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stc::dense::gemm_i8;
+    use crate::util::{prng::XorShift, prop};
+
+    /// Random V:N:M-compliant int8 matrix: per group/block choose <= n
+    /// shared columns, then fill per-row values (some zero).
+    fn random_vnm_matrix(rng: &mut XorShift, rows: usize, k: usize, pat: VnmPattern) -> Vec<i8> {
+        let mut w = vec![0i8; rows * k];
+        for g in 0..pat.groups(rows) {
+            let r0 = g * pat.v;
+            let r1 = (r0 + pat.v).min(rows);
+            for b in 0..k / pat.m {
+                for d in rng.choose(pat.m, pat.n) {
+                    for r in r0..r1 {
+                        w[r * k + b * pat.m + d] = (rng.below(253) as i32 - 126) as i8;
+                    }
+                }
+            }
+        }
+        w
+    }
+
+    #[test]
+    fn prop_vnm_gemm_matches_dense() {
+        // THE format invariant: on compliant weights the compressed path
+        // is bit-identical to the dense int8 reference.
+        prop::for_all("vnm == dense gemm", |rng: &mut XorShift, case| {
+            let pat = VnmPattern::new(1 + case % 3, 1 + rng.below(4), [4, 8][case % 2]);
+            let k = pat.m * (1 + rng.below(6));
+            let (mt, o) = (1 + rng.below(5), 1 + rng.below(11));
+            let w = random_vnm_matrix(rng, o, k, pat);
+            let x: Vec<i8> = (0..mt * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let c = CompressedVnm::from_dense(&w, o, k, pat).unwrap();
+            assert_eq!(gemm_vnm_i8(&x, &c, mt), gemm_i8(&x, &w, mt, o, k), "{pat}");
+            assert_eq!(gemv_vnm_i8(&x[..k], &c), gemm_i8(&x[..k], &w, 1, o, k));
+        });
+    }
+
+    #[test]
+    fn pooled_vnm_kernels_bit_exact_with_serial() {
+        let mut rng = XorShift::new(17);
+        let pat = VnmPattern::new(2, 2, 8);
+        let (o, k) = (23, 48); // o not a multiple of v: short last group
+        let w = random_vnm_matrix(&mut rng, o, k, pat);
+        let c = CompressedVnm::from_dense(&w, o, k, pat).unwrap();
+        for mt in [1usize, 3, 17] {
+            let x: Vec<i8> =
+                (0..mt * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let want = gemm_vnm_i8(&x, &c, mt);
+            for threads in [1usize, 2, 4, 8] {
+                let pool = ThreadPool::new(threads);
+                let kern = auto_kernel();
+                assert_eq!(
+                    gemv_vnm_i8_batch_pool_with(&pool, kern, &x, &c, mt),
+                    want,
+                    "gemv batch {threads} threads mt={mt}"
+                );
+                assert_eq!(
+                    gemm_vnm_i8_pool_with(&pool, kern, &x, &c, mt),
+                    want,
+                    "gemm {threads} threads mt={mt}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_dense_compress_dense() {
+        let mut rng = XorShift::new(5);
+        let pat = VnmPattern::new(2, 3, 8);
+        let (o, k) = (7, 32);
+        let w = random_vnm_matrix(&mut rng, o, k, pat);
+        let c = CompressedVnm::from_dense(&w, o, k, pat).unwrap();
+        assert_eq!(c.to_dense(), w);
+    }
+
+    #[test]
+    fn rejects_non_compliant_with_context() {
+        let pat = VnmPattern::new(2, 1, 4);
+        // rows 0 and 1 are one group; they disagree on the kept column
+        // in block 1 -> 2 distinct non-zero columns > N=1
+        #[rustfmt::skip]
+        let w: Vec<i8> = vec![
+            1, 0, 0, 0,   0, 2, 0, 0,
+            1, 0, 0, 0,   0, 0, 3, 0,
+        ];
+        let err = CompressedVnm::from_dense(&w, 2, 8, pat).unwrap_err();
+        assert_eq!(err, VnmError::NonCompliant { group: 0, block: 1, distinct: 2 });
+        assert_eq!(
+            CompressedVnm::from_dense(&[0i8; 12], 2, 6, pat).unwrap_err(),
+            VnmError::BadShape { k: 6, m: 4 }
+        );
+    }
+
+    #[test]
+    fn storage_amortizes_metadata_over_v() {
+        let (o, k) = (16, 64);
+        let mut rng = XorShift::new(9);
+        for v in [1usize, 2, 4] {
+            let pat = VnmPattern::new(v, 2, 8);
+            let w = random_vnm_matrix(&mut rng, o, k, pat);
+            let c = CompressedVnm::from_dense(&w, o, k, pat).unwrap();
+            let slots = (k / 8) * 2;
+            assert_eq!(c.vals.len(), o * slots);
+            assert_eq!(c.cols.len(), o.div_ceil(v) * slots);
+        }
+    }
+
+    #[test]
+    fn linear_end_to_end_close_to_f32_reference() {
+        let mut rng = XorShift::new(21);
+        let pat = VnmPattern::new(2, 4, 8);
+        let (o, k, m) = (12, 64, 3);
+        let w: Vec<f32> = (0..o * k).map(|_| rng.normal() * 0.1).collect();
+        let pruned = prune_vnm(&w, o, k, pat);
+        let lin = VnmLinear::prepare_pruned(&pruned, o, k, pat);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let y = lin.forward(&x, m);
+        for r in 0..m {
+            for c in 0..o {
+                let exact: f32 = (0..k).map(|t| x[r * k + t] * pruned[c * k + t]).sum();
+                assert!(
+                    (y[r * o + c] - exact).abs() < 0.05 * (1.0 + exact.abs()),
+                    "{} vs {exact}",
+                    y[r * o + c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mac_count_is_density_scaled() {
+        let pat = VnmPattern::new(2, 2, 8);
+        assert_eq!(vnm_macs(4, 16, 64, pat), 4 * 16 * 16);
+        let dense = crate::stc::dense_macs(4, 16, 64);
+        assert_eq!(vnm_macs(4, 16, 64, pat) as f64 / dense as f64, pat.density());
+    }
+}

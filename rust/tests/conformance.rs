@@ -870,6 +870,7 @@ fn artifact_served_generations_bit_exact_across_backends_and_threads() {
             Backend::Dense => "dense",
             Backend::Native24 => "n24",
             Backend::Slide { .. } => "s4",
+            Backend::Vnm { .. } => "vnm",
         };
         let mut path = std::env::temp_dir();
         path.push(format!("slidesparse_conf_{}_{tag}.ssaf", std::process::id()));
@@ -901,7 +902,12 @@ fn pooled_layer_forward_bit_exact_for_all_backends() {
     let (o, k) = (20, 48);
     let w: Vec<f32> = (0..o * k).map(|_| rng.normal()).collect();
     let pool = Arc::new(ThreadPool::new(4));
-    for backend in [Backend::Dense, Backend::Native24, Backend::Slide { n: 4 }] {
+    for backend in [
+        Backend::Dense,
+        Backend::Native24,
+        Backend::Slide { n: 4 },
+        Backend::Vnm { v: 2, n: 2, m: 8 },
+    ] {
         let serial = Linear::prepare(&w, o, k, backend);
         let mut pooled = Linear::prepare(&w, o, k, backend);
         pooled.set_pool(pool.clone());
@@ -914,4 +920,133 @@ fn pooled_layer_forward_bit_exact_for_all_backends() {
             );
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// (h) V:N:M layout: bit-exact vs the dense int8 path, every kernel and
+//     thread count
+// ---------------------------------------------------------------------
+
+#[test]
+fn vnm_layer_bit_exact_with_dense_across_kernels_and_threads() {
+    // On V:N:M-compliant weights the gather GEMM reduces each output
+    // over the same multiset of int8 products as the dense reference,
+    // so the layer forward is EXACTLY equal — per microkernel backend,
+    // per thread count, and on both sides of the decode m-routing split.
+    use slidesparse::model::Linear;
+    use slidesparse::sparsity::prune_vnm;
+    use slidesparse::sparsity::VnmPattern;
+    let mut rng = XorShift::new(91);
+    for (v, n, m_pat) in [(1usize, 2usize, 4usize), (2, 2, 8), (4, 4, 16)] {
+        let pat = VnmPattern::new(v, n, m_pat);
+        let (o, k) = (22, 2 * m_pat * 3);
+        let w: Vec<f32> = (0..o * k).map(|_| rng.normal()).collect();
+        let pruned = prune_vnm(&w, o, k, pat);
+        let dense = Linear::prepare(&pruned, o, k, Backend::Dense);
+        for kern in available_kernels() {
+            for threads in [1usize, 2, 4, 8] {
+                let mut vnm =
+                    Linear::prepare(&pruned, o, k, Backend::Vnm { v, n, m: m_pat });
+                vnm.set_pool(Arc::new(ThreadPool::new(threads)));
+                vnm.set_microkernel(kern);
+                vnm.set_decode_microkernel(kern);
+                for mt in [1usize, 3, 24] {
+                    let x: Vec<f32> = (0..mt * k).map(|_| rng.normal()).collect();
+                    assert_eq!(
+                        dense.forward(&x, mt),
+                        vnm.forward(&x, mt),
+                        "{v}:{n}:{m_pat} kern={} t={threads} mt={mt}",
+                        kern.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// (i) dynamic activation sparsification: the skip walk is bit-exact
+//     with the full walk, and the lossy drop stays within bounds
+// ---------------------------------------------------------------------
+
+#[test]
+fn act_sparsity_model_decode_bit_exact_with_layer_reference() {
+    // The skip mask only elides windows whose quantized lanes are all
+    // zero, so for a FIXED sparsified quantization the masked decode
+    // GEMV is bit-exact across thread counts; here: the whole model
+    // decode step agrees serial vs pooled under act sparsity.
+    use slidesparse::quant::ActSparsity;
+    let cfg = BlockConfig { dim: 48, n_heads: 2, ffn: 64 };
+    let backend = Backend::Slide { n: 4 };
+    let run = |threads: usize| {
+        let model = NativeModel::generate(cfg, 2, 96, 64, 7, backend);
+        let exec = StcExecutor::new(model);
+        // route the knob through EngineConfig: Engine::new applies it to
+        // the executor, which cascades it through every layer
+        let mut engine = Engine::new(
+            exec,
+            EngineConfig {
+                threads,
+                act_sparsity: ActSparsity::TopK { keep: 0.5 },
+                ..Default::default()
+            },
+        );
+        for i in 0..4u64 {
+            let prompt: Vec<i32> = (0..6).map(|t| (i as i32 * 7 + t * 5) % 96).collect();
+            engine.submit(Request::new(
+                i,
+                prompt,
+                SamplingParams { max_new_tokens: 6, ..Default::default() },
+            ));
+        }
+        let mut outs = engine.run_to_completion().unwrap();
+        outs.sort_by_key(|o| o.id);
+        outs.into_iter().map(|o| o.tokens).collect::<Vec<_>>()
+    };
+    let serial = run(1);
+    for threads in [2usize, 4, 8] {
+        assert_eq!(serial, run(threads), "t={threads}");
+    }
+}
+
+#[test]
+fn act_sparsity_bounded_error_sweep() {
+    // Dropping small activation lanes is lossy; the gate is a bounded
+    // relative error per layer output across a sweep of knob settings —
+    // tight thresholds/high keeps must stay very close to exact.
+    use slidesparse::model::Linear;
+    use slidesparse::quant::ActSparsity;
+    let mut rng = XorShift::new(17);
+    let (o, k, mt) = (24usize, 64usize, 3usize);
+    let w: Vec<f32> = (0..o * k).map(|_| rng.normal()).collect();
+    let x: Vec<f32> = (0..mt * k).map(|_| rng.normal()).collect();
+    let exact = {
+        let l = Linear::prepare(&w, o, k, Backend::Slide { n: 4 });
+        l.forward(&x, mt)
+    };
+    let cosine = |a: &[f32], b: &[f32]| {
+        let (mut dot, mut na, mut nb) = (0f64, 0f64, 0f64);
+        for (p, q) in a.iter().zip(b) {
+            dot += *p as f64 * *q as f64;
+            na += (*p as f64).powi(2);
+            nb += (*q as f64).powi(2);
+        }
+        dot / (na.sqrt() * nb.sqrt()).max(1e-30)
+    };
+    for (act, min_cos) in [
+        (ActSparsity::Threshold { rel: 0.01 }, 0.999),
+        (ActSparsity::Threshold { rel: 0.05 }, 0.99),
+        (ActSparsity::TopK { keep: 0.9 }, 0.99),
+        (ActSparsity::TopK { keep: 0.5 }, 0.90),
+    ] {
+        let mut l = Linear::prepare(&w, o, k, Backend::Slide { n: 4 });
+        l.set_act_sparsity(act);
+        let got = l.forward(&x, mt);
+        let c = cosine(&exact, &got);
+        assert!(c >= min_cos, "{act:?}: cosine {c} < {min_cos}");
+    }
+    // keep=1.0 drops nothing: identical to the exact path
+    let mut l = Linear::prepare(&w, o, k, Backend::Slide { n: 4 });
+    l.set_act_sparsity(ActSparsity::TopK { keep: 1.0 });
+    assert_eq!(l.forward(&x, mt), exact, "keep=1.0 must be exact");
 }
